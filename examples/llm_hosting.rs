@@ -1,0 +1,139 @@
+//! §4.4 scenario: hosting an LLM as a pipe. The tiny decoder artifact
+//! (structural stand-in for Qwen2.5-7B on llama.cpp) runs batch "machine
+//! translation" requests inside the pipeline; measured per-token cost is
+//! then extrapolated in virtual time to the paper's two fleets (100 CPU
+//! nodes vs 6 GPU nodes).
+//!
+//! ```bash
+//! cargo run --release --example llm_hosting -- --tasks 48 --max-new-tokens 8
+//! ```
+
+use ddp::config::PipelineSpec;
+use ddp::ddp::{registry, DriverConfig, PipelineDriver};
+use ddp::engine::cluster::{simulate, ClusterConfig, StageSpec};
+use ddp::engine::row::{FieldType, Schema};
+use ddp::engine::Dataset;
+use ddp::io::IoRegistry;
+use ddp::row;
+use ddp::util::cli::Args;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+const CONFIG: &str = r#"{
+  "name": "llm_translation_service",
+  "settings": {"metricsCadenceSecs": 0.5, "workers": 2},
+  "pipes": [
+    {"inputDataId": "Requests", "transformerType": "PreprocessTransformer",
+     "outputDataId": "CleanRequests", "params": {"minChars": 2}},
+    {"inputDataId": "CleanRequests", "transformerType": "LlmTransformer",
+     "outputDataId": "Translations", "params": {"maxNewTokens": 8}}
+  ]
+}"#;
+
+fn main() -> anyhow::Result<()> {
+    ddp::util::logger::init();
+    let args = Args::from_env();
+    let n_tasks = args.opt_usize("tasks", 48);
+    let max_new = args.opt_usize("max-new-tokens", 8);
+
+    println!("=== DDP LLM hosting (§4.4) ===");
+    let schema = Schema::new(vec![("id", FieldType::I64), ("text", FieldType::Str)]);
+    let phrases = [
+        "the weather is nice today",
+        "please translate this sentence",
+        "distributed systems are fun",
+        "language models inside pipelines",
+    ];
+    let rows: Vec<_> = (0..n_tasks)
+        .map(|i| row!(i as i64, format!("en->zh: {}", phrases[i % phrases.len()])))
+        .collect();
+
+    let mut config = ddp::json::parse(CONFIG).unwrap();
+    if let ddp::json::Value::Obj(ref mut o) = config {
+        // wire maxNewTokens from CLI
+        if let Some(ddp::json::Value::Arr(pipes)) = o.get_mut("pipes") {
+            if let Some(ddp::json::Value::Obj(p)) = pipes.get_mut(1) {
+                p.insert(
+                    "params".into(),
+                    ddp::json::Value::obj(vec![("maxNewTokens", ddp::json::Value::Num(max_new as f64))]),
+                );
+            }
+        }
+    }
+    let spec = PipelineSpec::parse(&ddp::json::to_string(&config)).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let driver = PipelineDriver::new(
+        spec,
+        registry::GLOBAL.clone(),
+        Arc::new(IoRegistry::with_sim_cloud()),
+        DriverConfig::default(),
+    )
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let mut provided = BTreeMap::new();
+    provided.insert("Requests".to_string(), Dataset::from_rows("Requests", schema, rows, 4));
+    let t0 = std::time::Instant::now();
+    let report = driver.run(provided).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let tokens = report
+        .metrics
+        .counters
+        .get("pipe.LlmTransformer.tokens_generated")
+        .copied()
+        .unwrap_or(0);
+    let tok_lat = report
+        .metrics
+        .histograms
+        .get("pipe.LlmTransformer.token_latency")
+        .map(|h| h.mean)
+        .unwrap_or(0.0);
+    println!("requests:         {n_tasks}");
+    println!("tokens generated: {tokens}");
+    println!("wall time:        {wall:.2}s ({:.1} tok/s)", tokens as f64 / wall);
+    println!("token latency:    {:.2}ms mean (batched)", tok_lat * 1e3);
+
+    // --- §4.4 fleet extrapolation (virtual time) -----------------------
+    // Paper: 5000 translation tasks; 100 c7i.8x CPU nodes -> 10 h;
+    // 6 g6e.8x L40S GPU nodes -> 2 h. A 7B model cannot run in this
+    // container, so the per-task decode cost is CALIBRATED from the
+    // paper's own per-node throughput (5 tasks/node/h -> 720 s/task on a
+    // c7i.8x) and the GPU node speed from the implied per-node ratio
+    // (416 vs 5 tasks/h -> 83x). What the simulation then validates is
+    // the *scheduling machinery*: fleet sizing, task rounds, utilization.
+    // The measured tiny-LLM latency above is the real-integration signal.
+    let tasks = 5000usize;
+    let cpu_secs_per_task = 720.0;
+    let cpu_fleet = ClusterConfig {
+        name: "emr-100x-c7i.8x".into(),
+        workers: 100, // one task slot per node (model saturates the node)
+        worker_speed: 1.0,
+        sched_overhead_secs: 0.05,
+        net_bandwidth_bps: 1.25e9,
+        ser_secs_per_byte: 0.0,
+        driver_mem_bytes: 32 << 30,
+        worker_mem_bytes: 100 * (64u64 << 30),
+    };
+    let gpu_fleet = ClusterConfig {
+        name: "emr-6x-g6e.8x-L40S".into(),
+        workers: 6,
+        worker_speed: 83.0, // implied by the paper's fleet numbers
+        ..cpu_fleet.clone()
+    };
+    let stages = vec![StageSpec::uniform("translate-5000", tasks, cpu_secs_per_task)];
+    let cpu_sim = simulate(&stages, &cpu_fleet);
+    let gpu_sim = simulate(&stages, &gpu_fleet);
+    println!("\n--- §4.4 fleet extrapolation (virtual time) ---");
+    println!(
+        "paper: 100 CPU nodes = 10h | simulated: {}",
+        ddp::util::fmt_duration(cpu_sim.makespan_secs)
+    );
+    println!(
+        "paper:   6 GPU nodes =  2h | simulated: {}",
+        ddp::util::fmt_duration(gpu_sim.makespan_secs)
+    );
+    println!(
+        "paper CPU/GPU ratio = 5.0x | simulated = {:.1}x",
+        cpu_sim.makespan_secs / gpu_sim.makespan_secs
+    );
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Perf-pass profiler: breaks the language-detection hot path into its
+//! components (featurize / PJRT execute / engine overhead) on one core.
+use ddp::corpus::web::{CorpusGen, LangProfiles};
+use ddp::ml::embedded::LangDetector;
+use ddp::ml::Featurizer;
+use ddp::pipes::model_predict::default_artifacts_dir;
+use ddp::runtime::{ModelRuntime, Tensor};
+use std::time::Instant;
+
+fn main() {
+    let profiles = LangProfiles::load_default().unwrap();
+    let docs = CorpusGen { min_words: 50, max_words: 400, ..Default::default() }
+        .generate(&profiles, 3000);
+    let texts: Vec<&str> = docs.iter().map(|d| d.text.as_str()).collect();
+    let rt = ModelRuntime::cpu().unwrap();
+    let det = LangDetector::load(&rt, default_artifacts_dir()).unwrap();
+
+    // total detect
+    let t0 = Instant::now();
+    let _ = det.detect(&texts).unwrap();
+    let total = t0.elapsed().as_secs_f64();
+
+    // featurize only
+    let f = Featurizer::standard();
+    let t0 = Instant::now();
+    let mut sum = 0.0f32;
+    for t in &texts {
+        let v = f.featurize(t);
+        sum += v[0];
+    }
+    let feat = t0.elapsed().as_secs_f64();
+    std::hint::black_box(sum);
+
+    // PJRT execute only (47 batches of 64)
+    let model = rt.load(std::path::Path::new(&default_artifacts_dir()).join("langdetect.hlo.txt")).unwrap();
+    let x = vec![0.1f32; 64 * 2048];
+    let n_batches = texts.len().div_ceil(64);
+    let t0 = Instant::now();
+    for _ in 0..n_batches {
+        let _ = model.run(&[Tensor::F32(&x, &[64, 2048])]).unwrap();
+    }
+    let pjrt = t0.elapsed().as_secs_f64();
+
+    // L2 variant: same math via plain jnp (XLA-fused dot)
+    let jnp = rt.load(std::path::Path::new(&default_artifacts_dir()).join("langdetect_jnp.hlo.txt")).unwrap();
+    let t0 = Instant::now();
+    for _ in 0..n_batches {
+        let _ = jnp.run(&[Tensor::F32(&x, &[64, 2048])]).unwrap();
+    }
+    let pjrt_jnp = t0.elapsed().as_secs_f64();
+
+    println!("docs=3000  total_detect={total:.3}s");
+    println!("  featurize: {feat:.3}s ({:.0}%)  ({:.1}us/doc)", 100.0*feat/total, feat/3000.0*1e6);
+    println!("  pjrt exec: {pjrt:.3}s ({:.0}%)  ({:.1}ms/batch64)", 100.0*pjrt/total, pjrt/n_batches as f64*1e3);
+    println!("  other:     {:.3}s", total - feat - pjrt);
+    println!("  pjrt jnp-variant: {pjrt_jnp:.3}s ({:.2}ms/batch64) — vs pallas-interpret {:.1}x",
+        pjrt_jnp/n_batches as f64*1e3, pjrt/pjrt_jnp);
+}

@@ -1,0 +1,128 @@
+"""AOT lowering: JAX models -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids that
+the image's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under ``artifacts/``):
+  langdetect.hlo.txt   — classifier over hashed n-grams (B=64)
+  embedder.hlo.txt     — random-projection embedder (B=64)
+  pairwise.hlo.txt     — blocked cosine scorer (128x128)
+  tiny_llm.hlo.txt     — decoder step (B=8, T=32)
+  model_meta.json      — shapes + language list the Rust side needs
+  featurizer_golden.json — cross-language featurizer parity vectors
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import featurize, model
+
+LANGDETECT_BATCH = 64
+EMBED_BATCH = 64
+PAIRWISE_N = 128
+LLM_BATCH = 8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: baked weights (classifier W, embedder P,
+    # LLM params) must survive the text round-trip — the default elides
+    # them as `constant({...})`, which the Rust-side parser cannot recover.
+    return comp.as_hlo_text(True)
+
+
+def lower(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def featurizer_golden() -> dict:
+    """Parity vectors: text -> nonzero (index, value) pairs. The Rust
+    featurizer test asserts byte-identical hashing + normalization."""
+    profiles = featurize.load_profiles()
+    dim = profiles["featurizer"]["dim"]
+    ngrams = tuple(profiles["featurizer"]["ngrams"])
+    texts = [
+        "the quick brown fox",
+        "der schnelle braune Fuchs",
+        "le renard brun rapide",
+        "żółć gęślą jaźń",      # Polish diacritics
+        "çok güzel bir gün",    # Turkish
+        "",                      # empty edge case
+        "a",                     # single char
+        "Ääkköset ja ööljy",    # Finnish umlauts, mixed case
+    ]
+    cases = []
+    for t in texts:
+        vec = featurize.featurize(t, dim, ngrams)
+        nz = [[i, round(v, 9)] for i, v in enumerate(vec) if v != 0.0]
+        cases.append({"text": t, "nonzero": nz})
+    return {"dim": dim, "ngrams": list(ngrams), "cases": cases}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    meta: dict = {}
+
+    print("[aot] lowering langdetect (pallas) ...")
+    fn, ex, m = model.make_langdetect(LANGDETECT_BATCH)
+    with open(os.path.join(args.out, "langdetect.hlo.txt"), "w") as f:
+        f.write(lower(fn, ex))
+    meta["langdetect"] = {**m, "batch": LANGDETECT_BATCH}
+
+    # CPU-deployment variant: identical math through plain jnp (XLA fuses
+    # the dot directly). The Pallas artifact keeps the explicit BlockSpec
+    # schedule for TPU targets; interpret-mode grid loops are slower on
+    # the CPU PJRT client (§Perf log L2). The Rust runtime picks the
+    # variant per deployment target.
+    print("[aot] lowering langdetect (jnp variant) ...")
+    fn, ex, _ = model.make_langdetect_jnp(LANGDETECT_BATCH)
+    with open(os.path.join(args.out, "langdetect_jnp.hlo.txt"), "w") as f:
+        f.write(lower(fn, ex))
+
+    print("[aot] lowering embedder ...")
+    fn, ex, m = model.make_embedder(EMBED_BATCH)
+    with open(os.path.join(args.out, "embedder.hlo.txt"), "w") as f:
+        f.write(lower(fn, ex))
+    meta["embedder"] = {**m, "batch": EMBED_BATCH}
+
+    print("[aot] lowering pairwise ...")
+    fn, ex, m = model.make_pairwise(PAIRWISE_N, PAIRWISE_N)
+    with open(os.path.join(args.out, "pairwise.hlo.txt"), "w") as f:
+        f.write(lower(fn, ex))
+    meta["pairwise"] = {**m, "n": PAIRWISE_N, "m": PAIRWISE_N}
+
+    print("[aot] lowering tiny_llm ...")
+    fn, ex, m = model.make_tiny_llm(LLM_BATCH)
+    with open(os.path.join(args.out, "tiny_llm.hlo.txt"), "w") as f:
+        f.write(lower(fn, ex))
+    meta["tiny_llm"] = {**m, "batch": LLM_BATCH}
+
+    with open(os.path.join(args.out, "model_meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+
+    print("[aot] writing featurizer golden ...")
+    with open(os.path.join(args.out, "featurizer_golden.json"), "w") as f:
+        json.dump(featurizer_golden(), f, ensure_ascii=False)
+
+    print(f"[aot] done -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Shared featurizer spec — MUST stay bit-identical to the Rust
+implementation in ``rust/src/ml/featurizer.rs``.
+
+Pipeline: lowercase -> character unigrams + bigrams -> FNV-1a 64-bit hash
+of the gram's UTF-8 bytes -> bucket ``hash % DIM`` -> counts -> L2
+normalize. Golden vectors are exported by ``aot.py`` so the Rust tests can
+assert parity.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+PROFILE_PATH = os.path.join(_HERE, "..", "..", "data", "lang_profiles.json")
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+MASK64 = (1 << 64) - 1
+
+
+def fnv1a64(data: bytes) -> int:
+    """FNV-1a 64-bit (same constants as rust util::fnv1a64)."""
+    h = FNV_OFFSET
+    for b in data:
+        h ^= b
+        h = (h * FNV_PRIME) & MASK64
+    return h
+
+
+def load_profiles(path: str = PROFILE_PATH) -> dict:
+    with open(path, "r", encoding="utf-8") as f:
+        return json.load(f)
+
+
+def grams(text: str, ngrams=(1, 2)):
+    """Character n-grams over the lowercased text (unicode chars)."""
+    chars = list(text.lower())
+    for n in ngrams:
+        for i in range(len(chars) - n + 1):
+            yield "".join(chars[i : i + n])
+
+
+def featurize(text: str, dim: int, ngrams=(1, 2)) -> list[float]:
+    """Hashed char-n-gram counts, L2-normalized. Returns a dense vector."""
+    vec = [0.0] * dim
+    for g in grams(text, ngrams):
+        idx = fnv1a64(g.encode("utf-8")) % dim
+        vec[idx] += 1.0
+    norm = math.sqrt(sum(v * v for v in vec))
+    if norm > 0:
+        vec = [v / norm for v in vec]
+    return vec
+
+
+def representative_text(words: list[tuple[str, float]], reps: int = 20) -> str:
+    """Deterministic pseudo-corpus for a language: each word repeated
+    proportionally to its weight, space separated. The Rust generator
+    samples the same distribution, so gram statistics align."""
+    parts: list[str] = []
+    for word, weight in words:
+        count = max(1, round(weight * reps))
+        parts.extend([word] * count)
+    return " ".join(parts)
+
+
+def classifier_weights(profiles: dict):
+    """Naive-Bayes-style weights W[dim][n_langs]: log probability of each
+    hashed gram bucket under each language's representative text."""
+    dim = profiles["featurizer"]["dim"]
+    ngrams = tuple(profiles["featurizer"]["ngrams"])
+    langs = [entry["code"] for entry in profiles["languages"]]
+    eps = 1e-6
+    cols = []
+    for entry in profiles["languages"]:
+        text = representative_text([(w, wt) for w, wt in entry["words"]])
+        counts = [0.0] * dim
+        for g in grams(text, ngrams):
+            counts[fnv1a64(g.encode("utf-8")) % dim] += 1.0
+        total = sum(counts)
+        col = [math.log(c / total + eps) for c in counts]
+        cols.append(col)
+    # transpose to [dim][n_langs]
+    w = [[cols[l][d] for l in range(len(langs))] for d in range(dim)]
+    return langs, w
+
+
+if __name__ == "__main__":
+    profiles = load_profiles()
+    langs, w = classifier_weights(profiles)
+    print("langs:", langs)
+    print("dim:", len(w), "x", len(w[0]))

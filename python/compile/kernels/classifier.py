@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: blocked dense classifier matmul.
+
+``logits[B, L] = x[B, D] @ w[D, L]`` tiled for TPU VMEM:
+
+* grid = (B/bm, D/bk) — the reduction dimension is a grid axis, with the
+  output block revisited per ``k`` step and accumulated in place (the
+  standard Pallas reduction idiom);
+* block shapes are MXU-friendly (bm multiple of 8, bk multiple of 128,
+  L padded to a lane multiple by the caller);
+* runs under ``interpret=True`` on CPU (the image's PJRT CPU client
+  cannot execute Mosaic custom-calls); on a real TPU the same BlockSpecs
+  bound VMEM at ``bm*bk + bk*L + bm*L`` floats per step.
+
+HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): the paper's hot
+loop is BERT-ish inference inside a JVM worker; here the analogous hot
+spot — the hashed-n-gram classifier — is expressed as an explicit
+HBM→VMEM schedule via BlockSpec instead of relying on XLA defaults.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _auto_block(size: int, preferred: int) -> int:
+    """Largest divisor of `size` that is <= preferred (keeps tiles MXU-ish
+    without forcing callers to pad small batches)."""
+    b = min(preferred, size)
+    while size % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk"))
+def classifier_matmul(x, w, bm: int | None = None, bk: int | None = None):
+    """Blocked ``x @ w`` via Pallas. Shapes must tile: B % bm == 0,
+    D % bk == 0 (blocks auto-shrink to divisors when not given).
+    L (w.shape[1]) is kept whole per block."""
+    b, d = x.shape
+    d2, l = w.shape
+    assert d == d2, f"inner dims {d} vs {d2}"
+    if bm is None:
+        bm = _auto_block(b, 32)
+    if bk is None:
+        bk = _auto_block(d, 256)
+    assert b % bm == 0, f"B={b} not divisible by bm={bm}"
+    assert d % bk == 0, f"D={d} not divisible by bk={bk}"
+    grid = (b // bm, d // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((bk, l), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, l), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, l), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def vmem_footprint_bytes(bm: int, bk: int, l: int, itemsize: int = 4) -> int:
+    """Estimated VMEM residency per grid step (x block + w block + out
+    block), used by the §Perf roofline notes in DESIGN.md."""
+    return itemsize * (bm * bk + bk * l + bm * l)

@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: blocked pairwise cosine similarity.
+
+``S[N, M] = normalize(A) @ normalize(B).T`` for the O(N²) matching
+services (paper §5). Grid tiles the *output* (N/bn, M/bm); the full
+feature dimension K rides inside each block (K is the small embedding
+width, 64, so a (bn, K) block is tiny in VMEM), letting each block
+normalize its rows locally — no cross-block reduction needed.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cosine_kernel(a_ref, b_ref, s_ref, *, eps):
+    a = a_ref[...]
+    b = b_ref[...]
+    an = a / jnp.maximum(
+        jnp.sqrt(jnp.sum(a * a, axis=1, keepdims=True)), eps
+    )
+    bn = b / jnp.maximum(
+        jnp.sqrt(jnp.sum(b * b, axis=1, keepdims=True)), eps
+    )
+    s_ref[...] = jnp.dot(an, bn.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm"))
+def pairwise_cosine(a, b, bn: int = 64, bm: int = 64):
+    """Blocked cosine similarity. N % bn == 0, M % bm == 0."""
+    n, k = a.shape
+    m, k2 = b.shape
+    assert k == k2, f"feature dims {k} vs {k2}"
+    assert n % bn == 0 and m % bm == 0, f"({n},{m}) not tiled by ({bn},{bm})"
+    import functools as ft
+
+    kernel = ft.partial(_cosine_kernel, eps=1e-8)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn, m // bm),
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package must match its reference here to float32
+tolerance across the shape/dtype sweep in ``python/tests/test_kernel.py``.
+"""
+
+import jax.numpy as jnp
+
+
+def classifier_ref(x, w):
+    """Dense classifier: logits = x @ w, f32 accumulation."""
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def log_softmax_ref(logits):
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    s = logits - m
+    return s - jnp.log(jnp.sum(jnp.exp(s), axis=-1, keepdims=True))
+
+
+def pairwise_cosine_ref(a, b, eps=1e-8):
+    """Cosine similarity matrix S[n, m] between rows of a and rows of b."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    an = a / jnp.maximum(jnp.linalg.norm(a, axis=1, keepdims=True), eps)
+    bn = b / jnp.maximum(jnp.linalg.norm(b, axis=1, keepdims=True), eps)
+    return an @ bn.T

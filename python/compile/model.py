@@ -1,0 +1,201 @@
+"""L2 JAX models — the compute graphs the Rust coordinator executes via
+PJRT. Authored here, lowered once by ``aot.py``, never imported at
+runtime.
+
+* ``langdetect``  — hashed-n-gram language classifier (the Table 4 /
+  Fig 5 experiment's ML stage). Calls the L1 Pallas classifier kernel.
+* ``embedder``    — random-projection text embedder feeding the O(N²)
+  matching services (paper §5).
+* ``pairwise``    — blocked cosine-similarity scorer (Pallas kernel).
+* ``tiny_llm``    — a small transformer decoder step standing in for the
+  Qwen-7B llama.cpp deployment of §4.4: same integration contract (an
+  LLM is just another pipe), 1/3500 the parameters.
+
+All weights are deterministic functions of the shared language profiles
+(classifier) or a fixed PRNG seed (embedder / LLM) — no training loop is
+required for the paper's experiments, which measure systems properties,
+not model quality.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import featurize
+from .kernels.classifier import classifier_matmul
+from .kernels.pairwise import pairwise_cosine
+
+# ---------------------------------------------------------------------
+# langdetect
+# ---------------------------------------------------------------------
+
+LANG_PAD = 16  # pad #languages to a lane-friendly width
+
+
+def langdetect_weights():
+    """Classifier weights [D, LANG_PAD] from the shared profiles."""
+    profiles = featurize.load_profiles()
+    langs, w = featurize.classifier_weights(profiles)
+    dim = profiles["featurizer"]["dim"]
+    mat = np.full((dim, LANG_PAD), -60.0, dtype=np.float32)  # pad cols ~ -inf
+    for d in range(dim):
+        for l in range(len(langs)):
+            mat[d, l] = w[d][l]
+    return langs, jnp.asarray(mat)
+
+
+def make_langdetect(batch: int):
+    """Returns (fn, example_args): fn(x[batch, D]) -> (logits[batch, LANG_PAD],)."""
+    langs, w = langdetect_weights()
+    dim = w.shape[0]
+
+    def fn(x):
+        logits = classifier_matmul(x, w)
+        return (logits,)
+
+    example = jax.ShapeDtypeStruct((batch, dim), jnp.float32)
+    return fn, (example,), {"langs": langs, "dim": dim, "lang_pad": LANG_PAD}
+
+
+def make_langdetect_jnp(batch: int):
+    """Same classifier through plain jnp (no Pallas) — the CPU-optimal
+    lowering; must match `make_langdetect` numerically (pytest asserts)."""
+    langs, w = langdetect_weights()
+    dim = w.shape[0]
+
+    def fn(x):
+        return (jnp.dot(x, w),)
+
+    example = jax.ShapeDtypeStruct((batch, dim), jnp.float32)
+    return fn, (example,), {"langs": langs, "dim": dim, "lang_pad": LANG_PAD}
+
+
+# ---------------------------------------------------------------------
+# embedder
+# ---------------------------------------------------------------------
+
+EMBED_K = 64
+
+
+def embedder_weights(dim: int):
+    key = jax.random.PRNGKey(1234)
+    p = jax.random.normal(key, (dim, EMBED_K), dtype=jnp.float32) / np.sqrt(dim)
+    return p
+
+
+def make_embedder(batch: int):
+    """fn(x[batch, D]) -> (emb[batch, K],) with L2-normalized rows."""
+    profiles = featurize.load_profiles()
+    dim = profiles["featurizer"]["dim"]
+    p = embedder_weights(dim)
+
+    def fn(x):
+        e = classifier_matmul(x, p)  # same Pallas kernel, different weights
+        norm = jnp.maximum(jnp.linalg.norm(e, axis=1, keepdims=True), 1e-8)
+        return (e / norm,)
+
+    example = jax.ShapeDtypeStruct((batch, dim), jnp.float32)
+    return fn, (example,), {"dim": dim, "k": EMBED_K}
+
+
+# ---------------------------------------------------------------------
+# pairwise scorer
+# ---------------------------------------------------------------------
+
+
+def make_pairwise(n: int, m: int):
+    """fn(a[n,K], b[m,K]) -> (S[n,m],) cosine similarities."""
+
+    def fn(a, b):
+        return (pairwise_cosine(a, b),)
+
+    ea = jax.ShapeDtypeStruct((n, EMBED_K), jnp.float32)
+    eb = jax.ShapeDtypeStruct((m, EMBED_K), jnp.float32)
+    return fn, (ea, eb), {"k": EMBED_K}
+
+
+# ---------------------------------------------------------------------
+# tiny LLM (decoder step)
+# ---------------------------------------------------------------------
+
+VOCAB = 256  # byte-level
+D_MODEL = 128
+N_HEADS = 4
+N_LAYERS = 2
+SEQ = 32
+
+
+def _llm_params():
+    """Deterministic random-init decoder weights (seed fixed)."""
+    key = jax.random.PRNGKey(7)
+    keys = jax.random.split(key, 4 + N_LAYERS * 6)
+    k = iter(keys)
+    scale = 0.02
+    p = {
+        "tok": jax.random.normal(next(k), (VOCAB, D_MODEL)) * scale,
+        "pos": jax.random.normal(next(k), (SEQ, D_MODEL)) * scale,
+        "out": jax.random.normal(next(k), (D_MODEL, VOCAB)) * scale,
+        "ln_f": jnp.ones((D_MODEL,)),
+        "layers": [],
+    }
+    for _ in range(N_LAYERS):
+        p["layers"].append(
+            {
+                "qkv": jax.random.normal(next(k), (D_MODEL, 3 * D_MODEL)) * scale,
+                "proj": jax.random.normal(next(k), (D_MODEL, D_MODEL)) * scale,
+                "mlp1": jax.random.normal(next(k), (D_MODEL, 4 * D_MODEL)) * scale,
+                "mlp2": jax.random.normal(next(k), (4 * D_MODEL, D_MODEL)) * scale,
+                "ln1": jnp.ones((D_MODEL,)),
+                "ln2": jnp.ones((D_MODEL,)),
+            }
+        )
+    return p
+
+
+def _layer_norm(x, g):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return g * (x - mu) / jnp.sqrt(var + 1e-5)
+
+
+def _attention(x, qkv, proj):
+    b, t, d = x.shape
+    h = N_HEADS
+    hd = d // h
+    q, k, v = jnp.split(x @ qkv, 3, axis=-1)
+    q = q.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    att = (q @ k.transpose(0, 1, 3, 2)) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((t, t)))
+    att = jnp.where(mask == 0, -1e9, att)
+    att = jax.nn.softmax(att, axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return y @ proj
+
+
+def make_tiny_llm(batch: int):
+    """fn(tokens[batch, SEQ] i32) -> (logits[batch, VOCAB],): next-token
+    logits after the final position."""
+    params = _llm_params()
+
+    def fn(tokens):
+        x = params["tok"][tokens] + params["pos"][None, :, :]
+        for lp in params["layers"]:
+            x = x + _attention(_layer_norm(x, lp["ln1"]), lp["qkv"], lp["proj"])
+            h = _layer_norm(x, lp["ln2"])
+            x = x + jax.nn.gelu(h @ lp["mlp1"]) @ lp["mlp2"]
+        x = _layer_norm(x, params["ln_f"])
+        logits = x[:, -1, :] @ params["out"]
+        return (logits,)
+
+    example = jax.ShapeDtypeStruct((batch, SEQ), jnp.int32)
+    return fn, (example,), {
+        "vocab": VOCAB,
+        "d_model": D_MODEL,
+        "n_layers": N_LAYERS,
+        "n_heads": N_HEADS,
+        "seq": SEQ,
+    }

@@ -1,0 +1,124 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps tiled shapes and value distributions; assert_allclose
+against the reference is the core correctness signal for the compute
+layer the Rust coordinator ultimately executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.classifier import classifier_matmul, vmem_footprint_bytes
+from compile.kernels.pairwise import pairwise_cosine
+from compile.kernels.ref import classifier_ref, log_softmax_ref, pairwise_cosine_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------- classifier
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bm_i=st.integers(1, 3),   # B = bm * bm_i
+    bk_i=st.integers(1, 3),   # D = bk * bk_i
+    l=st.sampled_from([4, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_classifier_matches_ref_shapes(bm_i, bk_i, l, seed):
+    bm, bk = 8, 128
+    b, d = bm * bm_i, bk * bk_i
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, d)).astype(np.float32)
+    w = rng.normal(size=(d, l)).astype(np.float32)
+    got = classifier_matmul(x, w, bm=bm, bk=bk)
+    want = classifier_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_classifier_extreme_values(seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(8, 128)) * 1e3).astype(np.float32)
+    w = (rng.normal(size=(128, 16)) * 1e-3).astype(np.float32)
+    got = classifier_matmul(x, w, bm=8, bk=128)
+    np.testing.assert_allclose(got, classifier_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_classifier_default_blocks_production_shape():
+    # the AOT shape: B=64, D=2048, L=16
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(64, 2048)).astype(np.float32)
+    w = rng.normal(size=(2048, 16)).astype(np.float32)
+    got = classifier_matmul(x, w)
+    np.testing.assert_allclose(got, classifier_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_classifier_rejects_untiled_shapes():
+    x = np.zeros((5, 128), np.float32)  # 5 % 8 != 0... bm=8
+    w = np.zeros((128, 4), np.float32)
+    with pytest.raises(AssertionError):
+        classifier_matmul(x, w, bm=8, bk=128)
+
+
+def test_classifier_bf16_inputs_accumulate_f32():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(16, 256)).astype(jnp.bfloat16)
+    w = rng.normal(size=(256, 16)).astype(jnp.bfloat16)
+    got = classifier_matmul(x, w, bm=8, bk=128)
+    assert got.dtype == jnp.float32
+    want = classifier_ref(x.astype(np.float32), w.astype(np.float32))
+    np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)
+
+
+def test_vmem_footprint_under_budget():
+    # AOT config must fit comfortably in 16 MiB VMEM
+    assert vmem_footprint_bytes(32, 256, 16) < (16 << 20) // 4
+
+
+# ----------------------------------------------------------------- pairwise
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_i=st.integers(1, 3),
+    m_i=st.integers(1, 3),
+    k=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pairwise_matches_ref(n_i, m_i, k, seed):
+    bn = bm = 16
+    n, m = bn * n_i, bm * m_i
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(n, k)).astype(np.float32)
+    b = rng.normal(size=(m, k)).astype(np.float32)
+    got = pairwise_cosine(a, b, bn=bn, bm=bm)
+    want = pairwise_cosine_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=2e-4)
+
+
+def test_pairwise_self_similarity_is_one():
+    rng = np.random.default_rng(3)
+    a = rng.normal(size=(64, 64)).astype(np.float32)
+    s = pairwise_cosine(a, a)
+    np.testing.assert_allclose(np.diag(s), np.ones(64), rtol=1e-5, atol=1e-5)
+    assert np.all(s <= 1.0 + 1e-5) and np.all(s >= -1.0 - 1e-5)
+
+
+def test_pairwise_zero_rows_safe():
+    a = np.zeros((16, 64), np.float32)
+    b = np.ones((16, 64), np.float32)
+    s = pairwise_cosine(a, b, bn=16, bm=16)
+    assert np.all(np.isfinite(s))
+    np.testing.assert_allclose(s, np.zeros((16, 16)), atol=1e-6)
+
+
+# -------------------------------------------------------------- log-softmax
+
+def test_log_softmax_ref_is_normalized():
+    rng = np.random.default_rng(5)
+    logits = rng.normal(size=(4, 16)).astype(np.float32)
+    ls = log_softmax_ref(jnp.asarray(logits))
+    np.testing.assert_allclose(np.exp(ls).sum(axis=1), np.ones(4), rtol=1e-5)

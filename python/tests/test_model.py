@@ -1,0 +1,170 @@
+"""L2 correctness: model graphs produce the right shapes and the
+classifier actually detects languages on profile-drawn text."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import featurize, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ART = os.path.join(HERE, "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def profiles():
+    return featurize.load_profiles()
+
+
+@pytest.fixture(scope="module")
+def langdetect():
+    fn, ex, meta = model.make_langdetect(8)
+    return fn, meta
+
+
+def test_fnv_vectors():
+    # must match rust util::fnv1a64 known vectors
+    assert featurize.fnv1a64(b"") == 0xCBF29CE484222325
+    assert featurize.fnv1a64(b"a") == 0xAF63DC4C8601EC8C
+    assert featurize.fnv1a64(b"foobar") == 0x85944171F73967E8
+
+
+def test_featurizer_l2_normalized(profiles):
+    dim = profiles["featurizer"]["dim"]
+    v = featurize.featurize("hello world", dim)
+    assert abs(sum(x * x for x in v) - 1.0) < 1e-9
+
+
+def test_featurizer_empty_text(profiles):
+    dim = profiles["featurizer"]["dim"]
+    v = featurize.featurize("", dim)
+    assert all(x == 0.0 for x in v)
+
+
+def test_langdetect_shapes(langdetect, profiles):
+    fn, meta = langdetect
+    dim = profiles["featurizer"]["dim"]
+    x = jnp.zeros((8, dim), jnp.float32)
+    (logits,) = fn(x)
+    assert logits.shape == (8, model.LANG_PAD)
+    assert len(meta["langs"]) == 12
+
+
+def test_langdetect_accuracy_on_profile_text(langdetect, profiles):
+    """Feed each language's own common words; the classifier must get
+    nearly all right — this is the semantic check that the weights
+    derived from profiles separate the languages."""
+    fn, meta = langdetect
+    langs = meta["langs"]
+    dim = profiles["featurizer"]["dim"]
+    correct = 0
+    total = 0
+    for li, entry in enumerate(profiles["languages"]):
+        words = [w for w, _ in entry["words"]]
+        # build held-out-ish sentences: chunks of the word list
+        for start in range(0, len(words) - 6, 6):
+            text = " ".join(words[start : start + 6])
+            x = np.zeros((8, dim), np.float32)
+            x[0] = featurize.featurize(text, dim)
+            (logits,) = fn(jnp.asarray(x))
+            pred = int(np.argmax(np.asarray(logits[0])[: len(langs)]))
+            correct += int(pred == li)
+            total += 1
+    acc = correct / total
+    assert acc > 0.9, f"language detection accuracy {acc:.2%} on profile text"
+
+
+def test_padding_columns_never_win(langdetect, profiles):
+    fn, meta = langdetect
+    dim = profiles["featurizer"]["dim"]
+    rng = np.random.default_rng(0)
+    x = np.abs(rng.normal(size=(8, dim))).astype(np.float32)
+    (logits,) = fn(jnp.asarray(x))
+    preds = np.argmax(np.asarray(logits), axis=1)
+    assert np.all(preds < len(meta["langs"]))
+
+
+def test_embedder_normalized():
+    fn, ex, meta = model.make_embedder(8)
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(8, meta["dim"])).astype(np.float32)
+    (emb,) = fn(jnp.asarray(x))
+    assert emb.shape == (8, model.EMBED_K)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(emb), axis=1), np.ones(8), rtol=1e-5
+    )
+
+
+def test_embedder_similar_text_similar_embedding(profiles):
+    fn, _, meta = model.make_embedder(8)
+    dim = meta["dim"]
+    x = np.zeros((8, dim), np.float32)
+    x[0] = featurize.featurize("the cat sat on the mat", dim)
+    x[1] = featurize.featurize("the cat sat on the hat", dim)
+    x[2] = featurize.featurize("der schnelle braune fuchs springt", dim)
+    (emb,) = fn(jnp.asarray(x))
+    e = np.asarray(emb)
+    sim_close = float(e[0] @ e[1])
+    sim_far = float(e[0] @ e[2])
+    assert sim_close > sim_far, (sim_close, sim_far)
+
+
+def test_tiny_llm_shapes_and_determinism():
+    fn, ex, meta = model.make_tiny_llm(4)
+    tokens = jnp.asarray(np.arange(4 * meta["seq"]).reshape(4, meta["seq"]) % 256, jnp.int32)
+    (a,) = fn(tokens)
+    (b,) = fn(tokens)
+    assert a.shape == (4, meta["vocab"])
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert np.all(np.isfinite(np.asarray(a)))
+
+
+def test_tiny_llm_causal():
+    """Changing the last token must change logits; the model reads it."""
+    fn, _, meta = model.make_tiny_llm(1)
+    t1 = np.zeros((1, meta["seq"]), np.int32)
+    t2 = t1.copy()
+    t2[0, -1] = 65
+    (a,) = fn(jnp.asarray(t1))
+    (b,) = fn(jnp.asarray(t2))
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "model_meta.json")),
+                    reason="artifacts not built")
+def test_artifacts_meta_consistent(profiles):
+    with open(os.path.join(ART, "model_meta.json")) as f:
+        meta = json.load(f)
+    assert meta["langdetect"]["dim"] == profiles["featurizer"]["dim"]
+    assert len(meta["langdetect"]["langs"]) == 12
+    assert meta["tiny_llm"]["vocab"] == 256
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "featurizer_golden.json")),
+                    reason="artifacts not built")
+def test_featurizer_golden_self_consistent(profiles):
+    with open(os.path.join(ART, "featurizer_golden.json"), encoding="utf-8") as f:
+        golden = json.load(f)
+    dim = golden["dim"]
+    for case in golden["cases"]:
+        vec = featurize.featurize(case["text"], dim, tuple(golden["ngrams"]))
+        nz = {i: v for i, v in case["nonzero"]}
+        for i, v in enumerate(vec):
+            if v != 0.0:
+                assert i in nz and abs(nz[i] - v) < 1e-6
+
+
+def test_langdetect_jnp_variant_matches_pallas():
+    fn_p, ex, _ = model.make_langdetect(8)
+    fn_j, _, _ = model.make_langdetect_jnp(8)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(8, ex[0].shape[1])).astype(np.float32))
+    (a,) = fn_p(x)
+    (b,) = fn_j(x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,149 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. narrow-chain **fusion** on/off (§3.1 "chained via system memory");
+//! 2. **selective caching** of shared anchors on/off (§3.2);
+//! 3. object **lifecycle scope**: instance vs partition vs record (§3.7) —
+//!    measured model-initialization counts × measured init cost;
+//! 4. **metrics publishing** overhead at paper cadence vs aggressive.
+//!
+//! `cargo bench --bench ablations`
+
+use ddp::bench::{measure, ratio, Table};
+use ddp::corpus::web::{CorpusGen, LangProfiles};
+use ddp::engine::row::Row;
+use ddp::engine::{Dataset, EngineConfig, EngineCtx};
+use ddp::metrics::{MemorySink, MetricsPublisher, MetricsRegistry, PublisherConfig};
+use ddp::pipes::model_predict::default_artifacts_dir;
+use ddp::row;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    ddp::util::logger::init();
+    let mut t = Table::new("Ablations", &["ablation", "variant", "result", "delta"]);
+
+    // ------------------------------------------------- 1. fusion on/off
+    let profiles = LangProfiles::load_default().unwrap();
+    let (schema, rows) = CorpusGen::default().generate_rows(&profiles, 20_000);
+    let build = |fusion: bool| {
+        let ctx = EngineCtx::new(EngineConfig { workers: 2, fusion, ..Default::default() });
+        let ds = Dataset::from_rows("docs", schema.clone(), rows.clone(), 8);
+        (ctx, ds)
+    };
+    let chain = |ds: &Dataset| {
+        let s = ds.schema.clone();
+        ds.map(s.clone(), |r: &Row| {
+            let mut f = r.fields.clone();
+            if let ddp::engine::Field::Str(t) = &f[2] {
+                f[2] = ddp::engine::Field::Str(t.to_uppercase());
+            }
+            Row::new(f)
+        })
+        .filter(|r: &Row| r.get(2).as_str().map(|t| t.len() > 20).unwrap_or(false))
+        .map(s.clone(), |r: &Row| {
+            let mut f = r.fields.clone();
+            if let ddp::engine::Field::Str(t) = &f[2] {
+                f[2] = ddp::engine::Field::Str(t.to_lowercase());
+            }
+            Row::new(f)
+        })
+        .map(s, |r: &Row| r.clone())
+    };
+    let fused = {
+        let (ctx, ds) = build(true);
+        let d = chain(&ds);
+        measure(1, 5, || {
+            ctx.count(&d).unwrap();
+        })
+    };
+    let unfused = {
+        let (ctx, ds) = build(false);
+        let d = chain(&ds);
+        measure(1, 5, || {
+            ctx.count(&d).unwrap();
+        })
+    };
+    t.row(&["narrow-chain fusion".into(), "fused (DDP default)".into(),
+        format!("{:.1}ms", fused.p50_secs * 1e3), "1.0x".into()]);
+    t.row(&["narrow-chain fusion".into(), "materialized per op".into(),
+        format!("{:.1}ms", unfused.p50_secs * 1e3), ratio(unfused.p50_secs, fused.p50_secs)]);
+
+    // --------------------------------------- 2. selective caching on/off
+    let (ctx, ds) = build(true);
+    let expensive = ds.map(ds.schema.clone(), |r: &Row| {
+        // deliberately costly shared stage
+        let mut h = 0u64;
+        for _ in 0..50 {
+            h = h.wrapping_add(ddp::util::fnv1a64(
+                r.get(2).as_str().unwrap_or("").as_bytes(),
+            ));
+        }
+        std::hint::black_box(h);
+        r.clone()
+    });
+    let consumer_a = expensive.filter(|_| true);
+    let consumer_b = expensive.filter(|_| false);
+    let uncached = measure(1, 3, || {
+        ctx.count(&consumer_a).unwrap();
+        ctx.count(&consumer_b).unwrap();
+    });
+    ctx.persist(&expensive);
+    ctx.count(&expensive).unwrap(); // warm
+    let cached = measure(1, 3, || {
+        ctx.count(&consumer_a).unwrap();
+        ctx.count(&consumer_b).unwrap();
+    });
+    t.row(&["selective caching (§3.2)".into(), "shared anchor cached".into(),
+        format!("{:.1}ms", cached.p50_secs * 1e3), "1.0x".into()]);
+    t.row(&["selective caching (§3.2)".into(), "recomputed per consumer".into(),
+        format!("{:.1}ms", uncached.p50_secs * 1e3), ratio(uncached.p50_secs, cached.p50_secs)]);
+
+    // ------------------------------------------- 3. lifecycle scopes §3.7
+    // measured: one PJRT client + langdetect compile = init cost; scopes
+    // multiply it by their construction counts over P partitions.
+    let artifacts = default_artifacts_dir();
+    if std::path::Path::new(&artifacts).join("model_meta.json").exists() {
+        let t0 = std::time::Instant::now();
+        let rt = ddp::runtime::ModelRuntime::cpu().unwrap();
+        let _m = ddp::ml::embedded::LangDetector::load(&rt, &artifacts).unwrap();
+        let init_secs = t0.elapsed().as_secs_f64();
+        let partitions = 64u64;
+        let records = 1_000_000u64;
+        for (scope, inits) in [("instance", 1u64), ("partition", partitions), ("record", records)] {
+            let cost = init_secs * inits as f64;
+            t.row(&["lifecycle scope (§3.7)".into(), scope.into(),
+                format!("{} inits = {}", inits, ddp::util::fmt_duration(cost)),
+                ratio(cost, init_secs)]);
+        }
+        println!("(measured model init cost: {init_secs:.3}s; 1M records / 64 partitions)");
+    }
+
+    // --------------------------------------- 4. metrics publishing cost
+    let work = |reg: &MetricsRegistry| {
+        for i in 0..200_000u64 {
+            reg.counter_add("docs", 1);
+            if i % 64 == 0 {
+                reg.observe("latency", 0.001);
+            }
+        }
+    };
+    let reg = MetricsRegistry::new();
+    let no_pub = measure(1, 5, || work(&reg));
+    let reg2 = MetricsRegistry::new();
+    let sink = MemorySink::new();
+    let publisher = MetricsPublisher::start(
+        reg2.clone(),
+        sink.clone(),
+        ddp::util::clock::wall(),
+        PublisherConfig { cadence: Duration::from_millis(10) }, // 3000x paper cadence
+    );
+    let with_pub = measure(1, 5, || work(&reg2));
+    publisher.stop();
+    t.row(&["async metrics (§3.3.4)".into(), "no publisher".into(),
+        format!("{:.1}ms", no_pub.p50_secs * 1e3), "1.0x".into()]);
+    t.row(&["async metrics (§3.3.4)".into(), "publishing @10ms (3000x paper rate)".into(),
+        format!("{:.1}ms", with_pub.p50_secs * 1e3), ratio(with_pub.p50_secs, no_pub.p50_secs)]);
+
+    t.save("ablations");
+    let _ = Arc::strong_count(&sink);
+}

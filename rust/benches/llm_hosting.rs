@@ -1,0 +1,85 @@
+//! Regenerates **§4.4** (hosting LLMs): the LLM-as-a-pipe integration,
+//! measured for real with the tiny decoder artifact, plus the paper's
+//! two-fleet comparison (100 CPU nodes = 10 h vs 6 GPU nodes = 2 h) in
+//! virtual time. `cargo bench --bench llm_hosting`
+
+use ddp::bench::Table;
+use ddp::engine::cluster::{simulate, ClusterConfig, StageSpec};
+use ddp::ml::embedded::TinyLlm;
+use ddp::pipes::llm::generate_batched;
+use ddp::pipes::model_predict::default_artifacts_dir;
+use ddp::runtime::ModelRuntime;
+use ddp::util::cli::Args;
+use ddp::util::fmt_duration;
+
+fn main() {
+    ddp::util::logger::init();
+    let args = Args::from_env();
+    let n_prompts = args.opt_usize("prompts", 16);
+    let new_tokens = args.opt_usize("max-new-tokens", 8);
+    let artifacts = default_artifacts_dir();
+    if !std::path::Path::new(&artifacts).join("tiny_llm.hlo.txt").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        return;
+    }
+
+    let rt = ModelRuntime::cpu().unwrap();
+    let llm = TinyLlm::load(&rt, &artifacts).unwrap();
+
+    // --- real decode throughput (batched vs one-by-one) ------------------
+    let prompts: Vec<String> = (0..n_prompts)
+        .map(|i| format!("en->zh translation request number {i}"))
+        .collect();
+    let prompt_refs: Vec<&str> = prompts.iter().map(|s| s.as_str()).collect();
+
+    let t0 = std::time::Instant::now();
+    let out = generate_batched(&llm, &prompt_refs, new_tokens).unwrap();
+    let batched_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(out.len(), n_prompts);
+    let tokens = (n_prompts * new_tokens) as f64;
+
+    let t0 = std::time::Instant::now();
+    for p in &prompt_refs {
+        generate_batched(&llm, std::slice::from_ref(p), new_tokens).unwrap();
+    }
+    let serial_secs = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(
+        &format!("§4.4 LLM-as-a-pipe ({n_prompts} prompts × {new_tokens} new tokens, tiny decoder)"),
+        &["Mode", "Time", "tok/s"],
+    );
+    t.row(&["batched decode (pipe path)".into(), format!("{batched_secs:.2}s"),
+        format!("{:.1}", tokens / batched_secs)]);
+    t.row(&["serial decode".into(), format!("{serial_secs:.2}s"),
+        format!("{:.1}", tokens / serial_secs)]);
+    t.row(&["batching speedup".into(), "".into(),
+        format!("{:.1}x", serial_secs / batched_secs)]);
+
+    // --- fleet extrapolation (calibrated; see examples/llm_hosting.rs) ---
+    let stages = vec![StageSpec::uniform("translate-5000", 5000, 720.0)];
+    let cpu_fleet = ClusterConfig {
+        name: "emr-100x-c7i.8x".into(),
+        workers: 100,
+        worker_speed: 1.0,
+        sched_overhead_secs: 0.05,
+        net_bandwidth_bps: 1.25e9,
+        ser_secs_per_byte: 0.0,
+        driver_mem_bytes: 32 << 30,
+        worker_mem_bytes: 100 * (64u64 << 30),
+    };
+    let gpu_fleet = ClusterConfig {
+        name: "emr-6x-g6e.8x".into(),
+        workers: 6,
+        worker_speed: 83.0,
+        ..cpu_fleet.clone()
+    };
+    let cpu = simulate(&stages, &cpu_fleet);
+    let gpu = simulate(&stages, &gpu_fleet);
+    t.row(&["5000 tasks @ 100 CPU nodes (paper 10h)".into(),
+        fmt_duration(cpu.makespan_secs), "".into()]);
+    t.row(&["5000 tasks @ 6 GPU nodes (paper 2h)".into(),
+        fmt_duration(gpu.makespan_secs), "".into()]);
+    t.row(&["CPU/GPU ratio (paper 5.0x)".into(),
+        format!("{:.1}x", cpu.makespan_secs / gpu.makespan_secs), "".into()]);
+    t.save("llm_hosting");
+}

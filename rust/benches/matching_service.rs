@@ -1,0 +1,88 @@
+//! Regenerates the **§5** claim: the O(N²) matching services achieve
+//! billion-scale inference "within hours" thanks to blocking. Sweeps N
+//! with full-cross vs blocked matching (real wall-clock), then
+//! extrapolates the measured per-pair cost to 1 B records in virtual
+//! time. `cargo bench --bench matching_service`
+
+use ddp::bench::Table;
+use ddp::corpus::enterprise::EnterpriseGen;
+use ddp::ddp::PipeContext;
+use ddp::engine::cluster::{simulate, ClusterConfig, StageSpec};
+use ddp::engine::Dataset;
+use ddp::ddp::Pipe;
+use ddp::pipes::matching::{MatchAlgo, MatchingTransformer};
+use ddp::util::cli::Args;
+use ddp::util::fmt_duration;
+
+fn run_matching(n: usize, block: Option<&str>, algo: MatchAlgo) -> (f64, u64, usize) {
+    let ctx = PipeContext::for_tests();
+    let gen = EnterpriseGen { seed: 3, dup_rate: 0.1 };
+    let (schema, rows) = gen.generate_rows(n);
+    let ds = Dataset::from_rows("recs", schema, rows, 8);
+    let pipe = MatchingTransformer {
+        field: "name".into(),
+        id_col: "id".into(),
+        block_by: block.map(String::from),
+        algo,
+        threshold: 0.8,
+        num_parts: 8,
+    };
+    let t0 = std::time::Instant::now();
+    let out = pipe.transform(&ctx, &[ds]).unwrap();
+    let matches = ctx.engine.count(&out[0]).unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    let compared = ctx.metrics.counter("pipe.MatchingTransformer.pairs_compared");
+    (secs, compared, matches)
+}
+
+fn main() {
+    ddp::util::logger::init();
+    let args = Args::from_env();
+    let max_n = args.opt_usize("max-records", 4_000);
+
+    let mut t = Table::new(
+        "§5 O(N²) matching: full cross-product vs blocked (levenshtein, threshold 0.8)",
+        &["N", "mode", "pairs compared", "matches", "time", "pairs/s"],
+    );
+    let mut per_pair_secs = 1e-6;
+    for &n in &[500usize, 1_000, 2_000, 4_000] {
+        if n > max_n {
+            break;
+        }
+        let (full_s, full_pairs, full_m) = run_matching(n, None, MatchAlgo::Levenshtein);
+        per_pair_secs = full_s / full_pairs.max(1) as f64;
+        t.row(&[n.to_string(), "full O(N²)".into(), full_pairs.to_string(),
+            full_m.to_string(), format!("{full_s:.3}s"),
+            format!("{:.0}", full_pairs as f64 / full_s)]);
+        let (blk_s, blk_pairs, blk_m) = run_matching(n, Some("city"), MatchAlgo::Levenshtein);
+        t.row(&[n.to_string(), "blocked(city)".into(), blk_pairs.to_string(),
+            blk_m.to_string(), format!("{blk_s:.3}s"),
+            format!("{:.0}", blk_pairs as f64 / blk_s.max(1e-9))]);
+    }
+
+    // cosine variant at one size (algorithm plug-ability, §5)
+    let (cos_s, cos_pairs, cos_m) = run_matching(1_000, Some("city"), MatchAlgo::Cosine);
+    t.row(&["1000".into(), "blocked cosine".into(), cos_pairs.to_string(),
+        cos_m.to_string(), format!("{cos_s:.3}s"), format!("{:.0}", cos_pairs as f64 / cos_s)]);
+
+    // --- billion-scale extrapolation -------------------------------------
+    // blocking with B buckets turns N²/2 into N²/2B comparisons; with
+    // fine-grained blocking (e.g. 1e6 buckets over 1e9 records: 1k per
+    // bucket) the pair count is ~N·b/2 = 5e11... the paper's services use
+    // multi-key blocking to push work to ~100 pairs per record.
+    let n: f64 = 1e9;
+    let pairs_per_record = 100.0;
+    let total_pairs = n * pairs_per_record;
+    let cluster = ClusterConfig::glue_like(48 * 16); // production-sized fleet
+    let tasks = cluster.workers * 8;
+    let sim = simulate(
+        &[StageSpec::uniform("blocked-match-1B", tasks, total_pairs * per_pair_secs / tasks as f64)
+            .with_shuffle((n * 120.0) as u64)],
+        &cluster,
+    );
+    t.row(&["1e9".into(), format!("blocked ({pairs_per_record} pairs/rec, 768 vCPU)"),
+        format!("{total_pairs:.1e}"), "—".into(), fmt_duration(sim.makespan_secs),
+        format!("{:.0}", total_pairs / sim.makespan_secs)]);
+    t.save("matching_service");
+    println!("paper claim: billion-scale ML inference within hours (measured per-pair cost: {per_pair_secs:.2e}s)");
+}

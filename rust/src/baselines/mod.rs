@@ -1,0 +1,11 @@
+//! Comparator implementations for the paper's experiments:
+//!
+//! * [`native_spark`] — the Table 3 monolith (driver collects, REST ML,
+//!   no caching) + analytic stage builders for virtual-time extrapolation;
+//! * [`raysim`] — Ray-style task/object-store execution (Table 4, Fig 5);
+//! * [`singlethread`] — sequential reference, the honest per-doc cost
+//!   source for the cluster simulator.
+
+pub mod native_spark;
+pub mod raysim;
+pub mod singlethread;

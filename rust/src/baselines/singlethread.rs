@@ -1,0 +1,92 @@
+//! Single-threaded reference implementation of the language-detection
+//! pipeline (clean → dedup → detect → partition counts) — the structural
+//! twin of `python/baselines/langdetect_single.py`, used to (a) measure
+//! honest per-document costs that feed the cluster simulator and (b)
+//! anchor the Table 4 "how much does the framework cost" comparison.
+
+use crate::corpus::web::Doc;
+use crate::ml::embedded::LangDetector;
+use crate::pipes::preprocess::clean_text;
+use crate::util::error::Result;
+use crate::util::fnv1a64;
+use std::collections::{HashMap, HashSet};
+
+/// Timing breakdown of a sequential run.
+#[derive(Debug, Clone)]
+pub struct SingleThreadReport {
+    pub docs_in: usize,
+    pub docs_after_dedup: usize,
+    pub lang_counts: HashMap<String, usize>,
+    pub clean_secs: f64,
+    pub dedup_secs: f64,
+    pub detect_secs: f64,
+    pub total_secs: f64,
+}
+
+/// Run the full pipeline on one thread.
+pub fn run(detector: &LangDetector, docs: &[Doc], batch: usize) -> Result<SingleThreadReport> {
+    let t_total = std::time::Instant::now();
+
+    let t0 = std::time::Instant::now();
+    let cleaned: Vec<(i64, String)> = docs
+        .iter()
+        .map(|d| (d.id, clean_text(&d.text)))
+        .filter(|(_, t)| t.chars().count() >= 4)
+        .collect();
+    let clean_secs = t0.elapsed().as_secs_f64();
+
+    let t0 = std::time::Instant::now();
+    let mut seen = HashSet::new();
+    let mut unique: Vec<(i64, String)> = Vec::with_capacity(cleaned.len());
+    for (id, text) in cleaned {
+        if seen.insert(fnv1a64(text.to_lowercase().as_bytes())) {
+            unique.push((id, text));
+        }
+    }
+    let dedup_secs = t0.elapsed().as_secs_f64();
+
+    let t0 = std::time::Instant::now();
+    let mut lang_counts: HashMap<String, usize> = HashMap::new();
+    for chunk in unique.chunks(batch.max(1)) {
+        let texts: Vec<&str> = chunk.iter().map(|(_, t)| t.as_str()).collect();
+        for lang in detector.detect(&texts)? {
+            *lang_counts.entry(lang).or_insert(0) += 1;
+        }
+    }
+    let detect_secs = t0.elapsed().as_secs_f64();
+
+    Ok(SingleThreadReport {
+        docs_in: docs.len(),
+        docs_after_dedup: unique.len(),
+        lang_counts,
+        clean_secs,
+        dedup_secs,
+        detect_secs,
+        total_secs: t_total.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::web::{CorpusGen, LangProfiles};
+    use crate::pipes::model_predict::default_artifacts_dir;
+    use crate::runtime::ModelRuntime;
+
+    #[test]
+    fn sequential_pipeline_counts_languages() {
+        if !std::path::Path::new(&default_artifacts_dir()).join("model_meta.json").exists() {
+            return;
+        }
+        let rt = ModelRuntime::cpu().unwrap();
+        let det = LangDetector::load(&rt, default_artifacts_dir()).unwrap();
+        let profiles = LangProfiles::load_default().unwrap();
+        let docs = CorpusGen { dup_rate: 0.2, ..Default::default() }.generate(&profiles, 200);
+        let report = run(&det, &docs, 64).unwrap();
+        assert!(report.docs_after_dedup < report.docs_in);
+        let total: usize = report.lang_counts.values().sum();
+        assert_eq!(total, report.docs_after_dedup);
+        // accuracy: most detected languages should match ground truth mix
+        assert!(report.lang_counts.len() >= 8, "saw {:?}", report.lang_counts);
+    }
+}

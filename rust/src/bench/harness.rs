@@ -1,0 +1,137 @@
+//! Timing harness for `cargo bench` targets (criterion is not in the
+//! offline vendor set): warmup + N samples, mean/p50/p95, and Markdown /
+//! CSV table output so every bench prints the paper-table rows it
+//! regenerates.
+
+use std::time::Instant;
+
+/// Summary statistics over bench samples.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub samples: usize,
+    pub mean_secs: f64,
+    pub p50_secs: f64,
+    pub p95_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+}
+
+/// Run `f` for `warmup` unmeasured + `samples` measured iterations.
+pub fn measure<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    stats_from(&mut times)
+}
+
+/// Single timed run (for expensive end-to-end cases).
+pub fn measure_once<F: FnOnce()>(f: F) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}
+
+fn stats_from(times: &mut [f64]) -> BenchStats {
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = times.len();
+    let q = |p: f64| times[((n - 1) as f64 * p).round() as usize];
+    BenchStats {
+        samples: n,
+        mean_secs: times.iter().sum::<f64>() / n as f64,
+        p50_secs: q(0.5),
+        p95_secs: q(0.95),
+        min_secs: times[0],
+        max_secs: times[n - 1],
+    }
+}
+
+/// Markdown table writer used by every bench binary.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Print as Markdown (and return the string for logging/files).
+    pub fn print(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("\n## {}\n\n", self.title));
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}|\n",
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        println!("{out}");
+        out
+    }
+
+    /// Append the rendered table to `bench_results/<name>.md`.
+    pub fn save(&self, name: &str) {
+        let rendered = self.print();
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+        let _ = std::fs::create_dir_all(&dir);
+        let _ = std::fs::write(dir.join(format!("{name}.md")), rendered);
+    }
+}
+
+/// `1.23x` style ratio formatting.
+pub fn ratio(a: f64, b: f64) -> String {
+    if b <= 0.0 {
+        return "n/a".into();
+    }
+    format!("{:.1}x", a / b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_produces_ordered_stats() {
+        let mut i = 0u64;
+        let s = measure(2, 10, || {
+            i += 1;
+            std::hint::black_box(i);
+        });
+        assert_eq!(s.samples, 10);
+        assert!(s.min_secs <= s.p50_secs && s.p50_secs <= s.max_secs);
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let md = t.print();
+        assert!(md.contains("## Demo"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn ratio_formats() {
+        assert_eq!(ratio(10.0, 2.0), "5.0x");
+        assert_eq!(ratio(1.0, 0.0), "n/a");
+    }
+}

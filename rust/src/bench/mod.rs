@@ -1,0 +1,6 @@
+//! Custom bench harness (criterion is unavailable offline): timing,
+//! stats, Markdown tables saved under `bench_results/`.
+
+pub mod harness;
+
+pub use harness::{measure, measure_once, ratio, BenchStats, Table};

@@ -1,0 +1,437 @@
+//! Declarative pipeline configuration — the paper's §3.1 "Data as Anchor"
+//! entry point. A pipeline is declared as three lists:
+//!
+//! * `data` — **DataDeclare**: every dataset (anchor) with location,
+//!   schema, format, encryption, partitioning and cache policy;
+//! * `pipes` — **TransformerDeclare**: logic units with
+//!   `inputDataId` / `transformerType` / `outputDataId` (exactly the
+//!   paper's JSON shape) plus free-form `params`;
+//! * `metrics` — **MetricDeclare**: named metrics with a kind, published
+//!   automatically at the configured cadence.
+//!
+//! Data ids referenced by pipes but not declared default to in-memory
+//! anchors (`memory`), so the paper's literal four-pipe example parses
+//! as-is.
+
+use crate::engine::row::{FieldType, Schema, SchemaRef};
+use crate::io::Format;
+use crate::json::{self, Value};
+use crate::security::EncryptionMode;
+use crate::util::error::{DdpError, Result};
+use std::collections::BTreeMap;
+
+/// Where a dataset lives.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DataLocation {
+    /// in-memory anchor, owned by the run
+    Memory,
+    /// external storage location (`scheme://path`)
+    Stored(String),
+}
+
+impl DataLocation {
+    pub fn parse(s: &str) -> DataLocation {
+        if s.is_empty() || s == "memory" || s == "mem" {
+            DataLocation::Memory
+        } else {
+            DataLocation::Stored(s.to_string())
+        }
+    }
+
+    pub fn as_str(&self) -> &str {
+        match self {
+            DataLocation::Memory => "memory",
+            DataLocation::Stored(s) => s,
+        }
+    }
+}
+
+/// DataDeclare: one dataset anchor.
+#[derive(Debug, Clone)]
+pub struct DataDeclare {
+    pub id: String,
+    pub location: DataLocation,
+    pub format: Format,
+    pub schema: SchemaRef,
+    /// schema explicitly declared (false = defaulted, skip contract checks)
+    pub schema_declared: bool,
+    pub encryption: EncryptionMode,
+    pub partitions: usize,
+    /// persist this anchor in the engine cache (§3.2 selective caching)
+    pub cache: bool,
+}
+
+impl DataDeclare {
+    /// Default in-memory anchor for an undeclared id.
+    pub fn memory(id: &str, partitions: usize) -> DataDeclare {
+        DataDeclare {
+            id: id.to_string(),
+            location: DataLocation::Memory,
+            format: Format::Jsonl,
+            schema: Schema::of_names(&[]),
+            schema_declared: false,
+            encryption: EncryptionMode::None,
+            partitions,
+            cache: false,
+        }
+    }
+
+    fn from_json(v: &Value, default_partitions: usize) -> Result<DataDeclare> {
+        let id = v
+            .get("id")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| DdpError::config("DataDeclare missing 'id'"))?
+            .to_string();
+        let location = DataLocation::parse(&v.str_or("location", "memory"));
+        let format = Format::parse(&v.str_or("format", "jsonl"))?;
+        let (schema, schema_declared) = match v.get("schema") {
+            Some(Value::Arr(cols)) => {
+                let mut fields = Vec::new();
+                for c in cols {
+                    let name = c
+                        .get("name")
+                        .and_then(|x| x.as_str())
+                        .ok_or_else(|| DdpError::config(format!("schema column in '{id}' missing 'name'")))?;
+                    let ty = FieldType::parse(&c.str_or("type", "any"))?;
+                    fields.push((name.to_string(), ty));
+                }
+                (
+                    Schema::new(fields.iter().map(|(n, t)| (n.as_str(), *t)).collect()),
+                    true,
+                )
+            }
+            _ => (Schema::of_names(&[]), false),
+        };
+        let encryption = EncryptionMode::parse(&v.str_or("encryption", "none"))?;
+        Ok(DataDeclare {
+            id,
+            location,
+            format,
+            schema,
+            schema_declared,
+            encryption,
+            partitions: v.u64_or("partitions", default_partitions as u64) as usize,
+            cache: v.bool_or("cache", false),
+        })
+    }
+}
+
+/// TransformerDeclare: one pipe instance.
+#[derive(Debug, Clone)]
+pub struct TransformerDeclare {
+    /// unique instance name (defaults to the transformer type)
+    pub name: String,
+    pub transformer_type: String,
+    pub input_data_ids: Vec<String>,
+    pub output_data_ids: Vec<String>,
+    /// free-form parameters forwarded to the pipe factory
+    pub params: Value,
+}
+
+impl TransformerDeclare {
+    fn from_json(v: &Value, index: usize) -> Result<TransformerDeclare> {
+        let transformer_type = v
+            .get("transformerType")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| {
+                DdpError::config(format!("pipe #{index} missing 'transformerType'"))
+            })?
+            .to_string();
+        let input_data_ids = v.get_string_list("inputDataId");
+        let output_data_ids = v.get_string_list("outputDataId");
+        if input_data_ids.is_empty() {
+            return Err(DdpError::config(format!(
+                "pipe '{transformer_type}' (#{index}) has no inputDataId"
+            )));
+        }
+        if output_data_ids.is_empty() {
+            return Err(DdpError::config(format!(
+                "pipe '{transformer_type}' (#{index}) has no outputDataId"
+            )));
+        }
+        let name = v.str_or("name", &transformer_type);
+        Ok(TransformerDeclare {
+            name,
+            transformer_type,
+            input_data_ids,
+            output_data_ids,
+            params: v.get("params").cloned().unwrap_or(Value::Obj(BTreeMap::new())),
+        })
+    }
+}
+
+/// MetricDeclare: one monitored metric.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MetricDeclare {
+    pub id: String,
+    pub kind: MetricKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricDeclare {
+    fn from_json(v: &Value) -> Result<MetricDeclare> {
+        let id = v
+            .get("id")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| DdpError::config("MetricDeclare missing 'id'"))?
+            .to_string();
+        let kind = match v.str_or("kind", "counter").as_str() {
+            "counter" => MetricKind::Counter,
+            "gauge" => MetricKind::Gauge,
+            "histogram" => MetricKind::Histogram,
+            other => return Err(DdpError::config(format!("unknown metric kind '{other}'"))),
+        };
+        Ok(MetricDeclare { id, kind })
+    }
+}
+
+/// Run-wide settings.
+#[derive(Debug, Clone)]
+pub struct PipelineSettings {
+    pub metrics_cadence_secs: f64,
+    pub default_partitions: usize,
+    pub workers: usize,
+}
+
+impl Default for PipelineSettings {
+    fn default() -> Self {
+        PipelineSettings {
+            metrics_cadence_secs: 30.0, // the paper's default
+            default_partitions: 8,
+            workers: 4,
+        }
+    }
+}
+
+/// A complete pipeline declaration.
+#[derive(Debug, Clone)]
+pub struct PipelineSpec {
+    pub name: String,
+    pub data: BTreeMap<String, DataDeclare>,
+    pub pipes: Vec<TransformerDeclare>,
+    pub metrics: Vec<MetricDeclare>,
+    pub settings: PipelineSettings,
+}
+
+impl PipelineSpec {
+    /// Parse from JSON text. Accepts both the full object form
+    /// (`{"name":..., "data":[...], "pipes":[...]}`) and the paper's bare
+    /// array-of-pipes form.
+    pub fn parse(text: &str) -> Result<PipelineSpec> {
+        let v = json::parse(text)?;
+        let (name, data_v, pipes_v, metrics_v, settings_v) = match &v {
+            Value::Arr(_) => ("pipeline".to_string(), None, Some(v.clone()), None, None),
+            Value::Obj(_) => (
+                v.str_or("name", "pipeline"),
+                v.get("data").cloned(),
+                v.get("pipes").cloned(),
+                v.get("metrics").cloned(),
+                v.get("settings").cloned(),
+            ),
+            _ => return Err(DdpError::config("pipeline config must be an object or array")),
+        };
+
+        let mut settings = PipelineSettings::default();
+        if let Some(s) = &settings_v {
+            settings.metrics_cadence_secs = s.f64_or("metricsCadenceSecs", settings.metrics_cadence_secs);
+            settings.default_partitions =
+                s.u64_or("defaultPartitions", settings.default_partitions as u64) as usize;
+            settings.workers = s.u64_or("workers", settings.workers as u64) as usize;
+        }
+
+        let mut data = BTreeMap::new();
+        if let Some(Value::Arr(items)) = &data_v {
+            for item in items {
+                let d = DataDeclare::from_json(item, settings.default_partitions)?;
+                if data.insert(d.id.clone(), d.clone()).is_some() {
+                    return Err(DdpError::config(format!("duplicate DataDeclare id '{}'", d.id)));
+                }
+            }
+        }
+
+        let pipes_arr = match &pipes_v {
+            Some(Value::Arr(items)) => items.clone(),
+            _ => return Err(DdpError::config("pipeline has no 'pipes' array")),
+        };
+        let mut pipes = Vec::new();
+        let mut names = std::collections::HashSet::new();
+        for (i, item) in pipes_arr.iter().enumerate() {
+            let mut t = TransformerDeclare::from_json(item, i)?;
+            // de-duplicate instance names
+            while !names.insert(t.name.clone()) {
+                t.name = format!("{}#{}", t.name, i);
+            }
+            pipes.push(t);
+        }
+        if pipes.is_empty() {
+            return Err(DdpError::config("pipeline has no pipes"));
+        }
+
+        let mut metrics = Vec::new();
+        if let Some(Value::Arr(items)) = &metrics_v {
+            for item in items {
+                metrics.push(MetricDeclare::from_json(item)?);
+            }
+        }
+
+        // default-declare any data id referenced by a pipe but not declared
+        let mut spec = PipelineSpec { name, data, pipes, metrics, settings };
+        for pipe in &spec.pipes {
+            for id in pipe.input_data_ids.iter().chain(&pipe.output_data_ids) {
+                if !spec.data.contains_key(id) {
+                    spec.data
+                        .insert(id.clone(), DataDeclare::memory(id, spec.settings.default_partitions));
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Data ids no pipe produces (must be supplied externally or loadable).
+    pub fn source_ids(&self) -> Vec<String> {
+        let produced: std::collections::HashSet<&String> = self
+            .pipes
+            .iter()
+            .flat_map(|p| p.output_data_ids.iter())
+            .collect();
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for p in &self.pipes {
+            for id in &p.input_data_ids {
+                if !produced.contains(id) && seen.insert(id.clone()) {
+                    out.push(id.clone());
+                }
+            }
+        }
+        out
+    }
+
+    /// Data ids produced but never consumed (pipeline outputs).
+    pub fn sink_ids(&self) -> Vec<String> {
+        let consumed: std::collections::HashSet<&String> = self
+            .pipes
+            .iter()
+            .flat_map(|p| p.input_data_ids.iter())
+            .collect();
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for p in &self.pipes {
+            for id in &p.output_data_ids {
+                if !consumed.contains(id) && seen.insert(id.clone()) {
+                    out.push(id.clone());
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The paper's §3.1 example pipeline, used in docs, tests and the
+/// quickstart.
+pub const PAPER_EXAMPLE: &str = r#"[
+  {"inputDataId": ["InputData"],
+   "transformerType": "PreprocessTransformer",
+   "outputDataId": "IntermediateData"},
+  {"inputDataId": "IntermediateData",
+   "transformerType": "FeatureGenerationTransformer",
+   "outputDataId": "FeatureData"},
+  {"inputDataId": "FeatureData",
+   "transformerType": "ModelPredictionTransformer",
+   "outputDataId": "PredictionData"},
+  {"inputDataId": ["InputData", "PredictionData"],
+   "transformerType": "PostProcessTransformer",
+   "outputDataId": "OutputData"}
+]"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_parses() {
+        let spec = PipelineSpec::parse(PAPER_EXAMPLE).unwrap();
+        assert_eq!(spec.pipes.len(), 4);
+        assert_eq!(spec.source_ids(), vec!["InputData"]);
+        assert_eq!(spec.sink_ids(), vec!["OutputData"]);
+        // undeclared anchors default to memory
+        assert_eq!(spec.data["FeatureData"].location, DataLocation::Memory);
+        assert_eq!(spec.data.len(), 5);
+    }
+
+    #[test]
+    fn full_object_form() {
+        let text = r#"{
+          "name": "demo",
+          "settings": {"defaultPartitions": 4, "metricsCadenceSecs": 0.5},
+          "data": [
+            {"id": "In", "location": "s3://b/in.csv", "format": "csv",
+             "schema": [{"name": "id", "type": "i64"}, {"name": "t", "type": "str"}],
+             "encryption": "dataset-level", "partitions": 16, "cache": true}
+          ],
+          "pipes": [
+            {"inputDataId": "In", "transformerType": "X", "outputDataId": "Out",
+             "params": {"threshold": 0.5}}
+          ],
+          "metrics": [{"id": "docs_total", "kind": "counter"}]
+        }"#;
+        let spec = PipelineSpec::parse(text).unwrap();
+        assert_eq!(spec.name, "demo");
+        let d = &spec.data["In"];
+        assert_eq!(d.location, DataLocation::Stored("s3://b/in.csv".into()));
+        assert_eq!(d.format, Format::Csv);
+        assert!(d.schema_declared);
+        assert_eq!(d.schema.len(), 2);
+        assert_eq!(d.encryption, EncryptionMode::DatasetLevel);
+        assert_eq!(d.partitions, 16);
+        assert!(d.cache);
+        assert_eq!(spec.pipes[0].params.f64_or("threshold", 0.0), 0.5);
+        assert_eq!(spec.metrics[0].kind, MetricKind::Counter);
+        assert_eq!(spec.settings.metrics_cadence_secs, 0.5);
+        // Out is auto-declared
+        assert!(spec.data.contains_key("Out"));
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(PipelineSpec::parse("{}").is_err()); // no pipes
+        assert!(PipelineSpec::parse(r#"[{"transformerType": "X", "outputDataId": "o"}]"#).is_err()); // no input
+        assert!(PipelineSpec::parse(r#"[{"inputDataId": "i", "outputDataId": "o"}]"#).is_err()); // no type
+        assert!(PipelineSpec::parse("42").is_err());
+    }
+
+    #[test]
+    fn duplicate_data_id_rejected() {
+        let text = r#"{
+          "data": [{"id": "A"}, {"id": "A"}],
+          "pipes": [{"inputDataId": "A", "transformerType": "X", "outputDataId": "B"}]
+        }"#;
+        assert!(PipelineSpec::parse(text).is_err());
+    }
+
+    #[test]
+    fn duplicate_pipe_names_deduped() {
+        let text = r#"[
+          {"inputDataId": "A", "transformerType": "X", "outputDataId": "B"},
+          {"inputDataId": "B", "transformerType": "X", "outputDataId": "C"}
+        ]"#;
+        let spec = PipelineSpec::parse(text).unwrap();
+        assert_ne!(spec.pipes[0].name, spec.pipes[1].name);
+    }
+
+    #[test]
+    fn multi_output_pipe() {
+        let text = r#"[
+          {"inputDataId": "A", "transformerType": "Splitter",
+           "outputDataId": ["B", "C"]}
+        ]"#;
+        let spec = PipelineSpec::parse(text).unwrap();
+        assert_eq!(spec.pipes[0].output_data_ids, vec!["B", "C"]);
+        assert_eq!(spec.sink_ids(), vec!["B", "C"]);
+    }
+}

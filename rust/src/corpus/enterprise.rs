@@ -1,0 +1,189 @@
+//! Enterprise-record generator for the Table 3 batch-processing study and
+//! the §5 matching services: customer-ish entities (name, email, city,
+//! value) with typo-perturbed duplicates — the classic record-linkage
+//! workload whose pairwise comparisons are O(N²).
+
+use crate::engine::row::{FieldType, Row, Schema, SchemaRef};
+use crate::util::rng::Rng64;
+
+/// One entity record.
+#[derive(Debug, Clone)]
+pub struct Record {
+    pub id: i64,
+    pub name: String,
+    pub email: String,
+    pub city: String,
+    pub value: f64,
+    /// id of the record this one duplicates (-1 if original)
+    pub dup_of: i64,
+}
+
+const FIRST: &[&str] = &[
+    "james", "mary", "john", "patricia", "robert", "jennifer", "michael", "linda", "david",
+    "elizabeth", "wei", "li", "ana", "carlos", "fatima", "yuki", "ahmed", "sofia", "ivan", "chloe",
+];
+const LAST: &[&str] = &[
+    "smith", "johnson", "garcia", "müller", "chen", "kowalski", "rossi", "tanaka", "silva",
+    "dubois", "andersson", "yilmaz", "novak", "kim", "okafor", "haugen", "petrov", "costa",
+];
+const CITY: &[&str] = &[
+    "seattle", "berlin", "paris", "madrid", "milano", "lisboa", "amsterdam", "stockholm",
+    "warszawa", "istanbul", "helsinki", "bucurești", "tokyo", "são paulo", "kraków", "oslo",
+];
+const DOMAINS: &[&str] = &["example.com", "mail.test", "corp.example", "webmail.test"];
+
+/// Generator configuration.
+#[derive(Debug, Clone)]
+pub struct EnterpriseGen {
+    pub seed: u64,
+    /// fraction of records that are fuzzy duplicates of an earlier record
+    pub dup_rate: f64,
+}
+
+impl Default for EnterpriseGen {
+    fn default() -> Self {
+        EnterpriseGen { seed: 7, dup_rate: 0.1 }
+    }
+}
+
+impl EnterpriseGen {
+    pub fn generate(&self, n: usize) -> Vec<Record> {
+        let mut rng = Rng64::new(self.seed);
+        let mut out: Vec<Record> = Vec::with_capacity(n);
+        for i in 0..n {
+            if !out.is_empty() && rng.gen_bool(self.dup_rate) {
+                let src = rng.gen_range(out.len() as u64) as usize;
+                let orig = out[src].clone();
+                out.push(Record {
+                    id: i as i64,
+                    name: typo(&orig.name, &mut rng),
+                    email: orig.email.clone(),
+                    city: orig.city.clone(),
+                    value: orig.value,
+                    dup_of: orig.id,
+                });
+                continue;
+            }
+            let name = format!("{} {}", rng.choose(FIRST), rng.choose(LAST));
+            let email = format!(
+                "{}.{}@{}",
+                name.split(' ').next().unwrap(),
+                rng.gen_range(10_000),
+                rng.choose(DOMAINS)
+            );
+            out.push(Record {
+                id: i as i64,
+                name,
+                email,
+                city: rng.choose(CITY).to_string(),
+                value: (rng.gen_range(1_000_000) as f64) / 100.0,
+                dup_of: -1,
+            });
+        }
+        out
+    }
+
+    pub fn generate_rows(&self, n: usize) -> (SchemaRef, Vec<Row>) {
+        let schema = record_schema();
+        let rows = self
+            .generate(n)
+            .into_iter()
+            .map(|r| {
+                Row::new(vec![
+                    r.id.into(),
+                    r.name.into(),
+                    r.email.into(),
+                    r.city.into(),
+                    r.value.into(),
+                    r.dup_of.into(),
+                ])
+            })
+            .collect();
+        (schema, rows)
+    }
+}
+
+/// Inject a single character-level typo.
+fn typo(s: &str, rng: &mut Rng64) -> String {
+    let chars: Vec<char> = s.chars().collect();
+    if chars.is_empty() {
+        return s.to_string();
+    }
+    let pos = rng.gen_range(chars.len() as u64) as usize;
+    let mut out: Vec<char> = chars.clone();
+    match rng.gen_range(3) {
+        0 => {
+            out[pos] = (b'a' + rng.gen_range(26) as u8) as char; // substitute
+        }
+        1 => {
+            out.remove(pos); // delete
+        }
+        _ => {
+            out.insert(pos, (b'a' + rng.gen_range(26) as u8) as char); // insert
+        }
+    }
+    out.into_iter().collect()
+}
+
+/// Standard enterprise-record schema.
+pub fn record_schema() -> SchemaRef {
+    Schema::new(vec![
+        ("id", FieldType::I64),
+        ("name", FieldType::Str),
+        ("email", FieldType::Str),
+        ("city", FieldType::Str),
+        ("value", FieldType::F64),
+        ("dup_of", FieldType::I64),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_sized() {
+        let g = EnterpriseGen::default();
+        let a = g.generate(100);
+        let b = g.generate(100);
+        assert_eq!(a.len(), 100);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.name, y.name);
+        }
+    }
+
+    #[test]
+    fn duplicates_marked_and_similar() {
+        let g = EnterpriseGen { seed: 1, dup_rate: 0.5 };
+        let recs = g.generate(500);
+        let dups: Vec<&Record> = recs.iter().filter(|r| r.dup_of >= 0).collect();
+        assert!(dups.len() > 100);
+        for d in dups.iter().take(20) {
+            let orig = &recs[d.dup_of as usize];
+            assert_eq!(d.email, orig.email, "dup keeps email");
+            // name within edit distance ~1 (length diff ≤ 1)
+            let diff = (d.name.chars().count() as i64 - orig.name.chars().count() as i64).abs();
+            assert!(diff <= 1);
+        }
+    }
+
+    #[test]
+    fn rows_validate() {
+        let (schema, rows) = EnterpriseGen::default().generate_rows(50);
+        for r in &rows {
+            schema.validate_row(r).unwrap();
+        }
+    }
+
+    #[test]
+    fn typo_changes_string() {
+        let mut rng = Rng64::new(3);
+        let mut changed = 0;
+        for _ in 0..50 {
+            if typo("johnson", &mut rng) != "johnson" {
+                changed += 1;
+            }
+        }
+        assert!(changed > 40);
+    }
+}

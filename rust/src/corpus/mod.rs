@@ -1,0 +1,14 @@
+//! Synthetic workload generators.
+//!
+//! * [`web`] — the CC-NET substitute: multilingual web documents sampled
+//!   from the shared `data/lang_profiles.json` (the same distributions
+//!   the Python-side classifier weights are derived from), with Zipf doc
+//!   lengths and a configurable duplicate rate (the dedup stage's food).
+//! * [`enterprise`] — the Table 3 / §5 record workload: entity-ish
+//!   records with typo-perturbed duplicates for pairwise matching.
+
+pub mod web;
+pub mod enterprise;
+
+pub use enterprise::{EnterpriseGen, Record};
+pub use web::{CorpusGen, Doc, LangProfiles};

@@ -1,0 +1,260 @@
+//! Multilingual web-document generator — the Common Crawl / CC-NET
+//! substitute (DESIGN.md §Substitutions). Documents are word sequences
+//! sampled from the per-language distributions in
+//! `data/lang_profiles.json`; duplicates are injected at a configurable
+//! rate (exact copies + whitespace-perturbed near-copies) so the dedup
+//! stage has real work.
+
+use crate::engine::row::{FieldType, Row, Schema, SchemaRef};
+use crate::json;
+use crate::util::error::{DdpError, Result};
+use crate::util::rng::{Rng64, Zipf};
+
+/// One generated document.
+#[derive(Debug, Clone)]
+pub struct Doc {
+    pub id: i64,
+    pub url: String,
+    pub text: String,
+    /// ground-truth language code
+    pub lang: String,
+    /// true if this doc was injected as a duplicate of another
+    pub is_dup: bool,
+}
+
+/// Parsed language profiles.
+#[derive(Debug, Clone)]
+pub struct LangProfiles {
+    pub dim: usize,
+    pub ngrams: Vec<usize>,
+    pub langs: Vec<(String, Vec<(String, f64)>)>,
+}
+
+impl LangProfiles {
+    /// Load from the shared JSON file.
+    pub fn load(path: &str) -> Result<LangProfiles> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| DdpError::config(format!("read {path}: {e}")))?;
+        Self::parse(&text)
+    }
+
+    /// Load from the repo-relative default location.
+    pub fn load_default() -> Result<LangProfiles> {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("data/lang_profiles.json");
+        Self::load(&path.to_string_lossy())
+    }
+
+    pub fn parse(text: &str) -> Result<LangProfiles> {
+        let v = json::parse(text)?;
+        let feat = v
+            .get("featurizer")
+            .ok_or_else(|| DdpError::config("profiles missing 'featurizer'"))?;
+        let dim = feat.u64_or("dim", 2048) as usize;
+        let ngrams = feat
+            .get("ngrams")
+            .and_then(|n| n.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_u64()).map(|x| x as usize).collect())
+            .unwrap_or_else(|| vec![1, 2]);
+        let mut langs = Vec::new();
+        for entry in v
+            .get("languages")
+            .and_then(|l| l.as_arr())
+            .ok_or_else(|| DdpError::config("profiles missing 'languages'"))?
+        {
+            let code = entry.str_or("code", "");
+            let mut words = Vec::new();
+            for w in entry.get("words").and_then(|w| w.as_arr()).unwrap_or(&[]) {
+                let pair = w.as_arr().ok_or_else(|| DdpError::config("bad word entry"))?;
+                words.push((
+                    pair[0].as_str().unwrap_or("").to_string(),
+                    pair[1].as_f64().unwrap_or(1.0),
+                ));
+            }
+            langs.push((code, words));
+        }
+        if langs.is_empty() {
+            return Err(DdpError::config("no languages in profiles"));
+        }
+        Ok(LangProfiles { dim, ngrams, langs })
+    }
+
+    pub fn codes(&self) -> Vec<&str> {
+        self.langs.iter().map(|(c, _)| c.as_str()).collect()
+    }
+}
+
+/// Generator configuration.
+#[derive(Debug, Clone)]
+pub struct CorpusGen {
+    pub seed: u64,
+    /// fraction of docs injected as duplicates (paper's dedup workload)
+    pub dup_rate: f64,
+    /// document length: Zipf rank * words_scale words
+    pub min_words: usize,
+    pub max_words: usize,
+}
+
+impl Default for CorpusGen {
+    fn default() -> Self {
+        CorpusGen { seed: 42, dup_rate: 0.15, min_words: 8, max_words: 120 }
+    }
+}
+
+impl CorpusGen {
+    /// Generate `n` documents.
+    pub fn generate(&self, profiles: &LangProfiles, n: usize) -> Vec<Doc> {
+        let mut rng = Rng64::new(self.seed);
+        let len_zipf = Zipf::new((self.max_words - self.min_words).max(1) as u64, 1.05);
+        // precompute per-language word CDFs
+        let lang_cdfs: Vec<Vec<f64>> = profiles
+            .langs
+            .iter()
+            .map(|(_, words)| {
+                let total: f64 = words.iter().map(|(_, w)| w).sum();
+                let mut acc = 0.0;
+                words
+                    .iter()
+                    .map(|(_, w)| {
+                        acc += w / total;
+                        acc
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut docs: Vec<Doc> = Vec::with_capacity(n);
+        for i in 0..n {
+            // duplicate injection: copy an earlier doc (possibly perturbed)
+            if !docs.is_empty() && rng.gen_bool(self.dup_rate) {
+                let src = rng.gen_range(docs.len() as u64) as usize;
+                let mut d = docs[src].clone();
+                d.id = i as i64;
+                d.is_dup = true;
+                // half the dups are exact, half whitespace-perturbed
+                if rng.gen_bool(0.5) {
+                    d.text = format!("{} ", d.text);
+                    d.url = format!("{}?ref=mirror", d.url);
+                }
+                docs.push(d);
+                continue;
+            }
+            let li = rng.gen_range(profiles.langs.len() as u64) as usize;
+            let (code, words) = &profiles.langs[li];
+            let n_words = self.min_words + len_zipf.sample(&mut rng) as usize - 1;
+            let mut text = String::with_capacity(n_words * 6);
+            for w in 0..n_words {
+                if w > 0 {
+                    text.push(' ');
+                }
+                let wi = rng.sample_cdf(&lang_cdfs[li]);
+                text.push_str(&words[wi].0);
+            }
+            docs.push(Doc {
+                id: i as i64,
+                url: format!("https://site-{}.example/{}/{}", rng.gen_range(5000), code, i),
+                text,
+                lang: code.clone(),
+                is_dup: false,
+            });
+        }
+        docs
+    }
+
+    /// Generate directly into engine rows.
+    pub fn generate_rows(&self, profiles: &LangProfiles, n: usize) -> (SchemaRef, Vec<Row>) {
+        let schema = doc_schema();
+        let rows = self
+            .generate(profiles, n)
+            .into_iter()
+            .map(|d| {
+                Row::new(vec![
+                    d.id.into(),
+                    d.url.into(),
+                    d.text.into(),
+                    d.lang.into(), // ground truth column, used for eval only
+                ])
+            })
+            .collect();
+        (schema, rows)
+    }
+}
+
+/// Standard web-document schema.
+pub fn doc_schema() -> SchemaRef {
+    Schema::new(vec![
+        ("id", FieldType::I64),
+        ("url", FieldType::Str),
+        ("text", FieldType::Str),
+        ("lang_true", FieldType::Str),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profiles() -> LangProfiles {
+        LangProfiles::load_default().unwrap()
+    }
+
+    #[test]
+    fn profiles_load() {
+        let p = profiles();
+        assert_eq!(p.langs.len(), 12);
+        assert_eq!(p.dim, 2048);
+        assert!(p.codes().contains(&"en"));
+        assert!(p.langs.iter().all(|(_, w)| w.len() >= 25));
+    }
+
+    #[test]
+    fn generation_deterministic() {
+        let p = profiles();
+        let g = CorpusGen::default();
+        let a = g.generate(&p, 50);
+        let b = g.generate(&p, 50);
+        assert_eq!(a.len(), 50);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.text, y.text);
+            assert_eq!(x.lang, y.lang);
+        }
+    }
+
+    #[test]
+    fn duplicate_rate_approximate() {
+        let p = profiles();
+        let g = CorpusGen { dup_rate: 0.3, ..Default::default() };
+        let docs = g.generate(&p, 2000);
+        let dups = docs.iter().filter(|d| d.is_dup).count();
+        let rate = dups as f64 / 2000.0;
+        assert!((0.2..0.4).contains(&rate), "dup rate {rate}");
+    }
+
+    #[test]
+    fn all_languages_appear() {
+        let p = profiles();
+        let docs = CorpusGen::default().generate(&p, 1000);
+        let mut seen: std::collections::HashSet<&str> = Default::default();
+        for d in &docs {
+            seen.insert(&d.lang);
+        }
+        assert_eq!(seen.len(), 12, "saw {seen:?}");
+    }
+
+    #[test]
+    fn doc_lengths_in_bounds() {
+        let p = profiles();
+        let g = CorpusGen { min_words: 5, max_words: 30, ..Default::default() };
+        for d in g.generate(&p, 300) {
+            let words = d.text.split(' ').count();
+            assert!((5..=34).contains(&words), "{words} words");
+        }
+    }
+
+    #[test]
+    fn rows_match_schema() {
+        let p = profiles();
+        let (schema, rows) = CorpusGen::default().generate_rows(&p, 20);
+        for r in &rows {
+            schema.validate_row(r).unwrap();
+        }
+    }
+}

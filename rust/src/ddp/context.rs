@@ -1,0 +1,104 @@
+//! Per-run context handed to every pipe: engine handle, metrics, I/O
+//! registry, instance-scope object pool, clock, and the explicit-state
+//! cleanup ledger (§3.2).
+
+use super::lifecycle::ObjectPool;
+use crate::engine::dataset::Dataset;
+use crate::engine::executor::{EngineConfig, EngineCtx};
+use crate::io::IoRegistry;
+use crate::metrics::MetricsRegistry;
+use crate::util::clock::{self, ClockRef};
+use std::sync::{Arc, Mutex};
+
+/// Everything a pipe may touch beyond its input datasets.
+pub struct PipeContext {
+    pub engine: Arc<EngineCtx>,
+    pub metrics: MetricsRegistry,
+    pub io: Arc<IoRegistry>,
+    pub objects: Arc<ObjectPool>,
+    pub clock: ClockRef,
+    /// datasets registered for cleanup when the current pipe completes
+    cleanups: Mutex<Vec<u64>>,
+}
+
+impl PipeContext {
+    pub fn new(
+        engine: Arc<EngineCtx>,
+        metrics: MetricsRegistry,
+        io: Arc<IoRegistry>,
+        clock: ClockRef,
+    ) -> PipeContext {
+        PipeContext {
+            engine,
+            metrics,
+            io,
+            objects: Arc::new(ObjectPool::new()),
+            clock,
+            cleanups: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Small local context for unit tests.
+    pub fn for_tests() -> PipeContext {
+        PipeContext::new(
+            EngineCtx::new(EngineConfig { workers: 2, ..Default::default() }),
+            MetricsRegistry::new(),
+            Arc::new(IoRegistry::with_sim_cloud()),
+            clock::wall(),
+        )
+    }
+
+    /// Persist an intermediate dataset *and* register it for cleanup when
+    /// the calling pipe completes — the paper's "delete clause" (§3.2).
+    pub fn persist_scoped(&self, ds: &Dataset) {
+        self.engine.persist(ds);
+        self.cleanups.lock().unwrap().push(ds.id);
+    }
+
+    /// Persist without automatic cleanup (driver-managed anchors).
+    pub fn persist(&self, ds: &Dataset) {
+        self.engine.persist(ds);
+    }
+
+    /// Run the cleanup ledger (called by the driver after each pipe).
+    pub fn run_cleanups(&self) -> usize {
+        let ids: Vec<u64> = std::mem::take(&mut *self.cleanups.lock().unwrap());
+        let n = ids.len();
+        for id in ids {
+            self.engine.cache.unpersist(id);
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::row::{FieldType, Schema};
+    use crate::row;
+
+    #[test]
+    fn scoped_persist_cleans_up() {
+        let ctx = PipeContext::for_tests();
+        let schema = Schema::new(vec![("x", FieldType::I64)]);
+        let ds = Dataset::from_rows("t", schema, vec![row!(1i64)], 1);
+        ctx.persist_scoped(&ds);
+        ctx.engine.collect(&ds).unwrap();
+        assert_eq!(ctx.engine.cache.len(), 1);
+        assert_eq!(ctx.run_cleanups(), 1);
+        assert_eq!(ctx.engine.cache.len(), 0);
+        // ledger drained
+        assert_eq!(ctx.run_cleanups(), 0);
+    }
+
+    #[test]
+    fn unscoped_persist_survives_cleanup() {
+        let ctx = PipeContext::for_tests();
+        let schema = Schema::new(vec![("x", FieldType::I64)]);
+        let ds = Dataset::from_rows("t", schema, vec![row!(1i64)], 1);
+        ctx.persist(&ds);
+        ctx.engine.collect(&ds).unwrap();
+        ctx.run_cleanups();
+        assert_eq!(ctx.engine.cache.len(), 1);
+    }
+}

@@ -1,0 +1,279 @@
+//! Data-driven execution flow (paper §3.5): the pipe execution order is
+//! *derived* from the declared data relationships, never hand-written.
+//! We build the data DAG (datasets ↔ pipes bipartite graph), validate it
+//! (single producer per anchor, no undeclared references, no cycles),
+//! and topologically sort it. Cycle detection reports the offending
+//! chain for debuggability.
+
+use crate::config::PipelineSpec;
+use crate::util::error::{DdpError, Result};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+
+/// The analyzed pipeline graph.
+#[derive(Debug, Clone)]
+pub struct DataDag {
+    /// pipe execution order (indices into `spec.pipes`)
+    pub order: Vec<usize>,
+    /// producing pipe index per data id (sources absent)
+    pub producer: BTreeMap<String, usize>,
+    /// consuming pipe indices per data id
+    pub consumers: BTreeMap<String, Vec<usize>>,
+    /// data ids with no producer (must be loaded / provided)
+    pub sources: Vec<String>,
+    /// data ids with no consumer (pipeline outputs)
+    pub sinks: Vec<String>,
+}
+
+impl DataDag {
+    /// Build and validate the DAG for a spec.
+    pub fn build(spec: &PipelineSpec) -> Result<DataDag> {
+        // 1. producer / consumer maps, single-producer rule
+        let mut producer: BTreeMap<String, usize> = BTreeMap::new();
+        let mut consumers: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (i, pipe) in spec.pipes.iter().enumerate() {
+            for out in &pipe.output_data_ids {
+                if let Some(prev) = producer.insert(out.clone(), i) {
+                    return Err(DdpError::dag(format!(
+                        "data '{out}' produced by both '{}' and '{}' — anchors must have exactly one producer",
+                        spec.pipes[prev].name, pipe.name
+                    )));
+                }
+            }
+            for inp in &pipe.input_data_ids {
+                consumers.entry(inp.clone()).or_default().push(i);
+            }
+        }
+
+        // 2. every referenced id must be declared (spec auto-declares, but
+        //    a hand-built spec could violate this)
+        for pipe in &spec.pipes {
+            for id in pipe.input_data_ids.iter().chain(&pipe.output_data_ids) {
+                if !spec.data.contains_key(id) {
+                    return Err(DdpError::dag(format!(
+                        "pipe '{}' references undeclared data '{id}'",
+                        pipe.name
+                    )));
+                }
+            }
+        }
+
+        // 3. pipe-level edges: producer(pipe) -> consumer(pipe)
+        let n = spec.pipes.len();
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut indeg = vec![0usize; n];
+        for (i, pipe) in spec.pipes.iter().enumerate() {
+            for inp in &pipe.input_data_ids {
+                if let Some(&p) = producer.get(inp) {
+                    if p == i {
+                        return Err(DdpError::dag(format!(
+                            "pipe '{}' consumes its own output '{inp}'",
+                            pipe.name
+                        )));
+                    }
+                    adj[p].push(i);
+                    indeg[i] += 1;
+                }
+            }
+        }
+
+        // 4. Kahn topological sort with deterministic tie-break (config
+        //    order), cycle detection with a reported chain
+        let mut queue: VecDeque<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        let mut indeg_mut = indeg.clone();
+        while let Some(i) = queue.pop_front() {
+            order.push(i);
+            for &j in &adj[i] {
+                indeg_mut[j] -= 1;
+                if indeg_mut[j] == 0 {
+                    queue.push_back(j);
+                }
+            }
+        }
+        if order.len() != n {
+            let cycle = find_cycle(&adj, n).unwrap_or_default();
+            let names: Vec<&str> = cycle.iter().map(|&i| spec.pipes[i].name.as_str()).collect();
+            return Err(DdpError::dag(format!(
+                "cycle detected among pipes: {}",
+                names.join(" → ")
+            )));
+        }
+
+        // 5. sources / sinks
+        let produced: HashSet<&String> = producer.keys().collect();
+        let consumed: HashSet<&String> = consumers.keys().collect();
+        let mut sources: Vec<String> = consumed
+            .iter()
+            .filter(|id| !produced.contains(**id))
+            .map(|s| (*s).clone())
+            .collect();
+        sources.sort();
+        let mut sinks: Vec<String> = produced
+            .iter()
+            .filter(|id| !consumed.contains(**id))
+            .map(|s| (*s).clone())
+            .collect();
+        sinks.sort();
+
+        Ok(DataDag { order, producer, consumers, sources, sinks })
+    }
+
+    /// Pipes with no unfinished upstream — used by live visualization.
+    pub fn ready_after(&self, spec: &PipelineSpec, done: &HashSet<usize>) -> Vec<usize> {
+        self.order
+            .iter()
+            .copied()
+            .filter(|i| !done.contains(i))
+            .filter(|&i| {
+                spec.pipes[i].input_data_ids.iter().all(|inp| {
+                    match self.producer.get(inp) {
+                        Some(p) => done.contains(p),
+                        None => true, // source data
+                    }
+                })
+            })
+            .collect()
+    }
+}
+
+/// DFS-based cycle extraction for error messages.
+fn find_cycle(adj: &[Vec<usize>], n: usize) -> Option<Vec<usize>> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum Mark {
+        White,
+        Gray,
+        Black,
+    }
+    let mut mark = vec![Mark::White; n];
+    let mut parent: HashMap<usize, usize> = HashMap::new();
+    for start in 0..n {
+        if mark[start] != Mark::White {
+            continue;
+        }
+        let mut stack = vec![(start, 0usize)];
+        mark[start] = Mark::Gray;
+        while let Some(&mut (u, ref mut ei)) = stack.last_mut() {
+            if *ei < adj[u].len() {
+                let v = adj[u][*ei];
+                *ei += 1;
+                match mark[v] {
+                    Mark::White => {
+                        parent.insert(v, u);
+                        mark[v] = Mark::Gray;
+                        stack.push((v, 0));
+                    }
+                    Mark::Gray => {
+                        // found a back edge u -> v; reconstruct the loop
+                        let mut chain = vec![v, u];
+                        let mut cur = u;
+                        while let Some(&p) = parent.get(&cur) {
+                            if p == v {
+                                break;
+                            }
+                            chain.push(p);
+                            cur = p;
+                        }
+                        chain.reverse();
+                        return Some(chain);
+                    }
+                    Mark::Black => {}
+                }
+            } else {
+                mark[u] = Mark::Black;
+                stack.pop();
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PipelineSpec, PAPER_EXAMPLE};
+
+    #[test]
+    fn paper_example_order() {
+        let spec = PipelineSpec::parse(PAPER_EXAMPLE).unwrap();
+        let dag = DataDag::build(&spec).unwrap();
+        assert_eq!(dag.order, vec![0, 1, 2, 3]);
+        assert_eq!(dag.sources, vec!["InputData"]);
+        assert_eq!(dag.sinks, vec!["OutputData"]);
+        assert_eq!(dag.producer["PredictionData"], 2);
+        assert_eq!(dag.consumers["InputData"], vec![0, 3]);
+    }
+
+    #[test]
+    fn order_respects_dependencies_regardless_of_config_order() {
+        // declare pipes in reverse order
+        let text = r#"[
+          {"inputDataId": "B", "transformerType": "X", "outputDataId": "C", "name": "second"},
+          {"inputDataId": "A", "transformerType": "X", "outputDataId": "B", "name": "first"}
+        ]"#;
+        let spec = PipelineSpec::parse(text).unwrap();
+        let dag = DataDag::build(&spec).unwrap();
+        assert_eq!(dag.order, vec![1, 0]);
+    }
+
+    #[test]
+    fn cycle_detected_with_chain() {
+        let text = r#"[
+          {"inputDataId": "C", "transformerType": "X", "outputDataId": "A", "name": "pa"},
+          {"inputDataId": "A", "transformerType": "X", "outputDataId": "B", "name": "pb"},
+          {"inputDataId": "B", "transformerType": "X", "outputDataId": "C", "name": "pc"}
+        ]"#;
+        let spec = PipelineSpec::parse(text).unwrap();
+        let err = DataDag::build(&spec).unwrap_err().to_string();
+        assert!(err.contains("cycle"), "{err}");
+        assert!(err.contains("pa") && err.contains("pb") && err.contains("pc"), "{err}");
+    }
+
+    #[test]
+    fn double_producer_rejected() {
+        let text = r#"[
+          {"inputDataId": "A", "transformerType": "X", "outputDataId": "B", "name": "p1"},
+          {"inputDataId": "A", "transformerType": "X", "outputDataId": "B", "name": "p2"}
+        ]"#;
+        let spec = PipelineSpec::parse(text).unwrap();
+        let err = DataDag::build(&spec).unwrap_err().to_string();
+        assert!(err.contains("exactly one producer"), "{err}");
+    }
+
+    #[test]
+    fn self_loop_rejected() {
+        let text = r#"[
+          {"inputDataId": ["A", "B"], "transformerType": "X", "outputDataId": "B"}
+        ]"#;
+        let spec = PipelineSpec::parse(text).unwrap();
+        assert!(DataDag::build(&spec).is_err());
+    }
+
+    #[test]
+    fn diamond_dependencies() {
+        let text = r#"[
+          {"inputDataId": "A", "transformerType": "X", "outputDataId": "B", "name": "top"},
+          {"inputDataId": "B", "transformerType": "X", "outputDataId": "C", "name": "l"},
+          {"inputDataId": "B", "transformerType": "X", "outputDataId": "D", "name": "r"},
+          {"inputDataId": ["C", "D"], "transformerType": "X", "outputDataId": "E", "name": "join"}
+        ]"#;
+        let spec = PipelineSpec::parse(text).unwrap();
+        let dag = DataDag::build(&spec).unwrap();
+        assert_eq!(dag.order[0], 0);
+        assert_eq!(dag.order[3], 3);
+        assert_eq!(dag.sinks, vec!["E"]);
+    }
+
+    #[test]
+    fn ready_after_tracks_progress() {
+        let spec = PipelineSpec::parse(PAPER_EXAMPLE).unwrap();
+        let dag = DataDag::build(&spec).unwrap();
+        let mut done = HashSet::new();
+        assert_eq!(dag.ready_after(&spec, &done), vec![0]);
+        done.insert(0);
+        assert_eq!(dag.ready_after(&spec, &done), vec![1]);
+        done.insert(1);
+        done.insert(2);
+        // postprocess needs InputData (source, ok) + PredictionData (done)
+        assert_eq!(dag.ready_after(&spec, &done), vec![3]);
+    }
+}

@@ -1,0 +1,589 @@
+//! Pipeline driver: resolves a [`PipelineSpec`] against the pipe registry,
+//! loads source anchors, executes pipes in DAG order, manages explicit
+//! state (persist + cleanup), publishes metrics asynchronously, writes
+//! stored outputs, and tracks per-pipe progress for live visualization.
+//!
+//! This is the runtime half of the paper's contribution: *deterministic
+//! DAG execution driven by declarative definitions* — no cost-based
+//! optimizer, no hand-written control flow.
+
+use super::context::PipeContext;
+use super::dag::DataDag;
+use super::registry::PipeRegistry;
+use super::viz::{self, VizOptions};
+use crate::config::{DataLocation, PipelineSpec};
+use crate::engine::dataset::Dataset;
+use crate::engine::executor::{EngineConfig, EngineCtx};
+use crate::io::IoRegistry;
+use crate::metrics::{MetricsPublisher, MetricsRegistry, PublisherConfig, Sink};
+use crate::util::clock::{self, ClockRef};
+use crate::util::error::{DdpError, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Per-pipe execution state (drives the Fig 3 progress palette).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PipeState {
+    #[default]
+    Pending,
+    Running,
+    Done,
+    Failed,
+}
+
+/// Per-pipe result line.
+#[derive(Debug, Clone)]
+pub struct PipeReport {
+    pub name: String,
+    pub transformer_type: String,
+    pub duration_secs: f64,
+    /// rows in each materialized output (None if left lazy)
+    pub output_rows: Vec<Option<usize>>,
+}
+
+/// Whole-run result.
+pub struct RunReport {
+    pub pipeline: String,
+    pub pipes: Vec<PipeReport>,
+    pub total_secs: f64,
+    pub metrics: crate::metrics::MetricsSnapshot,
+    /// final rendered DOT (all pipes green)
+    pub dot: String,
+    /// anchor handles for every dataset (lazily evaluable)
+    pub anchors: BTreeMap<String, Dataset>,
+    /// estimated CPU utilization of the engine during the run
+    pub cpu_utilization: f64,
+}
+
+/// Driver configuration knobs beyond the spec.
+pub struct DriverConfig {
+    pub engine: EngineConfig,
+    /// force materialization after every pipe (simpler failure attribution,
+    /// pays the fusion cost — ablation knob)
+    pub eager: bool,
+    /// metrics sink (None = log sink)
+    pub sink: Option<Arc<dyn Sink>>,
+    pub clock: ClockRef,
+}
+
+impl Default for DriverConfig {
+    fn default() -> Self {
+        DriverConfig {
+            engine: EngineConfig::default(),
+            eager: false,
+            sink: None,
+            clock: clock::wall(),
+        }
+    }
+}
+
+/// The pipeline driver.
+pub struct PipelineDriver {
+    pub spec: PipelineSpec,
+    pub dag: DataDag,
+    registry: PipeRegistry,
+    pub ctx: Arc<PipeContext>,
+    states: Mutex<HashMap<usize, PipeState>>,
+    cfg_eager: bool,
+    sink: Option<Arc<dyn Sink>>,
+}
+
+impl PipelineDriver {
+    /// Build a driver: parses nothing itself — give it a parsed spec, a
+    /// registry and the IO registry that resolves anchor locations.
+    pub fn new(
+        spec: PipelineSpec,
+        registry: PipeRegistry,
+        io: Arc<IoRegistry>,
+        cfg: DriverConfig,
+    ) -> Result<PipelineDriver> {
+        let dag = DataDag::build(&spec)?;
+        // fail fast on unknown transformer types (§3.8 validation)
+        for pipe in &spec.pipes {
+            if !registry.contains(&pipe.transformer_type) {
+                return Err(DdpError::config(format!(
+                    "pipe '{}' needs unregistered transformerType '{}'",
+                    pipe.name, pipe.transformer_type
+                )));
+            }
+        }
+        let mut engine_cfg = cfg.engine;
+        engine_cfg.workers = engine_cfg.workers.max(spec.settings.workers);
+        let engine = EngineCtx::new(engine_cfg);
+        let metrics = MetricsRegistry::new();
+        let ctx = Arc::new(PipeContext::new(engine, metrics, io, cfg.clock));
+        Ok(PipelineDriver {
+            spec,
+            dag,
+            registry,
+            ctx,
+            states: Mutex::new(HashMap::new()),
+            cfg_eager: cfg.eager,
+            sink: cfg.sink,
+        })
+    }
+
+    /// Render the current DOT (live view).
+    pub fn dot(&self) -> String {
+        viz::to_dot(
+            &self.spec,
+            &self.dag,
+            &VizOptions {
+                states: self.states.lock().unwrap().clone(),
+                metrics: Some(self.ctx.metrics.snapshot()),
+            },
+        )
+    }
+
+    fn set_state(&self, pipe: usize, state: PipeState) {
+        self.states.lock().unwrap().insert(pipe, state);
+    }
+
+    /// Execute the pipeline. `provided` supplies in-memory source anchors;
+    /// sources with stored locations load automatically.
+    pub fn run(&self, provided: BTreeMap<String, Dataset>) -> Result<RunReport> {
+        let start = std::time::Instant::now();
+        let stats0 = self.ctx.engine.stats.snapshot();
+
+        // metrics publisher for the run (cadence from settings)
+        let cadence = Duration::from_secs_f64(self.spec.settings.metrics_cadence_secs.max(0.005));
+        let sink: Arc<dyn Sink> = self
+            .sink
+            .clone()
+            .unwrap_or_else(|| Arc::new(crate::metrics::LogSink));
+        let publisher = MetricsPublisher::start(
+            self.ctx.metrics.clone(),
+            sink,
+            self.ctx.clock.clone(),
+            PublisherConfig { cadence },
+        );
+
+        let result = self.run_inner(provided);
+        publisher.stop();
+
+        let elapsed = start.elapsed().as_secs_f64();
+        let (pipes, anchors) = result?;
+        let stats1 = self.ctx.engine.stats.snapshot();
+        let delta = stats1.delta(&stats0);
+        let cpu_utilization = if elapsed > 0.0 {
+            (delta.task_nanos as f64 / 1e9 / (elapsed * self.ctx.engine.cfg.workers as f64)).min(1.0)
+        } else {
+            0.0
+        };
+        Ok(RunReport {
+            pipeline: self.spec.name.clone(),
+            pipes,
+            total_secs: elapsed,
+            metrics: self.ctx.metrics.snapshot(),
+            dot: self.dot(),
+            anchors,
+            cpu_utilization,
+        })
+    }
+
+    fn run_inner(
+        &self,
+        provided: BTreeMap<String, Dataset>,
+    ) -> Result<(Vec<PipeReport>, BTreeMap<String, Dataset>)> {
+        let mut anchors: BTreeMap<String, Dataset> = BTreeMap::new();
+
+        // 1. resolve sources: provided datasets win, else load from storage
+        for src in &self.dag.sources {
+            let decl = &self.spec.data[src];
+            if let Some(ds) = provided.get(src) {
+                anchors.insert(src.clone(), ds.clone());
+                continue;
+            }
+            match &decl.location {
+                DataLocation::Stored(loc) => {
+                    let rows = self.ctx.io.read_rows(
+                        loc,
+                        decl.format,
+                        &decl.schema,
+                        decl.encryption,
+                        &decl.id,
+                    )?;
+                    self.ctx
+                        .metrics
+                        .counter_add(&format!("data.{src}.rows_loaded"), rows.len() as u64);
+                    anchors.insert(
+                        src.clone(),
+                        Dataset::from_rows(src, decl.schema.clone(), rows, decl.partitions),
+                    );
+                }
+                DataLocation::Memory => {
+                    return Err(DdpError::validation(format!(
+                        "source data '{src}' is memory-located but was not provided to run()"
+                    )));
+                }
+            }
+        }
+
+        // 2. execute pipes in DAG order
+        let mut reports = Vec::with_capacity(self.spec.pipes.len());
+        for &i in &self.dag.order {
+            let decl = &self.spec.pipes[i];
+            self.set_state(i, PipeState::Running);
+            let pipe = self.registry.create(&decl.transformer_type, &decl.params)?;
+
+            // contract validation (§3.8): arity, then declared-schema
+            // compatibility between the anchor and the pipe's contract
+            let contract = pipe.contract();
+            if let Some(arity) = contract.arity {
+                if arity != decl.input_data_ids.len() {
+                    self.set_state(i, PipeState::Failed);
+                    return Err(DdpError::validation(format!(
+                        "pipe '{}' expects {arity} inputs, config wires {}",
+                        decl.name,
+                        decl.input_data_ids.len()
+                    )));
+                }
+            }
+            for (pos, want) in contract.input_schemas.iter().enumerate() {
+                let (Some(want), Some(input_id)) = (want, decl.input_data_ids.get(pos)) else {
+                    continue;
+                };
+                let have = &self.spec.data[input_id];
+                if !have.schema_declared {
+                    continue; // undeclared anchors are schema-agnostic
+                }
+                for wi in 0..want.len() {
+                    let (wname, wty) = want.field(wi);
+                    match have.schema.idx(wname) {
+                        None => {
+                            self.set_state(i, PipeState::Failed);
+                            return Err(DdpError::validation(format!(
+                                "pipe '{}' requires column '{wname}' on input '{input_id}',                                  which declares only [{}]",
+                                decl.name,
+                                have.schema.names().join(", ")
+                            )));
+                        }
+                        Some(hi) => {
+                            let hty = have.schema.field_type(hi);
+                            use crate::engine::row::FieldType;
+                            if wty != FieldType::Any && hty != FieldType::Any && wty != hty {
+                                self.set_state(i, PipeState::Failed);
+                                return Err(DdpError::validation(format!(
+                                    "pipe '{}' needs '{wname}: {}' on '{input_id}', declared as {}",
+                                    decl.name,
+                                    wty.name(),
+                                    hty.name()
+                                )));
+                            }
+                        }
+                    }
+                }
+            }
+
+            let inputs: Vec<Dataset> = decl
+                .input_data_ids
+                .iter()
+                .map(|id| {
+                    anchors.get(id).cloned().ok_or_else(|| {
+                        DdpError::dag(format!("anchor '{id}' missing for pipe '{}'", decl.name))
+                    })
+                })
+                .collect::<Result<_>>()?;
+
+            let t0 = std::time::Instant::now();
+            let outputs = pipe.transform(&self.ctx, &inputs).map_err(|e| {
+                self.set_state(i, PipeState::Failed);
+                DdpError::pipe(decl.name.clone(), e.to_string())
+            })?;
+            if outputs.len() != decl.output_data_ids.len() {
+                self.set_state(i, PipeState::Failed);
+                return Err(DdpError::pipe(
+                    decl.name.clone(),
+                    format!(
+                        "produced {} outputs, config declares {}",
+                        outputs.len(),
+                        decl.output_data_ids.len()
+                    ),
+                ));
+            }
+
+            // 3. bind outputs to anchors; apply declared state management
+            let mut output_rows = Vec::with_capacity(outputs.len());
+            for (out_id, ds) in decl.output_data_ids.iter().zip(outputs) {
+                let odecl = &self.spec.data[out_id];
+                // §3.2 selective caching: anchors consumed by >1 pipe, or
+                // flagged `cache: true`, persist in the engine cache
+                let consumers = self.dag.consumers.get(out_id).map(|v| v.len()).unwrap_or(0);
+                if odecl.cache || consumers > 1 {
+                    self.ctx.persist(&ds);
+                }
+                let mut rows_out = None;
+                if let DataLocation::Stored(loc) = &odecl.location {
+                    let data = self.ctx.engine.collect(&ds)?;
+                    let rows = data.rows();
+                    self.ctx.io.write_rows(
+                        loc,
+                        odecl.format,
+                        &ds.schema,
+                        &rows,
+                        odecl.encryption,
+                        out_id,
+                    )?;
+                    rows_out = Some(rows.len());
+                } else if self.cfg_eager {
+                    rows_out = Some(self.ctx.engine.count(&ds)?);
+                }
+                if let Some(n) = rows_out {
+                    self.ctx
+                        .metrics
+                        .counter_add(&format!("pipe.{}.rows_out", decl.name), n as u64);
+                }
+                output_rows.push(rows_out);
+                anchors.insert(out_id.clone(), ds);
+            }
+
+            // explicit cleanup ledger (§3.2)
+            let cleaned = self.ctx.run_cleanups();
+            if cleaned > 0 {
+                self.ctx
+                    .metrics
+                    .counter_add(&format!("pipe.{}.cleanups", decl.name), cleaned as u64);
+            }
+
+            let dur = t0.elapsed().as_secs_f64();
+            self.ctx
+                .metrics
+                .observe(&format!("pipe.{}.duration_secs", decl.name), dur);
+            self.set_state(i, PipeState::Done);
+            reports.push(PipeReport {
+                name: decl.name.clone(),
+                transformer_type: decl.transformer_type.clone(),
+                duration_secs: dur,
+                output_rows,
+            });
+        }
+
+        // 4. materialize sinks that stayed lazy so the run is complete
+        for sink_id in &self.dag.sinks {
+            let decl = &self.spec.data[sink_id];
+            if matches!(decl.location, DataLocation::Memory) {
+                if let Some(ds) = anchors.get(sink_id) {
+                    let n = self.ctx.engine.count(ds)?;
+                    self.ctx
+                        .metrics
+                        .counter_add(&format!("data.{sink_id}.rows"), n as u64);
+                }
+            }
+        }
+
+        Ok((reports, anchors))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ddp::pipe::Pipe;
+    use crate::engine::row::{FieldType, Schema};
+    use crate::json::Value;
+    use crate::metrics::MemorySink;
+    use crate::row;
+
+    struct AddOne;
+    impl Pipe for AddOne {
+        fn type_name(&self) -> &str {
+            "AddOne"
+        }
+        fn transform(&self, _: &PipeContext, inputs: &[Dataset]) -> Result<Vec<Dataset>> {
+            let ds = &inputs[0];
+            Ok(vec![ds.map(ds.schema.clone(), |r| {
+                row!(r.get(0).as_i64().unwrap() + 1)
+            })])
+        }
+    }
+
+    struct Failing;
+    impl Pipe for Failing {
+        fn type_name(&self) -> &str {
+            "Failing"
+        }
+        fn transform(&self, _: &PipeContext, _: &[Dataset]) -> Result<Vec<Dataset>> {
+            Err(DdpError::other("intentional"))
+        }
+    }
+
+    fn registry() -> PipeRegistry {
+        let reg = PipeRegistry::new();
+        reg.register("AddOne", |_: &Value| Ok(Box::new(AddOne)));
+        reg.register("Failing", |_: &Value| Ok(Box::new(Failing)));
+        reg
+    }
+
+    fn nums_ds(n: i64) -> Dataset {
+        let schema = Schema::new(vec![("x", FieldType::I64)]);
+        Dataset::from_rows("in", schema, (0..n).map(|i| row!(i)).collect(), 2)
+    }
+
+    fn fast_settings(cfgtext: &str) -> PipelineSpec {
+        let mut spec = PipelineSpec::parse(cfgtext).unwrap();
+        spec.settings.metrics_cadence_secs = 0.01;
+        spec
+    }
+
+    #[test]
+    fn two_pipe_chain_runs() {
+        let spec = fast_settings(
+            r#"[
+              {"inputDataId": "In", "transformerType": "AddOne", "outputDataId": "Mid", "name": "p1"},
+              {"inputDataId": "Mid", "transformerType": "AddOne", "outputDataId": "Out", "name": "p2"}
+            ]"#,
+        );
+        let sink = MemorySink::new();
+        let driver = PipelineDriver::new(
+            spec,
+            registry(),
+            Arc::new(IoRegistry::with_sim_cloud()),
+            DriverConfig { sink: Some(sink.clone()), ..Default::default() },
+        )
+        .unwrap();
+        let mut provided = BTreeMap::new();
+        provided.insert("In".to_string(), nums_ds(10));
+        let report = driver.run(provided).unwrap();
+        assert_eq!(report.pipes.len(), 2);
+        let out = report.anchors.get("Out").unwrap();
+        let mut vals: Vec<i64> = driver
+            .ctx
+            .engine
+            .collect_rows(out)
+            .unwrap()
+            .iter()
+            .map(|r| r.get(0).as_i64().unwrap())
+            .collect();
+        vals.sort_unstable();
+        assert_eq!(vals, (2..12).collect::<Vec<_>>());
+        // publisher flushed at least once
+        assert!(sink.count() >= 1);
+        // final dot shows both pipes done
+        assert_eq!(report.dot.matches("#9fdf9f").count(), 2);
+    }
+
+    #[test]
+    fn stored_output_written_and_loaded_source() {
+        let io = Arc::new(IoRegistry::with_sim_cloud());
+        // pre-write source data to sim-s3
+        let schema = Schema::new(vec![("x", FieldType::I64)]);
+        io.write_rows(
+            "s3://bucket/in.jsonl",
+            crate::io::Format::Jsonl,
+            &schema,
+            &[row!(1i64), row!(2i64)],
+            crate::security::EncryptionMode::None,
+            "In",
+        )
+        .unwrap();
+        let spec = fast_settings(
+            r#"{
+              "data": [
+                {"id": "In", "location": "s3://bucket/in.jsonl", "format": "jsonl",
+                 "schema": [{"name": "x", "type": "i64"}]},
+                {"id": "Out", "location": "s3://bucket/out.csv", "format": "csv",
+                 "schema": [{"name": "x", "type": "i64"}]}
+              ],
+              "pipes": [
+                {"inputDataId": "In", "transformerType": "AddOne", "outputDataId": "Out"}
+              ]
+            }"#,
+        );
+        let driver =
+            PipelineDriver::new(spec, registry(), io.clone(), DriverConfig::default()).unwrap();
+        let report = driver.run(BTreeMap::new()).unwrap();
+        assert_eq!(report.pipes[0].output_rows[0], Some(2));
+        // file exists and parses
+        let schema_out = Schema::new(vec![("x", FieldType::I64)]);
+        let rows = io
+            .read_rows(
+                "s3://bucket/out.csv",
+                crate::io::Format::Csv,
+                &schema_out,
+                crate::security::EncryptionMode::None,
+                "Out",
+            )
+            .unwrap();
+        let mut vals: Vec<i64> = rows.iter().map(|r| r.get(0).as_i64().unwrap()).collect();
+        vals.sort_unstable();
+        assert_eq!(vals, vec![2, 3]);
+    }
+
+    #[test]
+    fn missing_source_errors() {
+        let spec = fast_settings(
+            r#"[{"inputDataId": "In", "transformerType": "AddOne", "outputDataId": "Out"}]"#,
+        );
+        let driver = PipelineDriver::new(
+            spec,
+            registry(),
+            Arc::new(IoRegistry::with_sim_cloud()),
+            DriverConfig::default(),
+        )
+        .unwrap();
+        let err = driver.run(BTreeMap::new()).err().unwrap().to_string();
+        assert!(err.contains("not provided"), "{err}");
+    }
+
+    #[test]
+    fn failing_pipe_attributed() {
+        let spec = fast_settings(
+            r#"[{"inputDataId": "In", "transformerType": "Failing", "outputDataId": "Out", "name": "boom"}]"#,
+        );
+        let driver = PipelineDriver::new(
+            spec,
+            registry(),
+            Arc::new(IoRegistry::with_sim_cloud()),
+            DriverConfig::default(),
+        )
+        .unwrap();
+        let mut provided = BTreeMap::new();
+        provided.insert("In".to_string(), nums_ds(3));
+        let err = driver.run(provided).err().unwrap().to_string();
+        assert!(err.contains("boom") && err.contains("intentional"), "{err}");
+        // failed pipe renders red
+        assert!(driver.dot().contains("#f28b82"));
+    }
+
+    #[test]
+    fn unknown_transformer_fails_fast() {
+        let spec = fast_settings(
+            r#"[{"inputDataId": "In", "transformerType": "Mystery", "outputDataId": "Out"}]"#,
+        );
+        let err = PipelineDriver::new(
+            spec,
+            registry(),
+            Arc::new(IoRegistry::with_sim_cloud()),
+            DriverConfig::default(),
+        )
+        .err()
+        .map(|e| e.to_string())
+        .unwrap();
+        assert!(err.contains("Mystery"), "{err}");
+    }
+
+    #[test]
+    fn shared_anchor_auto_cached() {
+        // Mid feeds two consumers -> driver should persist it
+        let spec = fast_settings(
+            r#"[
+              {"inputDataId": "In", "transformerType": "AddOne", "outputDataId": "Mid", "name": "a"},
+              {"inputDataId": "Mid", "transformerType": "AddOne", "outputDataId": "O1", "name": "b"},
+              {"inputDataId": "Mid", "transformerType": "AddOne", "outputDataId": "O2", "name": "c"}
+            ]"#,
+        );
+        let driver = PipelineDriver::new(
+            spec,
+            registry(),
+            Arc::new(IoRegistry::with_sim_cloud()),
+            DriverConfig::default(),
+        )
+        .unwrap();
+        let mut provided = BTreeMap::new();
+        provided.insert("In".to_string(), nums_ds(10));
+        driver.run(provided).unwrap();
+        let s = driver.ctx.engine.stats.snapshot();
+        assert!(s.cache_hits >= 1, "Mid should be cache-hit by the second consumer");
+    }
+}

@@ -1,0 +1,188 @@
+//! Object lifecycle scopes (paper §3.7).
+//!
+//! Distributed lazy evaluation makes naïve object construction expensive:
+//! a model loaded per *record* initializes millions of times; per
+//! *partition*, once per task; per *instance* (singleton), once per
+//! process. The paper's framework prioritizes instance-level scope for
+//! expensive objects (ML models, clients). [`ObjectPool`] implements the
+//! instance level: a typed, named singleton registry with per-key
+//! initialization counters so tests (and the ablation bench) can observe
+//! exactly how many constructions each scope costs.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// The three lifecycle scopes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scope {
+    /// constructed for every record (anti-pattern for heavy objects)
+    Record,
+    /// constructed once per partition task
+    Partition,
+    /// constructed once per process and shared (the optimization §3.7
+    /// recommends)
+    Instance,
+}
+
+impl Scope {
+    pub fn parse(s: &str) -> Option<Scope> {
+        match s {
+            "record" => Some(Scope::Record),
+            "partition" => Some(Scope::Partition),
+            "instance" => Some(Scope::Instance),
+            _ => None,
+        }
+    }
+}
+
+/// Instance-scope singleton pool: `get_or_init` returns the shared object,
+/// constructing it at most once per key.
+pub struct ObjectPool {
+    objects: Mutex<HashMap<String, Arc<dyn Any + Send + Sync>>>,
+    init_counts: Mutex<HashMap<String, Arc<AtomicU64>>>,
+}
+
+impl ObjectPool {
+    pub fn new() -> ObjectPool {
+        ObjectPool {
+            objects: Mutex::new(HashMap::new()),
+            init_counts: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Fetch the singleton for `key`, constructing it with `init` if absent.
+    /// The constructor runs under the pool lock, so concurrent callers
+    /// observe exactly one initialization.
+    pub fn get_or_init<T, F>(&self, key: &str, init: F) -> Arc<T>
+    where
+        T: Send + Sync + 'static,
+        F: FnOnce() -> T,
+    {
+        let mut objects = self.objects.lock().unwrap();
+        if let Some(existing) = objects.get(key) {
+            if let Ok(t) = existing.clone().downcast::<T>() {
+                return t;
+            }
+            panic!("ObjectPool key '{key}' holds a different type");
+        }
+        self.bump(key);
+        let value = Arc::new(init());
+        objects.insert(key.to_string(), value.clone());
+        value
+    }
+
+    /// How many times `key` was initialized (≤1 for instance scope).
+    pub fn init_count(&self, key: &str) -> u64 {
+        self.init_counts
+            .lock()
+            .unwrap()
+            .get(key)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    fn bump(&self, key: &str) {
+        self.init_counts
+            .lock()
+            .unwrap()
+            .entry(key.to_string())
+            .or_insert_with(|| Arc::new(AtomicU64::new(0)))
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an initialization that happened outside the pool (record- or
+    /// partition-scope constructions, counted for the ablation bench).
+    pub fn count_external_init(&self, key: &str) {
+        self.bump(key);
+    }
+
+    /// Drop all singletons (end of run / explicit cleanup).
+    pub fn clear(&self) {
+        self.objects.lock().unwrap().clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.objects.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for ObjectPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn singleton_initialized_once() {
+        let pool = ObjectPool::new();
+        for _ in 0..10 {
+            let v: Arc<Vec<u32>> = pool.get_or_init("model", || vec![1, 2, 3]);
+            assert_eq!(*v, vec![1, 2, 3]);
+        }
+        assert_eq!(pool.init_count("model"), 1);
+    }
+
+    #[test]
+    fn distinct_keys_distinct_objects() {
+        let pool = ObjectPool::new();
+        let a: Arc<String> = pool.get_or_init("a", || "A".to_string());
+        let b: Arc<String> = pool.get_or_init("b", || "B".to_string());
+        assert_ne!(*a, *b);
+        assert_eq!(pool.len(), 2);
+    }
+
+    #[test]
+    fn concurrent_get_or_init_single_construction() {
+        let pool = Arc::new(ObjectPool::new());
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let pool = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                let _: Arc<u64> = pool.get_or_init("heavy", || {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    42u64
+                });
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(pool.init_count("heavy"), 1);
+    }
+
+    #[test]
+    fn external_init_counting() {
+        let pool = ObjectPool::new();
+        for _ in 0..5 {
+            pool.count_external_init("per-record-model");
+        }
+        assert_eq!(pool.init_count("per-record-model"), 5);
+    }
+
+    #[test]
+    fn clear_resets_objects_not_counts() {
+        let pool = ObjectPool::new();
+        let _: Arc<u8> = pool.get_or_init("x", || 1u8);
+        pool.clear();
+        assert!(pool.is_empty());
+        assert_eq!(pool.init_count("x"), 1);
+        let _: Arc<u8> = pool.get_or_init("x", || 2u8);
+        assert_eq!(pool.init_count("x"), 2);
+    }
+
+    #[test]
+    fn scope_parse() {
+        assert_eq!(Scope::parse("instance"), Some(Scope::Instance));
+        assert_eq!(Scope::parse("bogus"), None);
+    }
+}

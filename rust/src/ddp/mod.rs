@@ -1,0 +1,25 @@
+//! The DDP coordinator — the paper's contribution, assembled:
+//!
+//! * [`pipe`] — the Pipe trait (`Inputs → Pipe → Outputs`, §3.1);
+//! * [`registry`] — dynamic pipe discovery from declarative configs (§3.4);
+//! * [`dag`] — data-driven execution flow: topo sort + cycle detection (§3.5);
+//! * [`driver`] — anchor resolution, ordered execution, explicit state
+//!   management (§3.2), declarative I/O + encryption, metrics publishing;
+//! * [`lifecycle`] — record/partition/instance object scopes (§3.7);
+//! * [`context`] — what a pipe may touch;
+//! * [`viz`] — real-time GraphViz rendering (§3.6, Fig. 3).
+
+pub mod pipe;
+pub mod registry;
+pub mod dag;
+pub mod driver;
+pub mod lifecycle;
+pub mod context;
+pub mod viz;
+
+pub use context::PipeContext;
+pub use dag::DataDag;
+pub use driver::{DriverConfig, PipeReport, PipeState, PipelineDriver, RunReport};
+pub use lifecycle::{ObjectPool, Scope};
+pub use pipe::{Pipe, PipeContract};
+pub use registry::{PipeRegistry, GLOBAL};

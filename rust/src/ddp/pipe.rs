@@ -1,0 +1,88 @@
+//! The Pipe abstraction — the paper's core contribution (§3.1):
+//! `Inputs → Pipe (Transformation Logic) → Outputs`.
+//!
+//! A pipe is a standalone logic unit with a declared input/output
+//! contract. Unlike a microservice it exchanges data through memory
+//! ([`crate::engine::Dataset`] handles), not the network; unlike raw Spark
+//! code it never touches I/O, encryption, metrics plumbing or execution
+//! order — the driver owns all of that.
+
+use super::context::PipeContext;
+use crate::engine::dataset::Dataset;
+use crate::engine::row::SchemaRef;
+use crate::util::error::Result;
+
+/// Contract metadata for validation and the self-service ecosystem
+/// (§3.8): what a pipe requires of its inputs and guarantees of its
+/// outputs. `None` = schema-agnostic.
+#[derive(Debug, Clone, Default)]
+pub struct PipeContract {
+    /// required input schemas, by position (None = any)
+    pub input_schemas: Vec<Option<SchemaRef>>,
+    /// produced output schemas, by position (None = same as input 0)
+    pub output_schemas: Vec<Option<SchemaRef>>,
+    /// expected number of inputs (None = variadic)
+    pub arity: Option<usize>,
+}
+
+/// A logic unit. Implementations should be pure transformations over the
+/// input datasets; all side effects (persist, metrics, temp objects) go
+/// through the [`PipeContext`].
+pub trait Pipe: Send + Sync {
+    /// Stable type name (matches `transformerType` in configs).
+    fn type_name(&self) -> &str;
+
+    /// Input/output contract for connection validation.
+    fn contract(&self) -> PipeContract {
+        PipeContract::default()
+    }
+
+    /// The transformation. `inputs` arrive in `inputDataId` order; the
+    /// returned datasets map to `outputDataId` order.
+    fn transform(&self, ctx: &PipeContext, inputs: &[Dataset]) -> Result<Vec<Dataset>>;
+
+    /// Metric names this pipe emits (documentation + viz info tags).
+    fn declared_metrics(&self) -> Vec<String> {
+        vec![]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Doubler;
+
+    impl Pipe for Doubler {
+        fn type_name(&self) -> &str {
+            "Doubler"
+        }
+
+        fn transform(&self, _ctx: &PipeContext, inputs: &[Dataset]) -> Result<Vec<Dataset>> {
+            let ds = &inputs[0];
+            Ok(vec![ds.map(ds.schema.clone(), |r| {
+                crate::row!(r.get(0).as_i64().unwrap() * 2)
+            })])
+        }
+    }
+
+    #[test]
+    fn pipe_object_safety_and_transform() {
+        use crate::engine::row::{FieldType, Schema};
+        let pipe: Box<dyn Pipe> = Box::new(Doubler);
+        assert_eq!(pipe.type_name(), "Doubler");
+        let ctx = PipeContext::for_tests();
+        let schema = Schema::new(vec![("x", FieldType::I64)]);
+        let ds = Dataset::from_rows(
+            "in",
+            schema,
+            (0..5).map(|i| crate::row!(i as i64)).collect(),
+            2,
+        );
+        let out = pipe.transform(&ctx, &[ds]).unwrap();
+        let rows = ctx.engine.collect_rows(&out[0]).unwrap();
+        let mut vals: Vec<i64> = rows.iter().map(|r| r.get(0).as_i64().unwrap()).collect();
+        vals.sort_unstable();
+        assert_eq!(vals, vec![0, 2, 4, 6, 8]);
+    }
+}

@@ -1,0 +1,124 @@
+//! Dynamic pipe discovery (paper §3.4): pipes register a factory under
+//! their `transformerType`; pipelines instantiate them from declarative
+//! configs at run time, dependency-injection style. A process-global
+//! registry holds the built-in pipe library; local registries support
+//! isolated tests and plugins.
+
+use super::pipe::Pipe;
+use crate::json::Value;
+use crate::util::error::{DdpError, Result};
+use once_cell::sync::Lazy;
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+/// Factory: params (from `TransformerDeclare.params`) → pipe instance.
+pub type PipeFactory = Arc<dyn Fn(&Value) -> Result<Box<dyn Pipe>> + Send + Sync>;
+
+/// A pipe factory registry.
+#[derive(Clone, Default)]
+pub struct PipeRegistry {
+    factories: Arc<RwLock<BTreeMap<String, PipeFactory>>>,
+}
+
+impl PipeRegistry {
+    pub fn new() -> PipeRegistry {
+        PipeRegistry::default()
+    }
+
+    /// Register (or replace) a factory for a transformer type.
+    pub fn register<F>(&self, type_name: &str, factory: F)
+    where
+        F: Fn(&Value) -> Result<Box<dyn Pipe>> + Send + Sync + 'static,
+    {
+        self.factories
+            .write()
+            .unwrap()
+            .insert(type_name.to_string(), Arc::new(factory));
+    }
+
+    /// Instantiate a pipe from its type name and params.
+    pub fn create(&self, type_name: &str, params: &Value) -> Result<Box<dyn Pipe>> {
+        let factory = self
+            .factories
+            .read()
+            .unwrap()
+            .get(type_name)
+            .cloned()
+            .ok_or_else(|| {
+                DdpError::config(format!(
+                    "unknown transformerType '{type_name}' (registered: {})",
+                    self.type_names().join(", ")
+                ))
+            })?;
+        factory(params)
+    }
+
+    pub fn contains(&self, type_name: &str) -> bool {
+        self.factories.read().unwrap().contains_key(type_name)
+    }
+
+    /// Registered type names, sorted (the §3.8 "pipe repository" listing).
+    pub fn type_names(&self) -> Vec<String> {
+        self.factories.read().unwrap().keys().cloned().collect()
+    }
+}
+
+/// Process-global registry preloaded with the standard pipe library
+/// (populated by [`crate::pipes::install_standard_pipes`] on first use).
+pub static GLOBAL: Lazy<PipeRegistry> = Lazy::new(|| {
+    let reg = PipeRegistry::new();
+    crate::pipes::install_standard_pipes(&reg);
+    reg
+});
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ddp::context::PipeContext;
+    use crate::engine::dataset::Dataset;
+
+    struct Nop;
+
+    impl Pipe for Nop {
+        fn type_name(&self) -> &str {
+            "Nop"
+        }
+        fn transform(&self, _: &PipeContext, inputs: &[Dataset]) -> Result<Vec<Dataset>> {
+            Ok(vec![inputs[0].clone()])
+        }
+    }
+
+    #[test]
+    fn register_and_create() {
+        let reg = PipeRegistry::new();
+        assert!(!reg.contains("Nop"));
+        reg.register("Nop", |_| Ok(Box::new(Nop)));
+        assert!(reg.contains("Nop"));
+        let pipe = reg.create("Nop", &Value::Null).unwrap();
+        assert_eq!(pipe.type_name(), "Nop");
+    }
+
+    #[test]
+    fn unknown_type_lists_known() {
+        let reg = PipeRegistry::new();
+        reg.register("Alpha", |_| Ok(Box::new(Nop)));
+        let err = reg.create("Beta", &Value::Null).err().unwrap().to_string();
+        assert!(err.contains("Beta"));
+        assert!(err.contains("Alpha"));
+    }
+
+    #[test]
+    fn factory_sees_params() {
+        let reg = PipeRegistry::new();
+        reg.register("Check", |params| {
+            if params.f64_or("threshold", 0.0) > 0.0 {
+                Ok(Box::new(Nop))
+            } else {
+                Err(DdpError::config("threshold required"))
+            }
+        });
+        assert!(reg.create("Check", &Value::Null).is_err());
+        let params = crate::json::parse(r#"{"threshold": 0.5}"#).unwrap();
+        assert!(reg.create("Check", &params).is_ok());
+    }
+}

@@ -1,0 +1,211 @@
+//! Pipeline visualization (paper §3.6, Fig. 3): renders the analyzed data
+//! DAG as GraphViz DOT with the paper's palette —
+//!
+//! * pipes carry their execution order as a `[k]` prefix;
+//! * data nodes are colored by location: orange = S3, yellow = memory,
+//!   dotted orange outline = cached in memory, blue = table store (kv);
+//! * progress: green = completed, yellow = in progress, white = pending;
+//! * purple info blocks attach per-pipe metrics (e.g. `model_latency`).
+
+use super::dag::DataDag;
+use super::driver::PipeState;
+use crate::config::{DataLocation, PipelineSpec};
+use crate::metrics::MetricsSnapshot;
+use std::collections::HashMap;
+
+/// Render options.
+#[derive(Default)]
+pub struct VizOptions {
+    /// pipe states (defaults to all pending)
+    pub states: HashMap<usize, PipeState>,
+    /// metrics snapshot for info blocks
+    pub metrics: Option<MetricsSnapshot>,
+}
+
+/// Render the pipeline to DOT.
+pub fn to_dot(spec: &PipelineSpec, dag: &DataDag, opts: &VizOptions) -> String {
+    let mut out = String::new();
+    out.push_str("digraph pipeline {\n");
+    out.push_str("  rankdir=TB;\n  node [fontname=\"Helvetica\"];\n");
+    out.push_str(&format!("  label=\"{}\";\n  labelloc=t;\n", esc(&spec.name)));
+
+    // data nodes
+    for (id, decl) in &spec.data {
+        let (fill, style, outline) = match &decl.location {
+            DataLocation::Stored(loc) if loc.starts_with("s3://") => {
+                ("#f59e42", "filled", "#b36b1f") // orange: S3
+            }
+            DataLocation::Stored(loc) if loc.starts_with("kv://") => {
+                ("#7ab8f5", "filled", "#2c6fb3") // blue: table store
+            }
+            DataLocation::Stored(_) => ("#d9d9d9", "filled", "#888888"), // generic storage
+            DataLocation::Memory if decl.cache => ("#fff2b3", "filled,dashed", "#f59e42"), // dotted orange: cached
+            DataLocation::Memory => ("#fff2b3", "filled", "#c9b458"), // yellow: memory
+        };
+        out.push_str(&format!(
+            "  \"data_{}\" [label=\"{}\\n({})\" shape=cylinder style=\"{}\" fillcolor=\"{}\" color=\"{}\"];\n",
+            esc(id),
+            esc(id),
+            esc(decl.location.as_str()),
+            style,
+            fill,
+            outline
+        ));
+    }
+
+    // pipe nodes with execution-order prefix + progress color
+    let exec_rank: HashMap<usize, usize> = dag
+        .order
+        .iter()
+        .enumerate()
+        .map(|(rank, &pipe)| (pipe, rank))
+        .collect();
+    for (i, pipe) in spec.pipes.iter().enumerate() {
+        let state = opts.states.get(&i).copied().unwrap_or(PipeState::Pending);
+        let fill = match state {
+            PipeState::Done => "#9fdf9f",    // green
+            PipeState::Running => "#ffe066", // yellow
+            PipeState::Pending => "#ffffff", // white
+            PipeState::Failed => "#f28b82",  // red (extension beyond Fig 3)
+        };
+        out.push_str(&format!(
+            "  \"pipe_{}\" [label=\"[{}] {}\" shape=box style=\"filled,rounded\" fillcolor=\"{}\"];\n",
+            esc(&pipe.name),
+            exec_rank.get(&i).copied().unwrap_or(usize::MAX),
+            esc(&pipe.name),
+            fill
+        ));
+
+        // purple info block with this pipe's metrics (prefix match
+        // `pipe.<name>.`), as in Fig 3's `model_latency` tag
+        if let Some(snapshot) = &opts.metrics {
+            let prefix = format!("pipe.{}.", pipe.name);
+            let mut lines: Vec<String> = Vec::new();
+            for (k, v) in &snapshot.counters {
+                if let Some(short) = k.strip_prefix(&prefix) {
+                    lines.push(format!("{short}={v}"));
+                }
+            }
+            for (k, v) in &snapshot.gauges {
+                if let Some(short) = k.strip_prefix(&prefix) {
+                    lines.push(format!("{short}={v:.3}"));
+                }
+            }
+            for (k, h) in &snapshot.histograms {
+                if let Some(short) = k.strip_prefix(&prefix) {
+                    lines.push(format!("{short}: p50={:.1}ms p95={:.1}ms", h.p50 * 1e3, h.p95 * 1e3));
+                }
+            }
+            if !lines.is_empty() {
+                out.push_str(&format!(
+                    "  \"info_{}\" [label=\"info\\n{}\" shape=note style=filled fillcolor=\"#c59df5\" fontsize=9];\n",
+                    esc(&pipe.name),
+                    esc(&lines.join("\\n"))
+                ));
+                out.push_str(&format!(
+                    "  \"info_{}\" -> \"pipe_{}\" [style=dotted arrowhead=none color=\"#8458c9\"];\n",
+                    esc(&pipe.name),
+                    esc(&pipe.name)
+                ));
+            }
+        }
+    }
+
+    // edges: data -> pipe (inputs), pipe -> data (outputs)
+    for pipe in &spec.pipes {
+        for inp in &pipe.input_data_ids {
+            out.push_str(&format!(
+                "  \"data_{}\" -> \"pipe_{}\";\n",
+                esc(inp),
+                esc(&pipe.name)
+            ));
+        }
+        for outp in &pipe.output_data_ids {
+            out.push_str(&format!(
+                "  \"pipe_{}\" -> \"data_{}\";\n",
+                esc(&pipe.name),
+                esc(outp)
+            ));
+        }
+    }
+    out.push_str("}\n");
+    out
+}
+
+fn esc(s: &str) -> String {
+    s.replace('"', "\\\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PipelineSpec, PAPER_EXAMPLE};
+    use crate::ddp::dag::DataDag;
+
+    fn render(states: HashMap<usize, PipeState>) -> String {
+        let spec = PipelineSpec::parse(PAPER_EXAMPLE).unwrap();
+        let dag = DataDag::build(&spec).unwrap();
+        to_dot(&spec, &dag, &VizOptions { states, metrics: None })
+    }
+
+    #[test]
+    fn contains_all_nodes_and_edges() {
+        let dot = render(HashMap::new());
+        assert!(dot.starts_with("digraph pipeline {"));
+        for id in ["InputData", "IntermediateData", "FeatureData", "PredictionData", "OutputData"] {
+            assert!(dot.contains(&format!("data_{id}")), "missing data node {id}");
+        }
+        assert!(dot.contains("[0] PreprocessTransformer"));
+        assert!(dot.contains("[3] PostProcessTransformer"));
+        assert!(dot.contains("\"data_InputData\" -> \"pipe_PreprocessTransformer\""));
+        assert!(dot.contains("\"pipe_ModelPredictionTransformer\" -> \"data_PredictionData\""));
+    }
+
+    #[test]
+    fn progress_colors() {
+        let mut states = HashMap::new();
+        states.insert(0, PipeState::Done);
+        states.insert(1, PipeState::Running);
+        let dot = render(states);
+        assert!(dot.contains("#9fdf9f"), "done = green");
+        assert!(dot.contains("#ffe066"), "running = yellow");
+        assert!(dot.contains("#ffffff"), "pending = white");
+    }
+
+    #[test]
+    fn metrics_info_blocks() {
+        let spec = PipelineSpec::parse(PAPER_EXAMPLE).unwrap();
+        let dag = DataDag::build(&spec).unwrap();
+        let reg = crate::metrics::MetricsRegistry::new();
+        reg.observe("pipe.ModelPredictionTransformer.model_latency", 0.005);
+        reg.counter_add("pipe.PreprocessTransformer.rows_out", 100);
+        let dot = to_dot(
+            &spec,
+            &dag,
+            &VizOptions { states: HashMap::new(), metrics: Some(reg.snapshot()) },
+        );
+        assert!(dot.contains("model_latency"));
+        assert!(dot.contains("rows_out=100"));
+        assert!(dot.contains("#c59df5"), "purple info block");
+    }
+
+    #[test]
+    fn location_palette() {
+        let text = r#"{
+          "data": [
+            {"id": "A", "location": "s3://b/a"},
+            {"id": "B", "location": "kv://t/b"},
+            {"id": "C", "cache": true}
+          ],
+          "pipes": [
+            {"inputDataId": ["A", "B"], "transformerType": "X", "outputDataId": "C"}
+          ]
+        }"#;
+        let spec = PipelineSpec::parse(text).unwrap();
+        let dag = DataDag::build(&spec).unwrap();
+        let dot = to_dot(&spec, &dag, &VizOptions::default());
+        assert!(dot.contains("#f59e42"), "s3 orange");
+        assert!(dot.contains("#7ab8f5"), "kv blue");
+        assert!(dot.contains("filled,dashed"), "cached dotted");
+    }
+}

@@ -1,0 +1,195 @@
+//! Cache manager — the engine half of the paper's *explicit state
+//! management* (§3.2): pipes selectively `persist` intermediate datasets so
+//! shared lineage (`C → D` and `C → E`) is computed once, and *register
+//! cleanup* so cached state is dropped deterministically when a pipe
+//! completes ("like the `delete` clause in C++").
+
+use super::dataset::Partitioned;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Per-entry bookkeeping.
+struct Entry {
+    data: Partitioned,
+    bytes: usize,
+    hits: u64,
+}
+
+/// Thread-safe cache keyed by plan-node id, with a byte budget and
+/// LRU-ish eviction (least-hit entry evicted first; good enough for
+/// pipeline-shaped reuse).
+pub struct CacheManager {
+    inner: Mutex<CacheInner>,
+}
+
+struct CacheInner {
+    registered: HashMap<u64, bool>, // id -> currently wanted
+    entries: HashMap<u64, Entry>,
+    budget_bytes: usize,
+    used_bytes: usize,
+    evictions: u64,
+}
+
+impl CacheManager {
+    pub fn new(budget_bytes: usize) -> Self {
+        CacheManager {
+            inner: Mutex::new(CacheInner {
+                registered: HashMap::new(),
+                entries: HashMap::new(),
+                budget_bytes,
+                used_bytes: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    /// Mark a dataset as cache-worthy. The executor stores its partitions
+    /// after the next materialization.
+    pub fn register(&self, id: u64) {
+        self.inner.lock().unwrap().registered.insert(id, true);
+    }
+
+    pub fn is_registered(&self, id: u64) -> bool {
+        *self
+            .inner
+            .lock()
+            .unwrap()
+            .registered
+            .get(&id)
+            .unwrap_or(&false)
+    }
+
+    /// Explicit cleanup: drop the cached data and the registration.
+    pub fn unpersist(&self, id: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.registered.remove(&id);
+        if let Some(e) = g.entries.remove(&id) {
+            g.used_bytes -= e.bytes;
+        }
+    }
+
+    /// Drop everything (end of pipeline run).
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.registered.clear();
+        g.entries.clear();
+        g.used_bytes = 0;
+    }
+
+    pub fn get(&self, id: u64) -> Option<Partitioned> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(e) = g.entries.get_mut(&id) {
+            e.hits += 1;
+            Some(e.data.clone())
+        } else {
+            None
+        }
+    }
+
+    /// Insert a materialized dataset, evicting least-used entries if the
+    /// budget would be exceeded. Entries larger than the whole budget are
+    /// not cached (unbounded inputs must not pin memory — §3.2).
+    pub fn put(&self, id: u64, data: Partitioned) {
+        let bytes = data.approx_bytes();
+        let mut g = self.inner.lock().unwrap();
+        if bytes > g.budget_bytes {
+            return;
+        }
+        while g.used_bytes + bytes > g.budget_bytes {
+            // evict the least-hit entry
+            let victim = g
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.hits)
+                .map(|(k, _)| *k);
+            match victim {
+                Some(k) => {
+                    if let Some(e) = g.entries.remove(&k) {
+                        g.used_bytes -= e.bytes;
+                        g.evictions += 1;
+                    }
+                }
+                None => break,
+            }
+        }
+        g.used_bytes += bytes;
+        g.entries.insert(id, Entry { data, bytes, hits: 0 });
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.inner.lock().unwrap().used_bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.inner.lock().unwrap().evictions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::row::Schema;
+    use crate::row;
+    use std::sync::Arc;
+
+    fn pd(n: usize) -> Partitioned {
+        Partitioned {
+            schema: Schema::of_names(&["x"]),
+            parts: vec![Arc::new((0..n).map(|i| row!(i as i64)).collect())],
+        }
+    }
+
+    #[test]
+    fn register_put_get_unpersist() {
+        let c = CacheManager::new(1 << 20);
+        c.register(1);
+        assert!(c.is_registered(1));
+        assert!(c.get(1).is_none());
+        c.put(1, pd(10));
+        assert_eq!(c.get(1).unwrap().num_rows(), 10);
+        c.unpersist(1);
+        assert!(c.get(1).is_none());
+        assert!(!c.is_registered(1));
+        assert_eq!(c.used_bytes(), 0);
+    }
+
+    #[test]
+    fn eviction_respects_budget() {
+        let one = pd(100).approx_bytes();
+        let c = CacheManager::new(one * 2 + 10);
+        c.put(1, pd(100));
+        c.put(2, pd(100));
+        // access 2 so 1 is the cold victim
+        let _ = c.get(2);
+        c.put(3, pd(100));
+        assert!(c.get(1).is_none(), "cold entry should be evicted");
+        assert!(c.get(2).is_some());
+        assert!(c.get(3).is_some());
+        assert_eq!(c.evictions(), 1);
+    }
+
+    #[test]
+    fn oversized_entry_not_cached() {
+        let c = CacheManager::new(8);
+        c.put(1, pd(1000));
+        assert!(c.get(1).is_none());
+    }
+
+    #[test]
+    fn clear_drops_all() {
+        let c = CacheManager::new(1 << 20);
+        c.register(1);
+        c.put(1, pd(5));
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.used_bytes(), 0);
+    }
+}

@@ -1,0 +1,392 @@
+//! Lazy, lineage-tracked dataset abstraction — the engine's RDD analogue.
+//!
+//! A [`Dataset`] is a handle to a node in a logical plan DAG. Nothing
+//! executes until an action (`collect`, `count`, ...) runs on an
+//! [`super::executor::EngineCtx`]. Narrow transformations (map / filter /
+//! flat_map / map_partitions) fuse into per-partition pipelines; wide
+//! transformations (reduce_by_key / join / distinct / repartition) insert
+//! shuffle boundaries, exactly like Spark stages.
+
+use super::row::{Row, SchemaRef};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// One partition of materialized rows (shared, immutable).
+pub type PartRef = Arc<Vec<Row>>;
+
+/// A fully materialized distributed collection.
+#[derive(Clone)]
+pub struct Partitioned {
+    pub schema: SchemaRef,
+    pub parts: Vec<PartRef>,
+}
+
+impl Partitioned {
+    pub fn num_rows(&self) -> usize {
+        self.parts.iter().map(|p| p.len()).sum()
+    }
+
+    pub fn approx_bytes(&self) -> usize {
+        self.parts
+            .iter()
+            .map(|p| p.iter().map(|r| r.approx_size()).sum::<usize>())
+            .sum()
+    }
+
+    /// Flatten to a single vector (driver-side collect).
+    pub fn rows(&self) -> Vec<Row> {
+        let mut out = Vec::with_capacity(self.num_rows());
+        for p in &self.parts {
+            out.extend(p.iter().cloned());
+        }
+        out
+    }
+}
+
+pub type MapFn = Arc<dyn Fn(&Row) -> Row + Send + Sync>;
+pub type PredFn = Arc<dyn Fn(&Row) -> bool + Send + Sync>;
+pub type FlatMapFn = Arc<dyn Fn(&Row) -> Vec<Row> + Send + Sync>;
+pub type PartFn = Arc<dyn Fn(Vec<Row>) -> Vec<Row> + Send + Sync>;
+pub type KeyFn = Arc<dyn Fn(&Row) -> super::row::Field + Send + Sync>;
+pub type ReduceFn = Arc<dyn Fn(Row, &Row) -> Row + Send + Sync>;
+pub type CmpFn = Arc<dyn Fn(&Row, &Row) -> std::cmp::Ordering + Send + Sync>;
+
+/// Join variants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JoinKind {
+    Inner,
+    Left,
+}
+
+/// Logical plan node. Each node gets a process-unique id used for caching,
+/// stage naming, and visualization.
+pub enum Plan {
+    Source {
+        name: String,
+        data: Partitioned,
+    },
+    Map {
+        input: Dataset,
+        f: MapFn,
+        schema: SchemaRef,
+    },
+    Filter {
+        input: Dataset,
+        f: PredFn,
+    },
+    FlatMap {
+        input: Dataset,
+        f: FlatMapFn,
+        schema: SchemaRef,
+    },
+    /// Whole-partition transform; the hook for batched model inference
+    /// (instance-level lifecycle: the closure owns the loaded model).
+    MapPartitions {
+        input: Dataset,
+        f: PartFn,
+        schema: SchemaRef,
+    },
+    ReduceByKey {
+        input: Dataset,
+        key: KeyFn,
+        reduce: ReduceFn,
+        num_parts: usize,
+    },
+    Distinct {
+        input: Dataset,
+        num_parts: usize,
+    },
+    Join {
+        left: Dataset,
+        right: Dataset,
+        lkey: KeyFn,
+        rkey: KeyFn,
+        kind: JoinKind,
+        num_parts: usize,
+        schema: SchemaRef,
+    },
+    Union {
+        inputs: Vec<Dataset>,
+    },
+    Sort {
+        input: Dataset,
+        cmp: CmpFn,
+    },
+    Repartition {
+        input: Dataset,
+        num_parts: usize,
+    },
+}
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+fn next_id() -> u64 {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Handle to a plan node.
+#[derive(Clone)]
+pub struct Dataset {
+    pub id: u64,
+    pub node: Arc<Plan>,
+    pub schema: SchemaRef,
+}
+
+impl Dataset {
+    /// Create a source dataset from pre-partitioned rows.
+    pub fn from_parts(name: &str, schema: SchemaRef, parts: Vec<Vec<Row>>) -> Dataset {
+        let data = Partitioned {
+            schema: schema.clone(),
+            parts: parts.into_iter().map(Arc::new).collect(),
+        };
+        Dataset {
+            id: next_id(),
+            schema,
+            node: Arc::new(Plan::Source { name: name.to_string(), data }),
+        }
+    }
+
+    /// Create a source dataset by splitting rows into `n` partitions.
+    pub fn from_rows(name: &str, schema: SchemaRef, rows: Vec<Row>, n: usize) -> Dataset {
+        let n = n.max(1);
+        let chunk = rows.len().div_ceil(n).max(1);
+        let mut parts: Vec<Vec<Row>> = Vec::with_capacity(n);
+        let mut it = rows.into_iter().peekable();
+        while it.peek().is_some() {
+            parts.push(it.by_ref().take(chunk).collect());
+        }
+        if parts.is_empty() {
+            parts.push(Vec::new());
+        }
+        Dataset::from_parts(name, schema, parts)
+    }
+
+    pub fn name(&self) -> String {
+        match &*self.node {
+            Plan::Source { name, .. } => name.clone(),
+            Plan::Map { .. } => "map".into(),
+            Plan::Filter { .. } => "filter".into(),
+            Plan::FlatMap { .. } => "flat_map".into(),
+            Plan::MapPartitions { .. } => "map_partitions".into(),
+            Plan::ReduceByKey { .. } => "reduce_by_key".into(),
+            Plan::Distinct { .. } => "distinct".into(),
+            Plan::Join { .. } => "join".into(),
+            Plan::Union { .. } => "union".into(),
+            Plan::Sort { .. } => "sort".into(),
+            Plan::Repartition { .. } => "repartition".into(),
+        }
+    }
+
+    fn derive(&self, node: Plan, schema: SchemaRef) -> Dataset {
+        Dataset { id: next_id(), node: Arc::new(node), schema }
+    }
+
+    /// 1→1 row transform. `schema` describes the output rows.
+    pub fn map(&self, schema: SchemaRef, f: impl Fn(&Row) -> Row + Send + Sync + 'static) -> Dataset {
+        self.derive(
+            Plan::Map { input: self.clone(), f: Arc::new(f), schema: schema.clone() },
+            schema,
+        )
+    }
+
+    /// Keep rows matching the predicate.
+    pub fn filter(&self, f: impl Fn(&Row) -> bool + Send + Sync + 'static) -> Dataset {
+        self.derive(
+            Plan::Filter { input: self.clone(), f: Arc::new(f) },
+            self.schema.clone(),
+        )
+    }
+
+    /// 1→N row transform.
+    pub fn flat_map(
+        &self,
+        schema: SchemaRef,
+        f: impl Fn(&Row) -> Vec<Row> + Send + Sync + 'static,
+    ) -> Dataset {
+        self.derive(
+            Plan::FlatMap { input: self.clone(), f: Arc::new(f), schema: schema.clone() },
+            schema,
+        )
+    }
+
+    /// Whole-partition transform (used for batched inference).
+    pub fn map_partitions(
+        &self,
+        schema: SchemaRef,
+        f: impl Fn(Vec<Row>) -> Vec<Row> + Send + Sync + 'static,
+    ) -> Dataset {
+        self.derive(
+            Plan::MapPartitions { input: self.clone(), f: Arc::new(f), schema: schema.clone() },
+            schema,
+        )
+    }
+
+    /// Shuffle by `key`, then fold rows with equal keys pairwise.
+    pub fn reduce_by_key(
+        &self,
+        num_parts: usize,
+        key: impl Fn(&Row) -> super::row::Field + Send + Sync + 'static,
+        reduce: impl Fn(Row, &Row) -> Row + Send + Sync + 'static,
+    ) -> Dataset {
+        self.derive(
+            Plan::ReduceByKey {
+                input: self.clone(),
+                key: Arc::new(key),
+                reduce: Arc::new(reduce),
+                num_parts: num_parts.max(1),
+            },
+            self.schema.clone(),
+        )
+    }
+
+    /// Global de-duplication of identical rows (shuffle + hash set).
+    pub fn distinct(&self, num_parts: usize) -> Dataset {
+        self.derive(
+            Plan::Distinct { input: self.clone(), num_parts: num_parts.max(1) },
+            self.schema.clone(),
+        )
+    }
+
+    /// Hash join. Output schema = left fields ++ right fields.
+    pub fn join(
+        &self,
+        right: &Dataset,
+        out_schema: SchemaRef,
+        kind: JoinKind,
+        num_parts: usize,
+        lkey: impl Fn(&Row) -> super::row::Field + Send + Sync + 'static,
+        rkey: impl Fn(&Row) -> super::row::Field + Send + Sync + 'static,
+    ) -> Dataset {
+        self.derive(
+            Plan::Join {
+                left: self.clone(),
+                right: right.clone(),
+                lkey: Arc::new(lkey),
+                rkey: Arc::new(rkey),
+                kind,
+                num_parts: num_parts.max(1),
+                schema: out_schema.clone(),
+            },
+            out_schema,
+        )
+    }
+
+    /// Concatenate datasets with identical schemas.
+    pub fn union(&self, others: &[Dataset]) -> Dataset {
+        let mut inputs = vec![self.clone()];
+        inputs.extend(others.iter().cloned());
+        self.derive(Plan::Union { inputs }, self.schema.clone())
+    }
+
+    /// Global sort (gather-sort: result is a single partition).
+    pub fn sort_by(
+        &self,
+        cmp: impl Fn(&Row, &Row) -> std::cmp::Ordering + Send + Sync + 'static,
+    ) -> Dataset {
+        self.derive(
+            Plan::Sort { input: self.clone(), cmp: Arc::new(cmp) },
+            self.schema.clone(),
+        )
+    }
+
+    /// Round-robin shuffle into `n` partitions.
+    pub fn repartition(&self, n: usize) -> Dataset {
+        self.derive(
+            Plan::Repartition { input: self.clone(), num_parts: n.max(1) },
+            self.schema.clone(),
+        )
+    }
+
+    /// Direct upstream datasets (lineage edges).
+    pub fn inputs(&self) -> Vec<Dataset> {
+        match &*self.node {
+            Plan::Source { .. } => vec![],
+            Plan::Map { input, .. }
+            | Plan::Filter { input, .. }
+            | Plan::FlatMap { input, .. }
+            | Plan::MapPartitions { input, .. }
+            | Plan::ReduceByKey { input, .. }
+            | Plan::Distinct { input, .. }
+            | Plan::Sort { input, .. }
+            | Plan::Repartition { input, .. } => vec![input.clone()],
+            Plan::Join { left, right, .. } => vec![left.clone(), right.clone()],
+            Plan::Union { inputs } => inputs.clone(),
+        }
+    }
+
+    /// True if this node starts a new stage (shuffle boundary or source).
+    pub fn is_wide(&self) -> bool {
+        matches!(
+            &*self.node,
+            Plan::ReduceByKey { .. }
+                | Plan::Distinct { .. }
+                | Plan::Join { .. }
+                | Plan::Sort { .. }
+                | Plan::Repartition { .. }
+        )
+    }
+
+    /// Depth of the lineage chain (for tests / diagnostics).
+    pub fn lineage_depth(&self) -> usize {
+        1 + self
+            .inputs()
+            .iter()
+            .map(|d| d.lineage_depth())
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::row::{FieldType, Schema};
+    use crate::row;
+
+    fn sample() -> Dataset {
+        let schema = Schema::new(vec![("id", FieldType::I64), ("v", FieldType::Str)]);
+        let rows = (0..10).map(|i| row!(i as i64, format!("v{i}"))).collect();
+        Dataset::from_rows("src", schema, rows, 3)
+    }
+
+    #[test]
+    fn partitioning_splits_rows() {
+        let ds = sample();
+        match &*ds.node {
+            Plan::Source { data, .. } => {
+                assert_eq!(data.num_rows(), 10);
+                assert_eq!(data.parts.len(), 3);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn empty_source_has_one_partition() {
+        let schema = Schema::of_names(&["a"]);
+        let ds = Dataset::from_rows("empty", schema, vec![], 4);
+        match &*ds.node {
+            Plan::Source { data, .. } => assert_eq!(data.parts.len(), 1),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn lineage_tracking() {
+        let ds = sample();
+        let mapped = ds.map(ds.schema.clone(), |r| r.clone());
+        let filtered = mapped.filter(|_| true);
+        assert_eq!(filtered.lineage_depth(), 3);
+        assert_eq!(filtered.inputs()[0].id, mapped.id);
+        assert!(!filtered.is_wide());
+        assert!(filtered.distinct(2).is_wide());
+    }
+
+    #[test]
+    fn ids_unique() {
+        let ds = sample();
+        let a = ds.filter(|_| true);
+        let b = ds.filter(|_| true);
+        assert_ne!(a.id, b.id);
+    }
+}

@@ -1,0 +1,911 @@
+//! Stage-oriented plan executor.
+//!
+//! Evaluation walks the plan DAG: runs of narrow transformations fuse into
+//! one per-partition pipeline (no intermediate materialization — the
+//! paper's "chained via system memory" property); wide transformations
+//! (reduce/join/distinct/sort/repartition) become shuffle boundaries with
+//! map-side combining. Tasks run on a fixed thread pool with bounded
+//! retries; injected faults exercise lineage recomputation. Every task is
+//! optionally recorded into a [`TaskTrace`] that the virtual-time cluster
+//! simulator replays at other cluster sizes.
+
+use super::cache::CacheManager;
+use super::dataset::{Dataset, JoinKind, PartRef, Partitioned, Plan};
+use super::fault::FaultInjector;
+use super::row::{Field, Row};
+use super::stats::EngineStats;
+use crate::util::error::{DdpError, Result};
+use crate::util::threadpool::ThreadPool;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// worker threads in the local executor
+    pub workers: usize,
+    /// default partition count for sources created through the context
+    pub default_partitions: usize,
+    /// cache budget in bytes (explicit state management, §3.2)
+    pub cache_budget_bytes: usize,
+    /// fuse narrow chains (ablation switch; `false` materializes each op)
+    pub fusion: bool,
+    /// max attempts per task (1 = no retry)
+    pub max_task_attempts: u32,
+    /// record a task trace for the cluster simulator
+    pub record_trace: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            workers: 4,
+            default_partitions: 8,
+            cache_budget_bytes: 512 << 20,
+            fusion: true,
+            max_task_attempts: 3,
+            record_trace: false,
+        }
+    }
+}
+
+/// One executed task, as recorded for the simulator.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskRecord {
+    pub stage_id: u64,
+    pub duration_secs: f64,
+    pub input_rows: u64,
+    pub output_bytes: u64,
+    /// bytes this task contributed to a shuffle (0 for result tasks)
+    pub shuffle_bytes: u64,
+}
+
+/// Ordered list of task records from a real run.
+pub type TaskTrace = Vec<TaskRecord>;
+
+/// Execution context ("SparkContext"): thread pool + cache + stats.
+pub struct EngineCtx {
+    pub cfg: EngineConfig,
+    pub pool: ThreadPool,
+    pub cache: CacheManager,
+    pub stats: EngineStats,
+    pub fault: Option<Arc<FaultInjector>>,
+    trace: Mutex<TaskTrace>,
+}
+
+impl EngineCtx {
+    pub fn new(cfg: EngineConfig) -> Arc<EngineCtx> {
+        Arc::new(EngineCtx {
+            pool: ThreadPool::new(cfg.workers),
+            cache: CacheManager::new(cfg.cache_budget_bytes),
+            stats: EngineStats::new(),
+            fault: None,
+            trace: Mutex::new(Vec::new()),
+            cfg,
+        })
+    }
+
+    pub fn with_faults(cfg: EngineConfig, fault: FaultInjector) -> Arc<EngineCtx> {
+        Arc::new(EngineCtx {
+            pool: ThreadPool::new(cfg.workers),
+            cache: CacheManager::new(cfg.cache_budget_bytes),
+            stats: EngineStats::new(),
+            fault: Some(Arc::new(fault)),
+            trace: Mutex::new(Vec::new()),
+            cfg,
+        })
+    }
+
+    /// Mark a dataset for caching (Spark `persist`).
+    pub fn persist(&self, ds: &Dataset) {
+        self.cache.register(ds.id);
+    }
+
+    /// Explicitly drop a cached dataset (paper §3.2 cleanup registration).
+    pub fn unpersist(&self, ds: &Dataset) {
+        self.cache.unpersist(ds.id);
+    }
+
+    /// Materialize a dataset.
+    pub fn collect(&self, ds: &Dataset) -> Result<Partitioned> {
+        self.eval(ds)
+    }
+
+    /// Materialize and flatten to driver-side rows.
+    pub fn collect_rows(&self, ds: &Dataset) -> Result<Vec<Row>> {
+        Ok(self.eval(ds)?.rows())
+    }
+
+    pub fn count(&self, ds: &Dataset) -> Result<usize> {
+        Ok(self.eval(ds)?.num_rows())
+    }
+
+    /// Drain the recorded task trace.
+    pub fn take_trace(&self) -> TaskTrace {
+        std::mem::take(&mut *self.trace.lock().unwrap())
+    }
+
+    // ------------------------------------------------------------------
+    // evaluation
+    // ------------------------------------------------------------------
+
+    fn eval(&self, ds: &Dataset) -> Result<Partitioned> {
+        if self.cache.is_registered(ds.id) {
+            if let Some(hit) = self.cache.get(ds.id) {
+                self.stats.add(&self.stats.cache_hits, 1);
+                return Ok(hit);
+            }
+            self.stats.add(&self.stats.cache_misses, 1);
+        }
+        let out = self.eval_uncached(ds)?;
+        if self.cache.is_registered(ds.id) {
+            self.cache.put(ds.id, out.clone());
+        }
+        Ok(out)
+    }
+
+    fn eval_uncached(&self, ds: &Dataset) -> Result<Partitioned> {
+        match &*ds.node {
+            Plan::Source { data, .. } => Ok(data.clone()),
+            Plan::Map { .. } | Plan::Filter { .. } | Plan::FlatMap { .. } | Plan::MapPartitions { .. } => {
+                self.eval_narrow_chain(ds)
+            }
+            Plan::ReduceByKey { input, key, reduce, num_parts } => {
+                let inp = self.eval(input)?;
+                self.exec_reduce_by_key(ds, inp, key.clone(), reduce.clone(), *num_parts)
+            }
+            Plan::Distinct { input, num_parts } => {
+                let inp = self.eval(input)?;
+                self.exec_distinct(ds, inp, *num_parts)
+            }
+            Plan::Join { left, right, lkey, rkey, kind, num_parts, schema } => {
+                let l = self.eval(left)?;
+                let r = self.eval(right)?;
+                self.exec_join(ds, l, r, lkey.clone(), rkey.clone(), *kind, *num_parts, schema.clone())
+            }
+            Plan::Union { inputs } => {
+                let mut parts: Vec<PartRef> = Vec::new();
+                for i in inputs {
+                    parts.extend(self.eval(i)?.parts);
+                }
+                Ok(Partitioned { schema: ds.schema.clone(), parts })
+            }
+            Plan::Sort { input, cmp } => {
+                let inp = self.eval(input)?;
+                let mut rows = inp.rows();
+                let cmp = cmp.clone();
+                rows.sort_by(|a, b| cmp(a, b));
+                self.stats.add(&self.stats.stages_run, 1);
+                Ok(Partitioned { schema: ds.schema.clone(), parts: vec![Arc::new(rows)] })
+            }
+            Plan::Repartition { input, num_parts } => {
+                let inp = self.eval(input)?;
+                self.exec_repartition(ds, inp, *num_parts)
+            }
+        }
+    }
+
+    /// Walk up through narrow ops, collecting the fused pipeline. The chain
+    /// breaks at sources, wide ops, and *registered cache points* (a cached
+    /// intermediate must be materialized so siblings can reuse it).
+    fn eval_narrow_chain(&self, ds: &Dataset) -> Result<Partitioned> {
+        let mut steps: Vec<Step> = Vec::new();
+        let mut cur = ds.clone();
+        let base = loop {
+            // a registered cache point below the top must materialize
+            if cur.id != ds.id && self.cache.is_registered(cur.id) {
+                break cur;
+            }
+            match &*cur.node {
+                Plan::Map { input, f, .. } => {
+                    steps.push(Step::Map(f.clone()));
+                    cur = input.clone();
+                }
+                Plan::Filter { input, f } => {
+                    steps.push(Step::Filter(f.clone()));
+                    cur = input.clone();
+                }
+                Plan::FlatMap { input, f, .. } => {
+                    steps.push(Step::FlatMap(f.clone()));
+                    cur = input.clone();
+                }
+                Plan::MapPartitions { input, f, .. } => {
+                    steps.push(Step::PartWise(f.clone()));
+                    cur = input.clone();
+                }
+                _ => break cur,
+            }
+        };
+        steps.reverse();
+        let base_data = self.eval(&base)?;
+        self.run_partition_stage(ds.id, base_data, ds.schema.clone(), steps)
+    }
+
+    fn run_partition_stage(
+        &self,
+        stage_id: u64,
+        input: Partitioned,
+        schema: super::row::SchemaRef,
+        steps: Vec<Step>,
+    ) -> Result<Partitioned> {
+        self.stats.add(&self.stats.stages_run, 1);
+        let steps = Arc::new(steps);
+        let fusion = self.cfg.fusion;
+        let tasks: Vec<_> = input
+            .parts
+            .iter()
+            .map(|part| {
+                let part = part.clone();
+                let steps = steps.clone();
+                move || -> Vec<Row> {
+                    if fusion {
+                        apply_chain_fused(&part, &steps)
+                    } else {
+                        apply_chain_materialized(&part, &steps)
+                    }
+                }
+            })
+            .collect();
+        let outs = self.run_tasks(stage_id, tasks, &input)?;
+        Ok(Partitioned { schema, parts: outs.into_iter().map(Arc::new).collect() })
+    }
+
+    /// Run tasks with retry + fault injection + stats + tracing.
+    fn run_tasks<T, F>(&self, stage_id: u64, tasks: Vec<F>, input: &Partitioned) -> Result<Vec<T>>
+    where
+        T: Send + 'static,
+        F: Fn() -> T + Send + Sync + 'static,
+    {
+        let fault = self.fault.clone();
+        let max_attempts = self.cfg.max_task_attempts;
+        let input_rows: Vec<u64> = input.parts.iter().map(|p| p.len() as u64).collect();
+        let wrapped: Vec<_> = tasks
+            .into_iter()
+            .map(|t| {
+                let fault = fault.clone();
+                move || -> (T, f64, u32) {
+                    let mut attempt = 0u32;
+                    loop {
+                        let start = Instant::now();
+                        let injected = fault
+                            .as_ref()
+                            .map(|f| f.should_fail(attempt))
+                            .unwrap_or(false);
+                        if !injected {
+                            let out = t();
+                            return (out, start.elapsed().as_secs_f64(), attempt);
+                        }
+                        attempt += 1;
+                        if attempt >= max_attempts {
+                            panic!("task failed after {attempt} attempts (injected)");
+                        }
+                    }
+                }
+            })
+            .collect();
+        let n = wrapped.len();
+        let results = self.pool.map(wrapped);
+        let mut outs = Vec::with_capacity(n);
+        let mut trace_rows = Vec::new();
+        for (i, r) in results.into_iter().enumerate() {
+            match r {
+                Some((v, dur, retries)) => {
+                    self.stats.add(&self.stats.tasks_launched, 1 + retries as u64);
+                    self.stats.add(&self.stats.tasks_retried, retries as u64);
+                    self.stats.add(&self.stats.task_nanos, (dur * 1e9) as u64);
+                    self.stats
+                        .add(&self.stats.rows_read, input_rows.get(i).copied().unwrap_or(0));
+                    if self.cfg.record_trace {
+                        trace_rows.push(TaskRecord {
+                            stage_id,
+                            duration_secs: dur,
+                            input_rows: input_rows.get(i).copied().unwrap_or(0),
+                            output_bytes: 0,
+                            shuffle_bytes: 0,
+                        });
+                    }
+                    outs.push(v);
+                }
+                None => {
+                    return Err(DdpError::TaskFailed {
+                        attempts: max_attempts,
+                        msg: format!("stage {stage_id}, task {i}"),
+                    })
+                }
+            }
+        }
+        if self.cfg.record_trace {
+            self.trace.lock().unwrap().extend(trace_rows);
+        }
+        Ok(outs)
+    }
+
+    // ------------------------------------------------------------------
+    // wide (shuffle) operators
+    // ------------------------------------------------------------------
+
+    /// Hash-bucket every input partition into `num_parts` buckets (the map
+    /// side of a shuffle), charging shuffle bytes to stats.
+    fn shuffle_buckets(
+        &self,
+        stage_id: u64,
+        input: &Partitioned,
+        num_parts: usize,
+        key: super::dataset::KeyFn,
+    ) -> Result<Vec<Vec<Vec<Row>>>> {
+        let tasks: Vec<_> = input
+            .parts
+            .iter()
+            .map(|part| {
+                let part = part.clone();
+                let key = key.clone();
+                move || -> Vec<Vec<Row>> {
+                    let mut buckets: Vec<Vec<Row>> = (0..num_parts).map(|_| Vec::new()).collect();
+                    for row in part.iter() {
+                        let k = key(row);
+                        let b = (field_hash(&k) % num_parts as u64) as usize;
+                        buckets[b].push(row.clone());
+                    }
+                    buckets
+                }
+            })
+            .collect();
+        let outs = self.run_tasks(stage_id, tasks, input)?;
+        let moved: u64 = outs
+            .iter()
+            .flat_map(|bs| bs.iter())
+            .map(|b| b.iter().map(|r| r.approx_size() as u64).sum::<u64>())
+            .sum();
+        let recs: u64 = outs
+            .iter()
+            .flat_map(|bs| bs.iter())
+            .map(|b| b.len() as u64)
+            .sum();
+        self.stats.add(&self.stats.shuffle_bytes, moved);
+        self.stats.add(&self.stats.shuffle_records, recs);
+        Ok(outs)
+    }
+
+    fn exec_reduce_by_key(
+        &self,
+        ds: &Dataset,
+        input: Partitioned,
+        key: super::dataset::KeyFn,
+        reduce: super::dataset::ReduceFn,
+        num_parts: usize,
+    ) -> Result<Partitioned> {
+        self.stats.add(&self.stats.stages_run, 1);
+        // map-side combine, then bucket
+        let combine_key = key.clone();
+        let combine_reduce = reduce.clone();
+        let tasks: Vec<_> = input
+            .parts
+            .iter()
+            .map(|part| {
+                let part = part.clone();
+                let key = combine_key.clone();
+                let reduce = combine_reduce.clone();
+                move || -> Vec<Vec<Row>> {
+                    let mut local: HashMap<Field, Row> = HashMap::new();
+                    for row in part.iter() {
+                        let k = key(row);
+                        match local.remove(&k) {
+                            Some(acc) => {
+                                local.insert(k, reduce(acc, row));
+                            }
+                            None => {
+                                local.insert(k, row.clone());
+                            }
+                        }
+                    }
+                    let mut buckets: Vec<Vec<Row>> = (0..num_parts).map(|_| Vec::new()).collect();
+                    for (k, row) in local {
+                        let b = (field_hash(&k) % num_parts as u64) as usize;
+                        buckets[b].push(row);
+                    }
+                    buckets
+                }
+            })
+            .collect();
+        let bucketed = self.run_tasks(ds.id, tasks, &input)?;
+        let moved: u64 = bucketed
+            .iter()
+            .flat_map(|bs| bs.iter())
+            .map(|b| b.iter().map(|r| r.approx_size() as u64).sum::<u64>())
+            .sum();
+        self.stats.add(&self.stats.shuffle_bytes, moved);
+
+        // reduce side
+        let exchanged = transpose_buckets(bucketed, num_parts);
+        let reduce2 = reduce.clone();
+        let key2 = key.clone();
+        let rtasks: Vec<_> = exchanged
+            .into_iter()
+            .map(|bucket_parts| {
+                let reduce = reduce2.clone();
+                let key = key2.clone();
+                move || -> Vec<Row> {
+                    let mut agg: HashMap<Field, Row> = HashMap::new();
+                    for part in &bucket_parts {
+                        for row in part {
+                            let k = key(row);
+                            match agg.remove(&k) {
+                                Some(acc) => {
+                                    agg.insert(k, reduce(acc, row));
+                                }
+                                None => {
+                                    agg.insert(k, row.clone());
+                                }
+                            }
+                        }
+                    }
+                    agg.into_values().collect()
+                }
+            })
+            .collect();
+        let empty = Partitioned { schema: ds.schema.clone(), parts: vec![] };
+        let outs = self.run_tasks(ds.id, rtasks, &empty)?;
+        Ok(Partitioned {
+            schema: ds.schema.clone(),
+            parts: outs.into_iter().map(Arc::new).collect(),
+        })
+    }
+
+    fn exec_distinct(&self, ds: &Dataset, input: Partitioned, num_parts: usize) -> Result<Partitioned> {
+        self.stats.add(&self.stats.stages_run, 1);
+        let whole_row_key: super::dataset::KeyFn =
+            Arc::new(|r: &Row| Field::I64(row_hash(r) as i64));
+        let bucketed = self.shuffle_buckets(ds.id, &input, num_parts, whole_row_key)?;
+        let exchanged = transpose_buckets(bucketed, num_parts);
+        let tasks: Vec<_> = exchanged
+            .into_iter()
+            .map(|bucket_parts| {
+                move || -> Vec<Row> {
+                    let mut seen: std::collections::HashSet<&Row> = std::collections::HashSet::new();
+                    let mut out = Vec::new();
+                    for part in &bucket_parts {
+                        for row in part {
+                            if seen.insert(row) {
+                                out.push(row.clone());
+                            }
+                        }
+                    }
+                    out
+                }
+            })
+            .collect();
+        let empty = Partitioned { schema: ds.schema.clone(), parts: vec![] };
+        let outs = self.run_tasks(ds.id, tasks, &empty)?;
+        Ok(Partitioned {
+            schema: ds.schema.clone(),
+            parts: outs.into_iter().map(Arc::new).collect(),
+        })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec_join(
+        &self,
+        ds: &Dataset,
+        left: Partitioned,
+        right: Partitioned,
+        lkey: super::dataset::KeyFn,
+        rkey: super::dataset::KeyFn,
+        kind: JoinKind,
+        num_parts: usize,
+        schema: super::row::SchemaRef,
+    ) -> Result<Partitioned> {
+        self.stats.add(&self.stats.stages_run, 1);
+        let lb = self.shuffle_buckets(ds.id, &left, num_parts, lkey.clone())?;
+        let rb = self.shuffle_buckets(ds.id, &right, num_parts, rkey.clone())?;
+        let lex = transpose_buckets(lb, num_parts);
+        let rex = transpose_buckets(rb, num_parts);
+        let right_width = right.schema.len();
+        let tasks: Vec<_> = lex
+            .into_iter()
+            .zip(rex)
+            .map(|(lparts, rparts)| {
+                let lkey = lkey.clone();
+                let rkey = rkey.clone();
+                move || -> Vec<Row> {
+                    // build from right, probe from left
+                    let mut table: HashMap<Field, Vec<&Row>> = HashMap::new();
+                    for part in &rparts {
+                        for row in part {
+                            table.entry(rkey(row)).or_default().push(row);
+                        }
+                    }
+                    let mut out = Vec::new();
+                    for part in &lparts {
+                        for lrow in part {
+                            let k = lkey(lrow);
+                            match table.get(&k) {
+                                Some(matches) => {
+                                    for rrow in matches {
+                                        let mut fields = lrow.fields.clone();
+                                        fields.extend(rrow.fields.iter().cloned());
+                                        out.push(Row::new(fields));
+                                    }
+                                }
+                                None => {
+                                    if kind == JoinKind::Left {
+                                        let mut fields = lrow.fields.clone();
+                                        fields.extend((0..right_width).map(|_| Field::Null));
+                                        out.push(Row::new(fields));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    out
+                }
+            })
+            .collect();
+        let empty = Partitioned { schema: schema.clone(), parts: vec![] };
+        let outs = self.run_tasks(ds.id, tasks, &empty)?;
+        Ok(Partitioned { schema, parts: outs.into_iter().map(Arc::new).collect() })
+    }
+
+    fn exec_repartition(&self, ds: &Dataset, input: Partitioned, num_parts: usize) -> Result<Partitioned> {
+        self.stats.add(&self.stats.stages_run, 1);
+        // round-robin by row hash for determinism
+        let key: super::dataset::KeyFn = Arc::new(|r: &Row| Field::I64(row_hash(r) as i64));
+        let bucketed = self.shuffle_buckets(ds.id, &input, num_parts, key)?;
+        let exchanged = transpose_buckets(bucketed, num_parts);
+        let parts: Vec<PartRef> = exchanged
+            .into_iter()
+            .map(|bucket_parts| Arc::new(bucket_parts.into_iter().flatten().collect::<Vec<Row>>()))
+            .collect();
+        Ok(Partitioned { schema: ds.schema.clone(), parts })
+    }
+}
+
+// ---------------------------------------------------------------------
+// narrow-chain machinery
+// ---------------------------------------------------------------------
+
+enum Step {
+    Map(super::dataset::MapFn),
+    Filter(super::dataset::PredFn),
+    FlatMap(super::dataset::FlatMapFn),
+    PartWise(super::dataset::PartFn),
+}
+
+/// Fused execution: rows stream through consecutive row-wise steps without
+/// intermediate vectors; `PartWise` steps materialize (they need the whole
+/// partition).
+fn apply_chain_fused(part: &[Row], steps: &[Step]) -> Vec<Row> {
+    if steps.is_empty() {
+        return part.to_vec();
+    }
+    // `None` means we are still reading straight from the input partition.
+    let mut cur: Option<Vec<Row>> = None;
+    let mut i = 0;
+    while i < steps.len() {
+        // a maximal run of row-wise steps fuses into one pass
+        let start = i;
+        while i < steps.len() && !matches!(steps[i], Step::PartWise(_)) {
+            i += 1;
+        }
+        if i > start {
+            let run = &steps[start..i];
+            let input: &[Row] = cur.as_deref().unwrap_or(part);
+            let mut out = Vec::with_capacity(input.len());
+            for row in input {
+                push_rowwise(row.clone(), run, &mut out);
+            }
+            cur = Some(out);
+        }
+        if i < steps.len() {
+            if let Step::PartWise(f) = &steps[i] {
+                let input = cur.take().unwrap_or_else(|| part.to_vec());
+                cur = Some(f(input));
+            }
+            i += 1;
+        }
+    }
+    cur.unwrap_or_else(|| part.to_vec())
+}
+
+#[inline]
+fn push_rowwise(row: Row, ops: &[Step], out: &mut Vec<Row>) {
+    match ops.split_first() {
+        None => out.push(row),
+        Some((op, rest)) => match op {
+            Step::Map(f) => push_rowwise(f(&row), rest, out),
+            Step::Filter(f) => {
+                if f(&row) {
+                    push_rowwise(row, rest, out);
+                }
+            }
+            Step::FlatMap(f) => {
+                for r in f(&row) {
+                    push_rowwise(r, rest, out);
+                }
+            }
+            Step::PartWise(_) => unreachable!("PartWise handled at run level"),
+        },
+    }
+}
+
+/// Ablation mode: materialize the full partition after every step.
+fn apply_chain_materialized(part: &[Row], steps: &[Step]) -> Vec<Row> {
+    let mut cur: Vec<Row> = part.to_vec();
+    for step in steps {
+        cur = match step {
+            Step::Map(f) => cur.iter().map(|r| f(r)).collect(),
+            Step::Filter(f) => cur.into_iter().filter(|r| f(r)).collect(),
+            Step::FlatMap(f) => cur.iter().flat_map(|r| f(r)).collect(),
+            Step::PartWise(f) => f(cur),
+        };
+    }
+    cur
+}
+
+// ---------------------------------------------------------------------
+// hashing / bucket helpers
+// ---------------------------------------------------------------------
+
+fn field_hash(f: &Field) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    f.hash(&mut h);
+    h.finish()
+}
+
+fn row_hash(r: &Row) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    r.hash(&mut h);
+    h.finish()
+}
+
+/// Turn per-input-partition bucket lists into per-bucket partition lists.
+fn transpose_buckets(bucketed: Vec<Vec<Vec<Row>>>, num_parts: usize) -> Vec<Vec<Vec<Row>>> {
+    let mut out: Vec<Vec<Vec<Row>>> = (0..num_parts).map(|_| Vec::new()).collect();
+    for part_buckets in bucketed {
+        for (b, rows) in part_buckets.into_iter().enumerate() {
+            out[b].push(rows);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::row::{FieldType, Schema};
+    use crate::row;
+
+    fn ctx() -> Arc<EngineCtx> {
+        EngineCtx::new(EngineConfig { workers: 2, ..Default::default() })
+    }
+
+    fn nums(n: i64, parts: usize) -> Dataset {
+        let schema = Schema::new(vec![("x", FieldType::I64)]);
+        Dataset::from_rows("nums", schema, (0..n).map(|i| row!(i)).collect(), parts)
+    }
+
+    #[test]
+    fn map_filter_collect() {
+        let c = ctx();
+        let ds = nums(100, 4);
+        let out = ds
+            .map(ds.schema.clone(), |r| row!(r.get(0).as_i64().unwrap() * 2))
+            .filter(|r| r.get(0).as_i64().unwrap() % 4 == 0);
+        let mut rows: Vec<i64> = c
+            .collect_rows(&out)
+            .unwrap()
+            .iter()
+            .map(|r| r.get(0).as_i64().unwrap())
+            .collect();
+        rows.sort_unstable();
+        assert_eq!(rows, (0..100).map(|i| i * 2).filter(|v| v % 4 == 0).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn flat_map_expands() {
+        let c = ctx();
+        let ds = nums(10, 2);
+        let out = ds.flat_map(ds.schema.clone(), |r| {
+            let v = r.get(0).as_i64().unwrap();
+            vec![row!(v), row!(v + 1000)]
+        });
+        assert_eq!(c.count(&out).unwrap(), 20);
+    }
+
+    #[test]
+    fn map_partitions_sees_whole_partition() {
+        let c = ctx();
+        let ds = nums(100, 4);
+        let out = ds.map_partitions(ds.schema.clone(), |rows| {
+            // emit one row with the partition size
+            vec![row!(rows.len() as i64)]
+        });
+        let sizes: i64 = c
+            .collect_rows(&out)
+            .unwrap()
+            .iter()
+            .map(|r| r.get(0).as_i64().unwrap())
+            .sum();
+        assert_eq!(sizes, 100);
+    }
+
+    #[test]
+    fn reduce_by_key_counts() {
+        let c = ctx();
+        let schema = Schema::new(vec![("k", FieldType::Str), ("n", FieldType::I64)]);
+        let rows = (0..90)
+            .map(|i| row!(format!("k{}", i % 3), 1i64))
+            .collect();
+        let ds = Dataset::from_rows("kv", schema.clone(), rows, 5);
+        let out = ds.reduce_by_key(
+            4,
+            |r| r.get(0).clone(),
+            |acc, r| row!(acc.get(0).as_str().unwrap(), acc.get(1).as_i64().unwrap() + r.get(1).as_i64().unwrap()),
+        );
+        let rows = c.collect_rows(&out).unwrap();
+        assert_eq!(rows.len(), 3);
+        for r in rows {
+            assert_eq!(r.get(1).as_i64(), Some(30));
+        }
+    }
+
+    #[test]
+    fn distinct_dedupes() {
+        let c = ctx();
+        let schema = Schema::new(vec![("x", FieldType::I64)]);
+        let rows = (0..100).map(|i| row!(i % 10)).collect();
+        let ds = Dataset::from_rows("dups", schema, rows, 4);
+        assert_eq!(c.count(&ds.distinct(3)).unwrap(), 10);
+    }
+
+    #[test]
+    fn inner_and_left_join() {
+        let c = ctx();
+        let ls = Schema::new(vec![("id", FieldType::I64), ("l", FieldType::Str)]);
+        let rs = Schema::new(vec![("id2", FieldType::I64), ("r", FieldType::Str)]);
+        let left = Dataset::from_rows(
+            "l",
+            ls,
+            vec![row!(1i64, "a"), row!(2i64, "b"), row!(3i64, "c")],
+            2,
+        );
+        let right = Dataset::from_rows("r", rs, vec![row!(1i64, "x"), row!(3i64, "y"), row!(3i64, "z")], 2);
+        let out_schema = Schema::of_names(&["id", "l", "id2", "r"]);
+        let inner = left.join(
+            &right,
+            out_schema.clone(),
+            JoinKind::Inner,
+            3,
+            |r| r.get(0).clone(),
+            |r| r.get(0).clone(),
+        );
+        let rows = c.collect_rows(&inner).unwrap();
+        assert_eq!(rows.len(), 3); // (1,x), (3,y), (3,z)
+
+        let leftj = left.join(
+            &right,
+            out_schema,
+            JoinKind::Left,
+            3,
+            |r| r.get(0).clone(),
+            |r| r.get(0).clone(),
+        );
+        let rows = c.collect_rows(&leftj).unwrap();
+        assert_eq!(rows.len(), 4); // + (2, null)
+        let nulls = rows.iter().filter(|r| r.get(2).is_null()).count();
+        assert_eq!(nulls, 1);
+    }
+
+    #[test]
+    fn union_and_sort() {
+        let c = ctx();
+        let a = nums(5, 2);
+        let b = nums(5, 2);
+        let u = a.union(&[b]);
+        assert_eq!(c.count(&u).unwrap(), 10);
+        let sorted = u.sort_by(|x, y| {
+            x.get(0).as_i64().unwrap().cmp(&y.get(0).as_i64().unwrap())
+        });
+        let rows = c.collect_rows(&sorted).unwrap();
+        let vals: Vec<i64> = rows.iter().map(|r| r.get(0).as_i64().unwrap()).collect();
+        assert_eq!(vals, vec![0, 0, 1, 1, 2, 2, 3, 3, 4, 4]);
+    }
+
+    #[test]
+    fn repartition_changes_layout_not_data() {
+        let c = ctx();
+        let ds = nums(50, 2);
+        let rp = ds.repartition(7);
+        let out = c.collect(&rp).unwrap();
+        assert_eq!(out.parts.len(), 7);
+        assert_eq!(out.num_rows(), 50);
+        let mut vals: Vec<i64> = out.rows().iter().map(|r| r.get(0).as_i64().unwrap()).collect();
+        vals.sort_unstable();
+        assert_eq!(vals, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn caching_avoids_recompute() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let c = ctx();
+        let ds = nums(10, 2);
+        let calls = Arc::new(AtomicU32::new(0));
+        let calls2 = calls.clone();
+        let mapped = ds.map(ds.schema.clone(), move |r| {
+            calls2.fetch_add(1, Ordering::SeqCst);
+            r.clone()
+        });
+        c.persist(&mapped);
+        let d1 = mapped.filter(|_| true);
+        let d2 = mapped.filter(|_| false);
+        c.count(&d1).unwrap();
+        c.count(&d2).unwrap();
+        assert_eq!(calls.load(Ordering::SeqCst), 10, "map ran once thanks to cache");
+        c.unpersist(&mapped);
+        c.count(&d1).unwrap();
+        assert_eq!(calls.load(Ordering::SeqCst), 20, "recomputed after unpersist");
+    }
+
+    #[test]
+    fn fused_and_materialized_agree() {
+        let mk = |fusion: bool| {
+            let c = EngineCtx::new(EngineConfig { workers: 2, fusion, ..Default::default() });
+            let ds = nums(200, 4);
+            let out = ds
+                .map(ds.schema.clone(), |r| row!(r.get(0).as_i64().unwrap() + 1))
+                .filter(|r| r.get(0).as_i64().unwrap() % 3 != 0)
+                .flat_map(ds.schema.clone(), |r| vec![r.clone(), r.clone()])
+                .map_partitions(ds.schema.clone(), |rows| {
+                    rows.into_iter().take(5).collect()
+                });
+            let mut v: Vec<i64> = c
+                .collect_rows(&out)
+                .unwrap()
+                .iter()
+                .map(|r| r.get(0).as_i64().unwrap())
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(mk(true), mk(false));
+    }
+
+    #[test]
+    fn fault_injection_retries_succeed() {
+        let cfg = EngineConfig { workers: 2, max_task_attempts: 4, ..Default::default() };
+        let c = EngineCtx::with_faults(cfg, FaultInjector::new(7, 0.5, 2));
+        let ds = nums(100, 8);
+        let out = ds.map(ds.schema.clone(), |r| r.clone());
+        assert_eq!(c.count(&out).unwrap(), 100);
+        assert!(c.stats.snapshot().tasks_retried > 0, "some retries should have happened");
+    }
+
+    #[test]
+    fn fault_injection_exhaustion_errors() {
+        let cfg = EngineConfig { workers: 2, max_task_attempts: 2, ..Default::default() };
+        // always fail first 5 attempts > max 2 attempts
+        let c = EngineCtx::with_faults(cfg, FaultInjector::new(7, 1.0, 5));
+        let ds = nums(10, 1);
+        let out = ds.map(ds.schema.clone(), |r| r.clone());
+        assert!(c.count(&out).is_err());
+    }
+
+    #[test]
+    fn trace_recorded_when_enabled() {
+        let c = EngineCtx::new(EngineConfig { workers: 2, record_trace: true, ..Default::default() });
+        let ds = nums(100, 4);
+        c.count(&ds.map(ds.schema.clone(), |r| r.clone())).unwrap();
+        let trace = c.take_trace();
+        assert_eq!(trace.len(), 4);
+        assert!(trace.iter().all(|t| t.duration_secs >= 0.0));
+    }
+
+    #[test]
+    fn shuffle_bytes_accounted() {
+        let c = ctx();
+        let ds = nums(100, 4);
+        c.count(&ds.distinct(4)).unwrap();
+        assert!(c.stats.snapshot().shuffle_bytes > 0);
+    }
+}

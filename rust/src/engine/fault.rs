@@ -1,0 +1,66 @@
+//! Failure injection for task-level fault-tolerance tests. The executor
+//! consults the injector before running each task attempt; injected
+//! failures exercise the retry / lineage-recompute path the way Spark's
+//! speculative re-execution would.
+
+use crate::util::rng::Rng64;
+use std::sync::Mutex;
+
+/// Injects probabilistic task failures, bounded per task attempt.
+pub struct FaultInjector {
+    rng: Mutex<Rng64>,
+    /// probability a given task attempt fails
+    pub fail_prob: f64,
+    /// never fail an attempt at or beyond this index (so tests terminate)
+    pub max_failed_attempts: u32,
+    injected: Mutex<u64>,
+}
+
+impl FaultInjector {
+    pub fn new(seed: u64, fail_prob: f64, max_failed_attempts: u32) -> Self {
+        FaultInjector {
+            rng: Mutex::new(Rng64::new(seed)),
+            fail_prob,
+            max_failed_attempts,
+            injected: Mutex::new(0),
+        }
+    }
+
+    /// Should this attempt fail?
+    pub fn should_fail(&self, attempt: u32) -> bool {
+        if attempt >= self.max_failed_attempts {
+            return false;
+        }
+        let fail = self.rng.lock().unwrap().gen_bool(self.fail_prob);
+        if fail {
+            *self.injected.lock().unwrap() += 1;
+        }
+        fail
+    }
+
+    pub fn injected_count(&self) -> u64 {
+        *self.injected.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn never_fails_at_cap() {
+        let f = FaultInjector::new(1, 1.0, 2);
+        assert!(f.should_fail(0));
+        assert!(f.should_fail(1));
+        assert!(!f.should_fail(2));
+        assert_eq!(f.injected_count(), 2);
+    }
+
+    #[test]
+    fn zero_prob_never_fails() {
+        let f = FaultInjector::new(1, 0.0, 10);
+        for a in 0..10 {
+            assert!(!f.should_fail(a));
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! "Sparklet" — the from-scratch distributed dataflow engine the DDP
+//! coordinator runs on (the repo's Apache Spark substitute).
+//!
+//! * [`row`] — rows, fields, schemas.
+//! * [`dataset`] — lazy, lineage-tracked datasets (RDD analogue).
+//! * [`executor`] — fused narrow stages, shuffling wide stages, task
+//!   retry, trace recording.
+//! * [`cache`] — explicit persist/unpersist with a byte budget.
+//! * [`fault`] — failure injection for recovery tests.
+//! * [`cluster`] — virtual-time cluster simulator for scale-out studies.
+//! * [`stats`] — execution counters.
+
+pub mod row;
+pub mod dataset;
+pub mod executor;
+pub mod cache;
+pub mod fault;
+pub mod cluster;
+pub mod stats;
+
+pub use dataset::{Dataset, JoinKind, Partitioned};
+pub use executor::{EngineConfig, EngineCtx, TaskRecord, TaskTrace};
+pub use row::{Field, FieldType, Row, Schema, SchemaRef};

@@ -1,0 +1,371 @@
+//! Row / field / schema model for the dataflow engine.
+//!
+//! A [`Row`] is a flat vector of [`Field`]s positioned by a shared
+//! [`Schema`] (names → indices), mirroring Spark's `Row` + `StructType`.
+//! Fields are hashable (f64 via bit pattern) so any field can be a shuffle
+//! or join key.
+
+use crate::util::error::{DdpError, Result};
+use std::collections::HashMap;
+use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::sync::Arc;
+
+/// A single cell value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Field {
+    Null,
+    Bool(bool),
+    I64(i64),
+    F64(f64),
+    Str(String),
+    Bytes(Vec<u8>),
+}
+
+impl Field {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Field::Null => "null",
+            Field::Bool(_) => "bool",
+            Field::I64(_) => "i64",
+            Field::F64(_) => "f64",
+            Field::Str(_) => "str",
+            Field::Bytes(_) => "bytes",
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Field::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Field::I64(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Field::F64(v) => Some(*v),
+            Field::I64(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Field::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_bytes(&self) -> Option<&[u8]> {
+        match self {
+            Field::Bytes(b) => Some(b),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Field::Null)
+    }
+
+    /// Approximate in-memory size in bytes (used by cache accounting and
+    /// the cluster simulator's shuffle-byte model).
+    pub fn approx_size(&self) -> usize {
+        match self {
+            Field::Null => 1,
+            Field::Bool(_) => 1,
+            Field::I64(_) | Field::F64(_) => 8,
+            Field::Str(s) => 24 + s.len(),
+            Field::Bytes(b) => 24 + b.len(),
+        }
+    }
+}
+
+impl Eq for Field {}
+
+impl Hash for Field {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        match self {
+            Field::Null => 0u8.hash(state),
+            Field::Bool(b) => {
+                1u8.hash(state);
+                b.hash(state);
+            }
+            Field::I64(v) => {
+                2u8.hash(state);
+                v.hash(state);
+            }
+            Field::F64(v) => {
+                3u8.hash(state);
+                v.to_bits().hash(state);
+            }
+            Field::Str(s) => {
+                4u8.hash(state);
+                s.hash(state);
+            }
+            Field::Bytes(b) => {
+                5u8.hash(state);
+                b.hash(state);
+            }
+        }
+    }
+}
+
+impl fmt::Display for Field {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Field::Null => write!(f, "null"),
+            Field::Bool(b) => write!(f, "{b}"),
+            Field::I64(v) => write!(f, "{v}"),
+            Field::F64(v) => write!(f, "{v}"),
+            Field::Str(s) => write!(f, "{s}"),
+            Field::Bytes(b) => write!(f, "<{} bytes>", b.len()),
+        }
+    }
+}
+
+impl From<&str> for Field {
+    fn from(s: &str) -> Self {
+        Field::Str(s.to_string())
+    }
+}
+impl From<String> for Field {
+    fn from(s: String) -> Self {
+        Field::Str(s)
+    }
+}
+impl From<i64> for Field {
+    fn from(v: i64) -> Self {
+        Field::I64(v)
+    }
+}
+impl From<f64> for Field {
+    fn from(v: f64) -> Self {
+        Field::F64(v)
+    }
+}
+impl From<bool> for Field {
+    fn from(v: bool) -> Self {
+        Field::Bool(v)
+    }
+}
+
+/// Column types for schema validation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FieldType {
+    Any,
+    Bool,
+    I64,
+    F64,
+    Str,
+    Bytes,
+}
+
+impl FieldType {
+    pub fn matches(&self, f: &Field) -> bool {
+        matches!(
+            (self, f),
+            (FieldType::Any, _)
+                | (_, Field::Null)
+                | (FieldType::Bool, Field::Bool(_))
+                | (FieldType::I64, Field::I64(_))
+                | (FieldType::F64, Field::F64(_))
+                | (FieldType::Str, Field::Str(_))
+                | (FieldType::Bytes, Field::Bytes(_))
+        )
+    }
+
+    pub fn parse(name: &str) -> Result<FieldType> {
+        Ok(match name {
+            "any" => FieldType::Any,
+            "bool" => FieldType::Bool,
+            "i64" | "int" | "long" => FieldType::I64,
+            "f64" | "float" | "double" => FieldType::F64,
+            "str" | "string" => FieldType::Str,
+            "bytes" | "binary" => FieldType::Bytes,
+            other => return Err(DdpError::schema(format!("unknown field type '{other}'"))),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FieldType::Any => "any",
+            FieldType::Bool => "bool",
+            FieldType::I64 => "i64",
+            FieldType::F64 => "f64",
+            FieldType::Str => "str",
+            FieldType::Bytes => "bytes",
+        }
+    }
+}
+
+/// Ordered, named, typed column list. Shared via `Arc`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Schema {
+    fields: Vec<(String, FieldType)>,
+    index: HashMap<String, usize>,
+}
+
+pub type SchemaRef = Arc<Schema>;
+
+impl Schema {
+    pub fn new(fields: Vec<(&str, FieldType)>) -> SchemaRef {
+        let fields: Vec<(String, FieldType)> =
+            fields.into_iter().map(|(n, t)| (n.to_string(), t)).collect();
+        let index = fields
+            .iter()
+            .enumerate()
+            .map(|(i, (n, _))| (n.clone(), i))
+            .collect();
+        Arc::new(Schema { fields, index })
+    }
+
+    pub fn of_names(names: &[&str]) -> SchemaRef {
+        Schema::new(names.iter().map(|n| (*n, FieldType::Any)).collect())
+    }
+
+    pub fn len(&self) -> usize {
+        self.fields.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fields.is_empty()
+    }
+
+    pub fn idx(&self, name: &str) -> Option<usize> {
+        self.index.get(name).copied()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.fields.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    pub fn field_type(&self, i: usize) -> FieldType {
+        self.fields[i].1
+    }
+
+    pub fn field(&self, i: usize) -> (&str, FieldType) {
+        (self.fields[i].0.as_str(), self.fields[i].1)
+    }
+
+    /// Check a row conforms (arity + types).
+    pub fn validate_row(&self, row: &Row) -> Result<()> {
+        if row.fields.len() != self.fields.len() {
+            return Err(DdpError::schema(format!(
+                "arity mismatch: row has {} fields, schema has {}",
+                row.fields.len(),
+                self.fields.len()
+            )));
+        }
+        for (i, f) in row.fields.iter().enumerate() {
+            if !self.fields[i].1.matches(f) {
+                return Err(DdpError::schema(format!(
+                    "field '{}' expected {}, got {}",
+                    self.fields[i].0,
+                    self.fields[i].1.name(),
+                    f.type_name()
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A data record: positional fields interpreted through a schema.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Row {
+    pub fields: Vec<Field>,
+}
+
+impl Row {
+    pub fn new(fields: Vec<Field>) -> Row {
+        Row { fields }
+    }
+
+    pub fn get(&self, i: usize) -> &Field {
+        &self.fields[i]
+    }
+
+    /// Field lookup by name through a schema.
+    pub fn col<'a>(&'a self, schema: &Schema, name: &str) -> Option<&'a Field> {
+        schema.idx(name).map(|i| &self.fields[i])
+    }
+
+    pub fn str_col(&self, schema: &Schema, name: &str) -> Option<&str> {
+        self.col(schema, name).and_then(|f| f.as_str())
+    }
+
+    pub fn i64_col(&self, schema: &Schema, name: &str) -> Option<i64> {
+        self.col(schema, name).and_then(|f| f.as_i64())
+    }
+
+    pub fn f64_col(&self, schema: &Schema, name: &str) -> Option<f64> {
+        self.col(schema, name).and_then(|f| f.as_f64())
+    }
+
+    pub fn approx_size(&self) -> usize {
+        16 + self.fields.iter().map(|f| f.approx_size()).sum::<usize>()
+    }
+}
+
+#[macro_export]
+macro_rules! row {
+    ($($v:expr),* $(,)?) => {
+        $crate::engine::row::Row::new(vec![$($crate::engine::row::Field::from($v)),*])
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schema_lookup() {
+        let s = Schema::new(vec![("id", FieldType::I64), ("text", FieldType::Str)]);
+        assert_eq!(s.idx("id"), Some(0));
+        assert_eq!(s.idx("text"), Some(1));
+        assert_eq!(s.idx("nope"), None);
+        assert_eq!(s.names(), vec!["id", "text"]);
+    }
+
+    #[test]
+    fn row_macro_and_access() {
+        let s = Schema::new(vec![("id", FieldType::I64), ("text", FieldType::Str)]);
+        let r = row!(7i64, "hello");
+        assert_eq!(r.i64_col(&s, "id"), Some(7));
+        assert_eq!(r.str_col(&s, "text"), Some("hello"));
+        s.validate_row(&r).unwrap();
+    }
+
+    #[test]
+    fn validation_catches_type_errors() {
+        let s = Schema::new(vec![("id", FieldType::I64)]);
+        assert!(s.validate_row(&row!("not an int")).is_err());
+        assert!(s.validate_row(&row!(1i64, 2i64)).is_err());
+        // nulls always pass
+        assert!(s.validate_row(&Row::new(vec![Field::Null])).is_ok());
+    }
+
+    #[test]
+    fn field_hash_f64_bits() {
+        use std::collections::HashSet;
+        let mut set = HashSet::new();
+        set.insert(Field::F64(1.0));
+        assert!(set.contains(&Field::F64(1.0)));
+        assert!(!set.contains(&Field::F64(2.0)));
+    }
+
+    #[test]
+    fn approx_sizes() {
+        assert_eq!(Field::I64(1).approx_size(), 8);
+        assert!(Field::Str("abc".into()).approx_size() > 3);
+        let r = row!(1i64, "abc");
+        assert!(r.approx_size() > 16);
+    }
+}

@@ -1,0 +1,103 @@
+//! Engine-internal execution statistics (atomics; cheap enough for the hot
+//! path). The metrics module exports these to the async publisher; the
+//! cluster simulator reads them to charge network/scheduling costs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counters for one engine context (one "application").
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    pub tasks_launched: AtomicU64,
+    pub tasks_retried: AtomicU64,
+    pub rows_read: AtomicU64,
+    pub rows_written: AtomicU64,
+    pub shuffle_bytes: AtomicU64,
+    pub shuffle_records: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+    pub cache_evictions: AtomicU64,
+    /// nanoseconds of task compute time, summed across tasks
+    pub task_nanos: AtomicU64,
+    pub stages_run: AtomicU64,
+}
+
+impl EngineStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&self, counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            tasks_launched: self.tasks_launched.load(Ordering::Relaxed),
+            tasks_retried: self.tasks_retried.load(Ordering::Relaxed),
+            rows_read: self.rows_read.load(Ordering::Relaxed),
+            rows_written: self.rows_written.load(Ordering::Relaxed),
+            shuffle_bytes: self.shuffle_bytes.load(Ordering::Relaxed),
+            shuffle_records: self.shuffle_records.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
+            task_nanos: self.task_nanos.load(Ordering::Relaxed),
+            stages_run: self.stages_run.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of [`EngineStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub tasks_launched: u64,
+    pub tasks_retried: u64,
+    pub rows_read: u64,
+    pub rows_written: u64,
+    pub shuffle_bytes: u64,
+    pub shuffle_records: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    pub task_nanos: u64,
+    pub stages_run: u64,
+}
+
+impl StatsSnapshot {
+    /// Difference since an earlier snapshot.
+    pub fn delta(&self, earlier: &StatsSnapshot) -> StatsSnapshot {
+        StatsSnapshot {
+            tasks_launched: self.tasks_launched - earlier.tasks_launched,
+            tasks_retried: self.tasks_retried - earlier.tasks_retried,
+            rows_read: self.rows_read - earlier.rows_read,
+            rows_written: self.rows_written - earlier.rows_written,
+            shuffle_bytes: self.shuffle_bytes - earlier.shuffle_bytes,
+            shuffle_records: self.shuffle_records - earlier.shuffle_records,
+            cache_hits: self.cache_hits - earlier.cache_hits,
+            cache_misses: self.cache_misses - earlier.cache_misses,
+            cache_evictions: self.cache_evictions - earlier.cache_evictions,
+            task_nanos: self.task_nanos - earlier.task_nanos,
+            stages_run: self.stages_run - earlier.stages_run,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_and_delta() {
+        let s = EngineStats::new();
+        s.add(&s.tasks_launched, 3);
+        s.add(&s.rows_read, 100);
+        let a = s.snapshot();
+        s.add(&s.rows_read, 50);
+        let b = s.snapshot();
+        let d = b.delta(&a);
+        assert_eq!(d.rows_read, 50);
+        assert_eq!(d.tasks_launched, 0);
+        assert_eq!(b.rows_read, 150);
+    }
+}

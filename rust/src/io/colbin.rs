@@ -1,0 +1,335 @@
+//! "colbin" — a compact binary columnar format (the repo's Parquet
+//! stand-in): per-column encoding with null bitmaps, deflate-compressed,
+//! with a self-describing schema header and CRC-checked payload.
+//!
+//! Layout:
+//! ```text
+//! magic "DDPC" | version u8 | ncols u16 | nrows u64
+//! per column: name (u16 len + utf8) | type tag u8
+//! compressed block: per column -> null bitmap | packed values
+//! trailing crc32 of the compressed block
+//! ```
+
+use crate::engine::row::{Field, FieldType, Row, Schema, SchemaRef};
+use crate::util::error::{DdpError, Result};
+use flate2::read::ZlibDecoder;
+use flate2::write::ZlibEncoder;
+use flate2::Compression;
+use std::io::{Read, Write};
+
+const MAGIC: &[u8; 4] = b"DDPC";
+const VERSION: u8 = 1;
+
+fn type_tag(t: FieldType) -> u8 {
+    match t {
+        FieldType::Any => 0,
+        FieldType::Bool => 1,
+        FieldType::I64 => 2,
+        FieldType::F64 => 3,
+        FieldType::Str => 4,
+        FieldType::Bytes => 5,
+    }
+}
+
+fn tag_type(tag: u8) -> Result<FieldType> {
+    Ok(match tag {
+        0 => FieldType::Any,
+        1 => FieldType::Bool,
+        2 => FieldType::I64,
+        3 => FieldType::F64,
+        4 => FieldType::Str,
+        5 => FieldType::Bytes,
+        t => return Err(DdpError::format("colbin", format!("bad type tag {t}"))),
+    })
+}
+
+/// Encode rows column-major and compress.
+pub fn encode(schema: &Schema, rows: &[Row]) -> Result<Vec<u8>> {
+    let mut head = Vec::new();
+    head.extend_from_slice(MAGIC);
+    head.push(VERSION);
+    head.extend_from_slice(&(schema.len() as u16).to_le_bytes());
+    head.extend_from_slice(&(rows.len() as u64).to_le_bytes());
+    for i in 0..schema.len() {
+        let (name, ty) = schema.field(i);
+        head.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        head.extend_from_slice(name.as_bytes());
+        head.push(type_tag(ty));
+    }
+
+    // column-major payload
+    let mut payload = Vec::new();
+    for col in 0..schema.len() {
+        // null bitmap
+        let mut bitmap = vec![0u8; rows.len().div_ceil(8)];
+        for (r, row) in rows.iter().enumerate() {
+            if !row.get(col).is_null() {
+                bitmap[r / 8] |= 1 << (r % 8);
+            }
+        }
+        payload.extend_from_slice(&bitmap);
+        for row in rows {
+            match row.get(col) {
+                Field::Null => {}
+                Field::Bool(b) => payload.push(*b as u8),
+                Field::I64(v) => payload.extend_from_slice(&v.to_le_bytes()),
+                Field::F64(v) => payload.extend_from_slice(&v.to_le_bytes()),
+                Field::Str(s) => {
+                    payload.extend_from_slice(&(s.len() as u32).to_le_bytes());
+                    payload.extend_from_slice(s.as_bytes());
+                }
+                Field::Bytes(b) => {
+                    payload.extend_from_slice(&(b.len() as u32).to_le_bytes());
+                    payload.extend_from_slice(b);
+                }
+            }
+        }
+    }
+
+    let mut enc = ZlibEncoder::new(Vec::new(), Compression::fast());
+    enc.write_all(&payload)?;
+    let compressed = enc
+        .finish()
+        .map_err(|e| DdpError::format("colbin", format!("compress: {e}")))?;
+
+    let mut out = head;
+    out.extend_from_slice(&(compressed.len() as u64).to_le_bytes());
+    let crc = crc32(&compressed);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out.extend_from_slice(&compressed);
+    Ok(out)
+}
+
+/// Decode a colbin blob. The declared schema must match the embedded one.
+pub fn decode(schema: &SchemaRef, bytes: &[u8]) -> Result<Vec<Row>> {
+    let mut cur = Cursor { b: bytes, p: 0 };
+    if cur.take(4)? != MAGIC {
+        return Err(DdpError::format("colbin", "bad magic"));
+    }
+    if cur.u8()? != VERSION {
+        return Err(DdpError::format("colbin", "unsupported version"));
+    }
+    let ncols = cur.u16()? as usize;
+    let nrows = cur.u64()? as usize;
+    if ncols != schema.len() {
+        return Err(DdpError::format(
+            "colbin",
+            format!("file has {ncols} cols, schema has {}", schema.len()),
+        ));
+    }
+    let mut types = Vec::with_capacity(ncols);
+    for i in 0..ncols {
+        let nlen = cur.u16()? as usize;
+        let name = std::str::from_utf8(cur.take(nlen)?)
+            .map_err(|_| DdpError::format("colbin", "bad column name"))?;
+        let (want_name, want_ty) = schema.field(i);
+        if name != want_name {
+            return Err(DdpError::format(
+                "colbin",
+                format!("column {i} named '{name}', schema says '{want_name}'"),
+            ));
+        }
+        let ty = tag_type(cur.u8()?)?;
+        if ty != want_ty {
+            return Err(DdpError::format(
+                "colbin",
+                format!("column '{name}' type {} != schema {}", ty.name(), want_ty.name()),
+            ));
+        }
+        types.push(ty);
+    }
+    let clen = cur.u64()? as usize;
+    let crc_expect = cur.u32()?;
+    let compressed = cur.take(clen)?;
+    if crc32(compressed) != crc_expect {
+        return Err(DdpError::format("colbin", "crc mismatch (corrupt payload)"));
+    }
+    let mut payload = Vec::new();
+    ZlibDecoder::new(compressed)
+        .read_to_end(&mut payload)
+        .map_err(|e| DdpError::format("colbin", format!("decompress: {e}")))?;
+
+    let mut cur = Cursor { b: &payload, p: 0 };
+    let mut cols: Vec<Vec<Field>> = Vec::with_capacity(ncols);
+    for &ty in &types {
+        let bitmap = cur.take(nrows.div_ceil(8))?.to_vec();
+        let mut col = Vec::with_capacity(nrows);
+        for r in 0..nrows {
+            let present = bitmap[r / 8] & (1 << (r % 8)) != 0;
+            if !present {
+                col.push(Field::Null);
+                continue;
+            }
+            col.push(match ty {
+                FieldType::Bool => Field::Bool(cur.u8()? != 0),
+                FieldType::I64 => Field::I64(i64::from_le_bytes(cur.arr8()?)),
+                FieldType::F64 => Field::F64(f64::from_le_bytes(cur.arr8()?)),
+                FieldType::Str | FieldType::Any => {
+                    let len = cur.u32()? as usize;
+                    Field::Str(
+                        std::str::from_utf8(cur.take(len)?)
+                            .map_err(|_| DdpError::format("colbin", "bad utf8"))?
+                            .to_string(),
+                    )
+                }
+                FieldType::Bytes => {
+                    let len = cur.u32()? as usize;
+                    Field::Bytes(cur.take(len)?.to_vec())
+                }
+            });
+        }
+        cols.push(col);
+    }
+    // transpose to rows
+    let mut rows = Vec::with_capacity(nrows);
+    for r in 0..nrows {
+        rows.push(Row::new(cols.iter_mut().map(|c| std::mem::replace(&mut c[r], Field::Null)).collect()));
+    }
+    Ok(rows)
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.p + n > self.b.len() {
+            return Err(DdpError::format("colbin", "truncated"));
+        }
+        let s = &self.b[self.p..self.p + n];
+        self.p += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn arr8(&mut self) -> Result<[u8; 8]> {
+        Ok(self.take(8)?.try_into().unwrap())
+    }
+}
+
+/// CRC-32 (IEEE), table-less bitwise variant; payload sizes here are small
+/// enough that simplicity beats a lookup table.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::row;
+    use crate::util::testkit::property;
+
+    fn schema() -> SchemaRef {
+        Schema::new(vec![
+            ("id", FieldType::I64),
+            ("text", FieldType::Str),
+            ("score", FieldType::F64),
+            ("ok", FieldType::Bool),
+            ("blob", FieldType::Bytes),
+        ])
+    }
+
+    #[test]
+    fn roundtrip_with_nulls() {
+        let s = schema();
+        let rows = vec![
+            Row::new(vec![
+                Field::I64(1),
+                Field::Str("héllo".into()),
+                Field::F64(0.25),
+                Field::Bool(true),
+                Field::Bytes(vec![1, 2, 3]),
+            ]),
+            Row::new(vec![
+                Field::Null,
+                Field::Null,
+                Field::Null,
+                Field::Null,
+                Field::Null,
+            ]),
+        ];
+        let blob = encode(&s, &rows).unwrap();
+        assert_eq!(decode(&s, &blob).unwrap(), rows);
+    }
+
+    #[test]
+    fn corrupt_payload_detected() {
+        let s = schema();
+        let rows = vec![row!(1i64, "x", 1.0, true, Field::Bytes(vec![9]))];
+        let mut blob = encode(&s, &rows).unwrap();
+        let n = blob.len();
+        blob[n - 1] ^= 0xFF;
+        let err = decode(&s, &blob).unwrap_err().to_string();
+        assert!(err.contains("crc") || err.contains("decompress"), "{err}");
+    }
+
+    #[test]
+    fn schema_mismatch_detected() {
+        let s = schema();
+        let rows = vec![row!(1i64, "x", 1.0, true, Field::Bytes(vec![]))];
+        let blob = encode(&s, &rows).unwrap();
+        let other = Schema::new(vec![("id", FieldType::I64)]);
+        assert!(decode(&other, &blob).is_err());
+        let renamed = Schema::new(vec![
+            ("idx", FieldType::I64),
+            ("text", FieldType::Str),
+            ("score", FieldType::F64),
+            ("ok", FieldType::Bool),
+            ("blob", FieldType::Bytes),
+        ]);
+        assert!(decode(&renamed, &blob).is_err());
+    }
+
+    #[test]
+    fn crc32_known_value() {
+        // standard test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+    }
+
+    #[test]
+    fn compresses_repetitive_data() {
+        let s = Schema::new(vec![("t", FieldType::Str)]);
+        let rows: Vec<Row> = (0..1000).map(|_| row!("the same line of text")).collect();
+        let blob = encode(&s, &rows).unwrap();
+        let raw: usize = rows.iter().map(|r| r.approx_size()).sum();
+        assert!(blob.len() < raw / 5, "blob {} vs raw {}", blob.len(), raw);
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        let s = Schema::new(vec![("a", FieldType::I64), ("b", FieldType::Str)]);
+        property(60, |g| {
+            let rows: Vec<Row> = (0..g.usize(20))
+                .map(|_| {
+                    if g.bool() {
+                        Row::new(vec![Field::Null, Field::Str(g.string(0, 30))])
+                    } else {
+                        row!(g.i64(-1000, 1000), g.string(0, 30))
+                    }
+                })
+                .collect();
+            let blob = encode(&s, &rows).unwrap();
+            assert_eq!(decode(&s, &blob).unwrap(), rows);
+        });
+    }
+}

@@ -1,0 +1,170 @@
+//! JSON-Lines codec: one JSON object per line, keyed by schema column
+//! names. The web-document corpus and metrics sink use this format.
+
+use crate::engine::row::{Field, FieldType, Row, Schema, SchemaRef};
+use crate::json::{self, Value};
+use crate::util::error::{DdpError, Result};
+
+/// Serialize rows to JSONL.
+pub fn encode(schema: &Schema, rows: &[Row]) -> String {
+    let mut out = String::new();
+    for row in rows {
+        let mut obj = std::collections::BTreeMap::new();
+        for (i, f) in row.fields.iter().enumerate() {
+            let (name, _) = schema.field(i);
+            obj.insert(name.to_string(), field_to_value(f));
+        }
+        out.push_str(&json::to_string(&Value::Obj(obj)));
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse JSONL into rows; missing keys become nulls, extra keys error.
+pub fn decode(schema: &SchemaRef, text: &str) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for (no, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = json::parse(line)
+            .map_err(|e| DdpError::format("jsonl", format!("line {}: {e}", no + 1)))?;
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| DdpError::format("jsonl", format!("line {} is not an object", no + 1)))?;
+        for key in obj.keys() {
+            if schema.idx(key).is_none() {
+                return Err(DdpError::format(
+                    "jsonl",
+                    format!("line {}: unknown key '{key}'", no + 1),
+                ));
+            }
+        }
+        let mut fields = Vec::with_capacity(schema.len());
+        for i in 0..schema.len() {
+            let (name, ty) = schema.field(i);
+            let f = match obj.get(name) {
+                None | Some(Value::Null) => Field::Null,
+                Some(v) => value_to_field(v, ty).map_err(|e| {
+                    DdpError::format("jsonl", format!("line {} field '{name}': {e}", no + 1))
+                })?,
+            };
+            fields.push(f);
+        }
+        rows.push(Row::new(fields));
+    }
+    Ok(rows)
+}
+
+pub fn field_to_value(f: &Field) -> Value {
+    match f {
+        Field::Null => Value::Null,
+        Field::Bool(b) => Value::Bool(*b),
+        Field::I64(v) => Value::Num(*v as f64),
+        Field::F64(v) => Value::Num(*v),
+        Field::Str(s) => Value::Str(s.clone()),
+        Field::Bytes(b) => Value::Str(base16(b)),
+    }
+}
+
+pub fn value_to_field(v: &Value, ty: FieldType) -> Result<Field> {
+    Ok(match (ty, v) {
+        (_, Value::Null) => Field::Null,
+        (FieldType::Bool, Value::Bool(b)) => Field::Bool(*b),
+        (FieldType::I64, Value::Num(n)) if n.fract() == 0.0 => Field::I64(*n as i64),
+        (FieldType::F64, Value::Num(n)) => Field::F64(*n),
+        (FieldType::Str, Value::Str(s)) => Field::Str(s.clone()),
+        (FieldType::Bytes, Value::Str(s)) => Field::Bytes(unbase16(s)?),
+        (FieldType::Any, v) => match v {
+            Value::Bool(b) => Field::Bool(*b),
+            Value::Num(n) if n.fract() == 0.0 => Field::I64(*n as i64),
+            Value::Num(n) => Field::F64(*n),
+            Value::Str(s) => Field::Str(s.clone()),
+            _ => return Err(DdpError::format("jsonl", "unsupported value for 'any'")),
+        },
+        (ty, v) => {
+            return Err(DdpError::format(
+                "jsonl",
+                format!("cannot decode {v:?} as {}", ty.name()),
+            ))
+        }
+    })
+}
+
+fn base16(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+fn unbase16(s: &str) -> Result<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return Err(DdpError::format("jsonl", "odd hex length"));
+    }
+    (0..s.len())
+        .step_by(2)
+        .map(|i| {
+            u8::from_str_radix(&s[i..i + 2], 16).map_err(|_| DdpError::format("jsonl", "bad hex"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::row;
+
+    fn schema() -> SchemaRef {
+        Schema::new(vec![
+            ("id", FieldType::I64),
+            ("text", FieldType::Str),
+            ("score", FieldType::F64),
+        ])
+    }
+
+    #[test]
+    fn roundtrip() {
+        let s = schema();
+        let rows = vec![
+            row!(1i64, "héllo \"w\"", 0.5),
+            Row::new(vec![Field::I64(2), Field::Null, Field::F64(1.0)]),
+        ];
+        let text = encode(&s, &rows);
+        assert_eq!(text.lines().count(), 2);
+        assert_eq!(decode(&s, &text).unwrap(), rows);
+    }
+
+    #[test]
+    fn missing_keys_are_null() {
+        let s = schema();
+        let rows = decode(&s, r#"{"id": 5}"#).unwrap();
+        assert_eq!(rows[0].get(0).as_i64(), Some(5));
+        assert!(rows[0].get(1).is_null());
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let s = schema();
+        assert!(decode(&s, r#"{"nope": 1}"#).is_err());
+    }
+
+    #[test]
+    fn type_mismatch_rejected() {
+        let s = schema();
+        assert!(decode(&s, r#"{"id": "str"}"#).is_err());
+        assert!(decode(&s, r#"{"id": 1.5}"#).is_err());
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let s = Schema::new(vec![("b", FieldType::Bytes)]);
+        let rows = vec![Row::new(vec![Field::Bytes(vec![0, 255, 16])])];
+        assert_eq!(decode(&s, &encode(&s, &rows)).unwrap(), rows);
+    }
+
+    #[test]
+    fn blank_lines_skipped() {
+        let s = schema();
+        let rows = decode(&s, "\n{\"id\": 1}\n\n{\"id\": 2}\n").unwrap();
+        assert_eq!(rows.len(), 2);
+    }
+}

@@ -1,0 +1,343 @@
+//! Storage backends behind one interface — the paper's §3.3.1 Data I/O
+//! abstraction ("distributed file systems, local storage, and NoSQL
+//! databases"). Pipes never touch a backend directly; `DataDeclare`
+//! locations select one declaratively (`file://`, `mem://`, `s3://`,
+//! `kv://`).
+
+use crate::util::error::{DdpError, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Byte-blob storage interface.
+pub trait Storage: Send + Sync {
+    fn name(&self) -> &str;
+    fn read(&self, path: &str) -> Result<Vec<u8>>;
+    fn write(&self, path: &str, bytes: &[u8]) -> Result<()>;
+    fn exists(&self, path: &str) -> bool;
+    fn delete(&self, path: &str) -> Result<()>;
+    fn list(&self, prefix: &str) -> Result<Vec<String>>;
+}
+
+pub type StorageRef = Arc<dyn Storage>;
+
+// ---------------------------------------------------------------------
+
+/// Local filesystem rooted at a directory.
+pub struct LocalFs {
+    root: PathBuf,
+}
+
+impl LocalFs {
+    pub fn new(root: impl Into<PathBuf>) -> Self {
+        LocalFs { root: root.into() }
+    }
+
+    fn full(&self, path: &str) -> PathBuf {
+        self.root.join(path.trim_start_matches('/'))
+    }
+}
+
+impl Storage for LocalFs {
+    fn name(&self) -> &str {
+        "localfs"
+    }
+
+    fn read(&self, path: &str) -> Result<Vec<u8>> {
+        std::fs::read(self.full(path))
+            .map_err(|e| DdpError::storage("localfs", format!("read {path}: {e}")))
+    }
+
+    fn write(&self, path: &str, bytes: &[u8]) -> Result<()> {
+        let full = self.full(path);
+        if let Some(parent) = full.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(full, bytes)
+            .map_err(|e| DdpError::storage("localfs", format!("write {path}: {e}")))
+    }
+
+    fn exists(&self, path: &str) -> bool {
+        self.full(path).exists()
+    }
+
+    fn delete(&self, path: &str) -> Result<()> {
+        let full = self.full(path);
+        if full.exists() {
+            std::fs::remove_file(full)?;
+        }
+        Ok(())
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        let dir = self.full(prefix);
+        let mut out = Vec::new();
+        if dir.is_dir() {
+            for entry in std::fs::read_dir(&dir)? {
+                let entry = entry?;
+                if entry.path().is_file() {
+                    out.push(format!(
+                        "{}/{}",
+                        prefix.trim_end_matches('/'),
+                        entry.file_name().to_string_lossy()
+                    ));
+                }
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------
+
+/// In-memory store (tests and `mem://` anchors).
+#[derive(Default)]
+pub struct MemStore {
+    blobs: Mutex<HashMap<String, Vec<u8>>>,
+}
+
+impl MemStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Storage for MemStore {
+    fn name(&self) -> &str {
+        "mem"
+    }
+
+    fn read(&self, path: &str) -> Result<Vec<u8>> {
+        self.blobs
+            .lock()
+            .unwrap()
+            .get(path)
+            .cloned()
+            .ok_or_else(|| DdpError::storage("mem", format!("not found: {path}")))
+    }
+
+    fn write(&self, path: &str, bytes: &[u8]) -> Result<()> {
+        self.blobs
+            .lock()
+            .unwrap()
+            .insert(path.to_string(), bytes.to_vec());
+        Ok(())
+    }
+
+    fn exists(&self, path: &str) -> bool {
+        self.blobs.lock().unwrap().contains_key(path)
+    }
+
+    fn delete(&self, path: &str) -> Result<()> {
+        self.blobs.lock().unwrap().remove(path);
+        Ok(())
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        let mut v: Vec<String> = self
+            .blobs
+            .lock()
+            .unwrap()
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect();
+        v.sort();
+        Ok(v)
+    }
+}
+
+// ---------------------------------------------------------------------
+
+/// Simulated S3: an inner store plus a first-byte-latency / bandwidth cost
+/// model. Costs are *accounted* (for the cluster simulator and metrics)
+/// rather than slept, so wall-clock tests stay fast.
+pub struct SimS3 {
+    inner: StorageRef,
+    /// per-request latency (S3 GET ≈ 20–60 ms first byte)
+    pub request_latency_secs: f64,
+    /// sustained bandwidth in bytes/sec
+    pub bandwidth_bps: f64,
+    accounted_nanos: AtomicU64,
+    requests: AtomicU64,
+}
+
+impl SimS3 {
+    pub fn new(inner: StorageRef) -> Self {
+        SimS3 {
+            inner,
+            request_latency_secs: 0.030,
+            bandwidth_bps: 100.0e6,
+            accounted_nanos: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+        }
+    }
+
+    fn charge(&self, bytes: usize) {
+        let secs = self.request_latency_secs + bytes as f64 / self.bandwidth_bps;
+        self.accounted_nanos
+            .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total simulated I/O time charged so far.
+    pub fn accounted_secs(&self) -> f64 {
+        self.accounted_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn request_count(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+}
+
+impl Storage for SimS3 {
+    fn name(&self) -> &str {
+        "sim-s3"
+    }
+
+    fn read(&self, path: &str) -> Result<Vec<u8>> {
+        let out = self.inner.read(path)?;
+        self.charge(out.len());
+        Ok(out)
+    }
+
+    fn write(&self, path: &str, bytes: &[u8]) -> Result<()> {
+        self.charge(bytes.len());
+        self.inner.write(path, bytes)
+    }
+
+    fn exists(&self, path: &str) -> bool {
+        self.inner.exists(path)
+    }
+
+    fn delete(&self, path: &str) -> Result<()> {
+        self.charge(0);
+        self.inner.delete(path)
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        self.charge(0);
+        self.inner.list(prefix)
+    }
+}
+
+// ---------------------------------------------------------------------
+
+/// Simulated NoSQL KV store: record-oriented API on top of blob storage
+/// (`kv://table/key`), with per-item size limits like DynamoDB.
+pub struct SimKv {
+    items: Mutex<HashMap<String, Vec<u8>>>,
+    pub max_item_bytes: usize,
+}
+
+impl Default for SimKv {
+    fn default() -> Self {
+        SimKv { items: Mutex::new(HashMap::new()), max_item_bytes: 400 << 10 }
+    }
+}
+
+impl SimKv {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Storage for SimKv {
+    fn name(&self) -> &str {
+        "sim-kv"
+    }
+
+    fn read(&self, path: &str) -> Result<Vec<u8>> {
+        self.items
+            .lock()
+            .unwrap()
+            .get(path)
+            .cloned()
+            .ok_or_else(|| DdpError::storage("sim-kv", format!("no item: {path}")))
+    }
+
+    fn write(&self, path: &str, bytes: &[u8]) -> Result<()> {
+        if bytes.len() > self.max_item_bytes {
+            return Err(DdpError::storage(
+                "sim-kv",
+                format!("item {path} is {} bytes > max {}", bytes.len(), self.max_item_bytes),
+            ));
+        }
+        self.items
+            .lock()
+            .unwrap()
+            .insert(path.to_string(), bytes.to_vec());
+        Ok(())
+    }
+
+    fn exists(&self, path: &str) -> bool {
+        self.items.lock().unwrap().contains_key(path)
+    }
+
+    fn delete(&self, path: &str) -> Result<()> {
+        self.items.lock().unwrap().remove(path);
+        Ok(())
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        let mut v: Vec<String> = self
+            .items
+            .lock()
+            .unwrap()
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect();
+        v.sort();
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(s: &dyn Storage) {
+        s.write("a/b.txt", b"hello").unwrap();
+        assert!(s.exists("a/b.txt"));
+        assert_eq!(s.read("a/b.txt").unwrap(), b"hello");
+        s.write("a/c.txt", b"x").unwrap();
+        let listed = s.list("a").unwrap();
+        assert_eq!(listed.len(), 2);
+        s.delete("a/b.txt").unwrap();
+        assert!(!s.exists("a/b.txt"));
+        assert!(s.read("a/b.txt").is_err());
+    }
+
+    #[test]
+    fn mem_roundtrip() {
+        roundtrip(&MemStore::new());
+    }
+
+    #[test]
+    fn localfs_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ddp-test-{}", std::process::id()));
+        roundtrip(&LocalFs::new(&dir));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn sims3_charges_costs() {
+        let s3 = SimS3::new(Arc::new(MemStore::new()));
+        s3.write("k", &vec![0u8; 1_000_000]).unwrap();
+        let _ = s3.read("k").unwrap();
+        assert_eq!(s3.request_count(), 2);
+        // 2 requests * 30ms + 2MB / 100MB/s = 0.06 + 0.02
+        assert!((s3.accounted_secs() - 0.08).abs() < 0.001);
+    }
+
+    #[test]
+    fn simkv_item_limit() {
+        let kv = SimKv::new();
+        assert!(kv.write("t/k", &vec![0u8; 500 << 10]).is_err());
+        kv.write("t/k", b"small").unwrap();
+        assert_eq!(kv.read("t/k").unwrap(), b"small");
+    }
+}

@@ -1,0 +1,35 @@
+//! # DDP — Declarative Data Pipeline
+//!
+//! A production-grade reproduction of *"Declarative Data Pipeline for Large
+//! Scale ML Services"* (MLSys 2025) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **Layer 3 (this crate)** — the DDP coordinator: declarative pipeline
+//!   configs, the data-anchor / pipe abstraction, data-driven DAG execution,
+//!   explicit state management, metrics, visualization — plus the entire
+//!   substrate the paper runs on (a Spark-like distributed dataflow engine,
+//!   data I/O, encryption, a simulated cluster for scale-out studies).
+//! * **Layer 2 (python/compile/model.py)** — JAX compute graphs (language
+//!   detection classifier, embedder, tiny LLM) lowered AOT to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot spots (blocked classifier matmul, pairwise similarity), verified
+//!   against pure-jnp oracles.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the models
+//! once; the Rust binary loads `artifacts/*.hlo.txt` through PJRT
+//! ([`runtime`]) and serves everything else natively.
+
+pub mod util;
+pub mod json;
+pub mod config;
+pub mod engine;
+pub mod io;
+pub mod security;
+pub mod metrics;
+pub mod ddp;
+pub mod pipes;
+pub mod ml;
+pub mod runtime;
+pub mod baselines;
+pub mod corpus;
+pub mod bench;

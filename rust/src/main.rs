@@ -1,0 +1,212 @@
+//! `ddp` — the Declarative Data Pipeline launcher.
+//!
+//! ```text
+//! ddp run        --config pipeline.json [--input id=loc:format ...] [--workers N]
+//! ddp validate   --config pipeline.json
+//! ddp visualize  --config pipeline.json [--out graph.dot]
+//! ddp pipes                             # list the pipe repository (§3.8)
+//! ddp corpus     --docs N --out /tmp/docs.jsonl [--dup-rate R]
+//! ```
+
+use ddp::config::PipelineSpec;
+use ddp::ddp::{registry, DataDag, DriverConfig, PipelineDriver};
+use ddp::engine::EngineConfig;
+use ddp::io::{Format, IoRegistry};
+use ddp::util::cli::Args;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+fn main() {
+    ddp::util::logger::init();
+    let args = Args::from_env();
+    let code = match args.positional.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("visualize") => cmd_visualize(&args),
+        Some("pipes") => cmd_pipes(),
+        Some("corpus") => cmd_corpus(&args),
+        _ => {
+            eprintln!(
+                "usage: ddp <run|validate|visualize|pipes|corpus> [--config FILE] [options]\n\
+                 see README.md for details"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn load_spec(args: &Args) -> Result<PipelineSpec, String> {
+    let path = args.opt("config").ok_or("missing --config")?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    PipelineSpec::parse(&text).map_err(|e| e.to_string())
+}
+
+fn cmd_validate(args: &Args) -> i32 {
+    match load_spec(args).and_then(|spec| {
+        DataDag::build(&spec).map_err(|e| e.to_string())?;
+        for pipe in &spec.pipes {
+            if !registry::GLOBAL.contains(&pipe.transformer_type) {
+                return Err(format!(
+                    "pipe '{}' uses unknown transformerType '{}'",
+                    pipe.name, pipe.transformer_type
+                ));
+            }
+        }
+        Ok(spec)
+    }) {
+        Ok(spec) => {
+            println!(
+                "OK: '{}' — {} pipes, {} anchors, sources={:?}, sinks={:?}",
+                spec.name,
+                spec.pipes.len(),
+                spec.data.len(),
+                spec.source_ids(),
+                spec.sink_ids()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("INVALID: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_visualize(args: &Args) -> i32 {
+    match load_spec(args) {
+        Ok(spec) => match DataDag::build(&spec) {
+            Ok(dag) => {
+                let dot = ddp::ddp::viz::to_dot(&spec, &dag, &Default::default());
+                match args.opt("out") {
+                    Some(path) => {
+                        if let Err(e) = std::fs::write(path, &dot) {
+                            eprintln!("write {path}: {e}");
+                            return 1;
+                        }
+                        println!("wrote {path}");
+                    }
+                    None => println!("{dot}"),
+                }
+                0
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                1
+            }
+        },
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
+}
+
+fn cmd_pipes() -> i32 {
+    println!("registered transformer types ({}):", registry::GLOBAL.type_names().len());
+    for name in registry::GLOBAL.type_names() {
+        println!("  {name}");
+    }
+    0
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let spec = match load_spec(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let workers = args.opt_usize("workers", spec.settings.workers);
+    let io = Arc::new(IoRegistry::with_sim_cloud());
+
+    // load --input id=path:format anchors from real files
+    let mut provided = BTreeMap::new();
+    for (k, v) in &args.options {
+        if k != "input" {
+            continue;
+        }
+        let Some((id, rest)) = v.split_once('=') else {
+            eprintln!("--input must be id=path:format");
+            return 1;
+        };
+        let (path, fmt) = rest.rsplit_once(':').unwrap_or((rest, "jsonl"));
+        let Some(decl) = spec.data.get(id) else {
+            eprintln!("unknown data id '{id}'");
+            return 1;
+        };
+        let format = match Format::parse(fmt) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        };
+        let loc = if path.contains("://") { path.to_string() } else { format!("file://{path}") };
+        match io.read_rows(&loc, format, &decl.schema, decl.encryption, id) {
+            Ok(rows) => {
+                provided.insert(
+                    id.to_string(),
+                    ddp::engine::Dataset::from_rows(id, decl.schema.clone(), rows, decl.partitions),
+                );
+            }
+            Err(e) => {
+                eprintln!("load {loc}: {e}");
+                return 1;
+            }
+        }
+    }
+
+    let driver = match PipelineDriver::new(
+        spec,
+        registry::GLOBAL.clone(),
+        io,
+        DriverConfig { engine: EngineConfig { workers, ..Default::default() }, ..Default::default() },
+    ) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    match driver.run(provided) {
+        Ok(report) => {
+            println!("pipeline '{}' completed in {:.3}s", report.pipeline, report.total_secs);
+            for p in &report.pipes {
+                println!("  {:<34} {:>9.1}ms", p.name, p.duration_secs * 1e3);
+            }
+            if let Some(out) = args.opt("dot") {
+                let _ = std::fs::write(out, &report.dot);
+                println!("workflow DOT: {out}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("pipeline failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_corpus(args: &Args) -> i32 {
+    use ddp::corpus::web::{CorpusGen, LangProfiles};
+    let n = args.opt_usize("docs", 10_000);
+    let out = args.opt_or("out", "/tmp/ddp_corpus.jsonl");
+    let profiles = match LangProfiles::load_default() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let gen = CorpusGen { dup_rate: args.opt_f64("dup-rate", 0.15), ..Default::default() };
+    let (schema, rows) = gen.generate_rows(&profiles, n);
+    let text = ddp::io::jsonl::encode(&schema, &rows);
+    if let Err(e) = std::fs::write(&out, text) {
+        eprintln!("write {out}: {e}");
+        return 1;
+    }
+    println!("wrote {n} docs to {out}");
+    0
+}

@@ -1,0 +1,10 @@
+//! Metrics & monitoring (paper §3.3.4): pipes record counters/gauges/
+//! histograms into a shared registry; an asynchronous publisher thread
+//! snapshots and ships them to a sink at a configurable cadence (30 s by
+//! default, matching the paper) without any involvement from pipe code.
+
+pub mod registry;
+pub mod publisher;
+
+pub use publisher::{LogSink, MemorySink, MetricsPublisher, PublisherConfig, Sink, StorageSink};
+pub use registry::{HistogramSummary, MetricsRegistry, MetricsSnapshot};

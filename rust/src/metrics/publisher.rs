@@ -1,0 +1,208 @@
+//! Asynchronous metrics publisher: a background thread snapshots the
+//! registry every `cadence` (paper default: 30 s) and ships it to a sink
+//! (CloudWatch stand-ins: JSONL blob in storage, log lines, or memory).
+
+use super::registry::{MetricsRegistry, MetricsSnapshot};
+use crate::io::StorageRef;
+use crate::util::clock::ClockRef;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+/// Destination for published snapshots.
+pub trait Sink: Send + Sync {
+    fn publish(&self, snapshot: &MetricsSnapshot, ts_secs: f64);
+}
+
+/// Collects snapshots in memory (tests, examples).
+#[derive(Default)]
+pub struct MemorySink {
+    pub published: Mutex<Vec<(f64, MetricsSnapshot)>>,
+}
+
+impl MemorySink {
+    pub fn new() -> Arc<MemorySink> {
+        Arc::new(MemorySink::default())
+    }
+
+    pub fn count(&self) -> usize {
+        self.published.lock().unwrap().len()
+    }
+}
+
+impl Sink for MemorySink {
+    fn publish(&self, snapshot: &MetricsSnapshot, ts: f64) {
+        self.published.lock().unwrap().push((ts, snapshot.clone()));
+    }
+}
+
+/// Logs snapshots through the `log` facade.
+pub struct LogSink;
+
+impl Sink for LogSink {
+    fn publish(&self, snapshot: &MetricsSnapshot, ts: f64) {
+        log::info!(
+            "metrics@{ts:.1}s: {}",
+            crate::json::to_string(&snapshot.to_json(ts))
+        );
+    }
+}
+
+/// Appends JSONL snapshots to a storage object (the CloudWatch stand-in).
+pub struct StorageSink {
+    storage: StorageRef,
+    path: String,
+    buffer: Mutex<String>,
+}
+
+impl StorageSink {
+    pub fn new(storage: StorageRef, path: &str) -> Arc<StorageSink> {
+        Arc::new(StorageSink {
+            storage,
+            path: path.to_string(),
+            buffer: Mutex::new(String::new()),
+        })
+    }
+}
+
+impl Sink for StorageSink {
+    fn publish(&self, snapshot: &MetricsSnapshot, ts: f64) {
+        let mut buf = self.buffer.lock().unwrap();
+        buf.push_str(&crate::json::to_string(&snapshot.to_json(ts)));
+        buf.push('\n');
+        let _ = self.storage.write(&self.path, buf.as_bytes());
+    }
+}
+
+/// Publisher configuration.
+#[derive(Clone)]
+pub struct PublisherConfig {
+    /// snapshot cadence; paper default 30 s
+    pub cadence: Duration,
+}
+
+impl Default for PublisherConfig {
+    fn default() -> Self {
+        PublisherConfig { cadence: Duration::from_secs(30) }
+    }
+}
+
+/// Handle to the background publisher thread. Stops (with a final flush)
+/// on `stop()` or drop.
+pub struct MetricsPublisher {
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl MetricsPublisher {
+    /// Spawn the publisher thread.
+    pub fn start(
+        registry: MetricsRegistry,
+        sink: Arc<dyn Sink>,
+        clock: ClockRef,
+        cfg: PublisherConfig,
+    ) -> MetricsPublisher {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = thread::Builder::new()
+            .name("ddp-metrics-publisher".into())
+            .spawn(move || {
+                // poll in small slices so stop() is responsive even with a
+                // 30 s cadence
+                let slice = Duration::from_millis(5).min(cfg.cadence);
+                let mut elapsed = Duration::ZERO;
+                loop {
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    thread::sleep(slice);
+                    elapsed += slice;
+                    if elapsed >= cfg.cadence {
+                        elapsed = Duration::ZERO;
+                        sink.publish(&registry.snapshot(), clock.now());
+                    }
+                }
+                // final flush so short-lived runs still publish
+                sink.publish(&registry.snapshot(), clock.now());
+            })
+            .expect("spawn metrics publisher");
+        MetricsPublisher { stop, handle: Some(handle) }
+    }
+
+    /// Stop the thread and flush a final snapshot.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsPublisher {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock;
+
+    #[test]
+    fn publishes_at_cadence_and_flushes_on_stop() {
+        let reg = MetricsRegistry::new();
+        let sink = MemorySink::new();
+        let pubr = MetricsPublisher::start(
+            reg.clone(),
+            sink.clone(),
+            clock::wall(),
+            PublisherConfig { cadence: Duration::from_millis(20) },
+        );
+        reg.counter_add("x", 1);
+        thread::sleep(Duration::from_millis(90));
+        pubr.stop();
+        let n = sink.count();
+        assert!(n >= 3, "expected >=3 publishes, got {n}");
+        let last = sink.published.lock().unwrap().last().unwrap().1.clone();
+        assert_eq!(*last.counters.get("x").unwrap(), 1);
+    }
+
+    #[test]
+    fn storage_sink_accumulates_jsonl() {
+        use crate::io::MemStore;
+        let store: StorageRef = Arc::new(MemStore::new());
+        let sink = StorageSink::new(store.clone(), "metrics/run1.jsonl");
+        let reg = MetricsRegistry::new();
+        reg.counter_add("a", 2);
+        sink.publish(&reg.snapshot(), 1.0);
+        sink.publish(&reg.snapshot(), 2.0);
+        let blob = store.read("metrics/run1.jsonl").unwrap();
+        let text = String::from_utf8(blob).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.contains("\"a\":2"));
+    }
+
+    #[test]
+    fn drop_stops_thread() {
+        let reg = MetricsRegistry::new();
+        let sink = MemorySink::new();
+        {
+            let _p = MetricsPublisher::start(
+                reg,
+                sink.clone(),
+                clock::wall(),
+                PublisherConfig { cadence: Duration::from_millis(10) },
+            );
+            thread::sleep(Duration::from_millis(25));
+        } // drop here
+        let n = sink.count();
+        thread::sleep(Duration::from_millis(30));
+        assert_eq!(sink.count(), n, "no publishes after drop");
+    }
+}

@@ -1,0 +1,332 @@
+//! Thread-safe metrics registry: counters, gauges, histograms.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Bounded-reservoir histogram (fixed capacity, overwrite-oldest) — cheap
+/// and adequate for latency quantiles at pipeline cadence.
+struct Histogram {
+    values: Mutex<HistState>,
+}
+
+struct HistState {
+    buf: Vec<f64>,
+    next: usize,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+const RESERVOIR: usize = 4096;
+
+impl Histogram {
+    fn new() -> Self {
+        Histogram {
+            values: Mutex::new(HistState {
+                buf: Vec::with_capacity(RESERVOIR),
+                next: 0,
+                count: 0,
+                sum: 0.0,
+                min: f64::INFINITY,
+                max: f64::NEG_INFINITY,
+            }),
+        }
+    }
+
+    fn record(&self, v: f64) {
+        let mut s = self.values.lock().unwrap();
+        if s.buf.len() < RESERVOIR {
+            s.buf.push(v);
+        } else {
+            let i = s.next % RESERVOIR;
+            s.buf[i] = v;
+            s.next = s.next.wrapping_add(1);
+        }
+        s.count += 1;
+        s.sum += v;
+        s.min = s.min.min(v);
+        s.max = s.max.max(v);
+    }
+
+    fn summary(&self) -> HistogramSummary {
+        let s = self.values.lock().unwrap();
+        let mut sorted = s.buf.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| -> f64 {
+            if sorted.is_empty() {
+                return 0.0;
+            }
+            let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+            sorted[idx]
+        };
+        HistogramSummary {
+            count: s.count,
+            mean: if s.count > 0 { s.sum / s.count as f64 } else { 0.0 },
+            min: if s.count > 0 { s.min } else { 0.0 },
+            max: if s.count > 0 { s.max } else { 0.0 },
+            p50: q(0.50),
+            p95: q(0.95),
+            p99: q(0.99),
+        }
+    }
+}
+
+/// Point-in-time histogram stats.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HistogramSummary {
+    pub count: u64,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// The registry pipes write into. Cloneable handle (`Arc` inside).
+#[derive(Clone)]
+pub struct MetricsRegistry {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    counters: RwLock<BTreeMap<String, Arc<AtomicU64>>>,
+    gauges: RwLock<BTreeMap<String, Arc<AtomicI64>>>,
+    histograms: RwLock<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry {
+            inner: Arc::new(Inner {
+                counters: RwLock::new(BTreeMap::new()),
+                gauges: RwLock::new(BTreeMap::new()),
+                histograms: RwLock::new(BTreeMap::new()),
+            }),
+        }
+    }
+
+    /// Add to a named counter (creating it on first use).
+    pub fn counter_add(&self, name: &str, v: u64) {
+        if let Some(c) = self.inner.counters.read().unwrap().get(name) {
+            c.fetch_add(v, Ordering::Relaxed);
+            return;
+        }
+        let mut w = self.inner.counters.write().unwrap();
+        w.entry(name.to_string())
+            .or_insert_with(|| Arc::new(AtomicU64::new(0)))
+            .fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner
+            .counters
+            .read()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Set a gauge value (stored as milli-units to stay atomic).
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        let milli = (v * 1000.0) as i64;
+        if let Some(g) = self.inner.gauges.read().unwrap().get(name) {
+            g.store(milli, Ordering::Relaxed);
+            return;
+        }
+        let mut w = self.inner.gauges.write().unwrap();
+        w.entry(name.to_string())
+            .or_insert_with(|| Arc::new(AtomicI64::new(0)))
+            .store(milli, Ordering::Relaxed);
+    }
+
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.inner
+            .gauges
+            .read()
+            .unwrap()
+            .get(name)
+            .map(|g| g.load(Ordering::Relaxed) as f64 / 1000.0)
+            .unwrap_or(0.0)
+    }
+
+    /// Record an observation into a named histogram.
+    pub fn observe(&self, name: &str, v: f64) {
+        if let Some(h) = self.inner.histograms.read().unwrap().get(name) {
+            h.record(v);
+            return;
+        }
+        let mut w = self.inner.histograms.write().unwrap();
+        w.entry(name.to_string())
+            .or_insert_with(|| Arc::new(Histogram::new()))
+            .record(v);
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<HistogramSummary> {
+        self.inner
+            .histograms
+            .read()
+            .unwrap()
+            .get(name)
+            .map(|h| h.summary())
+    }
+
+    /// Snapshot everything (what the publisher ships).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let counters = self
+            .inner
+            .counters
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let gauges = self
+            .inner
+            .gauges
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed) as f64 / 1000.0))
+            .collect();
+        let histograms = self
+            .inner
+            .histograms
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.summary()))
+            .collect();
+        MetricsSnapshot { counters, gauges, histograms }
+    }
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Immutable snapshot shipped to sinks.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub histograms: BTreeMap<String, HistogramSummary>,
+}
+
+impl MetricsSnapshot {
+    /// Serialize to a JSON value for sinks.
+    pub fn to_json(&self, timestamp_secs: f64) -> crate::json::Value {
+        use crate::json::Value;
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("ts".to_string(), Value::Num(timestamp_secs));
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, v)| (k.clone(), Value::Num(*v as f64)))
+            .collect();
+        obj.insert("counters".to_string(), Value::Obj(counters));
+        let gauges = self
+            .gauges
+            .iter()
+            .map(|(k, v)| (k.clone(), Value::Num(*v)))
+            .collect();
+        obj.insert("gauges".to_string(), Value::Obj(gauges));
+        let hists = self
+            .histograms
+            .iter()
+            .map(|(k, h)| {
+                (
+                    k.clone(),
+                    Value::obj(vec![
+                        ("count", Value::Num(h.count as f64)),
+                        ("mean", Value::Num(h.mean)),
+                        ("min", Value::Num(h.min)),
+                        ("max", Value::Num(h.max)),
+                        ("p50", Value::Num(h.p50)),
+                        ("p95", Value::Num(h.p95)),
+                        ("p99", Value::Num(h.p99)),
+                    ]),
+                )
+            })
+            .collect();
+        obj.insert("histograms".to_string(), Value::Obj(hists));
+        Value::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let m = MetricsRegistry::new();
+        m.counter_add("rows", 5);
+        m.counter_add("rows", 7);
+        assert_eq!(m.counter("rows"), 12);
+        assert_eq!(m.counter("missing"), 0);
+        m.gauge_set("util", 0.75);
+        assert!((m.gauge("util") - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let m = MetricsRegistry::new();
+        for i in 1..=100 {
+            m.observe("lat", i as f64);
+        }
+        let h = m.histogram("lat").unwrap();
+        assert_eq!(h.count, 100);
+        assert!((h.mean - 50.5).abs() < 1e-9);
+        assert!((h.p50 - 50.0).abs() <= 1.0);
+        assert!((h.p95 - 95.0).abs() <= 1.0);
+        assert_eq!(h.min, 1.0);
+        assert_eq!(h.max, 100.0);
+    }
+
+    #[test]
+    fn reservoir_bounds_memory() {
+        let m = MetricsRegistry::new();
+        for i in 0..20_000 {
+            m.observe("big", i as f64);
+        }
+        let h = m.histogram("big").unwrap();
+        assert_eq!(h.count, 20_000);
+        assert_eq!(h.max, 19_999.0);
+    }
+
+    #[test]
+    fn snapshot_json_shape() {
+        let m = MetricsRegistry::new();
+        m.counter_add("a", 1);
+        m.gauge_set("g", 2.0);
+        m.observe("h", 3.0);
+        let j = m.snapshot().to_json(12.0);
+        assert_eq!(j.get("ts").unwrap().as_f64(), Some(12.0));
+        assert!(j.get("counters").unwrap().get("a").is_some());
+        assert!(j.get("histograms").unwrap().get("h").unwrap().get("p50").is_some());
+    }
+
+    #[test]
+    fn concurrent_counting() {
+        let m = MetricsRegistry::new();
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    m.counter_add("c", 1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("c"), 4000);
+    }
+}

@@ -1,0 +1,185 @@
+//! Hashed character-n-gram featurizer — bit-identical with
+//! `python/compile/featurize.py` (same FNV-1a hash, same lowercasing,
+//! same L2 normalization). Parity is enforced against the golden vectors
+//! exported by `aot.py` into `artifacts/featurizer_golden.json`.
+
+use crate::util::fnv1a64;
+
+/// Continue an FNV-1a hash from a previous state (byte-sequential, so
+/// `fnv_continue(fnv(a), b) == fnv(a ++ b)`).
+#[inline]
+fn fnv1a64_continue(mut state: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        state ^= b as u64;
+        state = state.wrapping_mul(0x100000001b3);
+    }
+    state
+}
+
+/// Featurizer configuration (must match the profiles the model was
+/// compiled against).
+#[derive(Debug, Clone)]
+pub struct Featurizer {
+    pub dim: usize,
+    pub ngrams: Vec<usize>,
+}
+
+impl Featurizer {
+    pub fn new(dim: usize, ngrams: Vec<usize>) -> Featurizer {
+        Featurizer { dim, ngrams }
+    }
+
+    /// The production config (dim 2048, uni+bigrams).
+    pub fn standard() -> Featurizer {
+        Featurizer::new(2048, vec![1, 2])
+    }
+
+    /// Dense L2-normalized hashed-count vector.
+    pub fn featurize(&self, text: &str) -> Vec<f32> {
+        let mut vec = vec![0.0f32; self.dim];
+        self.accumulate(text, &mut vec);
+        l2_normalize(&mut vec);
+        vec
+    }
+
+    /// Accumulate raw counts into `out` (len == dim) without normalizing.
+    ///
+    /// Perf (§Perf log): the standard uni+bigram config takes a single
+    /// streaming pass with *incremental* FNV — the hash state after a
+    /// character IS that character's unigram hash, and continuing it with
+    /// the next character's bytes yields the bigram hash, so no `Vec<char>`
+    /// materialization and no per-gram `String` is needed. Bit-identical
+    /// to the generic path (FNV is byte-sequential).
+    pub fn accumulate(&self, text: &str, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim);
+        let lower = text.to_lowercase();
+        if self.ngrams == [1, 2] {
+            let dim = self.dim as u64;
+            let mut prev_hash: Option<u64> = None;
+            let mut buf = [0u8; 4];
+            for c in lower.chars() {
+                let bytes = c.encode_utf8(&mut buf).as_bytes();
+                let h1 = fnv1a64(bytes);
+                out[(h1 % dim) as usize] += 1.0;
+                if let Some(ph) = prev_hash {
+                    let h2 = fnv1a64_continue(ph, bytes);
+                    out[(h2 % dim) as usize] += 1.0;
+                }
+                prev_hash = Some(h1);
+            }
+            return;
+        }
+        // generic n-gram path
+        let chars: Vec<char> = lower.chars().collect();
+        let mut buf = String::with_capacity(8);
+        for &n in &self.ngrams {
+            if chars.len() < n {
+                continue;
+            }
+            for i in 0..=(chars.len() - n) {
+                buf.clear();
+                for c in &chars[i..i + n] {
+                    buf.push(*c);
+                }
+                let idx = (fnv1a64(buf.as_bytes()) % self.dim as u64) as usize;
+                out[idx] += 1.0;
+            }
+        }
+    }
+
+    /// Featurize a batch into a row-major [n, dim] buffer.
+    pub fn featurize_batch(&self, texts: &[&str]) -> Vec<f32> {
+        let mut out = vec![0.0f32; texts.len() * self.dim];
+        for (i, t) in texts.iter().enumerate() {
+            let row = &mut out[i * self.dim..(i + 1) * self.dim];
+            self.accumulate(t, row);
+            l2_normalize(row);
+        }
+        out
+    }
+}
+
+fn l2_normalize(v: &mut [f32]) {
+    let norm: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if norm > 0.0 {
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l2_normalized() {
+        let f = Featurizer::standard();
+        let v = f.featurize("hello world");
+        let norm: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_text_is_zero() {
+        let f = Featurizer::standard();
+        assert!(f.featurize("").iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn case_insensitive() {
+        let f = Featurizer::standard();
+        assert_eq!(f.featurize("Hello"), f.featurize("hello"));
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let f = Featurizer::standard();
+        let batch = f.featurize_batch(&["abc", "déf"]);
+        assert_eq!(&batch[..f.dim], &f.featurize("abc")[..]);
+        assert_eq!(&batch[f.dim..], &f.featurize("déf")[..]);
+    }
+
+    /// Cross-language parity: the golden vectors were produced by the
+    /// Python featurizer; any drift in hashing, lowercasing, or
+    /// normalization fails here.
+    #[test]
+    fn golden_parity_with_python() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/featurizer_golden.json");
+        if !path.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let text = std::fs::read_to_string(path).unwrap();
+        let golden = crate::json::parse(&text).unwrap();
+        let dim = golden.u64_or("dim", 0) as usize;
+        let ngrams: Vec<usize> = golden
+            .get("ngrams")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_u64().unwrap() as usize)
+            .collect();
+        let f = Featurizer::new(dim, ngrams);
+        let cases = golden.get("cases").unwrap().as_arr().unwrap();
+        assert!(cases.len() >= 6);
+        for case in cases {
+            let t = case.get("text").unwrap().as_str().unwrap();
+            let vec = f.featurize(t);
+            let nonzero = case.get("nonzero").unwrap().as_arr().unwrap();
+            let mut expected = vec![0.0f32; dim];
+            for pair in nonzero {
+                let p = pair.as_arr().unwrap();
+                expected[p[0].as_u64().unwrap() as usize] = p[1].as_f64().unwrap() as f32;
+            }
+            for (i, (a, b)) in vec.iter().zip(&expected).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-6,
+                    "text {t:?} bucket {i}: rust {a} vs python {b}"
+                );
+            }
+        }
+    }
+}

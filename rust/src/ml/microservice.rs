@@ -1,0 +1,109 @@
+//! Microservice-integration baseline (the architecture the paper argues
+//! *against*): each inference batch pays an HTTP round-trip — JSON
+//! serialization, 20–100 ms network latency (the paper's §1 figures), a
+//! connection-concurrency cap — before the same model executes. Used by
+//! `benches/microservice_vs_embedded.rs` to reproduce the 10× claim.
+
+use super::embedded::LangDetector;
+use crate::util::error::Result;
+use crate::util::rng::Rng64;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Latency/cost model for the simulated REST hop.
+#[derive(Debug, Clone)]
+pub struct RestModel {
+    /// uniform network latency range per call (paper: 20–100 ms)
+    pub latency_lo_secs: f64,
+    pub latency_hi_secs: f64,
+    /// serialization throughput (JSON encode+decode both ways)
+    pub ser_bytes_per_sec: f64,
+    /// whether to really sleep (wall-clock benches) or only account
+    pub sleep: bool,
+}
+
+impl Default for RestModel {
+    fn default() -> Self {
+        RestModel {
+            latency_lo_secs: 0.020,
+            latency_hi_secs: 0.100,
+            ser_bytes_per_sec: 200.0e6,
+            sleep: false,
+        }
+    }
+}
+
+/// A language-detection "service" fronted by a simulated REST API.
+pub struct MicroserviceDetector {
+    inner: LangDetector,
+    model: RestModel,
+    rng: Mutex<Rng64>,
+    accounted_nanos: AtomicU64,
+    calls: AtomicU64,
+}
+
+impl MicroserviceDetector {
+    pub fn new(inner: LangDetector, model: RestModel, seed: u64) -> MicroserviceDetector {
+        MicroserviceDetector {
+            inner,
+            model,
+            rng: Mutex::new(Rng64::new(seed)),
+            accounted_nanos: AtomicU64::new(0),
+            calls: AtomicU64::new(0),
+        }
+    }
+
+    /// One REST call = one batch. Charges latency + serialization, then
+    /// runs the same embedded model the in-process path uses — isolating
+    /// the integration overhead, exactly the comparison the paper makes.
+    pub fn detect(&self, texts: &[&str]) -> Result<Vec<String>> {
+        let payload_bytes: usize = texts.iter().map(|t| t.len() + 24).sum();
+        let latency = {
+            let mut rng = self.rng.lock().unwrap();
+            rng.gen_f64_range(self.model.latency_lo_secs, self.model.latency_hi_secs)
+        };
+        let ser = 2.0 * payload_bytes as f64 / self.model.ser_bytes_per_sec;
+        let cost = latency + ser;
+        self.accounted_nanos
+            .fetch_add((cost * 1e9) as u64, Ordering::Relaxed);
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        if self.model.sleep {
+            std::thread::sleep(std::time::Duration::from_secs_f64(cost));
+        }
+        self.inner.detect(texts)
+    }
+
+    /// Total simulated network+serialization time charged.
+    pub fn accounted_secs(&self) -> f64 {
+        self.accounted_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn call_count(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ModelRuntime;
+    use std::path::Path;
+
+    #[test]
+    fn charges_rest_overhead() {
+        let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !artifacts.join("model_meta.json").exists() {
+            return;
+        }
+        let rt = ModelRuntime::cpu().unwrap();
+        let det = LangDetector::load(&rt, &artifacts).unwrap();
+        let svc = MicroserviceDetector::new(det, RestModel::default(), 42);
+        for _ in 0..5 {
+            svc.detect(&["the of and to in is"]).unwrap();
+        }
+        assert_eq!(svc.call_count(), 5);
+        let secs = svc.accounted_secs();
+        // 5 calls x [20ms, 100ms] -> [0.1, 0.5]
+        assert!(secs >= 0.1 && secs <= 0.5, "accounted {secs}");
+    }
+}

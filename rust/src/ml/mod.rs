@@ -1,0 +1,17 @@
+//! ML integration layer: the embedded-model strategy (paper §1 "ML Model
+//! Integration Strategy") and its microservice counter-baseline.
+//!
+//! * [`featurizer`] — hashed char-n-gram features, bit-identical with the
+//!   Python build path (golden-tested);
+//! * [`embedded`] — PJRT-backed model services (langdetect, embedder,
+//!   pairwise scorer, tiny LLM), instance-level cached;
+//! * [`microservice`] — the REST-hop baseline the paper measures 10×
+//!   slower.
+
+pub mod featurizer;
+pub mod embedded;
+pub mod microservice;
+
+pub use embedded::{Embedder, LangDetector, ModelMeta, PairwiseScorer, TinyLlm};
+pub use featurizer::Featurizer;
+pub use microservice::{MicroserviceDetector, RestModel};

@@ -1,0 +1,287 @@
+//! AggregateTransformer: declarative group-by aggregation — the reporting
+//! stage of the enterprise pipelines (counts per key, sums/means of a
+//! value column). Params:
+//!
+//! ```json
+//! {"groupBy": "city", "aggregations": [
+//!    {"op": "count"},
+//!    {"op": "sum",  "column": "value"},
+//!    {"op": "mean", "column": "value"},
+//!    {"op": "min",  "column": "value"},
+//!    {"op": "max",  "column": "value"}]}
+//! ```
+
+use crate::ddp::context::PipeContext;
+use crate::ddp::pipe::{Pipe, PipeContract};
+use crate::engine::dataset::Dataset;
+use crate::engine::row::{Field, FieldType, Row, Schema};
+use crate::json::Value;
+use crate::util::error::{DdpError, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggOp {
+    Count,
+    Sum,
+    Mean,
+    Min,
+    Max,
+}
+
+impl AggOp {
+    fn parse(s: &str) -> Result<AggOp> {
+        Ok(match s {
+            "count" => AggOp::Count,
+            "sum" => AggOp::Sum,
+            "mean" | "avg" => AggOp::Mean,
+            "min" => AggOp::Min,
+            "max" => AggOp::Max,
+            other => return Err(DdpError::config(format!("unknown aggregation '{other}'"))),
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            AggOp::Count => "count",
+            AggOp::Sum => "sum",
+            AggOp::Mean => "mean",
+            AggOp::Min => "min",
+            AggOp::Max => "max",
+        }
+    }
+}
+
+pub struct AggregateTransformer {
+    pub group_by: String,
+    /// (op, value column — ignored for count)
+    pub aggs: Vec<(AggOp, Option<String>)>,
+    pub num_parts: usize,
+}
+
+impl AggregateTransformer {
+    pub fn from_params(params: &Value) -> Result<Box<dyn Pipe>> {
+        let group_by = params
+            .get("groupBy")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| DdpError::config("AggregateTransformer needs 'groupBy'"))?
+            .to_string();
+        let mut aggs = Vec::new();
+        match params.get("aggregations") {
+            Some(Value::Arr(items)) if !items.is_empty() => {
+                for item in items {
+                    let op = AggOp::parse(&item.str_or("op", "count"))?;
+                    let col = item.get("column").and_then(|v| v.as_str()).map(String::from);
+                    if op != AggOp::Count && col.is_none() {
+                        return Err(DdpError::config(format!(
+                            "aggregation '{}' needs a 'column'",
+                            op.name()
+                        )));
+                    }
+                    aggs.push((op, col));
+                }
+            }
+            _ => aggs.push((AggOp::Count, None)),
+        }
+        Ok(Box::new(AggregateTransformer {
+            group_by,
+            aggs,
+            num_parts: params.u64_or("partitions", 8) as usize,
+        }))
+    }
+}
+
+impl Pipe for AggregateTransformer {
+    fn type_name(&self) -> &str {
+        "AggregateTransformer"
+    }
+
+    fn contract(&self) -> PipeContract {
+        PipeContract { arity: Some(1), ..Default::default() }
+    }
+
+    fn transform(&self, _ctx: &PipeContext, inputs: &[Dataset]) -> Result<Vec<Dataset>> {
+        let ds = &inputs[0];
+        let gidx = ds
+            .schema
+            .idx(&self.group_by)
+            .ok_or_else(|| DdpError::schema(format!("no column '{}'", self.group_by)))?;
+        let mut vidx = Vec::new();
+        for (op, col) in &self.aggs {
+            match col {
+                Some(c) => vidx.push(Some(ds.schema.idx(c).ok_or_else(|| {
+                    DdpError::schema(format!("no column '{c}' for {}", op.name()))
+                })?)),
+                None => vidx.push(None),
+            }
+        }
+
+        // accumulator row layout: [key, count, then per-agg (sum, min, max)]
+        let aggs = self.aggs.clone();
+        let aggs2 = aggs.clone();
+        let vidx2 = vidx.clone();
+        let acc_width = 2 + 3 * aggs.len();
+        let to_acc = move |r: &Row| -> Row {
+            let mut fields = Vec::with_capacity(acc_width);
+            fields.push(r.get(gidx).clone());
+            fields.push(Field::I64(1));
+            for vi in &vidx2 {
+                let v = vi.and_then(|i| r.get(i).as_f64()).unwrap_or(0.0);
+                fields.push(Field::F64(v)); // sum
+                fields.push(Field::F64(v)); // min
+                fields.push(Field::F64(v)); // max
+            }
+            Row::new(fields)
+        };
+        let acc_schema = Schema::of_names(&vec!["_"; acc_width].iter().map(|_| "c").collect::<Vec<_>>());
+        let accs = ds.map(acc_schema, to_acc);
+        let merged = accs.reduce_by_key(
+            self.num_parts,
+            |r: &Row| r.get(0).clone(),
+            move |a: Row, b: &Row| {
+                let mut fields = a.fields;
+                fields[1] = Field::I64(
+                    fields[1].as_i64().unwrap_or(0) + b.get(1).as_i64().unwrap_or(0),
+                );
+                for (j, _) in aggs2.iter().enumerate() {
+                    let base = 2 + 3 * j;
+                    let (s1, m1, x1) = (
+                        fields[base].as_f64().unwrap_or(0.0),
+                        fields[base + 1].as_f64().unwrap_or(0.0),
+                        fields[base + 2].as_f64().unwrap_or(0.0),
+                    );
+                    let (s2, m2, x2) = (
+                        b.get(base).as_f64().unwrap_or(0.0),
+                        b.get(base + 1).as_f64().unwrap_or(0.0),
+                        b.get(base + 2).as_f64().unwrap_or(0.0),
+                    );
+                    fields[base] = Field::F64(s1 + s2);
+                    fields[base + 1] = Field::F64(m1.min(m2));
+                    fields[base + 2] = Field::F64(x1.max(x2));
+                }
+                Row::new(fields)
+            },
+        );
+
+        // final projection: [key, agg results...]
+        let mut out_fields: Vec<(String, FieldType)> =
+            vec![(self.group_by.clone(), FieldType::Any)];
+        for (op, col) in &self.aggs {
+            let name = match col {
+                Some(c) => format!("{}_{c}", op.name()),
+                None => op.name().to_string(),
+            };
+            let ty = if *op == AggOp::Count { FieldType::I64 } else { FieldType::F64 };
+            out_fields.push((name, ty));
+        }
+        let out_schema =
+            Schema::new(out_fields.iter().map(|(n, t)| (n.as_str(), *t)).collect());
+        let aggs3 = self.aggs.clone();
+        let out = merged.map(out_schema, move |r: &Row| {
+            let count = r.get(1).as_i64().unwrap_or(0);
+            let mut fields = vec![r.get(0).clone()];
+            for (j, (op, _)) in aggs3.iter().enumerate() {
+                let base = 2 + 3 * j;
+                fields.push(match op {
+                    AggOp::Count => Field::I64(count),
+                    AggOp::Sum => r.get(base).clone(),
+                    AggOp::Mean => Field::F64(
+                        r.get(base).as_f64().unwrap_or(0.0) / count.max(1) as f64,
+                    ),
+                    AggOp::Min => r.get(base + 1).clone(),
+                    AggOp::Max => r.get(base + 2).clone(),
+                });
+            }
+            Row::new(fields)
+        });
+        Ok(vec![out])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::row;
+
+    fn sales() -> Dataset {
+        let schema = Schema::new(vec![
+            ("id", FieldType::I64),
+            ("city", FieldType::Str),
+            ("value", FieldType::F64),
+        ]);
+        let rows = vec![
+            row!(1i64, "berlin", 10.0),
+            row!(2i64, "berlin", 30.0),
+            row!(3i64, "paris", 5.0),
+            row!(4i64, "paris", 15.0),
+            row!(5i64, "paris", 40.0),
+        ];
+        Dataset::from_rows("sales", schema, rows, 2)
+    }
+
+    #[test]
+    fn count_sum_mean_min_max() {
+        let ctx = PipeContext::for_tests();
+        let pipe = AggregateTransformer {
+            group_by: "city".into(),
+            aggs: vec![
+                (AggOp::Count, None),
+                (AggOp::Sum, Some("value".into())),
+                (AggOp::Mean, Some("value".into())),
+                (AggOp::Min, Some("value".into())),
+                (AggOp::Max, Some("value".into())),
+            ],
+            num_parts: 3,
+        };
+        let out = pipe.transform(&ctx, &[sales()]).unwrap();
+        assert_eq!(
+            out[0].schema.names(),
+            vec!["city", "count", "sum_value", "mean_value", "min_value", "max_value"]
+        );
+        let mut rows = ctx.engine.collect_rows(&out[0]).unwrap();
+        rows.sort_by_key(|r| r.get(0).as_str().unwrap().to_string());
+        assert_eq!(rows.len(), 2);
+        let berlin = &rows[0];
+        assert_eq!(berlin.get(1).as_i64(), Some(2));
+        assert_eq!(berlin.get(2).as_f64(), Some(40.0));
+        assert_eq!(berlin.get(3).as_f64(), Some(20.0));
+        let paris = &rows[1];
+        assert_eq!(paris.get(1).as_i64(), Some(3));
+        assert_eq!(paris.get(4).as_f64(), Some(5.0));
+        assert_eq!(paris.get(5).as_f64(), Some(40.0));
+    }
+
+    #[test]
+    fn default_is_count() {
+        let params = crate::json::parse(r#"{"groupBy": "city"}"#).unwrap();
+        let pipe = AggregateTransformer::from_params(&params).unwrap();
+        let ctx = PipeContext::for_tests();
+        let out = pipe.transform(&ctx, &[sales()]).unwrap();
+        assert_eq!(out[0].schema.names(), vec!["city", "count"]);
+        assert_eq!(ctx.engine.count(&out[0]).unwrap(), 2);
+    }
+
+    #[test]
+    fn bad_params_rejected() {
+        assert!(AggregateTransformer::from_params(&crate::json::parse("{}").unwrap()).is_err());
+        let p = crate::json::parse(
+            r#"{"groupBy": "city", "aggregations": [{"op": "sum"}]}"#,
+        )
+        .unwrap();
+        assert!(AggregateTransformer::from_params(&p).is_err());
+        let p = crate::json::parse(
+            r#"{"groupBy": "city", "aggregations": [{"op": "median", "column": "v"}]}"#,
+        )
+        .unwrap();
+        assert!(AggregateTransformer::from_params(&p).is_err());
+    }
+
+    #[test]
+    fn missing_columns_error_at_transform() {
+        let ctx = PipeContext::for_tests();
+        let pipe = AggregateTransformer {
+            group_by: "nope".into(),
+            aggs: vec![(AggOp::Count, None)],
+            num_parts: 2,
+        };
+        assert!(pipe.transform(&ctx, &[sales()]).is_err());
+    }
+}

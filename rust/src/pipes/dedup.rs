@@ -1,0 +1,328 @@
+//! DedupTransformer: document de-duplication (the Fig 4 pipeline's second
+//! stage). Two methods:
+//!
+//! * `exact` — shuffle on a 64-bit content hash of the normalized text,
+//!   keep the lowest-id row per hash;
+//! * `minhash` — LSH near-duplicate removal: k-shingles → minhash
+//!   signature → banded bucket keys; rows sharing any band bucket
+//!   collapse to the lowest id (catches whitespace/suffix perturbations).
+
+use crate::ddp::context::PipeContext;
+use crate::ddp::pipe::{Pipe, PipeContract};
+use crate::engine::dataset::Dataset;
+use crate::engine::row::{Field, Row};
+use crate::json::Value;
+use crate::util::error::{DdpError, Result};
+use crate::util::fnv1a64;
+
+pub struct DedupTransformer {
+    pub text_col: String,
+    pub id_col: String,
+    pub method: DedupMethod,
+    pub num_parts: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DedupMethod {
+    Exact,
+    MinHash { hashes: usize, bands: usize, shingle: usize },
+}
+
+impl DedupTransformer {
+    pub fn from_params(params: &Value) -> Result<Box<dyn Pipe>> {
+        let method = match params.str_or("method", "exact").as_str() {
+            "exact" => DedupMethod::Exact,
+            "minhash" => DedupMethod::MinHash {
+                hashes: params.u64_or("hashes", 32) as usize,
+                bands: params.u64_or("bands", 8) as usize,
+                shingle: params.u64_or("shingle", 4) as usize,
+            },
+            other => return Err(DdpError::config(format!("unknown dedup method '{other}'"))),
+        };
+        Ok(Box::new(DedupTransformer {
+            text_col: params.str_or("textColumn", "text"),
+            id_col: params.str_or("idColumn", "id"),
+            method,
+            num_parts: params.u64_or("partitions", 8) as usize,
+        }))
+    }
+}
+
+/// Normalize for content hashing: lowercase + collapsed whitespace.
+fn normalize(text: &str) -> String {
+    super::preprocess::clean_text(&text.to_lowercase())
+}
+
+/// MinHash signature of the k-shingle set.
+pub fn minhash_signature(text: &str, hashes: usize, shingle: usize) -> Vec<u64> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut sig = vec![u64::MAX; hashes];
+    if chars.len() < shingle {
+        // tiny docs: hash the whole text
+        let h = fnv1a64(text.as_bytes());
+        for (i, s) in sig.iter_mut().enumerate() {
+            *s = h.wrapping_mul(0x9E3779B97F4A7C15 ^ (i as u64 + 1));
+        }
+        return sig;
+    }
+    let mut buf = String::with_capacity(shingle * 4);
+    for w in chars.windows(shingle) {
+        buf.clear();
+        buf.extend(w.iter());
+        let base = fnv1a64(buf.as_bytes());
+        for (i, s) in sig.iter_mut().enumerate() {
+            // xor-mult family of hash functions
+            let h = (base ^ (i as u64).wrapping_mul(0xff51afd7ed558ccd))
+                .wrapping_mul(0xc4ceb9fe1a85ec53);
+            if h < *s {
+                *s = h;
+            }
+        }
+    }
+    sig
+}
+
+/// Banded LSH keys from a signature.
+pub fn band_keys(sig: &[u64], bands: usize) -> Vec<u64> {
+    let rows = (sig.len() / bands).max(1);
+    sig.chunks(rows)
+        .enumerate()
+        .map(|(b, chunk)| {
+            let mut h = 0xcbf29ce484222325u64 ^ (b as u64);
+            for &v in chunk {
+                h ^= v;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+            h
+        })
+        .collect()
+}
+
+impl Pipe for DedupTransformer {
+    fn type_name(&self) -> &str {
+        "DedupTransformer"
+    }
+
+    fn contract(&self) -> PipeContract {
+        PipeContract { arity: Some(1), ..Default::default() }
+    }
+
+    fn declared_metrics(&self) -> Vec<String> {
+        vec!["dedup_rate".into()]
+    }
+
+    fn transform(&self, ctx: &PipeContext, inputs: &[Dataset]) -> Result<Vec<Dataset>> {
+        let ds = &inputs[0];
+        let text_idx = ds
+            .schema
+            .idx(&self.text_col)
+            .ok_or_else(|| DdpError::schema(format!("no column '{}'", self.text_col)))?;
+        let id_idx = ds
+            .schema
+            .idx(&self.id_col)
+            .ok_or_else(|| DdpError::schema(format!("no column '{}'", self.id_col)))?;
+
+        let keep_lowest = move |acc: Row, r: &Row| -> Row {
+            let a = acc.get(id_idx).as_i64().unwrap_or(i64::MAX);
+            let b = r.get(id_idx).as_i64().unwrap_or(i64::MAX);
+            if b < a {
+                r.clone()
+            } else {
+                acc
+            }
+        };
+
+        let out = match self.method {
+            DedupMethod::Exact => {
+                let key = move |r: &Row| {
+                    let text = r.get(text_idx).as_str().unwrap_or("");
+                    Field::I64(fnv1a64(normalize(text).as_bytes()) as i64)
+                };
+                ds.reduce_by_key(self.num_parts, key, keep_lowest)
+            }
+            DedupMethod::MinHash { hashes, bands, shingle } => {
+                // LSH dedup in four dataflow steps:
+                //   1. expand each row into (band_key, id) memberships;
+                //   2. min id per band bucket;
+                //   3. canonical id per row = min over its buckets' minima
+                //      (one union-find round — transitive chains longer
+                //      than one hop may survive; documented approximation);
+                //   4. keep rows whose canonical id is their own id.
+                let n = self.num_parts;
+                let pair_schema = crate::engine::row::Schema::new(vec![
+                    ("band", crate::engine::row::FieldType::I64),
+                    ("id", crate::engine::row::FieldType::I64),
+                ]);
+                let membership = ds.flat_map(pair_schema.clone(), move |r: &Row| {
+                    let text = normalize(r.get(text_idx).as_str().unwrap_or(""));
+                    let id = r.get(id_idx).as_i64().unwrap_or(i64::MAX);
+                    let sig = minhash_signature(&text, hashes, shingle);
+                    band_keys(&sig, bands)
+                        .into_iter()
+                        .map(|k| Row::new(vec![Field::I64(k as i64), Field::I64(id)]))
+                        .collect()
+                });
+                // step 2: min id per bucket
+                let bucket_min = membership.reduce_by_key(
+                    n,
+                    |r: &Row| r.get(0).clone(),
+                    |acc: Row, r: &Row| {
+                        if r.get(1).as_i64() < acc.get(1).as_i64() {
+                            r.clone()
+                        } else {
+                            acc
+                        }
+                    },
+                );
+                // step 3: join memberships with bucket minima, fold per id
+                let joined_schema = crate::engine::row::Schema::of_names(&[
+                    "band", "id", "band_r", "min_id",
+                ]);
+                let joined = membership.join(
+                    &bucket_min,
+                    joined_schema,
+                    crate::engine::dataset::JoinKind::Inner,
+                    n,
+                    |r: &Row| r.get(0).clone(),
+                    |r: &Row| r.get(0).clone(),
+                );
+                let canon = joined.reduce_by_key(
+                    n,
+                    |r: &Row| r.get(1).clone(),
+                    |acc: Row, r: &Row| {
+                        if r.get(3).as_i64() < acc.get(3).as_i64() {
+                            r.clone()
+                        } else {
+                            acc
+                        }
+                    },
+                );
+                // step 4: survivors are ids equal to their canonical id
+                let keep_schema =
+                    crate::engine::row::Schema::new(vec![("keep_id", crate::engine::row::FieldType::I64)]);
+                let keep = canon
+                    .filter(|r: &Row| r.get(1).as_i64() == r.get(3).as_i64())
+                    .map(keep_schema, |r: &Row| Row::new(vec![r.get(1).clone()]));
+                // join original rows with survivors, strip the key column
+                let out_schema = {
+                    let mut fields: Vec<(&str, crate::engine::row::FieldType)> = Vec::new();
+                    let names = ds.schema.names();
+                    for (i, nme) in names.iter().enumerate() {
+                        fields.push((nme, ds.schema.field_type(i)));
+                    }
+                    fields.push(("keep_id", crate::engine::row::FieldType::I64));
+                    crate::engine::row::Schema::new(fields)
+                };
+                let schema = ds.schema.clone();
+                ds.join(
+                    &keep,
+                    out_schema,
+                    crate::engine::dataset::JoinKind::Inner,
+                    n,
+                    move |r: &Row| r.get(id_idx).clone(),
+                    |r: &Row| r.get(0).clone(),
+                )
+                .map(schema, |r: &Row| {
+                    Row::new(r.fields[..r.fields.len() - 1].to_vec())
+                })
+            }
+        };
+
+        // dedup-rate metric needs both counts; count lazily via metrics at
+        // materialization is not possible, so sample the rate here cheaply
+        let _ = ctx; // (metric recorded by driver's rows_out counters)
+        Ok(vec![out])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::web::{CorpusGen, LangProfiles};
+    use crate::engine::row::{FieldType, Schema};
+    use crate::row;
+
+    fn docs_ds(texts: &[&str]) -> Dataset {
+        let schema = Schema::new(vec![("id", FieldType::I64), ("text", FieldType::Str)]);
+        let rows = texts
+            .iter()
+            .enumerate()
+            .map(|(i, t)| row!(i as i64, *t))
+            .collect();
+        Dataset::from_rows("docs", schema, rows, 3)
+    }
+
+    #[test]
+    fn exact_dedup_collapses_normalized_copies() {
+        let ctx = PipeContext::for_tests();
+        let ds = docs_ds(&[
+            "Hello World",
+            "hello   world ",
+            "different document",
+            "HELLO WORLD",
+        ]);
+        let pipe = DedupTransformer {
+            text_col: "text".into(),
+            id_col: "id".into(),
+            method: DedupMethod::Exact,
+            num_parts: 2,
+        };
+        let out = pipe.transform(&ctx, &[ds]).unwrap();
+        let rows = ctx.engine.collect_rows(&out[0]).unwrap();
+        assert_eq!(rows.len(), 2);
+        // winner is the lowest id (0, not 1 or 3)
+        let ids: std::collections::HashSet<i64> =
+            rows.iter().map(|r| r.get(0).as_i64().unwrap()).collect();
+        assert!(ids.contains(&0) && ids.contains(&2));
+    }
+
+    #[test]
+    fn minhash_catches_near_duplicates() {
+        let ctx = PipeContext::for_tests();
+        let base = "the quick brown fox jumps over the lazy dog again and again today";
+        let near = format!("{base} extra");
+        let ds = docs_ds(&[base, &near, "completely unrelated text about something else entirely"]);
+        let pipe = DedupTransformer {
+            text_col: "text".into(),
+            id_col: "id".into(),
+            method: DedupMethod::MinHash { hashes: 32, bands: 8, shingle: 4 },
+            num_parts: 2,
+        };
+        let out = pipe.transform(&ctx, &[ds]).unwrap();
+        let rows = ctx.engine.collect_rows(&out[0]).unwrap();
+        assert_eq!(rows.len(), 2, "near-dup should collapse");
+    }
+
+    #[test]
+    fn corpus_dedup_removes_injected_dups() {
+        let ctx = PipeContext::for_tests();
+        let profiles = LangProfiles::load_default().unwrap();
+        let gen = CorpusGen { dup_rate: 0.3, ..Default::default() };
+        let (schema, rows) = gen.generate_rows(&profiles, 400);
+        let n_unique = {
+            let mut set = std::collections::HashSet::new();
+            for r in &rows {
+                set.insert(normalize(r.get(2).as_str().unwrap()));
+            }
+            set.len()
+        };
+        let ds = Dataset::from_rows("corpus", schema, rows, 4);
+        let pipe = DedupTransformer {
+            text_col: "text".into(),
+            id_col: "id".into(),
+            method: DedupMethod::Exact,
+            num_parts: 4,
+        };
+        let out = pipe.transform(&ctx, &[ds]).unwrap();
+        assert_eq!(ctx.engine.count(&out[0]).unwrap(), n_unique);
+    }
+
+    #[test]
+    fn signature_similarity_reflects_jaccard() {
+        let a = minhash_signature("abcdefghijklmnopqrstuvwxyz", 64, 4);
+        let b = minhash_signature("abcdefghijklmnopqrstuvwxy!", 64, 4);
+        let c = minhash_signature("0123456789 totally different", 64, 4);
+        let agree = |x: &[u64], y: &[u64]| x.iter().zip(y).filter(|(p, q)| p == q).count();
+        assert!(agree(&a, &b) > agree(&a, &c));
+    }
+}

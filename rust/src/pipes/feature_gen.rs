@@ -1,0 +1,112 @@
+//! FeatureGenerationTransformer: materializes hashed-n-gram feature
+//! vectors as a bytes column (f32 LE) — the paper-example stage between
+//! preprocessing and model prediction. Downstream model pipes may consume
+//! either this column or raw text.
+
+use crate::ddp::context::PipeContext;
+use crate::ddp::pipe::{Pipe, PipeContract};
+use crate::engine::dataset::Dataset;
+use crate::engine::row::{Field, FieldType, Row, Schema};
+use crate::json::Value;
+use crate::ml::featurizer::Featurizer;
+use crate::util::error::{DdpError, Result};
+
+pub struct FeatureGenerationTransformer {
+    pub text_col: String,
+    pub out_col: String,
+    pub dim: usize,
+}
+
+impl FeatureGenerationTransformer {
+    pub fn from_params(params: &Value) -> Result<Box<dyn Pipe>> {
+        Ok(Box::new(FeatureGenerationTransformer {
+            text_col: params.str_or("textColumn", "text"),
+            out_col: params.str_or("outputColumn", "features"),
+            dim: params.u64_or("dim", 2048) as usize,
+        }))
+    }
+}
+
+/// Pack f32s into LE bytes.
+pub fn pack_f32(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Unpack LE bytes into f32s.
+pub fn unpack_f32(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+impl Pipe for FeatureGenerationTransformer {
+    fn type_name(&self) -> &str {
+        "FeatureGenerationTransformer"
+    }
+
+    fn contract(&self) -> PipeContract {
+        PipeContract { arity: Some(1), ..Default::default() }
+    }
+
+    fn transform(&self, _ctx: &PipeContext, inputs: &[Dataset]) -> Result<Vec<Dataset>> {
+        let ds = &inputs[0];
+        let idx = ds
+            .schema
+            .idx(&self.text_col)
+            .ok_or_else(|| DdpError::schema(format!("no column '{}'", self.text_col)))?;
+        let mut fields: Vec<(&str, FieldType)> = Vec::new();
+        let names = ds.schema.names();
+        for (i, n) in names.iter().enumerate() {
+            fields.push((n, ds.schema.field_type(i)));
+        }
+        fields.push((self.out_col.as_str(), FieldType::Bytes));
+        let out_schema = Schema::new(fields);
+        let feat = Featurizer::new(self.dim, vec![1, 2]);
+        let out = ds.map(out_schema, move |r: &Row| {
+            let text = r.get(idx).as_str().unwrap_or("");
+            let v = feat.featurize(text);
+            let mut fields = r.fields.clone();
+            fields.push(Field::Bytes(pack_f32(&v)));
+            Row::new(fields)
+        });
+        Ok(vec![out])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::row;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let v = vec![0.0f32, 1.5, -2.25, f32::MIN_POSITIVE];
+        assert_eq!(unpack_f32(&pack_f32(&v)), v);
+    }
+
+    #[test]
+    fn adds_feature_column() {
+        let ctx = PipeContext::for_tests();
+        let schema = Schema::new(vec![("id", FieldType::I64), ("text", FieldType::Str)]);
+        let ds = Dataset::from_rows("in", schema, vec![row!(1i64, "hello world")], 1);
+        let pipe = FeatureGenerationTransformer {
+            text_col: "text".into(),
+            out_col: "features".into(),
+            dim: 128,
+        };
+        let out = pipe.transform(&ctx, &[ds]).unwrap();
+        let rows = ctx.engine.collect_rows(&out[0]).unwrap();
+        let bytes = rows[0].get(2).as_bytes().unwrap();
+        assert_eq!(bytes.len(), 128 * 4);
+        let v = unpack_f32(bytes);
+        let norm: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5);
+        // matches the standalone featurizer
+        let expect = Featurizer::new(128, vec![1, 2]).featurize("hello world");
+        assert_eq!(v, expect);
+    }
+}

@@ -1,0 +1,187 @@
+//! LlmTransformer (paper §4.4): an LLM hosted as *just another pipe* —
+//! the tiny decoder artifact loaded instance-scope, greedy generation
+//! batched across the partition's documents. This exercises the identical
+//! integration path the paper used for Qwen2.5-7B on llama.cpp (model in
+//! worker memory, batch pipeline around it) at laptop scale.
+
+use crate::ddp::context::PipeContext;
+use crate::ddp::pipe::{Pipe, PipeContract};
+use crate::engine::dataset::Dataset;
+use crate::engine::row::{Field, FieldType, Row, Schema};
+use crate::json::Value;
+use crate::ml::embedded::TinyLlm;
+use crate::runtime::ModelRuntime;
+use crate::util::error::{DdpError, Result};
+use std::sync::Arc;
+
+pub struct LlmTransformer {
+    pub text_col: String,
+    pub out_col: String,
+    pub artifacts_dir: String,
+    pub max_new_tokens: usize,
+}
+
+impl LlmTransformer {
+    pub fn from_params(params: &Value) -> Result<Box<dyn Pipe>> {
+        Ok(Box::new(LlmTransformer {
+            text_col: params.str_or("textColumn", "text"),
+            out_col: params.str_or("outputColumn", "generated"),
+            artifacts_dir: params.str_or(
+                "artifactsDir",
+                super::model_predict::default_artifacts_dir().as_str(),
+            ),
+            max_new_tokens: params.u64_or("maxNewTokens", 16) as usize,
+        }))
+    }
+}
+
+/// Batched greedy decoding: every document advances one token per model
+/// call (windows ride together through the fixed-batch executable).
+pub fn generate_batched(llm: &TinyLlm, prompts: &[&str], n_new: usize) -> Result<Vec<Vec<u8>>> {
+    let t = llm.meta.llm_seq;
+    let mut seqs: Vec<Vec<i32>> = prompts
+        .iter()
+        .map(|p| p.bytes().map(|b| b as i32).collect())
+        .collect();
+    let offsets: Vec<usize> = seqs.iter().map(|s| s.len()).collect();
+    for _ in 0..n_new {
+        let windows: Vec<Vec<i32>> = seqs
+            .iter()
+            .map(|s| {
+                let start = s.len().saturating_sub(t);
+                let tail = &s[start..];
+                let mut w = vec![0i32; t];
+                w[t - tail.len()..].copy_from_slice(tail);
+                w
+            })
+            .collect();
+        let next = llm.next_tokens(&windows)?;
+        for (s, n) in seqs.iter_mut().zip(next) {
+            s.push(n);
+        }
+    }
+    Ok(seqs
+        .into_iter()
+        .zip(offsets)
+        .map(|(s, off)| s[off..].iter().map(|&x| x as u8).collect())
+        .collect())
+}
+
+impl Pipe for LlmTransformer {
+    fn type_name(&self) -> &str {
+        "LlmTransformer"
+    }
+
+    fn contract(&self) -> PipeContract {
+        PipeContract { arity: Some(1), ..Default::default() }
+    }
+
+    fn declared_metrics(&self) -> Vec<String> {
+        vec!["tokens_generated".into(), "token_latency".into()]
+    }
+
+    fn transform(&self, ctx: &PipeContext, inputs: &[Dataset]) -> Result<Vec<Dataset>> {
+        let ds = &inputs[0];
+        let idx = ds
+            .schema
+            .idx(&self.text_col)
+            .ok_or_else(|| DdpError::schema(format!("no column '{}'", self.text_col)))?;
+        let mut fields: Vec<(&str, FieldType)> = Vec::new();
+        let names = ds.schema.names();
+        for (i, n) in names.iter().enumerate() {
+            fields.push((n, ds.schema.field_type(i)));
+        }
+        fields.push((self.out_col.as_str(), FieldType::Str));
+        let out_schema = Schema::new(fields);
+
+        // instance-scope model (§3.7): loaded once per process
+        let artifacts = self.artifacts_dir.clone();
+        let rt = ctx.objects.get_or_init("pjrt-runtime", || {
+            ModelRuntime::cpu().expect("PJRT client")
+        });
+        let llm: Arc<TinyLlm> = ctx.objects.get_or_init(
+            &format!("tiny-llm@{artifacts}"),
+            move || TinyLlm::load(&rt, &artifacts).expect("load tiny_llm"),
+        );
+        let n_new = self.max_new_tokens;
+        let metrics = ctx.metrics.clone();
+        let out = ds.map_partitions(out_schema, move |rows: Vec<Row>| {
+            if rows.is_empty() {
+                return rows;
+            }
+            let t0 = std::time::Instant::now();
+            let prompts: Vec<&str> = rows
+                .iter()
+                .map(|r| r.get(idx).as_str().unwrap_or(""))
+                .collect();
+            let generated = generate_batched(&llm, &prompts, n_new).expect("generation");
+            let n_tokens = (rows.len() * n_new) as u64;
+            metrics.counter_add("pipe.LlmTransformer.tokens_generated", n_tokens);
+            metrics.observe(
+                "pipe.LlmTransformer.token_latency",
+                t0.elapsed().as_secs_f64() / n_tokens.max(1) as f64,
+            );
+            rows.into_iter()
+                .zip(generated)
+                .map(|(r, g)| {
+                    let mut fields = r.fields;
+                    fields.push(Field::Str(String::from_utf8_lossy(&g).to_string()));
+                    Row::new(fields)
+                })
+                .collect()
+        });
+        Ok(vec![out])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::row;
+
+    fn ready() -> bool {
+        std::path::Path::new(&crate::pipes::model_predict::default_artifacts_dir())
+            .join("tiny_llm.hlo.txt")
+            .exists()
+    }
+
+    #[test]
+    fn generates_column_for_each_row() {
+        if !ready() {
+            return;
+        }
+        let ctx = PipeContext::for_tests();
+        let schema = Schema::new(vec![("id", FieldType::I64), ("text", FieldType::Str)]);
+        let ds = Dataset::from_rows(
+            "in",
+            schema,
+            vec![row!(1i64, "translate: hello"), row!(2i64, "translate: world")],
+            2,
+        );
+        let pipe = LlmTransformer {
+            text_col: "text".into(),
+            out_col: "generated".into(),
+            artifacts_dir: super::super::model_predict::default_artifacts_dir(),
+            max_new_tokens: 3,
+        };
+        let out = pipe.transform(&ctx, &[ds]).unwrap();
+        let rows = ctx.engine.collect_rows(&out[0]).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.get(2).as_str().is_some());
+        }
+        assert_eq!(ctx.metrics.counter("pipe.LlmTransformer.tokens_generated"), 6);
+    }
+
+    #[test]
+    fn batched_generation_matches_single() {
+        if !ready() {
+            return;
+        }
+        let rt = ModelRuntime::cpu().unwrap();
+        let llm = TinyLlm::load(&rt, super::super::model_predict::default_artifacts_dir()).unwrap();
+        let single = llm.generate(b"hello world test", 4).unwrap();
+        let batched = generate_batched(&llm, &["hello world test"], 4).unwrap();
+        assert_eq!(batched[0], single);
+    }
+}

@@ -1,0 +1,89 @@
+//! The standard pipe library — the §3.8 "centralized pipe repository"
+//! from which declarative pipelines compose. Every pipe registers a
+//! factory keyed by its `transformerType`; `install_standard_pipes` wires
+//! them into a registry (the process-global one does this lazily).
+
+pub mod aggregate;
+pub mod preprocess;
+pub mod dedup;
+pub mod feature_gen;
+pub mod model_predict;
+pub mod langpart;
+pub mod postprocess;
+pub mod sql;
+pub mod matching;
+pub mod llm;
+
+use crate::ddp::context::PipeContext;
+use crate::ddp::pipe::{Pipe, PipeContract};
+use crate::ddp::registry::PipeRegistry;
+use crate::engine::dataset::Dataset;
+use crate::json::Value;
+use crate::util::error::Result;
+
+/// Pass-through pipe (wiring tests, template configs).
+pub struct IdentityTransformer;
+
+impl Pipe for IdentityTransformer {
+    fn type_name(&self) -> &str {
+        "IdentityTransformer"
+    }
+
+    fn contract(&self) -> PipeContract {
+        PipeContract { arity: Some(1), ..Default::default() }
+    }
+
+    fn transform(&self, _: &PipeContext, inputs: &[Dataset]) -> Result<Vec<Dataset>> {
+        Ok(vec![inputs[0].clone()])
+    }
+}
+
+/// Install every built-in pipe into a registry.
+pub fn install_standard_pipes(reg: &PipeRegistry) {
+    reg.register("IdentityTransformer", |_: &Value| Ok(Box::new(IdentityTransformer)));
+    reg.register("PreprocessTransformer", preprocess::PreprocessTransformer::from_params);
+    reg.register("DedupTransformer", dedup::DedupTransformer::from_params);
+    reg.register(
+        "FeatureGenerationTransformer",
+        feature_gen::FeatureGenerationTransformer::from_params,
+    );
+    reg.register(
+        "ModelPredictionTransformer",
+        model_predict::ModelPredictionTransformer::from_params,
+    );
+    reg.register(
+        "LanguagePartitionTransformer",
+        langpart::LanguagePartitionTransformer::from_params,
+    );
+    reg.register("PostProcessTransformer", postprocess::PostProcessTransformer::from_params);
+    reg.register("SqlFilterTransformer", sql::SqlFilterTransformer::from_params);
+    reg.register("MatchingTransformer", matching::MatchingTransformer::from_params);
+    reg.register("LlmTransformer", llm::LlmTransformer::from_params);
+    reg.register("AggregateTransformer", aggregate::AggregateTransformer::from_params);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_registry_has_standard_pipes() {
+        let reg = &crate::ddp::registry::GLOBAL;
+        for name in [
+            "IdentityTransformer",
+            "PreprocessTransformer",
+            "DedupTransformer",
+            "FeatureGenerationTransformer",
+            "ModelPredictionTransformer",
+            "LanguagePartitionTransformer",
+            "PostProcessTransformer",
+            "SqlFilterTransformer",
+            "MatchingTransformer",
+            "LlmTransformer",
+            "AggregateTransformer",
+        ] {
+            assert!(reg.contains(name), "missing {name}");
+        }
+        assert!(reg.type_names().len() >= 10);
+    }
+}

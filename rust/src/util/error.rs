@@ -1,0 +1,119 @@
+//! Unified error type for the DDP stack.
+
+use thiserror::Error;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, DdpError>;
+
+/// Every failure mode in the stack, from config parsing to PJRT execution.
+#[derive(Error, Debug)]
+pub enum DdpError {
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("json error at offset {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    #[error("dag error: {0}")]
+    Dag(String),
+
+    #[error("validation error: {0}")]
+    Validation(String),
+
+    #[error("pipe '{pipe}' failed: {msg}")]
+    Pipe { pipe: String, msg: String },
+
+    #[error("engine error: {0}")]
+    Engine(String),
+
+    #[error("shuffle error: {0}")]
+    Shuffle(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("storage error [{backend}]: {msg}")]
+    Storage { backend: String, msg: String },
+
+    #[error("format error [{format}]: {msg}")]
+    Format { format: String, msg: String },
+
+    #[error("security error: {0}")]
+    Security(String),
+
+    #[error("schema mismatch: {0}")]
+    Schema(String),
+
+    #[error("runtime (PJRT) error: {0}")]
+    Runtime(String),
+
+    #[error("model error: {0}")]
+    Model(String),
+
+    #[error("metrics error: {0}")]
+    Metrics(String),
+
+    #[error("task failed after {attempts} attempts: {msg}")]
+    TaskFailed { attempts: u32, msg: String },
+
+    #[error("{0}")]
+    Other(String),
+}
+
+impl DdpError {
+    pub fn config(msg: impl Into<String>) -> Self {
+        DdpError::Config(msg.into())
+    }
+    pub fn dag(msg: impl Into<String>) -> Self {
+        DdpError::Dag(msg.into())
+    }
+    pub fn validation(msg: impl Into<String>) -> Self {
+        DdpError::Validation(msg.into())
+    }
+    pub fn pipe(pipe: impl Into<String>, msg: impl Into<String>) -> Self {
+        DdpError::Pipe { pipe: pipe.into(), msg: msg.into() }
+    }
+    pub fn engine(msg: impl Into<String>) -> Self {
+        DdpError::Engine(msg.into())
+    }
+    pub fn storage(backend: impl Into<String>, msg: impl Into<String>) -> Self {
+        DdpError::Storage { backend: backend.into(), msg: msg.into() }
+    }
+    pub fn format(format: impl Into<String>, msg: impl Into<String>) -> Self {
+        DdpError::Format { format: format.into(), msg: msg.into() }
+    }
+    pub fn security(msg: impl Into<String>) -> Self {
+        DdpError::Security(msg.into())
+    }
+    pub fn schema(msg: impl Into<String>) -> Self {
+        DdpError::Schema(msg.into())
+    }
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        DdpError::Runtime(msg.into())
+    }
+    pub fn model(msg: impl Into<String>) -> Self {
+        DdpError::Model(msg.into())
+    }
+    pub fn other(msg: impl Into<String>) -> Self {
+        DdpError::Other(msg.into())
+    }
+}
+
+impl From<xla::Error> for DdpError {
+    fn from(e: xla::Error) -> Self {
+        DdpError::Runtime(format!("{e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = DdpError::pipe("Dedup", "boom");
+        assert_eq!(e.to_string(), "pipe 'Dedup' failed: boom");
+        let e = DdpError::Json { offset: 12, msg: "bad token".into() };
+        assert!(e.to_string().contains("offset 12"));
+    }
+}

@@ -1,0 +1,61 @@
+//! Minimal `log` facade backend writing to stderr with level filtering via
+//! `DDP_LOG` (error|warn|info|debug|trace; default info).
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::Once;
+
+struct StderrLogger {
+    max: Level,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.max
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!(
+                "[{:5}] {}: {}",
+                record.level(),
+                record.target(),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+static INIT: Once = Once::new();
+
+/// Install the logger once; safe to call repeatedly (tests, examples).
+pub fn init() {
+    INIT.call_once(|| {
+        let level = match std::env::var("DDP_LOG").as_deref() {
+            Ok("error") => Level::Error,
+            Ok("warn") => Level::Warn,
+            Ok("debug") => Level::Debug,
+            Ok("trace") => Level::Trace,
+            _ => Level::Info,
+        };
+        let _ = log::set_boxed_logger(Box::new(StderrLogger { max: level }));
+        log::set_max_level(match level {
+            Level::Error => LevelFilter::Error,
+            Level::Warn => LevelFilter::Warn,
+            Level::Info => LevelFilter::Info,
+            Level::Debug => LevelFilter::Debug,
+            Level::Trace => LevelFilter::Trace,
+        });
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke");
+    }
+}

@@ -1,0 +1,84 @@
+//! Utility substrate: PRNG, clocks, thread pool, errors, logging, and a
+//! small property-testing kit. These replace crates (tokio, rayon,
+//! proptest) that are unavailable in the offline vendor set.
+
+pub mod rng;
+pub mod clock;
+pub mod threadpool;
+pub mod error;
+pub mod logger;
+pub mod testkit;
+pub mod cli;
+
+pub use clock::{Clock, VirtualClock, WallClock};
+pub use error::{DdpError, Result};
+pub use rng::Rng64;
+pub use threadpool::ThreadPool;
+
+/// FNV-1a 64-bit hash — the canonical hash used across the repo for
+/// feature hashing and shuffle partitioning. Must stay bit-identical to
+/// `python/compile/featurize.py::fnv1a64`.
+#[inline]
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Human-readable duration (e.g. "1.23s", "45.6ms").
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 3600.0 {
+        format!("{:.2}h", secs / 3600.0)
+    } else if secs >= 60.0 {
+        format!("{:.2}min", secs / 60.0)
+    } else if secs >= 1.0 {
+        format!("{:.3}s", secs)
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else {
+        format!("{:.1}us", secs * 1e6)
+    }
+}
+
+/// Human-readable byte count.
+pub fn fmt_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{}B", n)
+    } else {
+        format!("{:.2}{}", v, UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_vectors() {
+        // Reference values from the FNV spec (also asserted in python tests
+        // for cross-language parity).
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_duration(7200.0), "2.00h");
+        assert_eq!(fmt_duration(90.0), "1.50min");
+        assert_eq!(fmt_duration(1.5), "1.500s");
+        assert_eq!(fmt_duration(0.0015), "1.500ms");
+        assert_eq!(fmt_bytes(10), "10B");
+        assert_eq!(fmt_bytes(2048), "2.00KiB");
+    }
+}

@@ -1,0 +1,146 @@
+//! Tiny property-testing kit (proptest is not in the offline vendor set).
+//!
+//! Usage:
+//! ```ignore
+//! use crate::util::testkit::*;
+//! #[test]
+//! fn prop_roundtrip() {
+//!     property(200, |g| {
+//!         let s = g.string(0, 64);
+//!         assert_eq!(decode(&encode(&s)), s);
+//!     });
+//! }
+//! ```
+//!
+//! Each case runs with a deterministic per-case seed; on failure the seed is
+//! printed so the case can be replayed with `DDP_PROP_SEED`.
+
+use super::rng::Rng64;
+
+/// Generator handle passed to property bodies.
+pub struct Gen {
+    rng: Rng64,
+    pub case: u64,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Rng64 {
+        &mut self.rng
+    }
+
+    pub fn u64(&mut self, bound: u64) -> u64 {
+        self.rng.gen_range(bound.max(1))
+    }
+
+    pub fn usize(&mut self, bound: usize) -> usize {
+        self.rng.gen_range(bound.max(1) as u64) as usize
+    }
+
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + self.rng.gen_range((hi - lo).max(1) as u64) as i64
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.gen_f64_range(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.gen_bool(0.5)
+    }
+
+    /// ASCII-ish string with occasional multibyte chars to stress UTF-8
+    /// handling.
+    pub fn string(&mut self, min: usize, max: usize) -> String {
+        let len = min + self.usize(max - min + 1);
+        let mut s = String::with_capacity(len);
+        for _ in 0..len {
+            let c = match self.u64(20) {
+                0 => 'é',
+                1 => 'ß',
+                2 => '中',
+                3 => ' ',
+                4 => '"',
+                5 => '\\',
+                6 => '\n',
+                _ => (b'a' + self.u64(26) as u8) as char,
+            };
+            s.push(c);
+        }
+        s
+    }
+
+    /// Plain lowercase identifier.
+    pub fn ident(&mut self, min: usize, max: usize) -> String {
+        let len = (min + self.usize(max - min + 1)).max(1);
+        (0..len).map(|_| (b'a' + self.u64(26) as u8) as char).collect()
+    }
+
+    pub fn vec<T>(&mut self, min: usize, max: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = min + self.usize(max - min + 1);
+        (0..len).map(|_| f(self)).collect()
+    }
+}
+
+/// Run `cases` deterministic random cases. Set `DDP_PROP_SEED` to replay a
+/// single failing case.
+pub fn property(cases: u64, mut body: impl FnMut(&mut Gen)) {
+    if let Ok(seed) = std::env::var("DDP_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("DDP_PROP_SEED must be u64");
+        let mut g = Gen { rng: Rng64::new(seed), case: 0 };
+        body(&mut g);
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0x5eed_0000_0000_0000u64 ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: Rng64::new(seed), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut g)));
+        if let Err(e) = result {
+            eprintln!("property failed at case {case}; replay with DDP_PROP_SEED={seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol || (x.is_nan() && y.is_nan()),
+            "element {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_runs_all_cases() {
+        let mut n = 0;
+        property(50, |_| n += 1);
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    fn gen_string_len_bounds() {
+        property(100, |g| {
+            let s = g.string(2, 10);
+            let chars = s.chars().count();
+            assert!((2..=12).contains(&chars));
+        });
+    }
+
+    #[test]
+    fn allclose_basic() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-7, 2.0], 1e-5, 1e-5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn allclose_detects_mismatch() {
+        assert_allclose(&[1.0], &[2.0], 1e-5, 1e-5);
+    }
+}

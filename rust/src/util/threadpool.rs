@@ -1,0 +1,150 @@
+//! Fixed-size thread pool with panic containment — the engine's task
+//! execution substrate (tokio/rayon are unavailable offline; a Spark-like
+//! stage executor only needs fork/join over blocking tasks anyway).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed pool of worker threads consuming from a shared queue.
+pub struct ThreadPool {
+    workers: Vec<thread::JoinHandle<()>>,
+    tx: mpsc::Sender<Message>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Message>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&rx);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("ddp-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Message::Run(job)) => {
+                                // Contain panics: a panicking task must not
+                                // take the worker down; the scope() caller
+                                // observes the failure via its channel.
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
+                            Ok(Message::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { workers, tx, size }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Fire-and-forget task.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.send(Message::Run(Box::new(f))).expect("pool closed");
+    }
+
+    /// Run `tasks` and collect results in input order. Panicking tasks
+    /// yield `None` in their slot.
+    pub fn map<T, F>(&self, tasks: Vec<F>) -> Vec<Option<T>>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = tasks.len();
+        let (rtx, rrx) = mpsc::channel::<(usize, Option<T>)>();
+        for (i, task) in tasks.into_iter().enumerate() {
+            let rtx = rtx.clone();
+            self.execute(move || {
+                let out = catch_unwind(AssertUnwindSafe(task)).ok();
+                let _ = rtx.send((i, out));
+            });
+        }
+        drop(rtx);
+        let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            if let Ok((i, v)) = rrx.recv() {
+                results[i] = v;
+            }
+        }
+        results
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Message::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    #[test]
+    fn runs_all_tasks() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU32::new(0));
+        let tasks: Vec<_> = (0..100)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    1u32
+                }
+            })
+            .collect();
+        let results = pool.map(tasks);
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+        assert!(results.iter().all(|r| r == &Some(1)));
+    }
+
+    #[test]
+    fn preserves_order() {
+        let pool = ThreadPool::new(3);
+        let tasks: Vec<_> = (0..50).map(|i| move || i * 2).collect();
+        let results = pool.map(tasks);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(*r, Some(i * 2));
+        }
+    }
+
+    #[test]
+    fn panic_contained() {
+        let pool = ThreadPool::new(2);
+        let tasks: Vec<Box<dyn FnOnce() -> u32 + Send>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("boom")),
+            Box::new(|| 3),
+        ];
+        let results = pool.map(tasks);
+        assert_eq!(results[0], Some(1));
+        assert_eq!(results[1], None);
+        assert_eq!(results[2], Some(3));
+        // pool still alive
+        let again = pool.map(vec![|| 7u32]);
+        assert_eq!(again[0], Some(7));
+    }
+}

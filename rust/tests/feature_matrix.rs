@@ -1,0 +1,134 @@
+//! Table 1 / Table 2 capability matrix, asserted: each ✓ the paper claims
+//! for DDP corresponds to a working code path in this repo.
+
+use ddp::config::{PipelineSpec, PAPER_EXAMPLE};
+use ddp::ddp::{registry, DataDag, DriverConfig, PipelineDriver};
+use ddp::engine::row::{FieldType, Schema};
+use ddp::engine::{Dataset, EngineConfig, EngineCtx};
+use ddp::io::IoRegistry;
+use ddp::row;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Table 1: Distributed Computing — horizontal scale-out via partitioned
+/// execution over a worker pool.
+#[test]
+fn distributed_computation() {
+    let ctx = EngineCtx::new(EngineConfig { workers: 4, ..Default::default() });
+    let schema = Schema::new(vec![("x", FieldType::I64)]);
+    let ds = Dataset::from_rows("n", schema, (0..1000).map(|i| row!(i as i64)).collect(), 16);
+    let out = ds.map(ds.schema.clone(), |r| row!(r.get(0).as_i64().unwrap() * 2));
+    assert_eq!(ctx.count(&out).unwrap(), 1000);
+    assert!(ctx.stats.snapshot().tasks_launched >= 16);
+}
+
+/// Table 1: Big Data Support — storage-platform integration (S3-like,
+/// NoSQL-like) behind declarative locations.
+#[test]
+fn big_data_support() {
+    let reg = IoRegistry::with_sim_cloud();
+    assert!(reg.backend("s3").is_ok());
+    assert!(reg.backend("kv").is_ok());
+    assert!(reg.backend("mem").is_ok());
+    assert!(reg.backend("file").is_ok());
+}
+
+/// Table 1: Spark Runtime Integration + Spark Dev Integration — local
+/// executable workflows for debugging and tests (this very test).
+#[test]
+fn local_dev_integration() {
+    let mut spec = PipelineSpec::parse(PAPER_EXAMPLE).unwrap();
+    spec.settings.metrics_cadence_secs = 0.01;
+    let driver = PipelineDriver::new(
+        spec,
+        registry::GLOBAL.clone(),
+        Arc::new(IoRegistry::with_sim_cloud()),
+        DriverConfig::default(),
+    )
+    .unwrap();
+    let schema = Schema::new(vec![("id", FieldType::I64), ("text", FieldType::Str)]);
+    let mut provided = BTreeMap::new();
+    provided.insert(
+        "InputData".to_string(),
+        Dataset::from_rows(
+            "InputData",
+            schema,
+            vec![row!(1i64, "the of and to in is was for that with")],
+            1,
+        ),
+    );
+    let report = driver.run(provided).unwrap();
+    assert_eq!(report.pipes.len(), 4);
+}
+
+/// Table 2: Multi Step Workflow — DAG-ordered execution of a declared
+/// multi-stage pipeline (tokenization→embedding→clustering analogue).
+#[test]
+fn multi_step_workflow() {
+    let spec = PipelineSpec::parse(PAPER_EXAMPLE).unwrap();
+    let dag = DataDag::build(&spec).unwrap();
+    assert_eq!(dag.order.len(), 4);
+    assert_eq!(dag.order, vec![0, 1, 2, 3]);
+}
+
+/// Table 2: UI Assistant — workflow visualization renders.
+#[test]
+fn ui_assistant_visualization() {
+    let spec = PipelineSpec::parse(PAPER_EXAMPLE).unwrap();
+    let dag = DataDag::build(&spec).unwrap();
+    let dot = ddp::ddp::viz::to_dot(&spec, &dag, &Default::default());
+    assert!(dot.contains("digraph"));
+    assert!(dot.contains("[0] PreprocessTransformer"));
+}
+
+/// Table 2: Spark Interface — direct control of runtime configuration
+/// (worker count, partitions, cache budget, retry policy).
+#[test]
+fn spark_interface_config() {
+    let cfg = EngineConfig {
+        workers: 2,
+        default_partitions: 3,
+        cache_budget_bytes: 1 << 20,
+        fusion: false,
+        max_task_attempts: 5,
+        record_trace: true,
+    };
+    let ctx = EngineCtx::new(cfg.clone());
+    assert_eq!(ctx.cfg.workers, 2);
+    assert_eq!(ctx.cfg.max_task_attempts, 5);
+}
+
+/// Table 1: ML Integration — the embedded PJRT model path (skipped if
+/// artifacts are absent).
+#[test]
+fn ml_integration() {
+    let artifacts = ddp::pipes::model_predict::default_artifacts_dir();
+    if !std::path::Path::new(&artifacts).join("model_meta.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = ddp::runtime::ModelRuntime::cpu().unwrap();
+    let det = ddp::ml::embedded::LangDetector::load(&rt, &artifacts).unwrap();
+    let langs = det.detect(&["the of and to in is was for"]).unwrap();
+    assert_eq!(langs[0], "en");
+}
+
+/// §3.8 self-service ecosystem: the pipe repository is discoverable and
+/// configs validate against it.
+#[test]
+fn self_service_pipe_repository() {
+    let names = registry::GLOBAL.type_names();
+    assert!(names.len() >= 10);
+    // unknown pipes are rejected at driver construction (validation)
+    let spec = PipelineSpec::parse(
+        r#"[{"inputDataId": "A", "transformerType": "NotAPipe", "outputDataId": "B"}]"#,
+    )
+    .unwrap();
+    assert!(PipelineDriver::new(
+        spec,
+        registry::GLOBAL.clone(),
+        Arc::new(IoRegistry::new()),
+        DriverConfig::default(),
+    )
+    .is_err());
+}

@@ -1,0 +1,226 @@
+//! Cross-module property tests: engine operators vs naive in-memory
+//! references over randomized data, format roundtrips, SQL evaluator
+//! laws, DAG invariants.
+
+use ddp::config::PipelineSpec;
+use ddp::ddp::DataDag;
+use ddp::engine::row::{Field, FieldType, Row, Schema};
+use ddp::engine::{Dataset, EngineConfig, EngineCtx, JoinKind};
+use ddp::row;
+use ddp::util::testkit::{property, Gen};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn ctx() -> Arc<EngineCtx> {
+    EngineCtx::new(EngineConfig { workers: 2, ..Default::default() })
+}
+
+fn rand_kv_rows(g: &mut Gen, n: usize, key_space: u64) -> Vec<Row> {
+    (0..n)
+        .map(|_| row!(g.u64(key_space) as i64, g.i64(-100, 100)))
+        .collect()
+}
+
+#[test]
+fn prop_reduce_by_key_matches_hashmap() {
+    let c = ctx();
+    let schema = Schema::new(vec![("k", FieldType::I64), ("v", FieldType::I64)]);
+    property(40, |g| {
+        let n = g.usize(120);
+        let rows = rand_kv_rows(g, n, 10);
+        let mut expect: HashMap<i64, i64> = HashMap::new();
+        for r in &rows {
+            *expect.entry(r.get(0).as_i64().unwrap()).or_insert(0) += r.get(1).as_i64().unwrap();
+        }
+        let parts = 1 + g.usize(5);
+        let ds = Dataset::from_rows("kv", schema.clone(), rows, 1 + g.usize(4));
+        let out = ds.reduce_by_key(
+            parts,
+            |r| r.get(0).clone(),
+            |acc, r| row!(acc.get(0).as_i64().unwrap(),
+                          acc.get(1).as_i64().unwrap() + r.get(1).as_i64().unwrap()),
+        );
+        let got: HashMap<i64, i64> = c
+            .collect_rows(&out)
+            .unwrap()
+            .iter()
+            .map(|r| (r.get(0).as_i64().unwrap(), r.get(1).as_i64().unwrap()))
+            .collect();
+        assert_eq!(got, expect);
+    });
+}
+
+#[test]
+fn prop_distinct_matches_hashset() {
+    let c = ctx();
+    let schema = Schema::new(vec![("k", FieldType::I64), ("v", FieldType::I64)]);
+    property(40, |g| {
+        let n = g.usize(100);
+        let rows = rand_kv_rows(g, n, 8);
+        let expect: std::collections::HashSet<Row> = rows.iter().cloned().collect();
+        let ds = Dataset::from_rows("d", schema.clone(), rows, 1 + g.usize(4));
+        let got = c.collect_rows(&ds.distinct(1 + g.usize(5))).unwrap();
+        assert_eq!(got.len(), expect.len());
+        assert!(got.iter().all(|r| expect.contains(r)));
+    });
+}
+
+#[test]
+fn prop_join_matches_nested_loop() {
+    let c = ctx();
+    let ls = Schema::new(vec![("k", FieldType::I64), ("l", FieldType::I64)]);
+    let rs = Schema::new(vec![("k", FieldType::I64), ("r", FieldType::I64)]);
+    property(30, |g| {
+        let nl = g.usize(40);
+        let left = rand_kv_rows(g, nl, 6);
+        let nr = g.usize(40);
+        let right = rand_kv_rows(g, nr, 6);
+        let mut expect = 0usize;
+        for a in &left {
+            for b in &right {
+                if a.get(0) == b.get(0) {
+                    expect += 1;
+                }
+            }
+        }
+        let lds = Dataset::from_rows("l", ls.clone(), left, 1 + g.usize(3));
+        let rds = Dataset::from_rows("r", rs.clone(), right, 1 + g.usize(3));
+        let out = lds.join(
+            &rds,
+            Schema::of_names(&["k", "l", "k2", "r"]),
+            JoinKind::Inner,
+            1 + g.usize(4),
+            |r| r.get(0).clone(),
+            |r| r.get(0).clone(),
+        );
+        assert_eq!(c.count(&out).unwrap(), expect);
+    });
+}
+
+#[test]
+fn prop_fusion_invariant() {
+    // fused and materialized execution agree on arbitrary op chains
+    let schema = Schema::new(vec![("x", FieldType::I64)]);
+    property(25, |g| {
+        let rows: Vec<Row> = (0..g.usize(80)).map(|_| row!(g.i64(-50, 50))).collect();
+        let ops = 1 + g.usize(4);
+        let mk = |fusion: bool, rows: Vec<Row>| {
+            let c = EngineCtx::new(EngineConfig { workers: 2, fusion, ..Default::default() });
+            let mut ds = Dataset::from_rows("p", schema.clone(), rows, 3);
+            for i in 0..ops {
+                ds = match i % 3 {
+                    0 => ds.map(schema.clone(), |r| row!(r.get(0).as_i64().unwrap() + 1)),
+                    1 => ds.filter(|r| r.get(0).as_i64().unwrap() % 2 == 0),
+                    _ => ds.flat_map(schema.clone(), |r| {
+                        vec![r.clone(), row!(-r.get(0).as_i64().unwrap())]
+                    }),
+                };
+            }
+            let mut v: Vec<i64> = c
+                .collect_rows(&ds)
+                .unwrap()
+                .iter()
+                .map(|r| r.get(0).as_i64().unwrap())
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(mk(true, rows.clone()), mk(false, rows));
+    });
+}
+
+#[test]
+fn prop_formats_roundtrip_random_rows() {
+    let schema = Schema::new(vec![
+        ("id", FieldType::I64),
+        ("text", FieldType::Str),
+        ("score", FieldType::F64),
+        ("flag", FieldType::Bool),
+    ]);
+    property(40, |g| {
+        let rows: Vec<Row> = (0..g.usize(15))
+            .map(|_| {
+                if g.bool() {
+                    Row::new(vec![
+                        Field::I64(g.i64(-1000, 1000)),
+                        Field::Str(g.string(0, 24)),
+                        Field::F64((g.i64(-1000, 1000) as f64) / 16.0),
+                        Field::Bool(g.bool()),
+                    ])
+                } else {
+                    Row::new(vec![Field::Null, Field::Str(g.string(0, 8)), Field::Null, Field::Null])
+                }
+            })
+            .collect();
+        // csv
+        let text = ddp::io::csv::encode(&schema, &rows);
+        assert_eq!(ddp::io::csv::decode(&schema, &text).unwrap(), rows);
+        // jsonl
+        let text = ddp::io::jsonl::encode(&schema, &rows);
+        assert_eq!(ddp::io::jsonl::decode(&schema, &text).unwrap(), rows);
+        // colbin
+        let blob = ddp::io::colbin::encode(&schema, &rows).unwrap();
+        assert_eq!(ddp::io::colbin::decode(&schema, &blob).unwrap(), rows);
+    });
+}
+
+#[test]
+fn prop_encryption_roundtrip_any_mode() {
+    use ddp::security::{decrypt_blob, encrypt_blob, EncryptionMode, KeyChain, MasterKey};
+    let chain = KeyChain::new(MasterKey::from_passphrase("prop"));
+    property(40, |g| {
+        let data: Vec<u8> = (0..g.usize(300)).map(|_| g.u64(256) as u8).collect();
+        for mode in [
+            EncryptionMode::ServiceSide,
+            EncryptionMode::DatasetLevel,
+            EncryptionMode::RecordLevel,
+        ] {
+            let id = g.ident(1, 8);
+            let ct = encrypt_blob(&chain, mode, &id, &data).unwrap();
+            let pt = decrypt_blob(&chain, mode, &id, &ct).unwrap();
+            if mode == EncryptionMode::RecordLevel {
+                // line-oriented mode normalizes trailing newlines
+                let expect: Vec<u8> = data
+                    .split(|&b| b == b'\n')
+                    .filter(|l| !l.is_empty())
+                    .flat_map(|l| l.iter().copied().chain(std::iter::once(b'\n')))
+                    .collect();
+                assert_eq!(pt, expect);
+            } else {
+                assert_eq!(pt, data);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_dag_order_is_valid_topsort() {
+    // random DAG configs: chain/diamond mixes must topo-sort consistently
+    property(40, |g| {
+        let n = 2 + g.usize(6);
+        let mut pipes = Vec::new();
+        for i in 0..n {
+            // each pipe consumes a random earlier anchor (or the source)
+            let input = if i == 0 {
+                "src".to_string()
+            } else {
+                format!("d{}", g.usize(i))
+            };
+            pipes.push(format!(
+                r#"{{"inputDataId": "{input}", "transformerType": "X", "outputDataId": "d{i}", "name": "p{i}"}}"#
+            ));
+        }
+        let spec = PipelineSpec::parse(&format!("[{}]", pipes.join(","))).unwrap();
+        let dag = DataDag::build(&spec).unwrap();
+        // validity: every pipe appears after the producer of its input
+        let pos: HashMap<usize, usize> =
+            dag.order.iter().enumerate().map(|(i, &p)| (p, i)).collect();
+        for (i, pipe) in spec.pipes.iter().enumerate() {
+            for inp in &pipe.input_data_ids {
+                if let Some(&producer) = dag.producer.get(inp) {
+                    assert!(pos[&producer] < pos[&i], "{inp} produced after use");
+                }
+            }
+        }
+    });
+}
