@@ -197,6 +197,10 @@ pub struct PipelineSettings {
     pub metrics_cadence_secs: f64,
     pub default_partitions: usize,
     pub workers: usize,
+    /// upper bound on pipes executing concurrently in the stage-parallel
+    /// scheduler; `0` = auto (use `workers`), `1` = serial (exact legacy
+    /// topo-order execution)
+    pub max_concurrent_pipes: usize,
 }
 
 impl Default for PipelineSettings {
@@ -205,6 +209,18 @@ impl Default for PipelineSettings {
             metrics_cadence_secs: 30.0, // the paper's default
             default_partitions: 8,
             workers: 4,
+            max_concurrent_pipes: 0,
+        }
+    }
+}
+
+impl PipelineSettings {
+    /// Resolve the effective scheduler width (`0` = auto = `workers`).
+    pub fn effective_max_concurrent_pipes(&self) -> usize {
+        if self.max_concurrent_pipes == 0 {
+            self.workers.max(1)
+        } else {
+            self.max_concurrent_pipes
         }
     }
 }
@@ -243,6 +259,8 @@ impl PipelineSpec {
             settings.default_partitions =
                 s.u64_or("defaultPartitions", settings.default_partitions as u64) as usize;
             settings.workers = s.u64_or("workers", settings.workers as u64) as usize;
+            settings.max_concurrent_pipes =
+                s.u64_or("maxConcurrentPipes", settings.max_concurrent_pipes as u64) as usize;
         }
 
         let mut data = BTreeMap::new();
@@ -403,6 +421,32 @@ mod tests {
         assert!(PipelineSpec::parse(r#"[{"transformerType": "X", "outputDataId": "o"}]"#).is_err()); // no input
         assert!(PipelineSpec::parse(r#"[{"inputDataId": "i", "outputDataId": "o"}]"#).is_err()); // no type
         assert!(PipelineSpec::parse("42").is_err());
+    }
+
+    #[test]
+    fn max_concurrent_pipes_setting() {
+        // default: auto (0) resolves to the worker count
+        let spec = PipelineSpec::parse(PAPER_EXAMPLE).unwrap();
+        assert_eq!(spec.settings.max_concurrent_pipes, 0);
+        assert_eq!(
+            spec.settings.effective_max_concurrent_pipes(),
+            spec.settings.workers
+        );
+
+        let text = r#"{
+          "settings": {"maxConcurrentPipes": 3, "workers": 8},
+          "pipes": [{"inputDataId": "A", "transformerType": "X", "outputDataId": "B"}]
+        }"#;
+        let spec = PipelineSpec::parse(text).unwrap();
+        assert_eq!(spec.settings.max_concurrent_pipes, 3);
+        assert_eq!(spec.settings.effective_max_concurrent_pipes(), 3);
+
+        let text = r#"{
+          "settings": {"maxConcurrentPipes": 1},
+          "pipes": [{"inputDataId": "A", "transformerType": "X", "outputDataId": "B"}]
+        }"#;
+        let spec = PipelineSpec::parse(text).unwrap();
+        assert_eq!(spec.settings.effective_max_concurrent_pipes(), 1);
     }
 
     #[test]

@@ -1,6 +1,13 @@
 //! Per-run context handed to every pipe: engine handle, metrics, I/O
 //! registry, instance-scope object pool, clock, and the explicit-state
 //! cleanup ledger (§3.2).
+//!
+//! The ledger is *scoped*: while the driver executes pipe `i`, datasets
+//! registered through [`PipeContext::persist_scoped`] are tagged with
+//! `i`, and only that pipe's completion drains them. Under the
+//! stage-parallel scheduler this is what keeps §3.2 cleanup correct —
+//! pipe A finishing must not tear down state pipe B registered while
+//! running concurrently.
 
 use super::lifecycle::ObjectPool;
 use crate::engine::dataset::Dataset;
@@ -8,7 +15,13 @@ use crate::engine::executor::{EngineConfig, EngineCtx};
 use crate::io::IoRegistry;
 use crate::metrics::MetricsRegistry;
 use crate::util::clock::{self, ClockRef};
+use std::cell::Cell;
 use std::sync::{Arc, Mutex};
+
+thread_local! {
+    /// The pipe whose `transform` is running on this thread, if any.
+    static CLEANUP_SCOPE: Cell<Option<usize>> = const { Cell::new(None) };
+}
 
 /// Everything a pipe may touch beyond its input datasets.
 pub struct PipeContext {
@@ -17,8 +30,9 @@ pub struct PipeContext {
     pub io: Arc<IoRegistry>,
     pub objects: Arc<ObjectPool>,
     pub clock: ClockRef,
-    /// datasets registered for cleanup when the current pipe completes
-    cleanups: Mutex<Vec<u64>>,
+    /// datasets registered for cleanup, tagged with the registering pipe
+    /// (None when registered outside any pipe scope)
+    cleanups: Mutex<Vec<(Option<usize>, u64)>>,
 }
 
 impl PipeContext {
@@ -48,11 +62,20 @@ impl PipeContext {
         )
     }
 
+    /// Enter pipe `pipe`'s cleanup scope on this thread; the scope is
+    /// restored when the guard drops. Used by the driver around each
+    /// `transform` call.
+    pub fn enter_scope(&self, pipe: usize) -> ScopeGuard {
+        let prev = CLEANUP_SCOPE.with(|s| s.replace(Some(pipe)));
+        ScopeGuard { prev }
+    }
+
     /// Persist an intermediate dataset *and* register it for cleanup when
     /// the calling pipe completes — the paper's "delete clause" (§3.2).
     pub fn persist_scoped(&self, ds: &Dataset) {
         self.engine.persist(ds);
-        self.cleanups.lock().unwrap().push(ds.id);
+        let scope = CLEANUP_SCOPE.with(|s| s.get());
+        self.cleanups.lock().unwrap().push((scope, ds.id));
     }
 
     /// Persist without automatic cleanup (driver-managed anchors).
@@ -60,14 +83,51 @@ impl PipeContext {
         self.engine.persist(ds);
     }
 
-    /// Run the cleanup ledger (called by the driver after each pipe).
+    /// Drain the whole cleanup ledger (end of run, failure path, tests).
     pub fn run_cleanups(&self) -> usize {
-        let ids: Vec<u64> = std::mem::take(&mut *self.cleanups.lock().unwrap());
+        let ids: Vec<u64> = std::mem::take(&mut *self.cleanups.lock().unwrap())
+            .into_iter()
+            .map(|(_, id)| id)
+            .collect();
         let n = ids.len();
         for id in ids {
             self.engine.cache.unpersist(id);
         }
         n
+    }
+
+    /// Drain only the entries pipe `pipe` registered (called by the
+    /// driver when that pipe completes). Entries registered outside any
+    /// scope are left for the end-of-run drain.
+    pub fn run_cleanups_for(&self, pipe: usize) -> usize {
+        let mut ledger = self.cleanups.lock().unwrap();
+        let mut mine = Vec::new();
+        ledger.retain(|(scope, id)| {
+            if *scope == Some(pipe) {
+                mine.push(*id);
+                false
+            } else {
+                true
+            }
+        });
+        drop(ledger);
+        let n = mine.len();
+        for id in mine {
+            self.engine.cache.unpersist(id);
+        }
+        n
+    }
+}
+
+/// Restores the previous cleanup scope on drop (see
+/// [`PipeContext::enter_scope`]).
+pub struct ScopeGuard {
+    prev: Option<usize>,
+}
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        CLEANUP_SCOPE.with(|s| s.set(self.prev));
     }
 }
 
@@ -77,11 +137,15 @@ mod tests {
     use crate::engine::row::{FieldType, Schema};
     use crate::row;
 
+    fn one_row_ds(name: &str) -> Dataset {
+        let schema = Schema::new(vec![("x", FieldType::I64)]);
+        Dataset::from_rows(name, schema, vec![row!(1i64)], 1)
+    }
+
     #[test]
     fn scoped_persist_cleans_up() {
         let ctx = PipeContext::for_tests();
-        let schema = Schema::new(vec![("x", FieldType::I64)]);
-        let ds = Dataset::from_rows("t", schema, vec![row!(1i64)], 1);
+        let ds = one_row_ds("t");
         ctx.persist_scoped(&ds);
         ctx.engine.collect(&ds).unwrap();
         assert_eq!(ctx.engine.cache.len(), 1);
@@ -94,11 +158,50 @@ mod tests {
     #[test]
     fn unscoped_persist_survives_cleanup() {
         let ctx = PipeContext::for_tests();
-        let schema = Schema::new(vec![("x", FieldType::I64)]);
-        let ds = Dataset::from_rows("t", schema, vec![row!(1i64)], 1);
+        let ds = one_row_ds("t");
         ctx.persist(&ds);
         ctx.engine.collect(&ds).unwrap();
         ctx.run_cleanups();
         assert_eq!(ctx.engine.cache.len(), 1);
+    }
+
+    #[test]
+    fn per_pipe_scope_isolates_cleanup() {
+        let ctx = PipeContext::for_tests();
+        let a = one_row_ds("a");
+        let b = one_row_ds("b");
+        {
+            let _s = ctx.enter_scope(0);
+            ctx.persist_scoped(&a);
+        }
+        {
+            let _s = ctx.enter_scope(1);
+            ctx.persist_scoped(&b);
+        }
+        ctx.engine.collect(&a).unwrap();
+        ctx.engine.collect(&b).unwrap();
+        assert_eq!(ctx.engine.cache.len(), 2);
+
+        // pipe 0 completing must only drop pipe 0's state
+        assert_eq!(ctx.run_cleanups_for(0), 1);
+        assert_eq!(ctx.engine.cache.len(), 1);
+        assert!(ctx.engine.cache.get(b.id).is_some(), "pipe 1's state survives");
+
+        assert_eq!(ctx.run_cleanups_for(1), 1);
+        assert_eq!(ctx.engine.cache.len(), 0);
+    }
+
+    #[test]
+    fn scope_guard_restores_previous() {
+        let ctx = PipeContext::for_tests();
+        let outer = one_row_ds("outer");
+        let _s0 = ctx.enter_scope(7);
+        {
+            let _s1 = ctx.enter_scope(8);
+        }
+        // back in scope 7 after the inner guard dropped
+        ctx.persist_scoped(&outer);
+        assert_eq!(ctx.run_cleanups_for(8), 0);
+        assert_eq!(ctx.run_cleanups_for(7), 1);
     }
 }

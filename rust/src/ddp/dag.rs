@@ -22,6 +22,13 @@ pub struct DataDag {
     pub sources: Vec<String>,
     /// data ids with no consumer (pipeline outputs)
     pub sinks: Vec<String>,
+    /// pipe-level downstream adjacency: `pipe_dependents[p]` lists the
+    /// pipes consuming one of `p`'s outputs (duplicate edges preserved —
+    /// a consumer wiring two of `p`'s outputs appears twice, matching
+    /// [`DataDag::pipe_indegree`])
+    pub pipe_dependents: Vec<Vec<usize>>,
+    /// number of upstream edges per pipe (counted per anchor wire)
+    pub pipe_indegree: Vec<usize>,
 }
 
 impl DataDag {
@@ -115,7 +122,33 @@ impl DataDag {
             .collect();
         sinks.sort();
 
-        Ok(DataDag { order, producer, consumers, sources, sinks })
+        Ok(DataDag {
+            order,
+            producer,
+            consumers,
+            sources,
+            sinks,
+            pipe_dependents: adj,
+            pipe_indegree: indeg,
+        })
+    }
+
+    /// All transitive downstream pipes of `pipe` (BFS over
+    /// [`DataDag::pipe_dependents`]), excluding `pipe` itself, in
+    /// ascending index order. The scheduler cancels these on failure.
+    pub fn descendants(&self, pipe: usize) -> Vec<usize> {
+        let mut seen = vec![false; self.pipe_dependents.len()];
+        let mut queue = VecDeque::from([pipe]);
+        while let Some(p) = queue.pop_front() {
+            for &d in &self.pipe_dependents[p] {
+                if !seen[d] {
+                    seen[d] = true;
+                    queue.push_back(d);
+                }
+            }
+        }
+        seen[pipe] = false;
+        (0..seen.len()).filter(|&i| seen[i]).collect()
     }
 
     /// Pipes with no unfinished upstream — used by live visualization.
@@ -133,6 +166,55 @@ impl DataDag {
                 })
             })
             .collect()
+    }
+}
+
+/// Incremental ready-set over the pipe-level DAG — the scheduler's core
+/// bookkeeping. Mirrors Kahn's algorithm: seeding the dispatch queue with
+/// [`ReadyTracker::initially_ready`] (index order) and appending each
+/// [`ReadyTracker::complete`] result (adjacency order) reproduces
+/// [`DataDag::order`] exactly when pipes run one at a time.
+#[derive(Debug, Clone)]
+pub struct ReadyTracker {
+    indegree: Vec<usize>,
+    completed: usize,
+}
+
+impl ReadyTracker {
+    pub fn new(dag: &DataDag) -> ReadyTracker {
+        ReadyTracker { indegree: dag.pipe_indegree.clone(), completed: 0 }
+    }
+
+    /// Pipes with no upstream dependencies, in declaration-index order.
+    pub fn initially_ready(&self) -> Vec<usize> {
+        (0..self.indegree.len())
+            .filter(|&i| self.indegree[i] == 0)
+            .collect()
+    }
+
+    /// Record `pipe` as finished; returns the pipes that just became
+    /// ready, in adjacency order.
+    pub fn complete(&mut self, dag: &DataDag, pipe: usize) -> Vec<usize> {
+        self.completed += 1;
+        let mut newly = Vec::new();
+        for &d in &dag.pipe_dependents[pipe] {
+            debug_assert!(self.indegree[d] > 0, "dependency edge counted twice");
+            self.indegree[d] -= 1;
+            if self.indegree[d] == 0 {
+                newly.push(d);
+            }
+        }
+        newly
+    }
+
+    /// Number of pipes recorded as finished.
+    pub fn completed(&self) -> usize {
+        self.completed
+    }
+
+    /// Pipes not yet recorded as finished.
+    pub fn remaining(&self) -> usize {
+        self.indegree.len() - self.completed
     }
 }
 
@@ -261,6 +343,74 @@ mod tests {
         assert_eq!(dag.order[0], 0);
         assert_eq!(dag.order[3], 3);
         assert_eq!(dag.sinks, vec!["E"]);
+    }
+
+    #[test]
+    fn pipe_level_edges_and_indegree() {
+        let spec = PipelineSpec::parse(PAPER_EXAMPLE).unwrap();
+        let dag = DataDag::build(&spec).unwrap();
+        // preprocess -> feature-gen -> model -> postprocess, and the
+        // postprocess also reads the source anchor (no pipe edge for it)
+        assert_eq!(dag.pipe_dependents[0], vec![1]);
+        assert_eq!(dag.pipe_dependents[2], vec![3]);
+        assert_eq!(dag.pipe_indegree, vec![0, 1, 1, 1]);
+    }
+
+    #[test]
+    fn ready_tracker_replays_topo_order() {
+        // reversed declaration order: dag.order = [1, 0]
+        let text = r#"[
+          {"inputDataId": "B", "transformerType": "X", "outputDataId": "C", "name": "second"},
+          {"inputDataId": "A", "transformerType": "X", "outputDataId": "B", "name": "first"}
+        ]"#;
+        let spec = PipelineSpec::parse(text).unwrap();
+        let dag = DataDag::build(&spec).unwrap();
+        let mut tracker = ReadyTracker::new(&dag);
+        let mut queue: std::collections::VecDeque<usize> =
+            tracker.initially_ready().into();
+        let mut replay = Vec::new();
+        while let Some(p) = queue.pop_front() {
+            replay.push(p);
+            queue.extend(tracker.complete(&dag, p));
+        }
+        assert_eq!(replay, dag.order);
+        assert_eq!(tracker.remaining(), 0);
+    }
+
+    #[test]
+    fn diamond_ready_tracker_fans_out() {
+        let text = r#"[
+          {"inputDataId": "A", "transformerType": "X", "outputDataId": "B", "name": "top"},
+          {"inputDataId": "B", "transformerType": "X", "outputDataId": "C", "name": "l"},
+          {"inputDataId": "B", "transformerType": "X", "outputDataId": "D", "name": "r"},
+          {"inputDataId": ["C", "D"], "transformerType": "X", "outputDataId": "E", "name": "join"}
+        ]"#;
+        let spec = PipelineSpec::parse(text).unwrap();
+        let dag = DataDag::build(&spec).unwrap();
+        let mut tracker = ReadyTracker::new(&dag);
+        assert_eq!(tracker.initially_ready(), vec![0]);
+        // finishing the top releases both branches at once
+        assert_eq!(tracker.complete(&dag, 0), vec![1, 2]);
+        // the join waits for both branches
+        assert_eq!(tracker.complete(&dag, 1), Vec::<usize>::new());
+        assert_eq!(tracker.complete(&dag, 2), vec![3]);
+    }
+
+    #[test]
+    fn descendants_are_transitive() {
+        let text = r#"[
+          {"inputDataId": "A", "transformerType": "X", "outputDataId": "B", "name": "top"},
+          {"inputDataId": "B", "transformerType": "X", "outputDataId": "C", "name": "l"},
+          {"inputDataId": "B", "transformerType": "X", "outputDataId": "D", "name": "r"},
+          {"inputDataId": ["C", "D"], "transformerType": "X", "outputDataId": "E", "name": "join"},
+          {"inputDataId": "Z", "transformerType": "X", "outputDataId": "Y", "name": "island"}
+        ]"#;
+        let spec = PipelineSpec::parse(text).unwrap();
+        let dag = DataDag::build(&spec).unwrap();
+        assert_eq!(dag.descendants(0), vec![1, 2, 3]);
+        assert_eq!(dag.descendants(1), vec![3]);
+        assert_eq!(dag.descendants(3), Vec::<usize>::new());
+        assert_eq!(dag.descendants(4), Vec::<usize>::new());
     }
 
     #[test]

@@ -1,14 +1,42 @@
 //! Pipeline driver: resolves a [`PipelineSpec`] against the pipe registry,
-//! loads source anchors, executes pipes in DAG order, manages explicit
-//! state (persist + cleanup), publishes metrics asynchronously, writes
-//! stored outputs, and tracks per-pipe progress for live visualization.
+//! loads source anchors, executes pipes with a data-driven stage-parallel
+//! scheduler, manages explicit state (persist + refcounted cleanup),
+//! publishes metrics asynchronously, writes stored outputs, and tracks
+//! per-pipe progress for live visualization.
 //!
 //! This is the runtime half of the paper's contribution: *deterministic
 //! DAG execution driven by declarative definitions* — no cost-based
 //! optimizer, no hand-written control flow.
+//!
+//! ## Scheduling
+//!
+//! Execution is a ready-set loop over the pipe-level DAG
+//! ([`ReadyTracker`]): a pipe is dispatched once every input anchor is
+//! materialized, onto a bounded pool of `maxConcurrentPipes` scheduler
+//! threads. The dispatch queue is FIFO and seeded/extended exactly like
+//! the Kahn topological sort in [`DataDag::build`], so with
+//! `maxConcurrentPipes = 1` the driver reproduces the legacy serial
+//! topo-order execution — same outputs, same report order, same cleanup.
+//! Wider settings overlap independent branches (tf.data / MLlib-style
+//! stage parallelism). Failures are fail-fast: the first error stops all
+//! further dispatch, transitively cancels not-yet-started dependents
+//! (marked [`PipeState::Failed`]), waits out pipes already in flight, and
+//! releases every driver-persisted anchor.
+//!
+//! ## Anchor lifecycle (§3.2)
+//!
+//! Anchors consumed by more than one pipe (or flagged `cache: true`) are
+//! persisted in the engine cache; shared anchors are materialized at
+//! persist time so concurrent consumers share one computation. Implicitly
+//! persisted anchors are reference-counted ([`AnchorRefCounts`]) and
+//! dropped from the cache when their last consumer finishes; `cache:
+//! true` anchors stay resident for post-run use. Pipe-scoped state
+//! registered via [`PipeContext::persist_scoped`] is cleaned when exactly
+//! that pipe completes, which stays correct under concurrency.
 
 use super::context::PipeContext;
-use super::dag::DataDag;
+use super::dag::{DataDag, ReadyTracker};
+use super::lifecycle::AnchorRefCounts;
 use super::registry::PipeRegistry;
 use super::viz::{self, VizOptions};
 use crate::config::{DataLocation, PipelineSpec};
@@ -18,8 +46,11 @@ use crate::io::IoRegistry;
 use crate::metrics::{MetricsPublisher, MetricsRegistry, PublisherConfig, Sink};
 use crate::util::clock::{self, ClockRef};
 use crate::util::error::{DdpError, Result};
-use std::collections::{BTreeMap, HashMap};
-use std::sync::{Arc, Mutex};
+use crate::util::threadpool::ThreadPool;
+use std::any::Any;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
 /// Per-pipe execution state (drives the Fig 3 progress palette).
@@ -65,6 +96,9 @@ pub struct DriverConfig {
     /// metrics sink (None = log sink)
     pub sink: Option<Arc<dyn Sink>>,
     pub clock: ClockRef,
+    /// scheduler width override; None = use the spec's
+    /// `settings.maxConcurrentPipes` (itself defaulting to `workers`)
+    pub max_concurrent_pipes: Option<usize>,
 }
 
 impl Default for DriverConfig {
@@ -74,19 +108,41 @@ impl Default for DriverConfig {
             eager: false,
             sink: None,
             clock: clock::wall(),
+            max_concurrent_pipes: None,
         }
     }
 }
 
 /// The pipeline driver.
 pub struct PipelineDriver {
-    pub spec: PipelineSpec,
-    pub dag: DataDag,
+    pub spec: Arc<PipelineSpec>,
+    pub dag: Arc<DataDag>,
     registry: PipeRegistry,
     pub ctx: Arc<PipeContext>,
-    states: Mutex<HashMap<usize, PipeState>>,
+    states: Arc<Mutex<HashMap<usize, PipeState>>>,
     cfg_eager: bool,
     sink: Option<Arc<dyn Sink>>,
+    max_concurrent: usize,
+}
+
+/// One scheduled pipe's terminal message back to the dispatch loop.
+enum Outcome {
+    /// report + whether this pipe's outputs all cut their lineage (sink
+    /// or cached), making it safe to release its input anchors
+    Done(PipeReport, bool),
+    Failed(DdpError),
+    Panicked(Box<dyn Any + Send>),
+}
+
+/// Everything a scheduler worker needs, shareable across threads.
+struct RunState {
+    spec: Arc<PipelineSpec>,
+    dag: Arc<DataDag>,
+    registry: PipeRegistry,
+    ctx: Arc<PipeContext>,
+    eager: bool,
+    anchors: Mutex<BTreeMap<String, Dataset>>,
+    refcounts: AnchorRefCounts,
 }
 
 impl PipelineDriver {
@@ -113,14 +169,19 @@ impl PipelineDriver {
         let engine = EngineCtx::new(engine_cfg);
         let metrics = MetricsRegistry::new();
         let ctx = Arc::new(PipeContext::new(engine, metrics, io, cfg.clock));
+        let max_concurrent = cfg
+            .max_concurrent_pipes
+            .unwrap_or_else(|| spec.settings.effective_max_concurrent_pipes())
+            .max(1);
         Ok(PipelineDriver {
-            spec,
-            dag,
+            spec: Arc::new(spec),
+            dag: Arc::new(dag),
             registry,
             ctx,
-            states: Mutex::new(HashMap::new()),
+            states: Arc::new(Mutex::new(HashMap::new())),
             cfg_eager: cfg.eager,
             sink: cfg.sink,
+            max_concurrent,
         })
     }
 
@@ -136,8 +197,37 @@ impl PipelineDriver {
         )
     }
 
-    fn set_state(&self, pipe: usize, state: PipeState) {
-        self.states.lock().unwrap().insert(pipe, state);
+    /// Current state of every pipe, indexed by declaration position
+    /// (live progress for viz and tests).
+    pub fn pipe_states(&self) -> Vec<PipeState> {
+        let map = self.states.lock().unwrap();
+        (0..self.spec.pipes.len())
+            .map(|i| map.get(&i).copied().unwrap_or_default())
+            .collect()
+    }
+
+    /// Effective scheduler width for this driver.
+    pub fn max_concurrent_pipes(&self) -> usize {
+        self.max_concurrent
+    }
+
+    /// Thread-safe monotone state transition: `Pending → Running →
+    /// Done|Failed` (plus `Pending → Failed` for cancellations); terminal
+    /// states never regress, so a racing late update cannot un-fail a pipe.
+    fn advance_state(&self, pipe: usize, next: PipeState) {
+        let mut map = self.states.lock().unwrap();
+        let cur = map.get(&pipe).copied().unwrap_or_default();
+        let legal = matches!(
+            (cur, next),
+            (PipeState::Pending, PipeState::Running)
+                | (PipeState::Pending, PipeState::Done)
+                | (PipeState::Pending, PipeState::Failed)
+                | (PipeState::Running, PipeState::Done)
+                | (PipeState::Running, PipeState::Failed)
+        );
+        if legal {
+            map.insert(pipe, next);
+        }
     }
 
     /// Execute the pipeline. `provided` supplies in-memory source anchors;
@@ -220,159 +310,301 @@ impl PipelineDriver {
             }
         }
 
-        // 2. execute pipes in DAG order
-        let mut reports = Vec::with_capacity(self.spec.pipes.len());
-        for &i in &self.dag.order {
-            let decl = &self.spec.pipes[i];
-            self.set_state(i, PipeState::Running);
-            let pipe = self.registry.create(&decl.transformer_type, &decl.params)?;
+        // 2. stage-parallel execution over the ready set
+        let n = self.spec.pipes.len();
+        let width = self.max_concurrent.min(n.max(1));
+        let state = Arc::new(RunState {
+            spec: self.spec.clone(),
+            dag: self.dag.clone(),
+            registry: self.registry.clone(),
+            ctx: self.ctx.clone(),
+            eager: self.cfg_eager,
+            anchors: Mutex::new(anchors),
+            refcounts: AnchorRefCounts::from_consumers(&self.dag.consumers),
+        });
 
-            // contract validation (§3.8): arity, then declared-schema
-            // compatibility between the anchor and the pipe's contract
-            let contract = pipe.contract();
-            if let Some(arity) = contract.arity {
-                if arity != decl.input_data_ids.len() {
-                    self.set_state(i, PipeState::Failed);
-                    return Err(DdpError::validation(format!(
-                        "pipe '{}' expects {arity} inputs, config wires {}",
-                        decl.name,
-                        decl.input_data_ids.len()
-                    )));
-                }
+        let pool = ThreadPool::new(width);
+        let (tx, rx) = mpsc::channel::<(usize, Outcome)>();
+        let mut tracker = ReadyTracker::new(&self.dag);
+        // FIFO queue seeded/extended exactly like the Kahn sort, so a
+        // width-1 pool replays `dag.order` verbatim
+        let mut queue: VecDeque<usize> = tracker.initially_ready().into();
+        let mut reports: Vec<Option<PipeReport>> = (0..n).map(|_| None).collect();
+        let mut in_flight = 0usize;
+        let mut failure: Option<Outcome> = None;
+
+        loop {
+            while failure.is_none() && in_flight < width {
+                let Some(i) = queue.pop_front() else { break };
+                self.advance_state(i, PipeState::Running);
+                in_flight += 1;
+                let state = Arc::clone(&state);
+                let tx = tx.clone();
+                pool.execute(move || {
+                    let outcome = match catch_unwind(AssertUnwindSafe(|| state.exec_pipe(i))) {
+                        Ok(Ok((report, cuts))) => Outcome::Done(report, cuts),
+                        Ok(Err(e)) => Outcome::Failed(e),
+                        Err(payload) => Outcome::Panicked(payload),
+                    };
+                    let _ = tx.send((i, outcome));
+                });
             }
-            for (pos, want) in contract.input_schemas.iter().enumerate() {
-                let (Some(want), Some(input_id)) = (want, decl.input_data_ids.get(pos)) else {
-                    continue;
-                };
-                let have = &self.spec.data[input_id];
-                if !have.schema_declared {
-                    continue; // undeclared anchors are schema-agnostic
-                }
-                for wi in 0..want.len() {
-                    let (wname, wty) = want.field(wi);
-                    match have.schema.idx(wname) {
-                        None => {
-                            self.set_state(i, PipeState::Failed);
-                            return Err(DdpError::validation(format!(
-                                "pipe '{}' requires column '{wname}' on input '{input_id}',                                  which declares only [{}]",
-                                decl.name,
-                                have.schema.names().join(", ")
-                            )));
-                        }
-                        Some(hi) => {
-                            let hty = have.schema.field_type(hi);
-                            use crate::engine::row::FieldType;
-                            if wty != FieldType::Any && hty != FieldType::Any && wty != hty {
-                                self.set_state(i, PipeState::Failed);
-                                return Err(DdpError::validation(format!(
-                                    "pipe '{}' needs '{wname}: {}' on '{input_id}', declared as {}",
-                                    decl.name,
-                                    wty.name(),
-                                    hty.name()
-                                )));
+            if in_flight == 0 {
+                break;
+            }
+            let (i, outcome) = rx.recv().expect("scheduler worker channel closed");
+            in_flight -= 1;
+            match outcome {
+                Outcome::Done(report, cuts_lineage) => {
+                    self.advance_state(i, PipeState::Done);
+                    reports[i] = Some(report);
+                    queue.extend(tracker.complete(&self.dag, i));
+                    // refcounted §3.2 cleanup: drop shared anchors whose
+                    // last consumer just finished. Only a consumer whose
+                    // outputs all cut the lineage (sink or cached) counts —
+                    // a lazy pass-through consumer would re-read this
+                    // anchor when its own output is evaluated downstream,
+                    // so releasing on its completion would force recompute.
+                    if cuts_lineage {
+                        for input in &self.spec.pipes[i].input_data_ids {
+                            if let Some(ds_id) = state.refcounts.release(input) {
+                                self.ctx.engine.cache.unpersist(ds_id);
+                                self.ctx.metrics.counter_add("driver.anchors_released", 1);
                             }
                         }
                     }
                 }
+                Outcome::Failed(e) => {
+                    self.advance_state(i, PipeState::Failed);
+                    if failure.is_none() {
+                        // fail fast: cancel every not-yet-dispatched
+                        // transitive dependent
+                        for d in self.dag.descendants(i) {
+                            self.advance_state(d, PipeState::Failed);
+                        }
+                        failure = Some(Outcome::Failed(e));
+                    }
+                }
+                Outcome::Panicked(payload) => {
+                    self.advance_state(i, PipeState::Failed);
+                    if failure.is_none() {
+                        for d in self.dag.descendants(i) {
+                            self.advance_state(d, PipeState::Failed);
+                        }
+                        failure = Some(Outcome::Panicked(payload));
+                    }
+                }
             }
+        }
+        drop(tx);
 
-            let inputs: Vec<Dataset> = decl
-                .input_data_ids
+        if let Some(outcome) = failure {
+            // failure-path cleanup: unrelated branches must leave nothing
+            // behind — drop every driver-persisted anchor and any scoped
+            // state still in the ledger
+            for ds_id in state.refcounts.drain_persisted() {
+                self.ctx.engine.cache.unpersist(ds_id);
+            }
+            self.ctx.run_cleanups();
+            match outcome {
+                Outcome::Failed(e) => return Err(e),
+                Outcome::Panicked(payload) => std::panic::resume_unwind(payload),
+                Outcome::Done(..) => unreachable!("success is not a failure"),
+            }
+        }
+
+        // end-of-run drain: scoped entries were cleaned per pipe; this
+        // catches registrations made outside any pipe scope (e.g. from a
+        // thread the scope tag doesn't reach)
+        self.ctx.run_cleanups();
+
+        // 3. deterministic reports: topo (declaration-tie-broken) order,
+        // independent of completion order
+        let reports: Vec<PipeReport> = self
+            .dag
+            .order
+            .iter()
+            .map(|&i| reports[i].take().expect("completed pipe must report"))
+            .collect();
+        let anchors = std::mem::take(&mut *state.anchors.lock().unwrap());
+        Ok((reports, anchors))
+    }
+}
+
+impl RunState {
+    /// Run one pipe end-to-end: contract validation, transform, output
+    /// binding (persist / store / sink materialization), scoped cleanup.
+    /// Runs on a scheduler worker thread.
+    ///
+    /// Returns the report plus a *lineage-cut* flag: true when every
+    /// output is either a sink (nothing downstream re-reads it) or was
+    /// persisted and materialized (downstream evaluation stops at its
+    /// cache entry) — the condition under which completing this pipe
+    /// makes releasing its input anchors safe.
+    fn exec_pipe(&self, i: usize) -> Result<(PipeReport, bool)> {
+        let decl = &self.spec.pipes[i];
+        let pipe = self.registry.create(&decl.transformer_type, &decl.params)?;
+
+        // contract validation (§3.8): arity, then declared-schema
+        // compatibility between the anchor and the pipe's contract
+        let contract = pipe.contract();
+        if let Some(arity) = contract.arity {
+            if arity != decl.input_data_ids.len() {
+                return Err(DdpError::validation(format!(
+                    "pipe '{}' expects {arity} inputs, config wires {}",
+                    decl.name,
+                    decl.input_data_ids.len()
+                )));
+            }
+        }
+        for (pos, want) in contract.input_schemas.iter().enumerate() {
+            let (Some(want), Some(input_id)) = (want, decl.input_data_ids.get(pos)) else {
+                continue;
+            };
+            let have = &self.spec.data[input_id];
+            if !have.schema_declared {
+                continue; // undeclared anchors are schema-agnostic
+            }
+            for wi in 0..want.len() {
+                let (wname, wty) = want.field(wi);
+                match have.schema.idx(wname) {
+                    None => {
+                        return Err(DdpError::validation(format!(
+                            "pipe '{}' requires column '{wname}' on input '{input_id}', which declares only [{}]",
+                            decl.name,
+                            have.schema.names().join(", ")
+                        )));
+                    }
+                    Some(hi) => {
+                        let hty = have.schema.field_type(hi);
+                        use crate::engine::row::FieldType;
+                        if wty != FieldType::Any && hty != FieldType::Any && wty != hty {
+                            return Err(DdpError::validation(format!(
+                                "pipe '{}' needs '{wname}: {}' on '{input_id}', declared as {}",
+                                decl.name,
+                                wty.name(),
+                                hty.name()
+                            )));
+                        }
+                    }
+                }
+            }
+        }
+
+        let inputs: Vec<Dataset> = {
+            let anchors = self.anchors.lock().unwrap();
+            decl.input_data_ids
                 .iter()
                 .map(|id| {
                     anchors.get(id).cloned().ok_or_else(|| {
                         DdpError::dag(format!("anchor '{id}' missing for pipe '{}'", decl.name))
                     })
                 })
-                .collect::<Result<_>>()?;
+                .collect::<Result<_>>()?
+        };
 
-            let t0 = std::time::Instant::now();
-            let outputs = pipe.transform(&self.ctx, &inputs).map_err(|e| {
-                self.set_state(i, PipeState::Failed);
-                DdpError::pipe(decl.name.clone(), e.to_string())
-            })?;
-            if outputs.len() != decl.output_data_ids.len() {
-                self.set_state(i, PipeState::Failed);
-                return Err(DdpError::pipe(
-                    decl.name.clone(),
-                    format!(
-                        "produced {} outputs, config declares {}",
-                        outputs.len(),
-                        decl.output_data_ids.len()
-                    ),
-                ));
+        let t0 = std::time::Instant::now();
+        let outputs = {
+            // §3.2 scoped state: persist_scoped calls during transform are
+            // tagged to this pipe and cleaned when it completes
+            let _scope = self.ctx.enter_scope(i);
+            pipe.transform(&self.ctx, &inputs)
+                .map_err(|e| DdpError::pipe(decl.name.clone(), e.to_string()))?
+        };
+        if outputs.len() != decl.output_data_ids.len() {
+            return Err(DdpError::pipe(
+                decl.name.clone(),
+                format!(
+                    "produced {} outputs, config declares {}",
+                    outputs.len(),
+                    decl.output_data_ids.len()
+                ),
+            ));
+        }
+
+        // bind outputs to anchors; apply declared state management
+        let mut output_rows = Vec::with_capacity(outputs.len());
+        let mut cuts_lineage = true;
+        for (out_id, ds) in decl.output_data_ids.iter().zip(outputs) {
+            let odecl = &self.spec.data[out_id];
+            // §3.2 selective caching: anchors consumed by >1 pipe, or
+            // flagged `cache: true`, persist in the engine cache
+            let consumers = self.dag.consumers.get(out_id).map(|v| v.len()).unwrap_or(0);
+            let persisted = odecl.cache || consumers > 1;
+            // a single-consumer, uncached output is a lazy pass-through:
+            // its downstream evaluation re-walks lineage through this
+            // pipe's inputs
+            cuts_lineage &= persisted || consumers == 0;
+            if persisted {
+                self.ctx.persist(&ds);
+                // materialize now so concurrent consumers share one
+                // computation instead of racing to evaluate the anchor
+                self.ctx.engine.collect(&ds)?;
+                if !odecl.cache {
+                    // implicitly-shared anchors are refcounted and released
+                    // after their last consumer; explicit `cache: true`
+                    // stays resident for post-run use
+                    if let Some(ds_id) = self.refcounts.register_persisted(out_id, ds.id) {
+                        self.ctx.engine.cache.unpersist(ds_id);
+                    }
+                }
             }
-
-            // 3. bind outputs to anchors; apply declared state management
-            let mut output_rows = Vec::with_capacity(outputs.len());
-            for (out_id, ds) in decl.output_data_ids.iter().zip(outputs) {
-                let odecl = &self.spec.data[out_id];
-                // §3.2 selective caching: anchors consumed by >1 pipe, or
-                // flagged `cache: true`, persist in the engine cache
-                let consumers = self.dag.consumers.get(out_id).map(|v| v.len()).unwrap_or(0);
-                if odecl.cache || consumers > 1 {
-                    self.ctx.persist(&ds);
-                }
-                let mut rows_out = None;
-                if let DataLocation::Stored(loc) = &odecl.location {
-                    let data = self.ctx.engine.collect(&ds)?;
-                    let rows = data.rows();
-                    self.ctx.io.write_rows(
-                        loc,
-                        odecl.format,
-                        &ds.schema,
-                        &rows,
-                        odecl.encryption,
-                        out_id,
-                    )?;
-                    rows_out = Some(rows.len());
-                } else if self.cfg_eager {
-                    rows_out = Some(self.ctx.engine.count(&ds)?);
-                }
-                if let Some(n) = rows_out {
-                    self.ctx
-                        .metrics
-                        .counter_add(&format!("pipe.{}.rows_out", decl.name), n as u64);
-                }
-                output_rows.push(rows_out);
-                anchors.insert(out_id.clone(), ds);
+            let mut rows_out = None;
+            if let DataLocation::Stored(loc) = &odecl.location {
+                let data = self.ctx.engine.collect(&ds)?;
+                let rows = data.rows();
+                self.ctx.io.write_rows(
+                    loc,
+                    odecl.format,
+                    &ds.schema,
+                    &rows,
+                    odecl.encryption,
+                    out_id,
+                )?;
+                rows_out = Some(rows.len());
+            } else if self.eager {
+                rows_out = Some(self.ctx.engine.count(&ds)?);
             }
-
-            // explicit cleanup ledger (§3.2)
-            let cleaned = self.ctx.run_cleanups();
-            if cleaned > 0 {
+            if let Some(rows) = rows_out {
                 self.ctx
                     .metrics
-                    .counter_add(&format!("pipe.{}.cleanups", decl.name), cleaned as u64);
+                    .counter_add(&format!("pipe.{}.rows_out", decl.name), rows as u64);
             }
+            output_rows.push(rows_out);
+            let is_memory_sink = matches!(odecl.location, DataLocation::Memory)
+                && self.dag.sinks.binary_search(out_id).is_ok();
+            self.anchors.lock().unwrap().insert(out_id.clone(), ds.clone());
+            // memory sinks materialize at producer completion, so branch
+            // work runs inside the (possibly concurrent) pipe execution
+            if is_memory_sink {
+                let rows = self.ctx.engine.count(&ds)?;
+                self.ctx
+                    .metrics
+                    .counter_add(&format!("data.{out_id}.rows"), rows as u64);
+            }
+        }
 
-            let dur = t0.elapsed().as_secs_f64();
+        // explicit cleanup ledger (§3.2), this pipe's scope only
+        let cleaned = self.ctx.run_cleanups_for(i);
+        if cleaned > 0 {
             self.ctx
                 .metrics
-                .observe(&format!("pipe.{}.duration_secs", decl.name), dur);
-            self.set_state(i, PipeState::Done);
-            reports.push(PipeReport {
+                .counter_add(&format!("pipe.{}.cleanups", decl.name), cleaned as u64);
+        }
+
+        let dur = t0.elapsed().as_secs_f64();
+        self.ctx
+            .metrics
+            .observe(&format!("pipe.{}.duration_secs", decl.name), dur);
+        Ok((
+            PipeReport {
                 name: decl.name.clone(),
                 transformer_type: decl.transformer_type.clone(),
                 duration_secs: dur,
                 output_rows,
-            });
-        }
-
-        // 4. materialize sinks that stayed lazy so the run is complete
-        for sink_id in &self.dag.sinks {
-            let decl = &self.spec.data[sink_id];
-            if matches!(decl.location, DataLocation::Memory) {
-                if let Some(ds) = anchors.get(sink_id) {
-                    let n = self.ctx.engine.count(ds)?;
-                    self.ctx
-                        .metrics
-                        .counter_add(&format!("data.{sink_id}.rows"), n as u64);
-                }
-            }
-        }
-
-        Ok((reports, anchors))
+            },
+            cuts_lineage,
+        ))
     }
 }
 
@@ -585,5 +817,72 @@ mod tests {
         driver.run(provided).unwrap();
         let s = driver.ctx.engine.stats.snapshot();
         assert!(s.cache_hits >= 1, "Mid should be cache-hit by the second consumer");
+    }
+
+    #[test]
+    fn shared_anchor_released_after_last_consumer() {
+        let spec = fast_settings(
+            r#"[
+              {"inputDataId": "In", "transformerType": "AddOne", "outputDataId": "Mid", "name": "a"},
+              {"inputDataId": "Mid", "transformerType": "AddOne", "outputDataId": "O1", "name": "b"},
+              {"inputDataId": "Mid", "transformerType": "AddOne", "outputDataId": "O2", "name": "c"}
+            ]"#,
+        );
+        let driver = PipelineDriver::new(
+            spec,
+            registry(),
+            Arc::new(IoRegistry::with_sim_cloud()),
+            DriverConfig::default(),
+        )
+        .unwrap();
+        let mut provided = BTreeMap::new();
+        provided.insert("In".to_string(), nums_ds(10));
+        let report = driver.run(provided).unwrap();
+        // refcounted cleanup freed the shared anchor once both consumers ran
+        assert_eq!(driver.ctx.engine.cache.len(), 0, "Mid released after last consumer");
+        assert_eq!(*report.metrics.counters.get("driver.anchors_released").unwrap(), 1);
+    }
+
+    #[test]
+    fn explicit_cache_flag_survives_run() {
+        let spec = fast_settings(
+            r#"{
+              "data": [{"id": "Mid", "cache": true}],
+              "pipes": [
+                {"inputDataId": "In", "transformerType": "AddOne", "outputDataId": "Mid", "name": "a"},
+                {"inputDataId": "Mid", "transformerType": "AddOne", "outputDataId": "Out", "name": "b"}
+              ]
+            }"#,
+        );
+        let driver = PipelineDriver::new(
+            spec,
+            registry(),
+            Arc::new(IoRegistry::with_sim_cloud()),
+            DriverConfig::default(),
+        )
+        .unwrap();
+        let mut provided = BTreeMap::new();
+        provided.insert("In".to_string(), nums_ds(4));
+        driver.run(provided).unwrap();
+        // user-requested cache stays resident for post-run use
+        assert_eq!(driver.ctx.engine.cache.len(), 1);
+    }
+
+    #[test]
+    fn serial_override_forces_width_one() {
+        let spec = fast_settings(
+            r#"[{"inputDataId": "In", "transformerType": "AddOne", "outputDataId": "Out"}]"#,
+        );
+        let driver = PipelineDriver::new(
+            spec,
+            registry(),
+            Arc::new(IoRegistry::with_sim_cloud()),
+            DriverConfig { max_concurrent_pipes: Some(1), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(driver.max_concurrent_pipes(), 1);
+        let mut provided = BTreeMap::new();
+        provided.insert("In".to_string(), nums_ds(3));
+        assert!(driver.run(provided).is_ok());
     }
 }

@@ -1,4 +1,5 @@
-//! Object lifecycle scopes (paper §3.7).
+//! Object lifecycle scopes (paper §3.7) and anchor lifecycle accounting
+//! (§3.2).
 //!
 //! Distributed lazy evaluation makes naïve object construction expensive:
 //! a model loaded per *record* initializes millions of times; per
@@ -8,9 +9,14 @@
 //! instance level: a typed, named singleton registry with per-key
 //! initialization counters so tests (and the ablation bench) can observe
 //! exactly how many constructions each scope costs.
+//!
+//! [`AnchorRefCounts`] is the data-side counterpart: per-anchor consumer
+//! reference counts that let the stage-parallel driver release a cached
+//! shared anchor exactly when its last consumer finishes — the explicit
+//! "delete clause" of §3.2, made safe under concurrent consumers.
 
 use std::any::Any;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -118,6 +124,86 @@ impl Default for ObjectPool {
     }
 }
 
+#[derive(Debug, Default)]
+struct AnchorEntry {
+    /// consumer pipes that have not finished yet
+    remaining: usize,
+    /// engine dataset id of the driver-persisted materialization, if any
+    persisted_ds: Option<u64>,
+}
+
+/// Per-anchor consumer reference counts for the stage-parallel driver.
+///
+/// The driver seeds one count per declared consumer wire, registers the
+/// engine dataset id when it persists a shared anchor, and calls
+/// [`AnchorRefCounts::release`] as each consumer pipe finishes. When the
+/// count of a persisted anchor reaches zero, `release` hands back the
+/// dataset id so the caller can unpersist it from the engine cache —
+/// thread-safe, so concurrent consumers cannot double-free or free early.
+#[derive(Debug, Default)]
+pub struct AnchorRefCounts {
+    entries: Mutex<HashMap<String, AnchorEntry>>,
+}
+
+impl AnchorRefCounts {
+    /// Seed counts from the DAG's anchor→consumers map.
+    pub fn from_consumers(consumers: &BTreeMap<String, Vec<usize>>) -> AnchorRefCounts {
+        let entries = consumers
+            .iter()
+            .map(|(id, pipes)| {
+                (id.clone(), AnchorEntry { remaining: pipes.len(), persisted_ds: None })
+            })
+            .collect();
+        AnchorRefCounts { entries: Mutex::new(entries) }
+    }
+
+    /// Record that the driver persisted `anchor` as engine dataset
+    /// `ds_id`, making it eligible for release-on-last-consumer. If every
+    /// consumer already finished, the id is handed straight back.
+    pub fn register_persisted(&self, anchor: &str, ds_id: u64) -> Option<u64> {
+        let mut entries = self.entries.lock().unwrap();
+        let entry = entries.entry(anchor.to_string()).or_default();
+        if entry.remaining == 0 {
+            return Some(ds_id);
+        }
+        entry.persisted_ds = Some(ds_id);
+        None
+    }
+
+    /// One consumer of `anchor` finished. Returns the persisted dataset id
+    /// exactly once, when the final consumer releases.
+    pub fn release(&self, anchor: &str) -> Option<u64> {
+        let mut entries = self.entries.lock().unwrap();
+        let entry = entries.get_mut(anchor)?;
+        entry.remaining = entry.remaining.saturating_sub(1);
+        if entry.remaining == 0 {
+            entry.persisted_ds.take()
+        } else {
+            None
+        }
+    }
+
+    /// Remaining consumer count (0 for unknown anchors).
+    pub fn remaining(&self, anchor: &str) -> usize {
+        self.entries
+            .lock()
+            .unwrap()
+            .get(anchor)
+            .map(|e| e.remaining)
+            .unwrap_or(0)
+    }
+
+    /// Drain every still-persisted dataset id (failure-path cleanup).
+    pub fn drain_persisted(&self) -> Vec<u64> {
+        self.entries
+            .lock()
+            .unwrap()
+            .values_mut()
+            .filter_map(|e| e.persisted_ds.take())
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,5 +270,72 @@ mod tests {
     fn scope_parse() {
         assert_eq!(Scope::parse("instance"), Some(Scope::Instance));
         assert_eq!(Scope::parse("bogus"), None);
+    }
+
+    fn two_consumer_counts() -> AnchorRefCounts {
+        let mut consumers = BTreeMap::new();
+        consumers.insert("Mid".to_string(), vec![1usize, 2]);
+        consumers.insert("In".to_string(), vec![0usize]);
+        AnchorRefCounts::from_consumers(&consumers)
+    }
+
+    #[test]
+    fn release_fires_once_on_last_consumer() {
+        let rc = two_consumer_counts();
+        assert!(rc.register_persisted("Mid", 77).is_none());
+        assert_eq!(rc.remaining("Mid"), 2);
+        assert_eq!(rc.release("Mid"), None, "first consumer must not free");
+        assert_eq!(rc.release("Mid"), Some(77), "last consumer frees");
+        assert_eq!(rc.release("Mid"), None, "no double free");
+    }
+
+    #[test]
+    fn unpersisted_anchor_never_returns_id() {
+        let rc = two_consumer_counts();
+        assert_eq!(rc.release("In"), None);
+        assert_eq!(rc.release("Unknown"), None);
+    }
+
+    #[test]
+    fn late_persist_after_all_released_returns_immediately() {
+        let rc = two_consumer_counts();
+        rc.release("Mid");
+        rc.release("Mid");
+        // persisting after the consumers already finished hands the id back
+        assert_eq!(rc.register_persisted("Mid", 5), Some(5));
+    }
+
+    #[test]
+    fn concurrent_release_frees_exactly_once() {
+        let mut consumers = BTreeMap::new();
+        consumers.insert("A".to_string(), (0..16usize).collect::<Vec<_>>());
+        let rc = Arc::new(AnchorRefCounts::from_consumers(&consumers));
+        rc.register_persisted("A", 9);
+        let freed = Arc::new(AtomicU64::new(0));
+        let handles: Vec<_> = (0..16)
+            .map(|_| {
+                let rc = rc.clone();
+                let freed = freed.clone();
+                std::thread::spawn(move || {
+                    if rc.release("A").is_some() {
+                        freed.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(freed.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn drain_collects_leftovers() {
+        let rc = two_consumer_counts();
+        rc.register_persisted("Mid", 3);
+        let mut ids = rc.drain_persisted();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![3]);
+        assert!(rc.drain_persisted().is_empty());
     }
 }

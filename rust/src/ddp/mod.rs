@@ -18,8 +18,8 @@ pub mod context;
 pub mod viz;
 
 pub use context::PipeContext;
-pub use dag::DataDag;
+pub use dag::{DataDag, ReadyTracker};
 pub use driver::{DriverConfig, PipeReport, PipeState, PipelineDriver, RunReport};
-pub use lifecycle::{ObjectPool, Scope};
+pub use lifecycle::{AnchorRefCounts, ObjectPool, Scope};
 pub use pipe::{Pipe, PipeContract};
 pub use registry::{PipeRegistry, GLOBAL};

@@ -27,7 +27,26 @@ pub fn to_dot(spec: &PipelineSpec, dag: &DataDag, opts: &VizOptions) -> String {
     let mut out = String::new();
     out.push_str("digraph pipeline {\n");
     out.push_str("  rankdir=TB;\n  node [fontname=\"Helvetica\"];\n");
-    out.push_str(&format!("  label=\"{}\";\n  labelloc=t;\n", esc(&spec.name)));
+    // live progress summary: the stage-parallel driver updates pipe
+    // states concurrently, so mid-run renders show several Running pipes
+    let (mut done, mut running, mut failed) = (0usize, 0usize, 0usize);
+    for i in 0..spec.pipes.len() {
+        match opts.states.get(&i).copied().unwrap_or(PipeState::Pending) {
+            PipeState::Done => done += 1,
+            PipeState::Running => running += 1,
+            PipeState::Failed => failed += 1,
+            PipeState::Pending => {}
+        }
+    }
+    let progress = format!(
+        "{done}/{} done, {running} running, {failed} failed",
+        spec.pipes.len()
+    );
+    out.push_str(&format!(
+        "  label=\"{}\\n{}\";\n  labelloc=t;\n",
+        esc(&spec.name),
+        esc(&progress)
+    ));
 
     // data nodes
     for (id, decl) in &spec.data {
@@ -170,6 +189,16 @@ mod tests {
         assert!(dot.contains("#9fdf9f"), "done = green");
         assert!(dot.contains("#ffe066"), "running = yellow");
         assert!(dot.contains("#ffffff"), "pending = white");
+    }
+
+    #[test]
+    fn progress_summary_in_label() {
+        let mut states = HashMap::new();
+        states.insert(0, PipeState::Done);
+        states.insert(1, PipeState::Running);
+        states.insert(2, PipeState::Running);
+        let dot = render(states);
+        assert!(dot.contains("1/4 done, 2 running, 0 failed"), "{dot}");
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! ddp run        --config pipeline.json [--input id=loc:format ...] [--workers N]
+//!                [--max-concurrent N]   # stage-parallel scheduler width (1 = serial)
 //! ddp validate   --config pipeline.json
 //! ddp visualize  --config pipeline.json [--out graph.dot]
 //! ddp pipes                             # list the pipe repository (§3.8)
@@ -111,7 +112,7 @@ fn cmd_pipes() -> i32 {
 }
 
 fn cmd_run(args: &Args) -> i32 {
-    let spec = match load_spec(args) {
+    let mut spec = match load_spec(args) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("{e}");
@@ -119,6 +120,11 @@ fn cmd_run(args: &Args) -> i32 {
         }
     };
     let workers = args.opt_usize("workers", spec.settings.workers);
+    // write the CLI worker count back so the auto (0) scheduler width
+    // resolves against it, not the spec default
+    spec.settings.workers = workers;
+    spec.settings.max_concurrent_pipes =
+        args.opt_usize("max-concurrent", spec.settings.max_concurrent_pipes);
     let io = Arc::new(IoRegistry::with_sim_cloud());
 
     // load --input id=path:format anchors from real files

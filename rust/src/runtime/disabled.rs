@@ -1,0 +1,61 @@
+//! No-PJRT backend: same API as the real runtime, every entry point
+//! reporting that the `pjrt` feature is disabled. Model pipes surface
+//! this as an attributable pipe failure instead of a link error.
+
+use super::Tensor;
+use crate::util::error::{DdpError, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+fn unavailable() -> DdpError {
+    DdpError::runtime(
+        "model runtime unavailable: built without the `pjrt` feature \
+         (rebuild with `--features pjrt` and a real xla crate in rust/vendor/xla)",
+    )
+}
+
+/// Stub PJRT client + executable cache.
+pub struct ModelRuntime {
+    _private: (),
+}
+
+impl ModelRuntime {
+    /// Always fails in this build; see the module docs.
+    pub fn cpu() -> Result<ModelRuntime> {
+        Err(unavailable())
+    }
+
+    pub fn load(&self, _path: impl AsRef<Path>) -> Result<Arc<LoadedModel>> {
+        Err(unavailable())
+    }
+
+    pub fn loaded_count(&self) -> usize {
+        0
+    }
+}
+
+/// Stub compiled executable (never constructible — `load` always fails).
+pub struct LoadedModel {
+    pub name: String,
+}
+
+impl LoadedModel {
+    pub fn run(&self, _inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        Err(unavailable())
+    }
+
+    pub fn execution_count(&self) -> u64 {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_fails_gracefully() {
+        let err = ModelRuntime::cpu().err().unwrap().to_string();
+        assert!(err.contains("pjrt"), "{err}");
+    }
+}

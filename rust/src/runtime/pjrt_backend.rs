@@ -1,0 +1,219 @@
+//! PJRT-backed runtime (feature `pjrt`): compiles HLO-text artifacts
+//! through the `xla` bindings and executes them on the CPU client.
+
+use super::Tensor;
+use crate::util::error::{DdpError, Result};
+use once_cell::sync::Lazy;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// The `xla` crate's handles hold non-atomic refcounts (`Rc`) and raw
+/// PJRT pointers, so they are neither `Send` nor `Sync`. The engine runs
+/// pipe tasks on a thread pool, and instance-scope model sharing (§3.7)
+/// requires crossing threads. We make that sound by funnelling EVERY xla
+/// call — client construction, compilation, execution, and the temporary
+/// literals they create/drop — through one global mutex, so no two
+/// threads ever touch an `Rc` refcount or PJRT object concurrently.
+/// Inference is thereby serialized process-wide, which matches this
+/// container (1 physical core) and is documented in README.md.
+static XLA_GUARD: Lazy<Mutex<()>> = Lazy::new(|| Mutex::new(()));
+
+struct Unsend<T>(T);
+// SAFETY: all access goes through XLA_GUARD (see above).
+unsafe impl<T> Send for Unsend<T> {}
+unsafe impl<T> Sync for Unsend<T> {}
+
+/// A PJRT client + executable cache. One per process (instance-level
+/// lifecycle, §3.7): compiling an HLO module is expensive, so loaded
+/// models are cached by path.
+pub struct ModelRuntime {
+    client: Unsend<xla::PjRtClient>,
+    cache: Mutex<std::collections::HashMap<String, Arc<LoadedModel>>>,
+}
+
+impl ModelRuntime {
+    /// CPU PJRT client.
+    pub fn cpu() -> Result<ModelRuntime> {
+        let _g = XLA_GUARD.lock().unwrap();
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(ModelRuntime {
+            client: Unsend(client),
+            cache: Mutex::new(std::collections::HashMap::new()),
+        })
+    }
+
+    /// Load + compile an HLO text file, caching by path.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Arc<LoadedModel>> {
+        let key = path.as_ref().to_string_lossy().to_string();
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            return Ok(hit.clone());
+        }
+        let _g = XLA_GUARD.lock().unwrap();
+        let proto = xla::HloModuleProto::from_text_file(&key)
+            .map_err(|e| DdpError::runtime(format!("parse {key}: {e:?}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .0
+            .compile(&comp)
+            .map_err(|e| DdpError::runtime(format!("compile {key}: {e:?}")))?;
+        let model = Arc::new(LoadedModel {
+            exe: Unsend(exe),
+            name: Path::new(&key)
+                .file_stem()
+                .map(|s| s.to_string_lossy().to_string())
+                .unwrap_or_else(|| key.clone()),
+            executions: AtomicU64::new(0),
+        });
+        self.cache.lock().unwrap().insert(key, model.clone());
+        Ok(model)
+    }
+
+    pub fn loaded_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// A compiled executable.
+pub struct LoadedModel {
+    exe: Unsend<xla::PjRtLoadedExecutable>,
+    pub name: String,
+    executions: AtomicU64,
+}
+
+impl LoadedModel {
+    /// Execute with the given inputs; returns every tuple element as a
+    /// flat f32 vector (all our models output f32).
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        let _g = XLA_GUARD.lock().unwrap();
+        let mut literals = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let lit = match t {
+                Tensor::F32(data, dims) => {
+                    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(data)
+                        .reshape(&dims)
+                        .map_err(|e| DdpError::runtime(format!("reshape f32 input: {e:?}")))?
+                }
+                Tensor::I32(data, dims) => {
+                    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(data)
+                        .reshape(&dims)
+                        .map_err(|e| DdpError::runtime(format!("reshape i32 input: {e:?}")))?
+                }
+            };
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .0
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| DdpError::runtime(format!("execute {}: {e:?}", self.name)))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| DdpError::runtime(format!("fetch result: {e:?}")))?;
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        // jax lowering uses return_tuple=True -> output is a tuple
+        let elements = out
+            .to_tuple()
+            .map_err(|e| DdpError::runtime(format!("untuple: {e:?}")))?;
+        let mut vecs = Vec::with_capacity(elements.len());
+        for el in elements {
+            vecs.push(
+                el.to_vec::<f32>()
+                    .map_err(|e| DdpError::runtime(format!("to_vec f32: {e:?}")))?,
+            );
+        }
+        Ok(vecs)
+    }
+
+    /// Number of completed executions (metrics).
+    pub fn execution_count(&self) -> u64 {
+        self.executions.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("langdetect.hlo.txt").exists()
+    }
+
+    /// A runtime, or None when only the API stub is linked (cpu() errors).
+    fn runtime() -> Option<ModelRuntime> {
+        match ModelRuntime::cpu() {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("skipping: no PJRT backend ({e})");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn langdetect_loads_and_runs() {
+        let Some(rt) = runtime() else { return };
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let model = rt.load(artifacts_dir().join("langdetect.hlo.txt")).unwrap();
+        let x = vec![0.0f32; 64 * 2048];
+        let out = model.run(&[Tensor::F32(&x, &[64, 2048])]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), 64 * 16);
+        assert_eq!(model.execution_count(), 1);
+    }
+
+    #[test]
+    fn model_cache_by_path() {
+        let Some(rt) = runtime() else { return };
+        if !have_artifacts() {
+            return;
+        }
+        let a = rt.load(artifacts_dir().join("langdetect.hlo.txt")).unwrap();
+        let b = rt.load(artifacts_dir().join("langdetect.hlo.txt")).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(rt.loaded_count(), 1);
+    }
+
+    #[test]
+    fn pairwise_identity_diagonal() {
+        let Some(rt) = runtime() else { return };
+        if !have_artifacts() {
+            return;
+        }
+        let model = rt.load(artifacts_dir().join("pairwise.hlo.txt")).unwrap();
+        // two identical batches of unit vectors -> diagonal 1.0
+        let mut a = vec![0.0f32; 128 * 64];
+        for i in 0..128 {
+            a[i * 64 + (i % 64)] = 1.0;
+        }
+        let out = model
+            .run(&[Tensor::F32(&a, &[128, 64]), Tensor::F32(&a, &[128, 64])])
+            .unwrap();
+        let s = &out[0];
+        assert_eq!(s.len(), 128 * 128);
+        for i in 0..128 {
+            assert!((s[i * 128 + i] - 1.0).abs() < 1e-5, "diag {i} = {}", s[i * 128 + i]);
+        }
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.load("/nonexistent/model.hlo.txt").is_err());
+    }
+}

@@ -4,16 +4,11 @@
 //! authenticates nonce+ciphertext under a MAC key derived from the data
 //! key (distinct derivation contexts for cipher and MAC).
 
+use super::crypto::{ct_eq, hmac_sha256, Aes128};
 use super::keys::{derive, Key};
-use aes::cipher::{BlockEncrypt, KeyInit};
-use aes::Aes128;
-use hmac::{Hmac, Mac};
-use sha2::Sha256;
 
 use crate::util::error::{DdpError, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
-
-type HmacSha256 = Hmac<Sha256>;
 
 const TAG_LEN: usize = 32;
 const NONCE_LEN: usize = 16;
@@ -36,14 +31,14 @@ fn fresh_nonce() -> [u8; NONCE_LEN] {
 }
 
 fn ctr_xor(key: &Key, nonce: &[u8; NONCE_LEN], data: &mut [u8]) {
-    let cipher = Aes128::new_from_slice(&key.0).expect("aes key");
+    let cipher = Aes128::new(&key.0);
     let mut counter_block = *nonce;
     let mut offset = 0usize;
     let mut ctr: u64 = 0;
     while offset < data.len() {
         // counter in the last 8 bytes, big endian (nonce provides the rest)
         counter_block[8..].copy_from_slice(&ctr.to_be_bytes());
-        let mut block = aes::Block::clone_from_slice(&counter_block);
+        let mut block = counter_block;
         cipher.encrypt_block(&mut block);
         let n = (data.len() - offset).min(16);
         for i in 0..n {
@@ -65,9 +60,8 @@ pub fn encrypt(key: &Key, plaintext: &[u8]) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(NONCE_LEN + ct.len() + TAG_LEN);
     out.extend_from_slice(&nonce);
     out.extend_from_slice(&ct);
-    let mut mac = <HmacSha256 as Mac>::new_from_slice(&mac_key.0).expect("hmac");
-    mac.update(&out);
-    out.extend_from_slice(&mac.finalize().into_bytes());
+    let tag = hmac_sha256(&mac_key.0, &out);
+    out.extend_from_slice(&tag);
     Ok(out)
 }
 
@@ -79,10 +73,12 @@ pub fn decrypt(key: &Key, envelope: &[u8]) -> Result<Vec<u8>> {
     let enc_key = derive(key, "enc");
     let mac_key = derive(key, "mac");
     let (body, tag) = envelope.split_at(envelope.len() - TAG_LEN);
-    let mut mac = <HmacSha256 as Mac>::new_from_slice(&mac_key.0).expect("hmac");
-    mac.update(body);
-    mac.verify_slice(tag)
-        .map_err(|_| DdpError::security("authentication failed (wrong key or tampered data)"))?;
+    let expected = hmac_sha256(&mac_key.0, body);
+    if !ct_eq(&expected, tag) {
+        return Err(DdpError::security(
+            "authentication failed (wrong key or tampered data)",
+        ));
+    }
 
     let mut nonce = [0u8; NONCE_LEN];
     nonce.copy_from_slice(&body[..NONCE_LEN]);

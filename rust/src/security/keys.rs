@@ -1,10 +1,7 @@
 //! Key hierarchy: master → service / dataset → record keys, derived with
 //! HMAC-SHA256 (HKDF-expand style, single block — 16-byte AES keys).
 
-use hmac::{Hmac, Mac};
-use sha2::Sha256;
-
-type HmacSha256 = Hmac<Sha256>;
+use super::crypto::hmac_sha256;
 
 /// 16-byte AES-128 key material.
 #[derive(Clone, PartialEq, Eq)]
@@ -34,9 +31,7 @@ impl MasterKey {
 
 /// Derive a subkey from a parent key and a context label.
 pub fn derive(parent: &Key, context: &str) -> Key {
-    let mut mac = <HmacSha256 as Mac>::new_from_slice(&parent.0).expect("hmac key");
-    mac.update(context.as_bytes());
-    let out = mac.finalize().into_bytes();
+    let out = hmac_sha256(&parent.0, context.as_bytes());
     let mut k = [0u8; 16];
     k.copy_from_slice(&out[..16]);
     Key(k)

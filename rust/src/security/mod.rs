@@ -13,6 +13,7 @@
 //! pipe code) performs all encryption — pipes only ever see plaintext
 //! rows, which is the paper's separation-of-concerns claim.
 
+pub mod crypto;
 pub mod envelope;
 pub mod keys;
 

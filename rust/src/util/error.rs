@@ -1,63 +1,75 @@
 //! Unified error type for the DDP stack.
+//!
+//! Hand-rolled `Display`/`Error` impls (the `thiserror` derive is not in
+//! the offline vendor set); the rendered messages are part of the public
+//! contract and are asserted by tests.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, DdpError>;
 
 /// Every failure mode in the stack, from config parsing to PJRT execution.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum DdpError {
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("json error at offset {offset}: {msg}")]
     Json { offset: usize, msg: String },
-
-    #[error("dag error: {0}")]
     Dag(String),
-
-    #[error("validation error: {0}")]
     Validation(String),
-
-    #[error("pipe '{pipe}' failed: {msg}")]
     Pipe { pipe: String, msg: String },
-
-    #[error("engine error: {0}")]
     Engine(String),
-
-    #[error("shuffle error: {0}")]
     Shuffle(String),
-
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("storage error [{backend}]: {msg}")]
+    Io(std::io::Error),
     Storage { backend: String, msg: String },
-
-    #[error("format error [{format}]: {msg}")]
     Format { format: String, msg: String },
-
-    #[error("security error: {0}")]
     Security(String),
-
-    #[error("schema mismatch: {0}")]
     Schema(String),
-
-    #[error("runtime (PJRT) error: {0}")]
     Runtime(String),
-
-    #[error("model error: {0}")]
     Model(String),
-
-    #[error("metrics error: {0}")]
     Metrics(String),
-
-    #[error("task failed after {attempts} attempts: {msg}")]
     TaskFailed { attempts: u32, msg: String },
-
-    #[error("{0}")]
     Other(String),
+}
+
+impl fmt::Display for DdpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DdpError::Config(m) => write!(f, "config error: {m}"),
+            DdpError::Json { offset, msg } => write!(f, "json error at offset {offset}: {msg}"),
+            DdpError::Dag(m) => write!(f, "dag error: {m}"),
+            DdpError::Validation(m) => write!(f, "validation error: {m}"),
+            DdpError::Pipe { pipe, msg } => write!(f, "pipe '{pipe}' failed: {msg}"),
+            DdpError::Engine(m) => write!(f, "engine error: {m}"),
+            DdpError::Shuffle(m) => write!(f, "shuffle error: {m}"),
+            DdpError::Io(e) => write!(f, "io error: {e}"),
+            DdpError::Storage { backend, msg } => write!(f, "storage error [{backend}]: {msg}"),
+            DdpError::Format { format, msg } => write!(f, "format error [{format}]: {msg}"),
+            DdpError::Security(m) => write!(f, "security error: {m}"),
+            DdpError::Schema(m) => write!(f, "schema mismatch: {m}"),
+            DdpError::Runtime(m) => write!(f, "runtime (PJRT) error: {m}"),
+            DdpError::Model(m) => write!(f, "model error: {m}"),
+            DdpError::Metrics(m) => write!(f, "metrics error: {m}"),
+            DdpError::TaskFailed { attempts, msg } => {
+                write!(f, "task failed after {attempts} attempts: {msg}")
+            }
+            DdpError::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for DdpError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DdpError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for DdpError {
+    fn from(e: std::io::Error) -> Self {
+        DdpError::Io(e)
+    }
 }
 
 impl DdpError {
@@ -99,6 +111,7 @@ impl DdpError {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for DdpError {
     fn from(e: xla::Error) -> Self {
         DdpError::Runtime(format!("{e:?}"))
@@ -115,5 +128,13 @@ mod tests {
         assert_eq!(e.to_string(), "pipe 'Dedup' failed: boom");
         let e = DdpError::Json { offset: 12, msg: "bad token".into() };
         assert!(e.to_string().contains("offset 12"));
+    }
+
+    #[test]
+    fn io_source_preserved() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: DdpError = io.into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

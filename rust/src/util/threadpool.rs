@@ -15,9 +15,14 @@ enum Message {
 }
 
 /// A fixed pool of worker threads consuming from a shared queue.
+///
+/// The submit side is a `Mutex<Sender>` so the pool is `Sync` and can be
+/// driven from many threads at once (the stage-parallel pipe scheduler
+/// submits engine stages concurrently); sends are brief, so contention
+/// on the lock is negligible.
 pub struct ThreadPool {
     workers: Vec<thread::JoinHandle<()>>,
-    tx: mpsc::Sender<Message>,
+    tx: Mutex<mpsc::Sender<Message>>,
     size: usize,
 }
 
@@ -48,7 +53,7 @@ impl ThreadPool {
                     .expect("spawn worker"),
             );
         }
-        ThreadPool { workers, tx, size }
+        ThreadPool { workers, tx: Mutex::new(tx), size }
     }
 
     pub fn size(&self) -> usize {
@@ -57,7 +62,11 @@ impl ThreadPool {
 
     /// Fire-and-forget task.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx.send(Message::Run(Box::new(f))).expect("pool closed");
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Message::Run(Box::new(f)))
+            .expect("pool closed");
     }
 
     /// Run `tasks` and collect results in input order. Panicking tasks
@@ -89,8 +98,11 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        for _ in &self.workers {
-            let _ = self.tx.send(Message::Shutdown);
+        {
+            let tx = self.tx.lock().unwrap();
+            for _ in &self.workers {
+                let _ = tx.send(Message::Shutdown);
+            }
         }
         for w in self.workers.drain(..) {
             let _ = w.join();

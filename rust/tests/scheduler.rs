@@ -1,0 +1,443 @@
+//! Stage-parallel scheduler semantics, pinned down:
+//!
+//! * diamond / fan-out / disconnected DAGs produce byte-identical outputs
+//!   and report order at `maxConcurrentPipes` ∈ {1, 4};
+//! * `maxConcurrentPipes = 1` replays the legacy serial topo order;
+//! * a poisoned pipe fails the run, cancels its not-yet-dispatched
+//!   dependents (marked `Failed`), and leaves every driver-persisted
+//!   anchor cleaned up — including shared anchors of unrelated branches;
+//! * contract validation (§3.8) — arity mismatch, missing column, type
+//!   conflict — yields `DdpError::Validation` under both serial and
+//!   concurrent scheduling;
+//! * refcounted cleanup releases shared anchors after their last consumer;
+//! * independent sleepy branches actually overlap at width 4.
+
+use ddp::config::PipelineSpec;
+use ddp::ddp::{
+    DriverConfig, Pipe, PipeContext, PipeContract, PipeRegistry, PipeState, PipelineDriver,
+    RunReport,
+};
+use ddp::engine::row::{FieldType, Schema};
+use ddp::engine::Dataset;
+use ddp::io::IoRegistry;
+use ddp::row;
+use ddp::util::error::{DdpError, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Adds a constant to the single i64 column; optionally sleeps first so
+/// concurrency tests can force branch overlap.
+struct AddTag {
+    add: i64,
+    sleep_ms: u64,
+}
+
+impl Pipe for AddTag {
+    fn type_name(&self) -> &str {
+        "AddTag"
+    }
+    fn transform(&self, _: &PipeContext, inputs: &[Dataset]) -> Result<Vec<Dataset>> {
+        if self.sleep_ms > 0 {
+            std::thread::sleep(Duration::from_millis(self.sleep_ms));
+        }
+        let ds = &inputs[0];
+        let add = self.add;
+        Ok(vec![ds.map(ds.schema.clone(), move |r| {
+            row!(r.get(0).as_i64().unwrap() + add)
+        })])
+    }
+}
+
+/// Deterministic two-input merge (left partitions, then right).
+struct Merge;
+
+impl Pipe for Merge {
+    fn type_name(&self) -> &str {
+        "Merge"
+    }
+    fn contract(&self) -> PipeContract {
+        PipeContract { arity: Some(2), ..Default::default() }
+    }
+    fn transform(&self, _: &PipeContext, inputs: &[Dataset]) -> Result<Vec<Dataset>> {
+        Ok(vec![inputs[0].union(&[inputs[1].clone()])])
+    }
+}
+
+struct Poison;
+
+impl Pipe for Poison {
+    fn type_name(&self) -> &str {
+        "Poison"
+    }
+    fn transform(&self, _: &PipeContext, _: &[Dataset]) -> Result<Vec<Dataset>> {
+        Err(DdpError::other("poisoned branch"))
+    }
+}
+
+/// Requires exactly one input carrying a `text: str` column.
+struct NeedsText;
+
+impl Pipe for NeedsText {
+    fn type_name(&self) -> &str {
+        "NeedsText"
+    }
+    fn contract(&self) -> PipeContract {
+        PipeContract {
+            arity: Some(1),
+            input_schemas: vec![Some(Schema::new(vec![("text", FieldType::Str)]))],
+            ..Default::default()
+        }
+    }
+    fn transform(&self, _: &PipeContext, inputs: &[Dataset]) -> Result<Vec<Dataset>> {
+        Ok(vec![inputs[0].clone()])
+    }
+}
+
+fn registry() -> PipeRegistry {
+    let reg = PipeRegistry::new();
+    reg.register("AddTag", |params| {
+        Ok(Box::new(AddTag {
+            add: params.u64_or("add", 1) as i64,
+            sleep_ms: params.u64_or("sleepMs", 0),
+        }))
+    });
+    reg.register("Merge", |_| Ok(Box::new(Merge)));
+    reg.register("Poison", |_| Ok(Box::new(Poison)));
+    reg.register("NeedsText", |_| Ok(Box::new(NeedsText)));
+    reg
+}
+
+fn nums(name: &str, n: i64) -> Dataset {
+    let schema = Schema::new(vec![("x", FieldType::I64)]);
+    Dataset::from_rows(name, schema, (0..n).map(|i| row!(i)).collect(), 2)
+}
+
+fn driver_for(config: &str, width: usize) -> PipelineDriver {
+    let mut spec = PipelineSpec::parse(config).unwrap();
+    spec.settings.metrics_cadence_secs = 0.01;
+    spec.settings.max_concurrent_pipes = width;
+    PipelineDriver::new(
+        spec,
+        registry(),
+        Arc::new(IoRegistry::with_sim_cloud()),
+        DriverConfig::default(),
+    )
+    .unwrap()
+}
+
+/// Run `config` at the given width and return (driver, report).
+fn run_at(
+    config: &str,
+    width: usize,
+    provided: &BTreeMap<String, Dataset>,
+) -> (PipelineDriver, std::result::Result<RunReport, DdpError>) {
+    let driver = driver_for(config, width);
+    let report = driver.run(provided.clone());
+    (driver, report)
+}
+
+/// Collected rows of `anchor`, in partition order (no sorting — byte
+/// identity is the claim under test).
+fn rows_of(driver: &PipelineDriver, report: &RunReport, anchor: &str) -> Vec<i64> {
+    let ds = report.anchors.get(anchor).unwrap();
+    driver
+        .ctx
+        .engine
+        .collect_rows(ds)
+        .unwrap()
+        .iter()
+        .map(|r| r.get(0).as_i64().unwrap())
+        .collect()
+}
+
+fn report_names(report: &RunReport) -> Vec<String> {
+    report.pipes.iter().map(|p| p.name.clone()).collect()
+}
+
+const DIAMOND: &str = r#"[
+  {"inputDataId": "In",  "transformerType": "AddTag", "outputDataId": "B", "name": "top",
+   "params": {"add": 10}},
+  {"inputDataId": "B",   "transformerType": "AddTag", "outputDataId": "C", "name": "left",
+   "params": {"add": 100, "sleepMs": 20}},
+  {"inputDataId": "B",   "transformerType": "AddTag", "outputDataId": "D", "name": "right",
+   "params": {"add": 200, "sleepMs": 5}},
+  {"inputDataId": ["C", "D"], "transformerType": "Merge", "outputDataId": "E", "name": "join"}
+]"#;
+
+#[test]
+fn diamond_byte_identical_across_widths() {
+    let mut provided = BTreeMap::new();
+    provided.insert("In".to_string(), nums("In", 20));
+
+    let (d1, r1) = run_at(DIAMOND, 1, &provided);
+    let (d4, r4) = run_at(DIAMOND, 4, &provided);
+    let r1 = r1.unwrap();
+    let r4 = r4.unwrap();
+
+    assert_eq!(rows_of(&d1, &r1, "E"), rows_of(&d4, &r4, "E"));
+    assert_eq!(report_names(&r1), report_names(&r4));
+    assert_eq!(report_names(&r1), vec!["top", "left", "right", "join"]);
+    // every pipe Done in both drivers
+    for d in [&d1, &d4] {
+        assert!(d.pipe_states().iter().all(|s| *s == PipeState::Done));
+    }
+}
+
+fn fanout_config(branches: usize) -> String {
+    let mut pipes = vec![r#"{"inputDataId": "In", "transformerType": "AddTag",
+        "outputDataId": "Shared", "name": "prep", "params": {"add": 1000}}"#
+        .to_string()];
+    for b in 0..branches {
+        pipes.push(format!(
+            r#"{{"inputDataId": "Shared", "transformerType": "AddTag", "outputDataId": "Out{b}",
+                "name": "branch{b}", "params": {{"add": {}, "sleepMs": 10}}}}"#,
+            (b as i64 + 1) * 10
+        ));
+    }
+    format!("[{}]", pipes.join(","))
+}
+
+#[test]
+fn fanout_byte_identical_and_shared_anchor_released() {
+    let config = fanout_config(4);
+    let mut provided = BTreeMap::new();
+    provided.insert("In".to_string(), nums("In", 16));
+
+    let (d1, r1) = run_at(&config, 1, &provided);
+    let (d4, r4) = run_at(&config, 4, &provided);
+    let r1 = r1.unwrap();
+    let r4 = r4.unwrap();
+
+    for b in 0..4 {
+        let anchor = format!("Out{b}");
+        assert_eq!(
+            rows_of(&d1, &r1, &anchor),
+            rows_of(&d4, &r4, &anchor),
+            "branch {b} outputs must match byte-for-byte"
+        );
+    }
+    assert_eq!(report_names(&r1), report_names(&r4));
+
+    // §3.2 refcounted cleanup: the shared anchor was persisted for its 4
+    // consumers and released once the last one finished — in both modes
+    for (d, r) in [(&d1, &r1), (&d4, &r4)] {
+        assert_eq!(d.ctx.engine.cache.len(), 0, "Shared must be released");
+        assert_eq!(*r.metrics.counters.get("driver.anchors_released").unwrap(), 1);
+        // the shared anchor was computed once and then cache-hit
+        assert!(d.ctx.engine.stats.snapshot().cache_hits >= 3);
+    }
+}
+
+const DISCONNECTED: &str = r#"[
+  {"inputDataId": "A0", "transformerType": "AddTag", "outputDataId": "A1", "name": "a_first",
+   "params": {"add": 1, "sleepMs": 10}},
+  {"inputDataId": "A1", "transformerType": "AddTag", "outputDataId": "A2", "name": "a_second",
+   "params": {"add": 2}},
+  {"inputDataId": "B0", "transformerType": "AddTag", "outputDataId": "B1", "name": "b_first",
+   "params": {"add": 5, "sleepMs": 10}},
+  {"inputDataId": "B1", "transformerType": "AddTag", "outputDataId": "B2", "name": "b_second",
+   "params": {"add": 6}}
+]"#;
+
+#[test]
+fn disconnected_components_byte_identical() {
+    let mut provided = BTreeMap::new();
+    provided.insert("A0".to_string(), nums("A0", 10));
+    provided.insert("B0".to_string(), nums("B0", 10));
+
+    let (d1, r1) = run_at(DISCONNECTED, 1, &provided);
+    let (d4, r4) = run_at(DISCONNECTED, 4, &provided);
+    let r1 = r1.unwrap();
+    let r4 = r4.unwrap();
+
+    assert_eq!(rows_of(&d1, &r1, "A2"), rows_of(&d4, &r4, "A2"));
+    assert_eq!(rows_of(&d1, &r1, "B2"), rows_of(&d4, &r4, "B2"));
+    assert_eq!(report_names(&r1), report_names(&r4));
+    assert_eq!(rows_of(&d1, &r1, "A2"), (3..13).collect::<Vec<i64>>());
+    assert_eq!(rows_of(&d1, &r1, "B2"), (11..21).collect::<Vec<i64>>());
+}
+
+#[test]
+fn serial_width_replays_legacy_topo_order() {
+    // declared in reverse: the topo order (and thus the report order)
+    // must be "first", "second" — exactly the legacy serial driver's
+    let config = r#"[
+      {"inputDataId": "M", "transformerType": "AddTag", "outputDataId": "Out", "name": "second"},
+      {"inputDataId": "In", "transformerType": "AddTag", "outputDataId": "M", "name": "first"}
+    ]"#;
+    let mut provided = BTreeMap::new();
+    provided.insert("In".to_string(), nums("In", 5));
+    for width in [1usize, 4] {
+        let (_d, r) = run_at(config, width, &provided);
+        assert_eq!(report_names(&r.unwrap()), vec!["first", "second"]);
+    }
+}
+
+const POISONED: &str = r#"[
+  {"inputDataId": "In", "transformerType": "AddTag", "outputDataId": "Shared", "name": "prep"},
+  {"inputDataId": "Shared", "transformerType": "AddTag", "outputDataId": "G1", "name": "good1",
+   "params": {"sleepMs": 5}},
+  {"inputDataId": "G1", "transformerType": "AddTag", "outputDataId": "G2", "name": "good2"},
+  {"inputDataId": "Shared", "transformerType": "Poison", "outputDataId": "P1", "name": "boom"},
+  {"inputDataId": "P1", "transformerType": "AddTag", "outputDataId": "P2", "name": "victim"}
+]"#;
+
+#[test]
+fn poisoned_branch_fails_cancels_dependents_and_cleans_up() {
+    let mut provided = BTreeMap::new();
+    provided.insert("In".to_string(), nums("In", 8));
+
+    for width in [1usize, 4] {
+        let (driver, result) = run_at(POISONED, width, &provided);
+        let err = result.err().expect("run must fail");
+        assert!(
+            matches!(&err, DdpError::Pipe { pipe, .. } if pipe.as_str() == "boom"),
+            "width {width}: {err}"
+        );
+        assert!(err.to_string().contains("poisoned branch"), "{err}");
+
+        let states = driver.pipe_states();
+        assert_eq!(states[3], PipeState::Failed, "width {width}: boom failed");
+        assert_eq!(
+            states[4],
+            PipeState::Failed,
+            "width {width}: dependent cancelled and marked Failed"
+        );
+        assert_eq!(states[0], PipeState::Done, "width {width}: upstream completed");
+
+        // unrelated branches' anchors are cleaned up: the shared anchor
+        // (persisted for 2 consumers) must not linger in the cache
+        assert_eq!(
+            driver.ctx.engine.cache.len(),
+            0,
+            "width {width}: no anchors left cached after failure"
+        );
+        // failed + cancelled pipes render red
+        assert!(driver.dot().contains("#f28b82"));
+    }
+}
+
+#[test]
+fn validation_arity_mismatch_both_widths() {
+    // Merge declares arity 2 but is wired three inputs
+    let config = r#"[
+      {"inputDataId": "In", "transformerType": "AddTag", "outputDataId": "A", "name": "a"},
+      {"inputDataId": "In", "transformerType": "AddTag", "outputDataId": "B", "name": "b"},
+      {"inputDataId": ["A", "B", "In"], "transformerType": "Merge", "outputDataId": "Out",
+       "name": "bad_join"}
+    ]"#;
+    let mut provided = BTreeMap::new();
+    provided.insert("In".to_string(), nums("In", 4));
+    for width in [1usize, 4] {
+        let (_d, result) = run_at(config, width, &provided);
+        let err = result.err().expect("arity mismatch must fail");
+        assert!(matches!(err, DdpError::Validation(_)), "width {width}: {err}");
+        assert!(err.to_string().contains("expects 2 inputs"), "{err}");
+    }
+}
+
+#[test]
+fn validation_missing_column_both_widths() {
+    let config = r#"{
+      "data": [{"id": "In", "schema": [{"name": "body", "type": "str"}]}],
+      "pipes": [
+        {"inputDataId": "In", "transformerType": "NeedsText", "outputDataId": "Out", "name": "nt"}
+      ]
+    }"#;
+    let schema = Schema::new(vec![("body", FieldType::Str)]);
+    let ds = Dataset::from_rows("In", schema, vec![row!("hello")], 1);
+    let mut provided = BTreeMap::new();
+    provided.insert("In".to_string(), ds);
+    for width in [1usize, 4] {
+        let (_d, result) = run_at(config, width, &provided);
+        let err = result.err().expect("missing column must fail");
+        assert!(matches!(err, DdpError::Validation(_)), "width {width}: {err}");
+        let msg = err.to_string();
+        assert!(msg.contains("requires column 'text'"), "{msg}");
+        // the fixed diagnostic: single-space separator, no embedded
+        // indentation run from the old malformed literal
+        assert!(msg.contains("'In', which declares only [body]"), "{msg}");
+        assert!(!msg.contains("  which"), "malformed whitespace resurfaced: {msg}");
+    }
+}
+
+#[test]
+fn validation_type_conflict_both_widths() {
+    let config = r#"{
+      "data": [{"id": "In", "schema": [{"name": "text", "type": "i64"}]}],
+      "pipes": [
+        {"inputDataId": "In", "transformerType": "NeedsText", "outputDataId": "Out", "name": "nt"}
+      ]
+    }"#;
+    let schema = Schema::new(vec![("text", FieldType::I64)]);
+    let ds = Dataset::from_rows("In", schema, vec![row!(1i64)], 1);
+    let mut provided = BTreeMap::new();
+    provided.insert("In".to_string(), ds);
+    for width in [1usize, 4] {
+        let (_d, result) = run_at(config, width, &provided);
+        let err = result.err().expect("type conflict must fail");
+        assert!(matches!(err, DdpError::Validation(_)), "width {width}: {err}");
+        assert!(err.to_string().contains("'text'"), "{err}");
+    }
+}
+
+const LAZY_DIAMOND: &str = r#"[
+  {"inputDataId": "In", "transformerType": "AddTag", "outputDataId": "Shared", "name": "prep"},
+  {"inputDataId": "Shared", "transformerType": "AddTag", "outputDataId": "C", "name": "left"},
+  {"inputDataId": "Shared", "transformerType": "AddTag", "outputDataId": "D", "name": "right"},
+  {"inputDataId": ["C", "D"], "transformerType": "Merge", "outputDataId": "E", "name": "join"}
+]"#;
+
+#[test]
+fn lazy_consumers_do_not_release_shared_anchor() {
+    // left/right only build lazy maps over Shared; their completion must
+    // NOT release it — the join's sink materialization still reads it.
+    // Shared is computed once (at persist) and cache-hit afterwards.
+    let mut provided = BTreeMap::new();
+    provided.insert("In".to_string(), nums("In", 12));
+    for width in [1usize, 4] {
+        let (driver, result) = run_at(LAZY_DIAMOND, width, &provided);
+        let report = result.unwrap();
+        assert!(
+            report.metrics.counters.get("driver.anchors_released").is_none(),
+            "width {width}: lazy consumers must not trigger a release"
+        );
+        assert_eq!(
+            driver.ctx.engine.cache.len(),
+            1,
+            "width {width}: Shared stays cached through the run"
+        );
+        // one materialization at persist, then hits from both branches
+        assert!(
+            driver.ctx.engine.stats.snapshot().cache_hits >= 2,
+            "width {width}: branch evaluations must hit the cached Shared"
+        );
+    }
+}
+
+#[test]
+fn independent_branches_overlap_at_width_4() {
+    // four branches sleeping 150 ms each: serial pays >= 600 ms, the
+    // width-4 scheduler overlaps them
+    let mut pipes = Vec::new();
+    for b in 0..4 {
+        pipes.push(format!(
+            r#"{{"inputDataId": "In", "transformerType": "AddTag", "outputDataId": "S{b}",
+                "name": "sleepy{b}", "params": {{"sleepMs": 150}}}}"#
+        ));
+    }
+    let config = format!("[{}]", pipes.join(","));
+    let mut provided = BTreeMap::new();
+    provided.insert("In".to_string(), nums("In", 4));
+
+    let (_d1, r1) = run_at(&config, 1, &provided);
+    let (_d4, r4) = run_at(&config, 4, &provided);
+    let t1 = r1.unwrap().total_secs;
+    let t4 = r4.unwrap().total_secs;
+    assert!(t1 >= 0.6, "serial must pay all four sleeps, took {t1}s");
+    assert!(
+        t4 < t1 * 0.9,
+        "width 4 must overlap independent branches (serial {t1}s, concurrent {t4}s)"
+    );
+}

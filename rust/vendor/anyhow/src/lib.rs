@@ -1,0 +1,59 @@
+//! Minimal vendored `anyhow`: a string-backed error type, the `anyhow!`
+//! macro, and a `Result` alias — the subset the examples use.
+
+use std::fmt;
+
+/// A type-erased error carrying a rendered message.
+pub struct Error(String);
+
+impl Error {
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error(message.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does not implement
+// `std::error::Error`, which is what makes this blanket From possible.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error(e.to_string())
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => { $crate::Error::msg(format!($($arg)+)) };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macro_formats() {
+        let e = anyhow!("failed: {}", 42);
+        assert_eq!(e.to_string(), "failed: 42");
+        assert_eq!(format!("{e:?}"), "failed: 42");
+    }
+
+    #[test]
+    fn from_std_error() {
+        fn io_fail() -> super::Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "nope"))?;
+            Ok(())
+        }
+        assert!(io_fail().unwrap_err().to_string().contains("nope"));
+    }
+}

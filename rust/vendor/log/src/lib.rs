@@ -1,0 +1,193 @@
+//! Minimal vendored `log` facade: the `Level`/`LevelFilter`/`Record`/`Log`
+//! types and the `error!`..`trace!` macros, enough for this workspace's
+//! stderr logger backend. API mirrors the real crate for the used subset.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Log verbosity levels, ordered `Error < Warn < Info < Debug < Trace`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        f.pad(s)
+    }
+}
+
+/// Maximum-level filter, `Off` disabling everything.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+/// Metadata about a log invocation.
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log invocation: metadata + preformatted arguments.
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A log sink.
+pub trait Log: Send + Sync {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+struct NopLogger;
+
+impl Log for NopLogger {
+    fn enabled(&self, _: &Metadata) -> bool {
+        false
+    }
+    fn log(&self, _: &Record) {}
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<Box<dyn Log>> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(0);
+
+/// Error returned when a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+/// Install the global logger. Fails if one is already set.
+pub fn set_boxed_logger(logger: Box<dyn Log>) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+/// Set the global maximum level.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+/// Current global maximum level.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        5 => LevelFilter::Trace,
+        _ => LevelFilter::Off,
+    }
+}
+
+/// The installed logger (a no-op logger if none was set).
+pub fn logger() -> &'static dyn Log {
+    static NOP: NopLogger = NopLogger;
+    match LOGGER.get() {
+        Some(l) => l.as_ref(),
+        None => &NOP,
+    }
+}
+
+/// Macro plumbing — not public API.
+#[doc(hidden)]
+pub fn __log(level: Level, target: &str, args: fmt::Arguments) {
+    if level as usize <= MAX_LEVEL.load(Ordering::Relaxed) {
+        let record = Record { metadata: Metadata { level, target }, args };
+        logger().log(&record);
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::__log($crate::Level::Error, module_path!(), format_args!($($arg)+)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::__log($crate::Level::Warn, module_path!(), format_args!($($arg)+)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::__log($crate::Level::Info, module_path!(), format_args!($($arg)+)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::__log($crate::Level::Debug, module_path!(), format_args!($($arg)+)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::__log($crate::Level::Trace, module_path!(), format_args!($($arg)+)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order() {
+        assert!(Level::Error < Level::Trace);
+        assert!(Level::Info <= Level::Info);
+    }
+
+    #[test]
+    fn display_pads() {
+        assert_eq!(format!("[{:5}]", Level::Warn), "[WARN ]");
+        assert_eq!(format!("{}", Level::Error), "ERROR");
+    }
+
+    #[test]
+    fn nop_logger_by_default_is_silent() {
+        // must not panic even with no logger installed
+        super::__log(Level::Error, "t", format_args!("dropped"));
+    }
+}

@@ -1,0 +1,92 @@
+//! Minimal vendored `once_cell` compatible with the subset this workspace
+//! uses (`once_cell::sync::Lazy` in statics). Backed by `std::sync::OnceLock`.
+
+pub mod sync {
+    use std::cell::Cell;
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// A value initialized on first access, usable in `static` items.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: Cell<Option<F>>,
+    }
+
+    // SAFETY: `init` is only ever taken inside `OnceLock::get_or_init`,
+    // which guarantees the closure runs at most once across all threads,
+    // so the `Cell` is never accessed concurrently. This mirrors the
+    // upstream once_cell / std `LazyLock` impls.
+    unsafe impl<T, F: Send> Sync for Lazy<T, F> where OnceLock<T>: Sync {}
+
+    impl<T, F> Lazy<T, F> {
+        pub const fn new(init: F) -> Lazy<T, F> {
+            Lazy { cell: OnceLock::new(), init: Cell::new(Some(init)) }
+        }
+    }
+
+    impl<T, F: FnOnce() -> T> Lazy<T, F> {
+        pub fn force(this: &Lazy<T, F>) -> &T {
+            this.cell.get_or_init(|| match this.init.take() {
+                Some(f) => f(),
+                None => panic!("Lazy instance has previously been poisoned"),
+            })
+        }
+    }
+
+    impl<T, F: FnOnce() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+
+    /// A cell which can be written to only once.
+    pub struct OnceCell<T>(OnceLock<T>);
+
+    impl<T> OnceCell<T> {
+        pub const fn new() -> OnceCell<T> {
+            OnceCell(OnceLock::new())
+        }
+
+        pub fn get(&self) -> Option<&T> {
+            self.0.get()
+        }
+
+        pub fn set(&self, value: T) -> Result<(), T> {
+            self.0.set(value)
+        }
+
+        pub fn get_or_init<F: FnOnce() -> T>(&self, f: F) -> &T {
+            self.0.get_or_init(f)
+        }
+    }
+
+    impl<T> Default for OnceCell<T> {
+        fn default() -> Self {
+            OnceCell::new()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::Lazy;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    static INITS: AtomicU32 = AtomicU32::new(0);
+    static VALUE: Lazy<u32> = Lazy::new(|| {
+        INITS.fetch_add(1, Ordering::SeqCst);
+        42
+    });
+
+    #[test]
+    fn lazy_initializes_once_across_threads() {
+        let handles: Vec<_> = (0..8)
+            .map(|_| std::thread::spawn(|| assert_eq!(*VALUE, 42)))
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(INITS.load(Ordering::SeqCst), 1);
+    }
+}
