@@ -16,7 +16,7 @@ use ddp::corpus::web::{CorpusGen, LangProfiles};
 use ddp::ddp::{DriverConfig, Pipe, PipeContext, PipeRegistry, PipelineDriver};
 use ddp::engine::cluster::{simulate, ClusterConfig, StageSpec};
 use ddp::engine::row::{FieldType, Schema};
-use ddp::engine::{Dataset, EngineConfig};
+use ddp::engine::{Dataset, EngineConfig, EngineCtx};
 use ddp::io::IoRegistry;
 use ddp::ml::embedded::LangDetector;
 use ddp::pipes::model_predict::default_artifacts_dir;
@@ -112,12 +112,60 @@ fn bench_scheduler_fanout(args: &Args) {
     t.save("sched_fanout");
 }
 
+/// Plan-optimizer shuffle-byte probe: a filter declared *downstream* of a
+/// shuffle (the declarative style — the optimizer, not the author, is
+/// responsible for placement). Reports shuffle bytes and wall clock with
+/// the optimizer off vs on. Real execution, no artifacts needed.
+fn bench_optimizer_pushdown(args: &Args) {
+    let rows = args.opt_usize("opt-rows", 20_000) as i64;
+    let keys = 200i64;
+    let schema = Schema::new(vec![("k", FieldType::I64), ("payload", FieldType::Str)]);
+    let data: Vec<ddp::engine::Row> = (0..rows)
+        .map(|i| row!(i % keys, format!("{:0>160}", i)))
+        .collect();
+    let probe = |optimize: bool| -> (u64, u64, f64) {
+        let c = EngineCtx::new(EngineConfig { workers: 4, optimize, ..Default::default() });
+        let ds = Dataset::from_rows("probe", schema.clone(), data.clone(), 8);
+        let agg = ds.reduce_by_key_col(8, 0, |acc, _| acc);
+        let out = agg
+            .filter_expr(ddp::pipes::sql::compile("k < 20", &agg.schema).unwrap());
+        let t0 = std::time::Instant::now();
+        c.collect(&out).unwrap();
+        let s = c.stats.snapshot();
+        (s.shuffle_bytes, s.plan_rewrites, t0.elapsed().as_secs_f64())
+    };
+    let (off_bytes, _, off_secs) = probe(false);
+    let (on_bytes, rewrites, on_secs) = probe(true);
+    let mut t = Table::new(
+        "Plan optimizer — filter below shuffle: shuffle bytes & wall clock",
+        &["mode", "shuffle bytes", "rewrites", "wall clock", "shuffle savings"],
+    );
+    t.row(&[
+        "optimize=false".into(),
+        off_bytes.to_string(),
+        "0".into(),
+        fmt_duration(off_secs),
+        "—".into(),
+    ]);
+    t.row(&[
+        "optimize=true".into(),
+        on_bytes.to_string(),
+        rewrites.to_string(),
+        fmt_duration(on_secs),
+        format!("{:.1}%", 100.0 * (1.0 - on_bytes as f64 / off_bytes.max(1) as f64)),
+    ]);
+    t.save("fig5_optimizer");
+}
+
 fn main() {
     ddp::util::logger::init();
     let args = Args::from_env();
 
     // scheduler fan-out case: real execution, runs without AOT artifacts
     bench_scheduler_fanout(&args);
+
+    // plan-optimizer shuffle savings: real execution, no artifacts needed
+    bench_optimizer_pushdown(&args);
 
     let n_docs = args.opt_usize("docs", 3_000);
     let artifacts = default_artifacts_dir();

@@ -7,7 +7,8 @@
 //! transformations (reduce_by_key / join / distinct / repartition) insert
 //! shuffle boundaries, exactly like Spark stages.
 
-use super::row::{Row, SchemaRef};
+use super::expr::Expr;
+use super::row::{Row, Schema, SchemaRef};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -74,6 +75,20 @@ pub enum Plan {
         input: Dataset,
         f: PredFn,
     },
+    /// Structured filter carrying the SQL expression AST. Unlike the
+    /// closure-based [`Plan::Filter`], the optimizer can inspect, fold,
+    /// split and push this predicate.
+    FilterExpr {
+        input: Dataset,
+        expr: Arc<Expr>,
+    },
+    /// Structured column projection (select + reorder by index). Unlike a
+    /// closure-based [`Plan::Map`], the optimizer can collapse and push it.
+    Project {
+        input: Dataset,
+        cols: Vec<usize>,
+        schema: SchemaRef,
+    },
     FlatMap {
         input: Dataset,
         f: FlatMapFn,
@@ -91,6 +106,10 @@ pub enum Plan {
         key: KeyFn,
         reduce: ReduceFn,
         num_parts: usize,
+        /// `Some(c)` when the key is exactly column `c` (built through
+        /// [`Dataset::reduce_by_key_col`]); lets the optimizer push
+        /// key-column predicates below the shuffle. `None` = opaque key.
+        key_col: Option<usize>,
     },
     Distinct {
         input: Dataset,
@@ -104,6 +123,11 @@ pub enum Plan {
         kind: JoinKind,
         num_parts: usize,
         schema: SchemaRef,
+        /// key column indices when structured (built through
+        /// [`Dataset::join_on`]); `None` = opaque key closures. Structured
+        /// keys let the optimizer prune join inputs to referenced columns.
+        lkey_col: Option<usize>,
+        rkey_col: Option<usize>,
     },
     Union {
         inputs: Vec<Dataset>,
@@ -166,6 +190,8 @@ impl Dataset {
             Plan::Source { name, .. } => name.clone(),
             Plan::Map { .. } => "map".into(),
             Plan::Filter { .. } => "filter".into(),
+            Plan::FilterExpr { .. } => "filter_expr".into(),
+            Plan::Project { .. } => "project".into(),
             Plan::FlatMap { .. } => "flat_map".into(),
             Plan::MapPartitions { .. } => "map_partitions".into(),
             Plan::ReduceByKey { .. } => "reduce_by_key".into(),
@@ -178,6 +204,11 @@ impl Dataset {
     }
 
     fn derive(&self, node: Plan, schema: SchemaRef) -> Dataset {
+        Dataset::with_node(node, schema)
+    }
+
+    /// Wrap a plan node in a fresh dataset handle (optimizer constructor).
+    pub(crate) fn with_node(node: Plan, schema: SchemaRef) -> Dataset {
         Dataset { id: next_id(), node: Arc::new(node), schema }
     }
 
@@ -194,6 +225,28 @@ impl Dataset {
         self.derive(
             Plan::Filter { input: self.clone(), f: Arc::new(f) },
             self.schema.clone(),
+        )
+    }
+
+    /// Structured filter: keep rows where the SQL expression is truthy.
+    /// Prefer this over [`Dataset::filter`] when the predicate is
+    /// expressible — the plan optimizer can rewrite it.
+    pub fn filter_expr(&self, expr: Expr) -> Dataset {
+        self.derive(
+            Plan::FilterExpr { input: self.clone(), expr: Arc::new(expr) },
+            self.schema.clone(),
+        )
+    }
+
+    /// Structured projection: select (and reorder) columns by index. The
+    /// output schema is derived from the input schema. Prefer this over a
+    /// closure [`Dataset::map`] for column selection — the plan optimizer
+    /// can collapse and push it.
+    pub fn project(&self, cols: Vec<usize>) -> Dataset {
+        let schema = Schema::new(cols.iter().map(|&i| self.schema.field(i)).collect::<Vec<_>>());
+        self.derive(
+            Plan::Project { input: self.clone(), cols, schema: schema.clone() },
+            schema,
         )
     }
 
@@ -234,6 +287,46 @@ impl Dataset {
                 key: Arc::new(key),
                 reduce: Arc::new(reduce),
                 num_parts: num_parts.max(1),
+                key_col: None,
+            },
+            self.schema.clone(),
+        )
+    }
+
+    /// Column-keyed [`Dataset::reduce_by_key`]. Contract: `reduce` must
+    /// preserve the key column — `reduce(acc, r)` returns a row whose
+    /// column `key_col` equals the group key (true of any aggregation
+    /// that folds values per key). The optimizer relies on this to push
+    /// key-column predicates below the shuffle.
+    pub fn reduce_by_key_col(
+        &self,
+        num_parts: usize,
+        key_col: usize,
+        reduce: impl Fn(Row, &Row) -> Row + Send + Sync + 'static,
+    ) -> Dataset {
+        // debug builds enforce the key-preservation contract: a violating
+        // reducer would otherwise make optimizer-on and optimizer-off runs
+        // silently disagree once a key predicate is pushed below the fold
+        let checked = move |acc: Row, r: &Row| -> Row {
+            if cfg!(debug_assertions) {
+                let key = r.get(key_col).clone();
+                let out = reduce(acc, r);
+                assert!(
+                    out.get(key_col).canonical_cmp(&key) == std::cmp::Ordering::Equal,
+                    "reduce_by_key_col contract violated: reducer changed key column {key_col}"
+                );
+                out
+            } else {
+                reduce(acc, r)
+            }
+        };
+        self.derive(
+            Plan::ReduceByKey {
+                input: self.clone(),
+                key: Arc::new(move |r: &Row| r.get(key_col).clone()),
+                reduce: Arc::new(checked),
+                num_parts: num_parts.max(1),
+                key_col: Some(key_col),
             },
             self.schema.clone(),
         )
@@ -266,6 +359,36 @@ impl Dataset {
                 kind,
                 num_parts: num_parts.max(1),
                 schema: out_schema.clone(),
+                lkey_col: None,
+                rkey_col: None,
+            },
+            out_schema,
+        )
+    }
+
+    /// Column-keyed [`Dataset::join`]: equi-join on `left[lkey_col] ==
+    /// right[rkey_col]`. Structured keys let the optimizer prune unused
+    /// columns below the shuffle.
+    pub fn join_on(
+        &self,
+        right: &Dataset,
+        out_schema: SchemaRef,
+        kind: JoinKind,
+        num_parts: usize,
+        lkey_col: usize,
+        rkey_col: usize,
+    ) -> Dataset {
+        self.derive(
+            Plan::Join {
+                left: self.clone(),
+                right: right.clone(),
+                lkey: Arc::new(move |r: &Row| r.get(lkey_col).clone()),
+                rkey: Arc::new(move |r: &Row| r.get(rkey_col).clone()),
+                kind,
+                num_parts: num_parts.max(1),
+                schema: out_schema.clone(),
+                lkey_col: Some(lkey_col),
+                rkey_col: Some(rkey_col),
             },
             out_schema,
         )
@@ -303,6 +426,8 @@ impl Dataset {
             Plan::Source { .. } => vec![],
             Plan::Map { input, .. }
             | Plan::Filter { input, .. }
+            | Plan::FilterExpr { input, .. }
+            | Plan::Project { input, .. }
             | Plan::FlatMap { input, .. }
             | Plan::MapPartitions { input, .. }
             | Plan::ReduceByKey { input, .. }
@@ -334,6 +459,58 @@ impl Dataset {
             .map(|d| d.lineage_depth())
             .max()
             .unwrap_or(0)
+    }
+
+    /// Render the plan tree as indented text — stable across runs (no node
+    /// ids), used by the optimizer's golden tests and for diagnostics.
+    /// Shared subtrees print once per consumer.
+    pub fn plan_display(&self) -> String {
+        fn label(ds: &Dataset) -> String {
+            match &*ds.node {
+                Plan::Source { name, .. } => format!("source[{name}]"),
+                Plan::Map { .. } => "map".into(),
+                Plan::Filter { .. } => "filter".into(),
+                Plan::FilterExpr { expr, .. } => format!("filter_expr[{expr}]"),
+                Plan::Project { schema, .. } => {
+                    format!("project[{}]", schema.names().join(", "))
+                }
+                Plan::FlatMap { .. } => "flat_map".into(),
+                Plan::MapPartitions { .. } => "map_partitions".into(),
+                Plan::ReduceByKey { num_parts, key_col, .. } => match key_col {
+                    Some(c) => format!("reduce_by_key[col {c}, parts {num_parts}]"),
+                    None => format!("reduce_by_key[parts {num_parts}]"),
+                },
+                Plan::Distinct { num_parts, .. } => format!("distinct[parts {num_parts}]"),
+                Plan::Join { kind, num_parts, lkey_col, rkey_col, .. } => {
+                    let k = match kind {
+                        JoinKind::Inner => "inner",
+                        JoinKind::Left => "left",
+                    };
+                    match (lkey_col, rkey_col) {
+                        (Some(l), Some(r)) => {
+                            format!("join[{k}, parts {num_parts}, on {l}={r}]")
+                        }
+                        _ => format!("join[{k}, parts {num_parts}]"),
+                    }
+                }
+                Plan::Union { .. } => "union".into(),
+                Plan::Sort { .. } => "sort".into(),
+                Plan::Repartition { num_parts, .. } => {
+                    format!("repartition[parts {num_parts}]")
+                }
+            }
+        }
+        fn go(ds: &Dataset, depth: usize, out: &mut String) {
+            out.push_str(&"  ".repeat(depth));
+            out.push_str(&label(ds));
+            out.push('\n');
+            for input in ds.inputs() {
+                go(&input, depth + 1, out);
+            }
+        }
+        let mut out = String::new();
+        go(self, 0, &mut out);
+        out
     }
 }
 
@@ -388,5 +565,49 @@ mod tests {
         let a = ds.filter(|_| true);
         let b = ds.filter(|_| true);
         assert_ne!(a.id, b.id);
+    }
+
+    #[test]
+    fn project_derives_schema() {
+        let ds = sample();
+        let p = ds.project(vec![1, 0]);
+        assert_eq!(p.schema.names(), vec!["v", "id"]);
+        assert_eq!(p.schema.field_type(0), FieldType::Str);
+        assert!(!p.is_wide());
+    }
+
+    #[test]
+    fn structured_nodes_carry_metadata() {
+        use crate::engine::expr::{BinOp, Expr};
+        let ds = sample();
+        let f = ds.filter_expr(Expr::Binary(
+            BinOp::Gt,
+            Box::new(Expr::Col(0, "id".into())),
+            Box::new(Expr::Lit(crate::engine::row::Field::F64(3.0))),
+        ));
+        assert_eq!(f.name(), "filter_expr");
+        let r = ds.reduce_by_key_col(2, 0, |acc, _| acc);
+        match &*r.node {
+            Plan::ReduceByKey { key_col, .. } => assert_eq!(*key_col, Some(0)),
+            _ => unreachable!(),
+        }
+        let j = ds.join_on(&ds.clone(), Schema::of_names(&["a", "b", "c", "d"]), JoinKind::Inner, 2, 0, 0);
+        match &*j.node {
+            Plan::Join { lkey_col, rkey_col, .. } => {
+                assert_eq!(*lkey_col, Some(0));
+                assert_eq!(*rkey_col, Some(0));
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn plan_display_renders_tree() {
+        let ds = sample();
+        let p = ds.project(vec![0]).repartition(3);
+        assert_eq!(
+            p.plan_display(),
+            "repartition[parts 3]\n  project[id]\n    source[src]\n"
+        );
     }
 }

@@ -11,7 +11,9 @@
 
 use super::cache::CacheManager;
 use super::dataset::{Dataset, JoinKind, PartRef, Partitioned, Plan};
+use super::expr;
 use super::fault::FaultInjector;
+use super::optimizer::{self, RewriteCounts};
 use super::row::{Field, Row};
 use super::stats::EngineStats;
 use crate::util::error::{DdpError, Result};
@@ -32,6 +34,10 @@ pub struct EngineConfig {
     pub cache_budget_bytes: usize,
     /// fuse narrow chains (ablation switch; `false` materializes each op)
     pub fusion: bool,
+    /// run the rule-based plan optimizer before execution (ablation
+    /// switch, like `fusion`; default honours the `DDP_OPTIMIZE` env var —
+    /// `0`/`false` disables)
+    pub optimize: bool,
     /// max attempts per task (1 = no retry)
     pub max_task_attempts: u32,
     /// record a task trace for the cluster simulator
@@ -45,6 +51,9 @@ impl Default for EngineConfig {
             default_partitions: 8,
             cache_budget_bytes: 512 << 20,
             fusion: true,
+            optimize: std::env::var("DDP_OPTIMIZE")
+                .map(|v| v != "0" && !v.eq_ignore_ascii_case("false"))
+                .unwrap_or(true),
             max_task_attempts: 3,
             record_trace: false,
         }
@@ -73,6 +82,7 @@ pub struct EngineCtx {
     pub stats: EngineStats,
     pub fault: Option<Arc<FaultInjector>>,
     trace: Mutex<TaskTrace>,
+    rewrites: Mutex<RewriteCounts>,
 }
 
 impl EngineCtx {
@@ -83,6 +93,7 @@ impl EngineCtx {
             stats: EngineStats::new(),
             fault: None,
             trace: Mutex::new(Vec::new()),
+            rewrites: Mutex::new(RewriteCounts::default()),
             cfg,
         })
     }
@@ -94,6 +105,7 @@ impl EngineCtx {
             stats: EngineStats::new(),
             fault: Some(Arc::new(fault)),
             trace: Mutex::new(Vec::new()),
+            rewrites: Mutex::new(RewriteCounts::default()),
             cfg,
         })
     }
@@ -110,16 +122,38 @@ impl EngineCtx {
 
     /// Materialize a dataset.
     pub fn collect(&self, ds: &Dataset) -> Result<Partitioned> {
-        self.eval(ds)
+        let ds = self.prepare(ds);
+        self.eval(&ds)
     }
 
     /// Materialize and flatten to driver-side rows.
     pub fn collect_rows(&self, ds: &Dataset) -> Result<Vec<Row>> {
-        Ok(self.eval(ds)?.rows())
+        Ok(self.collect(ds)?.rows())
     }
 
     pub fn count(&self, ds: &Dataset) -> Result<usize> {
-        Ok(self.eval(ds)?.num_rows())
+        Ok(self.collect(ds)?.num_rows())
+    }
+
+    /// Run the logical optimizer over the plan (when enabled), charging
+    /// rewrite counts to stats. Persisted datasets are passed as rewrite
+    /// barriers so cache registrations stay attached to their node ids.
+    fn prepare(&self, ds: &Dataset) -> Dataset {
+        if !self.cfg.optimize {
+            return ds.clone();
+        }
+        let out = optimizer::optimize(ds, &|id| self.cache.is_registered(id));
+        let total = out.counts.total();
+        if total > 0 {
+            self.stats.add(&self.stats.plan_rewrites, total);
+            self.rewrites.lock().unwrap().merge(&out.counts);
+        }
+        out.plan
+    }
+
+    /// Accumulated per-rule rewrite counts for this context.
+    pub fn rewrite_counts(&self) -> RewriteCounts {
+        *self.rewrites.lock().unwrap()
     }
 
     /// Drain the recorded task trace.
@@ -149,10 +183,13 @@ impl EngineCtx {
     fn eval_uncached(&self, ds: &Dataset) -> Result<Partitioned> {
         match &*ds.node {
             Plan::Source { data, .. } => Ok(data.clone()),
-            Plan::Map { .. } | Plan::Filter { .. } | Plan::FlatMap { .. } | Plan::MapPartitions { .. } => {
-                self.eval_narrow_chain(ds)
-            }
-            Plan::ReduceByKey { input, key, reduce, num_parts } => {
+            Plan::Map { .. }
+            | Plan::Filter { .. }
+            | Plan::FilterExpr { .. }
+            | Plan::Project { .. }
+            | Plan::FlatMap { .. }
+            | Plan::MapPartitions { .. } => self.eval_narrow_chain(ds),
+            Plan::ReduceByKey { input, key, reduce, num_parts, .. } => {
                 let inp = self.eval(input)?;
                 self.exec_reduce_by_key(ds, inp, key.clone(), reduce.clone(), *num_parts)
             }
@@ -160,7 +197,7 @@ impl EngineCtx {
                 let inp = self.eval(input)?;
                 self.exec_distinct(ds, inp, *num_parts)
             }
-            Plan::Join { left, right, lkey, rkey, kind, num_parts, schema } => {
+            Plan::Join { left, right, lkey, rkey, kind, num_parts, schema, .. } => {
                 let l = self.eval(left)?;
                 let r = self.eval(right)?;
                 self.exec_join(ds, l, r, lkey.clone(), rkey.clone(), *kind, *num_parts, schema.clone())
@@ -205,6 +242,20 @@ impl EngineCtx {
                 }
                 Plan::Filter { input, f } => {
                     steps.push(Step::Filter(f.clone()));
+                    cur = input.clone();
+                }
+                Plan::FilterExpr { input, expr } => {
+                    let e = expr.clone();
+                    steps.push(Step::Filter(Arc::new(move |r: &Row| {
+                        expr::truthy(&expr::eval(&e, r))
+                    })));
+                    cur = input.clone();
+                }
+                Plan::Project { input, cols, .. } => {
+                    let cols = cols.clone();
+                    steps.push(Step::Map(Arc::new(move |r: &Row| {
+                        Row::new(cols.iter().map(|&i| r.get(i).clone()).collect())
+                    })));
                     cur = input.clone();
                 }
                 Plan::FlatMap { input, f, .. } => {
@@ -441,7 +492,12 @@ impl EngineCtx {
                             }
                         }
                     }
-                    agg.into_values().collect()
+                    // canonical key order: output must not depend on the
+                    // hash map's population (the optimizer may legally
+                    // change it by pre-filtering groups)
+                    let mut pairs: Vec<(Field, Row)> = agg.into_iter().collect();
+                    pairs.sort_by(|a, b| a.0.canonical_cmp(&b.0));
+                    pairs.into_iter().map(|(_, r)| r).collect()
                 }
             })
             .collect();
@@ -907,5 +963,84 @@ mod tests {
         let ds = nums(100, 4);
         c.count(&ds.distinct(4)).unwrap();
         assert!(c.stats.snapshot().shuffle_bytes > 0);
+    }
+
+    #[test]
+    fn filter_expr_and_project_execute() {
+        use crate::engine::expr::{BinOp, Expr};
+        let c = ctx();
+        let schema = Schema::new(vec![("x", FieldType::I64), ("y", FieldType::I64)]);
+        let rows = (0..50i64).map(|i| row!(i, i * 10)).collect();
+        let ds = Dataset::from_rows("xy", schema, rows, 3);
+        let pred = Expr::Binary(
+            BinOp::Ge,
+            Box::new(Expr::Col(0, "x".into())),
+            Box::new(Expr::Lit(Field::F64(40.0))),
+        );
+        let out = ds.filter_expr(pred).project(vec![1]);
+        let got = c.collect_rows(&out).unwrap();
+        assert_eq!(got.len(), 10);
+        assert!(got.iter().all(|r| r.fields.len() == 1));
+        assert!(got.iter().all(|r| r.get(0).as_i64().unwrap() >= 400));
+        assert_eq!(out.schema.names(), vec!["y"]);
+    }
+
+    #[test]
+    fn optimizer_toggle_preserves_output_and_cuts_shuffle() {
+        use crate::engine::expr::{BinOp, Expr};
+        let run = |optimize: bool| {
+            let c = EngineCtx::new(EngineConfig { workers: 2, optimize, ..Default::default() });
+            let schema = Schema::new(vec![("k", FieldType::I64), ("v", FieldType::Str)]);
+            let rows = (0..200i64).map(|i| row!(i % 20, format!("padding-{i:06}"))).collect();
+            let ds = Dataset::from_rows("kv", schema, rows, 4);
+            let agg = ds.reduce_by_key_col(4, 0, |acc, _| acc);
+            let pred = Expr::Binary(
+                BinOp::Lt,
+                Box::new(Expr::Col(0, "k".into())),
+                Box::new(Expr::Lit(Field::F64(3.0))),
+            );
+            let out = agg.filter_expr(pred);
+            let parts: Vec<Vec<Row>> = c
+                .collect(&out)
+                .unwrap()
+                .parts
+                .iter()
+                .map(|p| (**p).clone())
+                .collect();
+            (parts, c.stats.snapshot())
+        };
+        let (on_parts, on_stats) = run(true);
+        let (off_parts, off_stats) = run(false);
+        assert_eq!(on_parts, off_parts, "optimizer changed collected output");
+        assert!(on_stats.plan_rewrites > 0);
+        assert_eq!(off_stats.plan_rewrites, 0);
+        assert!(
+            on_stats.shuffle_bytes < off_stats.shuffle_bytes,
+            "pushdown should cut shuffle bytes ({} vs {})",
+            on_stats.shuffle_bytes,
+            off_stats.shuffle_bytes
+        );
+    }
+
+    #[test]
+    fn reduce_output_order_is_canonical() {
+        let c = ctx();
+        let schema = Schema::new(vec![("k", FieldType::I64), ("n", FieldType::I64)]);
+        let rows = (0..60i64).map(|i| row!(i % 6, 1i64)).collect();
+        let ds = Dataset::from_rows("kv", schema, rows, 3);
+        let agg = ds.reduce_by_key_col(
+            1,
+            0,
+            |acc, r| row!(acc.get(0).as_i64().unwrap(), acc.get(1).as_i64().unwrap() + r.get(1).as_i64().unwrap()),
+        );
+        let keys: Vec<i64> = c
+            .collect_rows(&agg)
+            .unwrap()
+            .iter()
+            .map(|r| r.get(0).as_i64().unwrap())
+            .collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted, "single-bucket reduce output sorted by key");
     }
 }

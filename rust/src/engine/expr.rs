@@ -1,0 +1,484 @@
+//! SQL expression AST + evaluator, engine-resident so the logical plan
+//! optimizer can inspect and rewrite structured filters/projections
+//! ([`super::dataset::Plan::FilterExpr`] / [`Plan::Project`]).
+//!
+//! The parser lives with the SQL pipe (`crate::pipes::sql::compile`); this
+//! module owns everything the optimizer needs: evaluation, column usage,
+//! column remapping, conjunct splitting and constant folding. Constant
+//! folding reuses [`eval`] itself on literal-only subtrees, so folded and
+//! runtime evaluation can never disagree.
+
+use super::row::{Field, Row};
+use std::collections::BTreeSet;
+use std::fmt;
+
+// ------------------------------- AST --------------------------------
+
+#[derive(Debug, Clone)]
+pub enum Expr {
+    Lit(Field),
+    /// column reference: resolved index + source name (kept for display)
+    Col(usize, String),
+    Unary(UnOp, Box<Expr>),
+    Binary(BinOp, Box<Expr>, Box<Expr>),
+    Call(Func, Vec<Expr>),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum UnOp {
+    Not,
+    Neg,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BinOp {
+    Or,
+    And,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Func {
+    Length,
+    Lower,
+    Upper,
+    Contains,
+    StartsWith,
+}
+
+// ----------------------------- evaluator ----------------------------
+
+/// Evaluate an expression against a row.
+pub fn eval(e: &Expr, row: &Row) -> Field {
+    match e {
+        Expr::Lit(f) => f.clone(),
+        Expr::Col(i, _) => row.get(*i).clone(),
+        Expr::Unary(UnOp::Not, x) => Field::Bool(!truthy(&eval(x, row))),
+        Expr::Unary(UnOp::Neg, x) => match eval(x, row) {
+            Field::I64(v) => Field::I64(-v),
+            Field::F64(v) => Field::F64(-v),
+            _ => Field::Null,
+        },
+        Expr::Binary(op, a, b) => {
+            let (va, vb) = (eval(a, row), eval(b, row));
+            match op {
+                BinOp::Or => Field::Bool(truthy(&va) || truthy(&vb)),
+                BinOp::And => Field::Bool(truthy(&va) && truthy(&vb)),
+                BinOp::Eq => Field::Bool(field_eq(&va, &vb)),
+                BinOp::Ne => Field::Bool(!field_eq(&va, &vb)),
+                BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge => match field_cmp(&va, &vb) {
+                    Some(ord) => Field::Bool(match op {
+                        BinOp::Lt => ord.is_lt(),
+                        BinOp::Le => ord.is_le(),
+                        BinOp::Gt => ord.is_gt(),
+                        _ => ord.is_ge(),
+                    }),
+                    None => Field::Bool(false),
+                },
+                BinOp::Add | BinOp::Sub | BinOp::Mul | BinOp::Div => {
+                    match (va.as_f64(), vb.as_f64()) {
+                        (Some(x), Some(y)) => Field::F64(match op {
+                            BinOp::Add => x + y,
+                            BinOp::Sub => x - y,
+                            BinOp::Mul => x * y,
+                            _ => x / y,
+                        }),
+                        _ => Field::Null,
+                    }
+                }
+            }
+        }
+        Expr::Call(f, args) => {
+            let vals: Vec<Field> = args.iter().map(|a| eval(a, row)).collect();
+            match f {
+                Func::Length => vals
+                    .first()
+                    .and_then(|v| v.as_str())
+                    .map(|s| Field::I64(s.chars().count() as i64))
+                    .unwrap_or(Field::Null),
+                Func::Lower => vals
+                    .first()
+                    .and_then(|v| v.as_str())
+                    .map(|s| Field::Str(s.to_lowercase()))
+                    .unwrap_or(Field::Null),
+                Func::Upper => vals
+                    .first()
+                    .and_then(|v| v.as_str())
+                    .map(|s| Field::Str(s.to_uppercase()))
+                    .unwrap_or(Field::Null),
+                Func::Contains => match (
+                    vals.first().and_then(|v| v.as_str()),
+                    vals.get(1).and_then(|v| v.as_str()),
+                ) {
+                    (Some(s), Some(sub)) => Field::Bool(s.contains(sub)),
+                    _ => Field::Bool(false),
+                },
+                Func::StartsWith => match (
+                    vals.first().and_then(|v| v.as_str()),
+                    vals.get(1).and_then(|v| v.as_str()),
+                ) {
+                    (Some(s), Some(p)) => Field::Bool(s.starts_with(p)),
+                    _ => Field::Bool(false),
+                },
+            }
+        }
+    }
+}
+
+/// SQL-ish truthiness: null/false/0/empty are false, everything else true
+/// (note: NaN != 0.0, so NaN is truthy — pinned by tests).
+pub fn truthy(f: &Field) -> bool {
+    match f {
+        Field::Bool(b) => *b,
+        Field::Null => false,
+        Field::I64(v) => *v != 0,
+        Field::F64(v) => *v != 0.0,
+        Field::Str(s) => !s.is_empty(),
+        Field::Bytes(b) => !b.is_empty(),
+    }
+}
+
+/// Equality with numeric coercion (I64 vs F64 compare as f64).
+pub fn field_eq(a: &Field, b: &Field) -> bool {
+    match (a.as_f64(), b.as_f64()) {
+        (Some(x), Some(y)) => x == y,
+        _ => a == b,
+    }
+}
+
+/// Ordering: strings compare lexicographically, numbers numerically;
+/// mismatched / non-comparable types return `None` (comparisons on `None`
+/// evaluate to false — pinned by tests).
+pub fn field_cmp(a: &Field, b: &Field) -> Option<std::cmp::Ordering> {
+    match (a, b) {
+        (Field::Str(x), Field::Str(y)) => Some(x.cmp(y)),
+        _ => match (a.as_f64(), b.as_f64()) {
+            (Some(x), Some(y)) => x.partial_cmp(&y),
+            _ => None,
+        },
+    }
+}
+
+// ------------------------- optimizer helpers ------------------------
+
+/// All column indices referenced by the expression.
+pub fn cols_used(e: &Expr) -> BTreeSet<usize> {
+    let mut out = BTreeSet::new();
+    collect_cols(e, &mut out);
+    out
+}
+
+fn collect_cols(e: &Expr, out: &mut BTreeSet<usize>) {
+    match e {
+        Expr::Lit(_) => {}
+        Expr::Col(i, _) => {
+            out.insert(*i);
+        }
+        Expr::Unary(_, x) => collect_cols(x, out),
+        Expr::Binary(_, a, b) => {
+            collect_cols(a, out);
+            collect_cols(b, out);
+        }
+        Expr::Call(_, args) => {
+            for a in args {
+                collect_cols(a, out);
+            }
+        }
+    }
+}
+
+/// Rebuild the expression with every column reference mapped through `f`
+/// (index + display name). Used when pushing predicates below projections
+/// or into join sides.
+pub fn map_cols(e: &Expr, f: &dyn Fn(usize, &str) -> (usize, String)) -> Expr {
+    match e {
+        Expr::Lit(v) => Expr::Lit(v.clone()),
+        Expr::Col(i, n) => {
+            let (ni, nn) = f(*i, n);
+            Expr::Col(ni, nn)
+        }
+        Expr::Unary(op, x) => Expr::Unary(*op, Box::new(map_cols(x, f))),
+        Expr::Binary(op, a, b) => {
+            Expr::Binary(*op, Box::new(map_cols(a, f)), Box::new(map_cols(b, f)))
+        }
+        Expr::Call(func, args) => {
+            Expr::Call(*func, args.iter().map(|a| map_cols(a, f)).collect())
+        }
+    }
+}
+
+/// Split a predicate into top-level AND conjuncts. In filter position only
+/// truthiness matters, so `a and b` keeps a row iff both conjuncts are
+/// truthy — each can be pushed independently.
+pub fn conjuncts(e: &Expr) -> Vec<Expr> {
+    match e {
+        Expr::Binary(BinOp::And, a, b) => {
+            let mut v = conjuncts(a);
+            v.extend(conjuncts(b));
+            v
+        }
+        _ => vec![e.clone()],
+    }
+}
+
+/// Re-join conjuncts with AND (left-associated). Panics on empty input.
+pub fn and_all(mut v: Vec<Expr>) -> Expr {
+    assert!(!v.is_empty(), "and_all needs at least one conjunct");
+    let mut acc = v.remove(0);
+    for e in v {
+        acc = Expr::Binary(BinOp::And, Box::new(acc), Box::new(e));
+    }
+    acc
+}
+
+/// Constant folding: bottom-up, any operator node whose children are all
+/// literals is replaced by its value. The replacement value comes from
+/// [`eval`] on an empty row (literal-only subtrees never read the row), so
+/// folding is exactly runtime semantics — division by zero, NaN equality,
+/// type-mismatch comparisons and all. Returns the folded expression and
+/// the number of nodes folded; idempotent (a second pass folds nothing).
+pub fn fold(e: &Expr) -> (Expr, u64) {
+    let empty = Row::new(Vec::new());
+    fold_inner(e, &empty)
+}
+
+fn fold_inner(e: &Expr, empty: &Row) -> (Expr, u64) {
+    fn is_lit(e: &Expr) -> bool {
+        matches!(e, Expr::Lit(_))
+    }
+    match e {
+        Expr::Lit(_) | Expr::Col(..) => (e.clone(), 0),
+        Expr::Unary(op, x) => {
+            let (fx, n) = fold_inner(x, empty);
+            if is_lit(&fx) {
+                let node = Expr::Unary(*op, Box::new(fx));
+                (Expr::Lit(eval(&node, empty)), n + 1)
+            } else {
+                (Expr::Unary(*op, Box::new(fx)), n)
+            }
+        }
+        Expr::Binary(op, a, b) => {
+            let (fa, na) = fold_inner(a, empty);
+            let (fb, nb) = fold_inner(b, empty);
+            if is_lit(&fa) && is_lit(&fb) {
+                let node = Expr::Binary(*op, Box::new(fa), Box::new(fb));
+                (Expr::Lit(eval(&node, empty)), na + nb + 1)
+            } else {
+                (Expr::Binary(*op, Box::new(fa), Box::new(fb)), na + nb)
+            }
+        }
+        Expr::Call(func, args) => {
+            let mut n = 0;
+            let folded: Vec<Expr> = args
+                .iter()
+                .map(|a| {
+                    let (fa, na) = fold_inner(a, empty);
+                    n += na;
+                    fa
+                })
+                .collect();
+            if folded.iter().all(is_lit) {
+                let node = Expr::Call(*func, folded);
+                (Expr::Lit(eval(&node, empty)), n + 1)
+            } else {
+                (Expr::Call(*func, folded), n)
+            }
+        }
+    }
+}
+
+// ------------------------------ display -----------------------------
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Lit(Field::Str(s)) => write!(f, "'{s}'"),
+            Expr::Lit(v) => write!(f, "{v}"),
+            Expr::Col(_, name) => write!(f, "{name}"),
+            Expr::Unary(UnOp::Not, x) => write!(f, "not {x}"),
+            Expr::Unary(UnOp::Neg, x) => write!(f, "-{x}"),
+            Expr::Binary(op, a, b) => write!(f, "({a} {op} {b})"),
+            Expr::Call(func, args) => {
+                write!(f, "{func}(")?;
+                for (i, a) in args.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{a}")?;
+                }
+                write!(f, ")")
+            }
+        }
+    }
+}
+
+impl fmt::Display for BinOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            BinOp::Or => "or",
+            BinOp::And => "and",
+            BinOp::Eq => "=",
+            BinOp::Ne => "!=",
+            BinOp::Lt => "<",
+            BinOp::Le => "<=",
+            BinOp::Gt => ">",
+            BinOp::Ge => ">=",
+            BinOp::Add => "+",
+            BinOp::Sub => "-",
+            BinOp::Mul => "*",
+            BinOp::Div => "/",
+        };
+        write!(f, "{s}")
+    }
+}
+
+impl fmt::Display for Func {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Func::Length => "length",
+            Func::Lower => "lower",
+            Func::Upper => "upper",
+            Func::Contains => "contains",
+            Func::StartsWith => "starts_with",
+        };
+        write!(f, "{s}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn col(i: usize, n: &str) -> Expr {
+        Expr::Col(i, n.to_string())
+    }
+
+    fn lit(f: Field) -> Expr {
+        Expr::Lit(f)
+    }
+
+    #[test]
+    fn cols_used_walks_all_arms() {
+        let e = Expr::Binary(
+            BinOp::And,
+            Box::new(Expr::Binary(BinOp::Gt, Box::new(col(2, "c")), Box::new(lit(Field::F64(1.0))))),
+            Box::new(Expr::Call(Func::Contains, vec![col(0, "a"), lit(Field::Str("x".into()))])),
+        );
+        let used: Vec<usize> = cols_used(&e).into_iter().collect();
+        assert_eq!(used, vec![0, 2]);
+    }
+
+    #[test]
+    fn conjunct_roundtrip() {
+        let e = Expr::Binary(
+            BinOp::And,
+            Box::new(Expr::Binary(
+                BinOp::And,
+                Box::new(col(0, "a")),
+                Box::new(col(1, "b")),
+            )),
+            Box::new(col(2, "c")),
+        );
+        let parts = conjuncts(&e);
+        assert_eq!(parts.len(), 3);
+        let back = and_all(parts);
+        let r = crate::row!(true, true, true);
+        assert_eq!(eval(&back, &r), eval(&e, &r));
+    }
+
+    #[test]
+    fn fold_matches_runtime_eval() {
+        // (1 + 2) * 3 > 8  →  fully literal, folds to Bool(true)
+        let e = Expr::Binary(
+            BinOp::Gt,
+            Box::new(Expr::Binary(
+                BinOp::Mul,
+                Box::new(Expr::Binary(
+                    BinOp::Add,
+                    Box::new(lit(Field::F64(1.0))),
+                    Box::new(lit(Field::F64(2.0))),
+                )),
+                Box::new(lit(Field::F64(3.0))),
+            )),
+            Box::new(lit(Field::F64(8.0))),
+        );
+        let empty = Row::new(vec![]);
+        let (folded, n) = fold(&e);
+        assert_eq!(n, 3);
+        assert_eq!(eval(&folded, &empty), eval(&e, &empty));
+        assert!(matches!(folded, Expr::Lit(Field::Bool(true))));
+        // idempotent
+        let (_, n2) = fold(&folded);
+        assert_eq!(n2, 0);
+    }
+
+    #[test]
+    fn fold_preserves_division_by_zero_semantics() {
+        // 1/0 → inf (truthy), 0/0 → NaN; NaN = NaN is false at runtime and
+        // must stay false after folding
+        let div = |a: f64, b: f64| {
+            Expr::Binary(BinOp::Div, Box::new(lit(Field::F64(a))), Box::new(lit(Field::F64(b))))
+        };
+        let empty = Row::new(vec![]);
+        let (f1, _) = fold(&div(1.0, 0.0));
+        assert!(matches!(&f1, Expr::Lit(Field::F64(v)) if v.is_infinite()));
+        let nan_eq = Expr::Binary(BinOp::Eq, Box::new(div(0.0, 0.0)), Box::new(div(0.0, 0.0)));
+        let (folded, _) = fold(&nan_eq);
+        assert_eq!(eval(&folded, &empty), Field::Bool(false));
+        assert_eq!(eval(&nan_eq, &empty), Field::Bool(false));
+    }
+
+    #[test]
+    fn fold_stops_at_columns() {
+        let e = Expr::Binary(
+            BinOp::Gt,
+            Box::new(col(0, "x")),
+            Box::new(Expr::Binary(
+                BinOp::Add,
+                Box::new(lit(Field::F64(1.0))),
+                Box::new(lit(Field::F64(2.0))),
+            )),
+        );
+        let (folded, n) = fold(&e);
+        assert_eq!(n, 1);
+        match folded {
+            Expr::Binary(BinOp::Gt, l, r) => {
+                assert!(matches!(*l, Expr::Col(0, _)));
+                assert!(matches!(*r, Expr::Lit(Field::F64(v)) if v == 3.0));
+            }
+            other => panic!("unexpected shape {other:?}"),
+        }
+    }
+
+    #[test]
+    fn map_cols_remaps_index_and_name() {
+        let e = Expr::Binary(BinOp::Gt, Box::new(col(1, "b")), Box::new(lit(Field::F64(0.0))));
+        let m = map_cols(&e, &|i, _| (i + 10, format!("c{}", i + 10)));
+        assert_eq!(cols_used(&m).into_iter().collect::<Vec<_>>(), vec![11]);
+        assert_eq!(m.to_string(), "(c11 > 0)");
+    }
+
+    #[test]
+    fn display_shapes() {
+        let e = Expr::Unary(
+            UnOp::Not,
+            Box::new(Expr::Binary(
+                BinOp::Eq,
+                Box::new(col(0, "id")),
+                Box::new(lit(Field::F64(1.0))),
+            )),
+        );
+        assert_eq!(e.to_string(), "not (id = 1)");
+        let c = Expr::Call(Func::Contains, vec![col(1, "name"), lit(Field::Str("x".into()))]);
+        assert_eq!(c.to_string(), "contains(name, 'x')");
+    }
+}

@@ -3,6 +3,9 @@
 //!
 //! * [`row`] — rows, fields, schemas.
 //! * [`dataset`] — lazy, lineage-tracked datasets (RDD analogue).
+//! * [`expr`] — SQL expression AST + evaluator (structured predicates).
+//! * [`optimizer`] — rule-based logical plan rewriter (pushdown, pruning,
+//!   folding; ablation switch `EngineConfig::optimize`).
 //! * [`executor`] — fused narrow stages, shuffling wide stages, task
 //!   retry, trace recording.
 //! * [`cache`] — explicit persist/unpersist with a byte budget.
@@ -12,6 +15,8 @@
 
 pub mod row;
 pub mod dataset;
+pub mod expr;
+pub mod optimizer;
 pub mod executor;
 pub mod cache;
 pub mod fault;
@@ -20,4 +25,5 @@ pub mod stats;
 
 pub use dataset::{Dataset, JoinKind, Partitioned};
 pub use executor::{EngineConfig, EngineCtx, TaskRecord, TaskTrace};
+pub use optimizer::RewriteCounts;
 pub use row::{Field, FieldType, Row, Schema, SchemaRef};

@@ -1,0 +1,710 @@
+//! Rule-based logical plan optimizer.
+//!
+//! Runs over the [`Plan`] DAG before execution (gated by
+//! [`super::executor::EngineConfig::optimize`]) and rewrites the
+//! *structured* nodes — [`Plan::FilterExpr`], [`Plan::Project`], and wide
+//! ops carrying key-column metadata. Closure-based nodes (`Map`, `Filter`,
+//! `FlatMap`, opaque keys) are opaque and act as rewrite fences.
+//!
+//! Every rule preserves **byte-identical collected output** — same rows,
+//! same order, same partition layout — which the differential test suite
+//! (`tests/optimizer.rs`) asserts over randomly generated DAGs. That
+//! constraint is why some textbook rewrites are deliberately absent:
+//!
+//! * projection pushdown below `Repartition`/`Distinct` would change the
+//!   row-content hash that assigns bucket layout;
+//! * projection pushdown below `ReduceByKey` would break the opaque
+//!   reduce closure's column indices;
+//! * predicate pushdown below `ReduceByKey` is only legal when the
+//!   predicate touches nothing but the structured key column (the
+//!   [`Dataset::reduce_by_key_col`] contract guarantees the reducer
+//!   preserves it);
+//! * predicate pushdown into the *right* side of a **left** join would
+//!   also filter the null-extended rows, so it is restricted to inner
+//!   joins (left-side predicates push into either kind).
+//!
+//! Rules implemented: constant folding, trivially-true filter removal,
+//! adjacent filter conjunction, adjacent projection collapsing, identity
+//! projection removal, predicate pushdown (below `Union`, `Repartition`,
+//! `Distinct`, `Project` with column remapping, into `Join` sides per
+//! conjunct, below column-keyed `ReduceByKey`), projection pushdown
+//! (below `Union`, into both sides of a column-keyed `Join`), and
+//! adjacent equal-width repartition collapsing.
+//!
+//! Cache-registered (persisted) datasets are rewrite barriers: rewriting
+//! one would mint a new node id and detach its cache registration, so the
+//! optimizer leaves those subtrees untouched.
+
+use super::dataset::{Dataset, JoinKind, KeyFn, Plan};
+use super::expr::{self, Expr};
+use super::row::{Row, Schema};
+use std::collections::{BTreeSet, HashMap};
+use std::fmt;
+use std::sync::Arc;
+
+/// Per-rule application counts for one `optimize` call (mergeable across
+/// calls; surfaced through `EngineCtx::rewrite_counts` and, in total, the
+/// `plan_rewrites` engine stat).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RewriteCounts {
+    pub constant_folds: u64,
+    pub trivial_filters_dropped: u64,
+    pub trivial_projects_dropped: u64,
+    pub filters_merged: u64,
+    pub projects_collapsed: u64,
+    pub filter_pushdown_union: u64,
+    pub filter_pushdown_repartition: u64,
+    pub filter_pushdown_distinct: u64,
+    pub filter_pushdown_project: u64,
+    pub filter_pushdown_join: u64,
+    pub filter_pushdown_reduce: u64,
+    pub project_pushdown_union: u64,
+    pub project_pushdown_join: u64,
+    pub repartitions_collapsed: u64,
+}
+
+impl RewriteCounts {
+    pub fn total(&self) -> u64 {
+        self.constant_folds
+            + self.trivial_filters_dropped
+            + self.trivial_projects_dropped
+            + self.filters_merged
+            + self.projects_collapsed
+            + self.filter_pushdown_union
+            + self.filter_pushdown_repartition
+            + self.filter_pushdown_distinct
+            + self.filter_pushdown_project
+            + self.filter_pushdown_join
+            + self.filter_pushdown_reduce
+            + self.project_pushdown_union
+            + self.project_pushdown_join
+            + self.repartitions_collapsed
+    }
+
+    pub fn merge(&mut self, o: &RewriteCounts) {
+        self.constant_folds += o.constant_folds;
+        self.trivial_filters_dropped += o.trivial_filters_dropped;
+        self.trivial_projects_dropped += o.trivial_projects_dropped;
+        self.filters_merged += o.filters_merged;
+        self.projects_collapsed += o.projects_collapsed;
+        self.filter_pushdown_union += o.filter_pushdown_union;
+        self.filter_pushdown_repartition += o.filter_pushdown_repartition;
+        self.filter_pushdown_distinct += o.filter_pushdown_distinct;
+        self.filter_pushdown_project += o.filter_pushdown_project;
+        self.filter_pushdown_join += o.filter_pushdown_join;
+        self.filter_pushdown_reduce += o.filter_pushdown_reduce;
+        self.project_pushdown_union += o.project_pushdown_union;
+        self.project_pushdown_join += o.project_pushdown_join;
+        self.repartitions_collapsed += o.repartitions_collapsed;
+    }
+}
+
+impl fmt::Display for RewriteCounts {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "rewrites: {} (fold {}, drop-filter {}, drop-project {}, merge-filter {}, \
+             collapse-project {}, push-filter u/r/d/p/j/k {}/{}/{}/{}/{}/{}, \
+             push-project u/j {}/{}, collapse-repartition {})",
+            self.total(),
+            self.constant_folds,
+            self.trivial_filters_dropped,
+            self.trivial_projects_dropped,
+            self.filters_merged,
+            self.projects_collapsed,
+            self.filter_pushdown_union,
+            self.filter_pushdown_repartition,
+            self.filter_pushdown_distinct,
+            self.filter_pushdown_project,
+            self.filter_pushdown_join,
+            self.filter_pushdown_reduce,
+            self.project_pushdown_union,
+            self.project_pushdown_join,
+            self.repartitions_collapsed,
+        )
+    }
+}
+
+/// Result of one optimizer pass.
+pub struct Optimized {
+    pub plan: Dataset,
+    pub counts: RewriteCounts,
+}
+
+/// Optimize a plan. `is_barrier` marks node ids that must not be rewritten
+/// or bypassed (the executor passes cache registration: a persisted node's
+/// id is its cache key).
+pub fn optimize(ds: &Dataset, is_barrier: &dyn Fn(u64) -> bool) -> Optimized {
+    let mut counts = RewriteCounts::default();
+    let mut memo: HashMap<u64, Dataset> = HashMap::new();
+    let plan = rewrite(ds, is_barrier, &mut counts, &mut memo);
+    Optimized { plan, counts }
+}
+
+/// Bottom-up rewrite with memoization over the (possibly shared) DAG.
+/// Returns the ORIGINAL dataset handle when nothing changed, so unchanged
+/// plans keep their node ids (and with them their cache registrations).
+fn rewrite(
+    ds: &Dataset,
+    barrier: &dyn Fn(u64) -> bool,
+    counts: &mut RewriteCounts,
+    memo: &mut HashMap<u64, Dataset>,
+) -> Dataset {
+    if let Some(done) = memo.get(&ds.id) {
+        return done.clone();
+    }
+    let out = if barrier(ds.id) {
+        ds.clone()
+    } else {
+        let rebuilt = rebuild(ds, barrier, counts, memo);
+        fixpoint(rebuilt, barrier, counts)
+    };
+    memo.insert(ds.id, out.clone());
+    out
+}
+
+/// Clone the node with optimized children; keeps the original handle (and
+/// id) when no child changed.
+fn rebuild(
+    ds: &Dataset,
+    barrier: &dyn Fn(u64) -> bool,
+    counts: &mut RewriteCounts,
+    memo: &mut HashMap<u64, Dataset>,
+) -> Dataset {
+    let node = match &*ds.node {
+        Plan::Source { .. } => return ds.clone(),
+        Plan::Map { input, f, schema } => {
+            let ni = rewrite(input, barrier, counts, memo);
+            if ni.id == input.id {
+                return ds.clone();
+            }
+            Plan::Map { input: ni, f: f.clone(), schema: schema.clone() }
+        }
+        Plan::Filter { input, f } => {
+            let ni = rewrite(input, barrier, counts, memo);
+            if ni.id == input.id {
+                return ds.clone();
+            }
+            Plan::Filter { input: ni, f: f.clone() }
+        }
+        Plan::FilterExpr { input, expr } => {
+            let ni = rewrite(input, barrier, counts, memo);
+            if ni.id == input.id {
+                return ds.clone();
+            }
+            Plan::FilterExpr { input: ni, expr: expr.clone() }
+        }
+        Plan::Project { input, cols, schema } => {
+            let ni = rewrite(input, barrier, counts, memo);
+            if ni.id == input.id {
+                return ds.clone();
+            }
+            Plan::Project { input: ni, cols: cols.clone(), schema: schema.clone() }
+        }
+        Plan::FlatMap { input, f, schema } => {
+            let ni = rewrite(input, barrier, counts, memo);
+            if ni.id == input.id {
+                return ds.clone();
+            }
+            Plan::FlatMap { input: ni, f: f.clone(), schema: schema.clone() }
+        }
+        Plan::MapPartitions { input, f, schema } => {
+            let ni = rewrite(input, barrier, counts, memo);
+            if ni.id == input.id {
+                return ds.clone();
+            }
+            Plan::MapPartitions { input: ni, f: f.clone(), schema: schema.clone() }
+        }
+        Plan::ReduceByKey { input, key, reduce, num_parts, key_col } => {
+            let ni = rewrite(input, barrier, counts, memo);
+            if ni.id == input.id {
+                return ds.clone();
+            }
+            Plan::ReduceByKey {
+                input: ni,
+                key: key.clone(),
+                reduce: reduce.clone(),
+                num_parts: *num_parts,
+                key_col: *key_col,
+            }
+        }
+        Plan::Distinct { input, num_parts } => {
+            let ni = rewrite(input, barrier, counts, memo);
+            if ni.id == input.id {
+                return ds.clone();
+            }
+            Plan::Distinct { input: ni, num_parts: *num_parts }
+        }
+        Plan::Sort { input, cmp } => {
+            let ni = rewrite(input, barrier, counts, memo);
+            if ni.id == input.id {
+                return ds.clone();
+            }
+            Plan::Sort { input: ni, cmp: cmp.clone() }
+        }
+        Plan::Repartition { input, num_parts } => {
+            let ni = rewrite(input, barrier, counts, memo);
+            if ni.id == input.id {
+                return ds.clone();
+            }
+            Plan::Repartition { input: ni, num_parts: *num_parts }
+        }
+        Plan::Join { left, right, lkey, rkey, kind, num_parts, schema, lkey_col, rkey_col } => {
+            let nl = rewrite(left, barrier, counts, memo);
+            let nr = rewrite(right, barrier, counts, memo);
+            if nl.id == left.id && nr.id == right.id {
+                return ds.clone();
+            }
+            Plan::Join {
+                left: nl,
+                right: nr,
+                lkey: lkey.clone(),
+                rkey: rkey.clone(),
+                kind: *kind,
+                num_parts: *num_parts,
+                schema: schema.clone(),
+                lkey_col: *lkey_col,
+                rkey_col: *rkey_col,
+            }
+        }
+        Plan::Union { inputs } => {
+            let nis: Vec<Dataset> = inputs
+                .iter()
+                .map(|i| rewrite(i, barrier, counts, memo))
+                .collect();
+            if nis.iter().zip(inputs.iter()).all(|(a, b)| a.id == b.id) {
+                return ds.clone();
+            }
+            Plan::Union { inputs: nis }
+        }
+    };
+    Dataset::with_node(node, ds.schema.clone())
+}
+
+/// Apply node-local rules until none fire (bounded — every rule strictly
+/// shrinks the plan or moves a filter/projection downward, so the bound is
+/// a safety net, not a correctness requirement).
+fn fixpoint(mut cur: Dataset, barrier: &dyn Fn(u64) -> bool, counts: &mut RewriteCounts) -> Dataset {
+    for _ in 0..64 {
+        match apply_once(&cur, barrier, counts) {
+            Some(next) => cur = next,
+            None => break,
+        }
+    }
+    cur
+}
+
+fn filter_over(input: &Dataset, expr: Arc<Expr>) -> Dataset {
+    Dataset::with_node(
+        Plan::FilterExpr { input: input.clone(), expr },
+        input.schema.clone(),
+    )
+}
+
+/// Try each rule at this node; `Some(new)` if one fired.
+fn apply_once(
+    ds: &Dataset,
+    barrier: &dyn Fn(u64) -> bool,
+    counts: &mut RewriteCounts,
+) -> Option<Dataset> {
+    match &*ds.node {
+        Plan::FilterExpr { input, expr } => {
+            // constant folding inside the predicate
+            let (folded, nfolds) = expr::fold(expr);
+            if nfolds > 0 {
+                counts.constant_folds += nfolds;
+                return Some(filter_over(input, Arc::new(folded)));
+            }
+            // drop always-true filters (always-false filters are kept:
+            // replacing them with an empty source would change the
+            // partition layout, breaking byte-identity)
+            if let Expr::Lit(v) = &**expr {
+                if expr::truthy(v) {
+                    counts.trivial_filters_dropped += 1;
+                    return Some(input.clone());
+                }
+                return None;
+            }
+            // every rule below replaces or bypasses `input`; a persisted
+            // input must keep its node id, so stop here
+            if barrier(input.id) {
+                return None;
+            }
+            match &*input.node {
+                Plan::FilterExpr { input: gin, expr: ge } => {
+                    counts.filters_merged += 1;
+                    let merged = Expr::Binary(
+                        expr::BinOp::And,
+                        Box::new((**ge).clone()),
+                        Box::new((**expr).clone()),
+                    );
+                    Some(filter_over(gin, Arc::new(merged)))
+                }
+                Plan::Union { inputs } => {
+                    counts.filter_pushdown_union += 1;
+                    let filtered: Vec<Dataset> = inputs
+                        .iter()
+                        .map(|i| fixpoint(filter_over(i, expr.clone()), barrier, counts))
+                        .collect();
+                    Some(Dataset::with_node(
+                        Plan::Union { inputs: filtered },
+                        ds.schema.clone(),
+                    ))
+                }
+                Plan::Repartition { input: gin, num_parts } => {
+                    counts.filter_pushdown_repartition += 1;
+                    let pushed = fixpoint(filter_over(gin, expr.clone()), barrier, counts);
+                    Some(Dataset::with_node(
+                        Plan::Repartition { input: pushed, num_parts: *num_parts },
+                        ds.schema.clone(),
+                    ))
+                }
+                Plan::Distinct { input: gin, num_parts } => {
+                    counts.filter_pushdown_distinct += 1;
+                    let pushed = fixpoint(filter_over(gin, expr.clone()), barrier, counts);
+                    Some(Dataset::with_node(
+                        Plan::Distinct { input: pushed, num_parts: *num_parts },
+                        ds.schema.clone(),
+                    ))
+                }
+                Plan::Project { input: gin, cols, schema } => {
+                    counts.filter_pushdown_project += 1;
+                    let cols2 = cols.clone();
+                    let gschema = gin.schema.clone();
+                    let remapped = expr::map_cols(expr, &|i, _| {
+                        let src = cols2[i];
+                        (src, gschema.field(src).0.to_string())
+                    });
+                    let pushed = fixpoint(filter_over(gin, Arc::new(remapped)), barrier, counts);
+                    Some(Dataset::with_node(
+                        Plan::Project {
+                            input: pushed,
+                            cols: cols.clone(),
+                            schema: schema.clone(),
+                        },
+                        ds.schema.clone(),
+                    ))
+                }
+                Plan::ReduceByKey { input: gin, key, reduce, num_parts, key_col } => {
+                    let kc = (*key_col)?;
+                    let used = expr::cols_used(expr);
+                    if used.is_empty() || !used.iter().all(|&i| i == kc) {
+                        return None;
+                    }
+                    // predicate touches only the key column: groups whose
+                    // key fails would be dropped whole either way, and the
+                    // reduce_by_key_col contract keeps the key column
+                    // intact through the fold
+                    counts.filter_pushdown_reduce += 1;
+                    let pushed = fixpoint(filter_over(gin, expr.clone()), barrier, counts);
+                    Some(Dataset::with_node(
+                        Plan::ReduceByKey {
+                            input: pushed,
+                            key: key.clone(),
+                            reduce: reduce.clone(),
+                            num_parts: *num_parts,
+                            key_col: Some(kc),
+                        },
+                        ds.schema.clone(),
+                    ))
+                }
+                Plan::Join {
+                    left,
+                    right,
+                    lkey,
+                    rkey,
+                    kind,
+                    num_parts,
+                    schema,
+                    lkey_col,
+                    rkey_col,
+                } => {
+                    let lw = left.schema.len();
+                    let mut lpush: Vec<Expr> = Vec::new();
+                    let mut rpush: Vec<Expr> = Vec::new();
+                    let mut keep: Vec<Expr> = Vec::new();
+                    for c in expr::conjuncts(expr) {
+                        let used = expr::cols_used(&c);
+                        if used.is_empty() {
+                            keep.push(c);
+                        } else if used.iter().all(|&i| i < lw) {
+                            // left-side predicate: legal for inner AND left
+                            // joins (null-extension never changes left cols)
+                            lpush.push(c);
+                        } else if *kind == JoinKind::Inner && used.iter().all(|&i| i >= lw) {
+                            // right-side predicate: inner joins only — in a
+                            // left join it would also have to filter the
+                            // null-extended rows above the join
+                            let rschema = right.schema.clone();
+                            rpush.push(expr::map_cols(&c, &|i, _| {
+                                (i - lw, rschema.field(i - lw).0.to_string())
+                            }));
+                        } else {
+                            keep.push(c);
+                        }
+                    }
+                    if lpush.is_empty() && rpush.is_empty() {
+                        return None;
+                    }
+                    counts.filter_pushdown_join += (lpush.len() + rpush.len()) as u64;
+                    let nleft = if lpush.is_empty() {
+                        left.clone()
+                    } else {
+                        fixpoint(
+                            filter_over(left, Arc::new(expr::and_all(lpush))),
+                            barrier,
+                            counts,
+                        )
+                    };
+                    let nright = if rpush.is_empty() {
+                        right.clone()
+                    } else {
+                        fixpoint(
+                            filter_over(right, Arc::new(expr::and_all(rpush))),
+                            barrier,
+                            counts,
+                        )
+                    };
+                    let njoin = Dataset::with_node(
+                        Plan::Join {
+                            left: nleft,
+                            right: nright,
+                            lkey: lkey.clone(),
+                            rkey: rkey.clone(),
+                            kind: *kind,
+                            num_parts: *num_parts,
+                            schema: schema.clone(),
+                            lkey_col: *lkey_col,
+                            rkey_col: *rkey_col,
+                        },
+                        ds.schema.clone(),
+                    );
+                    Some(if keep.is_empty() {
+                        njoin
+                    } else {
+                        filter_over(&njoin, Arc::new(expr::and_all(keep)))
+                    })
+                }
+                _ => None,
+            }
+        }
+
+        Plan::Project { input, cols, schema } => {
+            // identity projection: selecting every column in order
+            if cols.len() == input.schema.len()
+                && cols.iter().enumerate().all(|(i, &c)| i == c)
+                && schema.as_ref() == input.schema.as_ref()
+            {
+                counts.trivial_projects_dropped += 1;
+                return Some(input.clone());
+            }
+            if barrier(input.id) {
+                return None;
+            }
+            match &*input.node {
+                Plan::Project { input: gin, cols: icols, .. } => {
+                    counts.projects_collapsed += 1;
+                    let ncols: Vec<usize> = cols.iter().map(|&j| icols[j]).collect();
+                    Some(Dataset::with_node(
+                        Plan::Project { input: gin.clone(), cols: ncols, schema: schema.clone() },
+                        ds.schema.clone(),
+                    ))
+                }
+                Plan::Union { inputs } => {
+                    counts.project_pushdown_union += 1;
+                    let projected: Vec<Dataset> = inputs
+                        .iter()
+                        .map(|i| {
+                            let p = Dataset::with_node(
+                                Plan::Project {
+                                    input: i.clone(),
+                                    cols: cols.clone(),
+                                    schema: schema.clone(),
+                                },
+                                schema.clone(),
+                            );
+                            fixpoint(p, barrier, counts)
+                        })
+                        .collect();
+                    Some(Dataset::with_node(
+                        Plan::Union { inputs: projected },
+                        ds.schema.clone(),
+                    ))
+                }
+                Plan::Join {
+                    left,
+                    right,
+                    lkey: _,
+                    rkey: _,
+                    kind,
+                    num_parts,
+                    schema: jschema,
+                    lkey_col: Some(lk),
+                    rkey_col: Some(rk),
+                } => {
+                    // prune join inputs to the columns the projection (plus
+                    // the join keys) actually references, so the shuffle
+                    // moves only referenced columns
+                    let lw = left.schema.len();
+                    let rw = right.schema.len();
+                    let mut need: BTreeSet<usize> = cols.iter().copied().collect();
+                    need.insert(*lk);
+                    need.insert(lw + *rk);
+                    let lkeep: Vec<usize> = (0..lw).filter(|i| need.contains(i)).collect();
+                    let rkeep: Vec<usize> =
+                        (0..rw).filter(|i| need.contains(&(lw + i))).collect();
+                    if lkeep.len() == lw && rkeep.len() == rw {
+                        return None;
+                    }
+                    counts.project_pushdown_join += 1;
+                    let nleft = if lkeep.len() == lw {
+                        left.clone()
+                    } else {
+                        fixpoint(left.project(lkeep.clone()), barrier, counts)
+                    };
+                    let nright = if rkeep.len() == rw {
+                        right.clone()
+                    } else {
+                        fixpoint(right.project(rkeep.clone()), barrier, counts)
+                    };
+                    let nlk = lkeep.iter().position(|&c| c == *lk).unwrap();
+                    let nrk = rkeep.iter().position(|&c| c == *rk).unwrap();
+                    // pruned join keeps the caller-declared names of the
+                    // surviving columns
+                    let mut kept: Vec<usize> = lkeep.clone();
+                    kept.extend(rkeep.iter().map(|&c| lw + c));
+                    let njschema = Schema::new(
+                        kept.iter().map(|&i| jschema.field(i)).collect::<Vec<_>>(),
+                    );
+                    let lkey2: KeyFn = Arc::new(move |r: &Row| r.get(nlk).clone());
+                    let rkey2: KeyFn = Arc::new(move |r: &Row| r.get(nrk).clone());
+                    let njoin = Dataset::with_node(
+                        Plan::Join {
+                            left: nleft,
+                            right: nright,
+                            lkey: lkey2,
+                            rkey: rkey2,
+                            kind: *kind,
+                            num_parts: *num_parts,
+                            schema: njschema.clone(),
+                            lkey_col: Some(nlk),
+                            rkey_col: Some(nrk),
+                        },
+                        njschema,
+                    );
+                    let ncols: Vec<usize> = cols
+                        .iter()
+                        .map(|&c| kept.iter().position(|&k| k == c).unwrap())
+                        .collect();
+                    Some(Dataset::with_node(
+                        Plan::Project { input: njoin, cols: ncols, schema: schema.clone() },
+                        ds.schema.clone(),
+                    ))
+                }
+                _ => None,
+            }
+        }
+
+        Plan::Repartition { input, num_parts } => {
+            if barrier(input.id) {
+                return None;
+            }
+            if let Plan::Repartition { input: gin, num_parts: m } = &*input.node {
+                // same width twice: the second pass maps every row to the
+                // bucket it is already in (content-hash partitioning), so
+                // the inner shuffle is a no-op
+                if *m == *num_parts {
+                    counts.repartitions_collapsed += 1;
+                    return Some(Dataset::with_node(
+                        Plan::Repartition { input: gin.clone(), num_parts: *num_parts },
+                        ds.schema.clone(),
+                    ));
+                }
+            }
+            None
+        }
+
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::expr::BinOp;
+    use crate::engine::row::{Field, FieldType};
+    use crate::row;
+
+    fn src() -> Dataset {
+        let schema = Schema::new(vec![
+            ("id", FieldType::I64),
+            ("grp", FieldType::I64),
+            ("name", FieldType::Str),
+        ]);
+        let rows = (0..20)
+            .map(|i| row!(i as i64, (i % 4) as i64, format!("n{i}")))
+            .collect();
+        Dataset::from_rows("src", schema, rows, 3)
+    }
+
+    fn gt(col: usize, name: &str, v: f64) -> Expr {
+        Expr::Binary(
+            BinOp::Gt,
+            Box::new(Expr::Col(col, name.into())),
+            Box::new(Expr::Lit(Field::F64(v))),
+        )
+    }
+
+    fn no_barrier(_: u64) -> bool {
+        false
+    }
+
+    #[test]
+    fn unchanged_plan_keeps_ids() {
+        let ds = src();
+        let mapped = ds.map(ds.schema.clone(), |r| r.clone());
+        let out = optimize(&mapped, &no_barrier);
+        assert_eq!(out.plan.id, mapped.id);
+        assert_eq!(out.counts.total(), 0);
+    }
+
+    #[test]
+    fn barrier_stops_rewrites() {
+        let ds = src();
+        let rp = ds.repartition(2);
+        let filtered = rp.filter_expr(gt(0, "id", 5.0));
+        // with the repartition persisted, the filter must stay above it
+        let barrier_id = rp.id;
+        let out = optimize(&filtered, &|id| id == barrier_id);
+        assert_eq!(out.counts.total(), 0);
+        assert_eq!(out.plan.id, filtered.id);
+        // without the barrier it pushes
+        let out = optimize(&filtered, &no_barrier);
+        assert_eq!(out.counts.filter_pushdown_repartition, 1);
+    }
+
+    #[test]
+    fn shared_subtree_rewritten_once() {
+        let ds = src();
+        let rp = ds.repartition(2);
+        let a = rp.filter_expr(gt(0, "id", 3.0));
+        let b = rp.filter_expr(gt(0, "id", 7.0));
+        let u = a.union(&[b]);
+        let out = optimize(&u, &no_barrier);
+        assert_eq!(out.counts.filter_pushdown_repartition, 2);
+        // both rewritten branches still share the same source
+        let inputs = out.plan.inputs();
+        let src_of = |d: &Dataset| d.inputs()[0].inputs()[0].id;
+        assert_eq!(src_of(&inputs[0]), src_of(&inputs[1]));
+    }
+
+    #[test]
+    fn display_counts() {
+        let mut a = RewriteCounts { constant_folds: 2, ..Default::default() };
+        let b = RewriteCounts { filters_merged: 1, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.total(), 3);
+        let s = a.to_string();
+        assert!(s.contains("rewrites: 3"), "got: {s}");
+    }
+}

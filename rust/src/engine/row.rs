@@ -74,6 +74,31 @@ impl Field {
         matches!(self, Field::Null)
     }
 
+    /// Total order over all field values: type tag first (null < bool <
+    /// i64 < f64 < str < bytes), then value; f64 by IEEE total order. Used
+    /// by the executor to emit shuffle-reduce output in a canonical,
+    /// hash-map-independent order.
+    pub fn canonical_cmp(&self, other: &Field) -> std::cmp::Ordering {
+        fn tag(f: &Field) -> u8 {
+            match f {
+                Field::Null => 0,
+                Field::Bool(_) => 1,
+                Field::I64(_) => 2,
+                Field::F64(_) => 3,
+                Field::Str(_) => 4,
+                Field::Bytes(_) => 5,
+            }
+        }
+        match (self, other) {
+            (Field::Bool(a), Field::Bool(b)) => a.cmp(b),
+            (Field::I64(a), Field::I64(b)) => a.cmp(b),
+            (Field::F64(a), Field::F64(b)) => a.total_cmp(b),
+            (Field::Str(a), Field::Str(b)) => a.cmp(b),
+            (Field::Bytes(a), Field::Bytes(b)) => a.cmp(b),
+            _ => tag(self).cmp(&tag(other)),
+        }
+    }
+
     /// Approximate in-memory size in bytes (used by cache accounting and
     /// the cluster simulator's shuffle-byte model).
     pub fn approx_size(&self) -> usize {
@@ -359,6 +384,18 @@ mod tests {
         set.insert(Field::F64(1.0));
         assert!(set.contains(&Field::F64(1.0)));
         assert!(!set.contains(&Field::F64(2.0)));
+    }
+
+    #[test]
+    fn canonical_cmp_total_order() {
+        use std::cmp::Ordering;
+        assert_eq!(Field::Null.canonical_cmp(&Field::Bool(false)), Ordering::Less);
+        assert_eq!(Field::I64(2).canonical_cmp(&Field::I64(10)), Ordering::Less);
+        assert_eq!(Field::Str("a".into()).canonical_cmp(&Field::Str("b".into())), Ordering::Less);
+        // mixed numeric types order by tag, not value — canonical, not SQL
+        assert_eq!(Field::I64(9).canonical_cmp(&Field::F64(1.0)), Ordering::Less);
+        // NaN is ordered (IEEE total order), so sorts are never ambiguous
+        assert_eq!(Field::F64(f64::NAN).canonical_cmp(&Field::F64(f64::NAN)), Ordering::Equal);
     }
 
     #[test]

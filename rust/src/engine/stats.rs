@@ -19,6 +19,8 @@ pub struct EngineStats {
     /// nanoseconds of task compute time, summed across tasks
     pub task_nanos: AtomicU64,
     pub stages_run: AtomicU64,
+    /// logical plan rewrites applied by the optimizer
+    pub plan_rewrites: AtomicU64,
 }
 
 impl EngineStats {
@@ -44,6 +46,7 @@ impl EngineStats {
             cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
             task_nanos: self.task_nanos.load(Ordering::Relaxed),
             stages_run: self.stages_run.load(Ordering::Relaxed),
+            plan_rewrites: self.plan_rewrites.load(Ordering::Relaxed),
         }
     }
 }
@@ -62,6 +65,7 @@ pub struct StatsSnapshot {
     pub cache_evictions: u64,
     pub task_nanos: u64,
     pub stages_run: u64,
+    pub plan_rewrites: u64,
 }
 
 impl StatsSnapshot {
@@ -79,6 +83,7 @@ impl StatsSnapshot {
             cache_evictions: self.cache_evictions - earlier.cache_evictions,
             task_nanos: self.task_nanos - earlier.task_nanos,
             stages_run: self.stages_run - earlier.stages_run,
+            plan_rewrites: self.plan_rewrites - earlier.plan_rewrites,
         }
     }
 }

@@ -133,9 +133,11 @@ impl Pipe for AggregateTransformer {
         };
         let acc_schema = Schema::of_names(&vec!["_"; acc_width].iter().map(|_| "c").collect::<Vec<_>>());
         let accs = ds.map(acc_schema, to_acc);
-        let merged = accs.reduce_by_key(
+        // column-keyed (col 0 = group key; the fold below never touches
+        // it), so the optimizer can push key predicates under the shuffle
+        let merged = accs.reduce_by_key_col(
             self.num_parts,
-            |r: &Row| r.get(0).clone(),
+            0,
             move |a: Row, b: &Row| {
                 let mut fields = a.fields;
                 fields[1] = Field::I64(

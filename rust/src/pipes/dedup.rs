@@ -162,10 +162,11 @@ impl Pipe for DedupTransformer {
                         .map(|k| Row::new(vec![Field::I64(k as i64), Field::I64(id)]))
                         .collect()
                 });
-                // step 2: min id per bucket
-                let bucket_min = membership.reduce_by_key(
+                // step 2: min id per bucket (column-keyed on band, col 0;
+                // keeping a whole member row preserves the key column)
+                let bucket_min = membership.reduce_by_key_col(
                     n,
-                    |r: &Row| r.get(0).clone(),
+                    0,
                     |acc: Row, r: &Row| {
                         if r.get(1).as_i64() < acc.get(1).as_i64() {
                             r.clone()
@@ -178,17 +179,17 @@ impl Pipe for DedupTransformer {
                 let joined_schema = crate::engine::row::Schema::of_names(&[
                     "band", "id", "band_r", "min_id",
                 ]);
-                let joined = membership.join(
+                let joined = membership.join_on(
                     &bucket_min,
                     joined_schema,
                     crate::engine::dataset::JoinKind::Inner,
                     n,
-                    |r: &Row| r.get(0).clone(),
-                    |r: &Row| r.get(0).clone(),
+                    0,
+                    0,
                 );
-                let canon = joined.reduce_by_key(
+                let canon = joined.reduce_by_key_col(
                     n,
-                    |r: &Row| r.get(1).clone(),
+                    1,
                     |acc: Row, r: &Row| {
                         if r.get(3).as_i64() < acc.get(3).as_i64() {
                             r.clone()
@@ -214,13 +215,13 @@ impl Pipe for DedupTransformer {
                     crate::engine::row::Schema::new(fields)
                 };
                 let schema = ds.schema.clone();
-                ds.join(
+                ds.join_on(
                     &keep,
                     out_schema,
                     crate::engine::dataset::JoinKind::Inner,
                     n,
-                    move |r: &Row| r.get(id_idx).clone(),
-                    |r: &Row| r.get(0).clone(),
+                    id_idx,
+                    0,
                 )
                 .map(schema, |r: &Row| {
                     Row::new(r.fields[..r.fields.len() - 1].to_vec())

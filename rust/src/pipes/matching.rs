@@ -178,9 +178,11 @@ impl Pipe for MatchingTransformer {
         let tag_width = ds.schema.len() + 1; // __block + original columns
         // group rows by block within each partition after a repartition
         // keyed on block hash — sort-by-block inside partitions
-        let shuffled = grouped.reduce_by_key(
+        // column-keyed on __block (col 0); the container merge keeps the
+        // accumulator's tag fields, so the key column survives the fold
+        let shuffled = grouped.reduce_by_key_col(
             self.num_parts,
-            |r: &Row| r.get(0).clone(),
+            0,
             // pack all rows of the block into one "container row": the
             // first row keeps its tagged shape, every further row appends
             // an (id, value) pair. The merge must be container-aware:

@@ -5,7 +5,7 @@
 use crate::ddp::context::PipeContext;
 use crate::ddp::pipe::{Pipe, PipeContract};
 use crate::engine::dataset::{Dataset, JoinKind};
-use crate::engine::row::{Row, Schema};
+use crate::engine::row::Schema;
 use crate::json::Value;
 use crate::util::error::{DdpError, Result};
 
@@ -67,14 +67,9 @@ impl Pipe for PostProcessTransformer {
                 let out_schema = Schema::new(
                     fields.iter().map(|(n, t)| (n.as_str(), *t)).collect(),
                 );
-                let joined = left.join(
-                    right,
-                    out_schema,
-                    JoinKind::Inner,
-                    self.num_parts,
-                    move |r: &Row| r.get(lk).clone(),
-                    move |r: &Row| r.get(rk).clone(),
-                );
+                // column-keyed join: the optimizer can prune unused
+                // columns below the shuffle when a projection follows
+                let joined = left.join_on(right, out_schema, JoinKind::Inner, self.num_parts, lk, rk);
                 Ok(vec![joined])
             }
             other => Err(DdpError::validation(format!(

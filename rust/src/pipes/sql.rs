@@ -12,52 +12,15 @@
 use crate::ddp::context::PipeContext;
 use crate::ddp::pipe::{Pipe, PipeContract};
 use crate::engine::dataset::Dataset;
-use crate::engine::row::{Field, Row, Schema, SchemaRef};
+use crate::engine::row::{Field, Schema};
 use crate::json::Value;
 use crate::util::error::{DdpError, Result};
-use std::sync::Arc;
 
-// ------------------------------- AST --------------------------------
-
-#[derive(Debug, Clone)]
-pub enum Expr {
-    Lit(Field),
-    Col(usize, String),
-    Unary(UnOp, Box<Expr>),
-    Binary(BinOp, Box<Expr>, Box<Expr>),
-    Call(Func, Vec<Expr>),
-}
-
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum UnOp {
-    Not,
-    Neg,
-}
-
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum BinOp {
-    Or,
-    And,
-    Eq,
-    Ne,
-    Lt,
-    Le,
-    Gt,
-    Ge,
-    Add,
-    Sub,
-    Mul,
-    Div,
-}
-
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum Func {
-    Length,
-    Lower,
-    Upper,
-    Contains,
-    StartsWith,
-}
+// The AST and evaluator live in the engine so the plan optimizer can
+// rewrite structured predicates; re-exported here for compatibility.
+pub use crate::engine::expr::{
+    eval, field_cmp, field_eq, truthy, BinOp, Expr, Func, UnOp,
+};
 
 // ------------------------------ lexer -------------------------------
 
@@ -337,109 +300,6 @@ impl<'a> Parser<'a> {
     }
 }
 
-// ----------------------------- evaluator ----------------------------
-
-/// Evaluate an expression against a row.
-pub fn eval(e: &Expr, row: &Row) -> Field {
-    match e {
-        Expr::Lit(f) => f.clone(),
-        Expr::Col(i, _) => row.get(*i).clone(),
-        Expr::Unary(UnOp::Not, x) => Field::Bool(!truthy(&eval(x, row))),
-        Expr::Unary(UnOp::Neg, x) => match eval(x, row) {
-            Field::I64(v) => Field::I64(-v),
-            Field::F64(v) => Field::F64(-v),
-            _ => Field::Null,
-        },
-        Expr::Binary(op, a, b) => {
-            let (va, vb) = (eval(a, row), eval(b, row));
-            match op {
-                BinOp::Or => Field::Bool(truthy(&va) || truthy(&vb)),
-                BinOp::And => Field::Bool(truthy(&va) && truthy(&vb)),
-                BinOp::Eq => Field::Bool(field_eq(&va, &vb)),
-                BinOp::Ne => Field::Bool(!field_eq(&va, &vb)),
-                BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge => {
-                    match field_cmp(&va, &vb) {
-                        Some(ord) => Field::Bool(match op {
-                            BinOp::Lt => ord.is_lt(),
-                            BinOp::Le => ord.is_le(),
-                            BinOp::Gt => ord.is_gt(),
-                            _ => ord.is_ge(),
-                        }),
-                        None => Field::Bool(false),
-                    }
-                }
-                BinOp::Add | BinOp::Sub | BinOp::Mul | BinOp::Div => {
-                    match (va.as_f64(), vb.as_f64()) {
-                        (Some(x), Some(y)) => Field::F64(match op {
-                            BinOp::Add => x + y,
-                            BinOp::Sub => x - y,
-                            BinOp::Mul => x * y,
-                            _ => x / y,
-                        }),
-                        _ => Field::Null,
-                    }
-                }
-            }
-        }
-        Expr::Call(f, args) => {
-            let vals: Vec<Field> = args.iter().map(|a| eval(a, row)).collect();
-            match f {
-                Func::Length => vals
-                    .first()
-                    .and_then(|v| v.as_str())
-                    .map(|s| Field::I64(s.chars().count() as i64))
-                    .unwrap_or(Field::Null),
-                Func::Lower => vals
-                    .first()
-                    .and_then(|v| v.as_str())
-                    .map(|s| Field::Str(s.to_lowercase()))
-                    .unwrap_or(Field::Null),
-                Func::Upper => vals
-                    .first()
-                    .and_then(|v| v.as_str())
-                    .map(|s| Field::Str(s.to_uppercase()))
-                    .unwrap_or(Field::Null),
-                Func::Contains => match (vals.first().and_then(|v| v.as_str()), vals.get(1).and_then(|v| v.as_str())) {
-                    (Some(s), Some(sub)) => Field::Bool(s.contains(sub)),
-                    _ => Field::Bool(false),
-                },
-                Func::StartsWith => match (vals.first().and_then(|v| v.as_str()), vals.get(1).and_then(|v| v.as_str())) {
-                    (Some(s), Some(p)) => Field::Bool(s.starts_with(p)),
-                    _ => Field::Bool(false),
-                },
-            }
-        }
-    }
-}
-
-fn truthy(f: &Field) -> bool {
-    match f {
-        Field::Bool(b) => *b,
-        Field::Null => false,
-        Field::I64(v) => *v != 0,
-        Field::F64(v) => *v != 0.0,
-        Field::Str(s) => !s.is_empty(),
-        Field::Bytes(b) => !b.is_empty(),
-    }
-}
-
-fn field_eq(a: &Field, b: &Field) -> bool {
-    match (a.as_f64(), b.as_f64()) {
-        (Some(x), Some(y)) => x == y,
-        _ => a == b,
-    }
-}
-
-fn field_cmp(a: &Field, b: &Field) -> Option<std::cmp::Ordering> {
-    match (a, b) {
-        (Field::Str(x), Field::Str(y)) => Some(x.cmp(y)),
-        _ => match (a.as_f64(), b.as_f64()) {
-            (Some(x), Some(y)) => x.partial_cmp(&y),
-            _ => None,
-        },
-    }
-}
-
 // ------------------------------- pipe -------------------------------
 
 /// Filter + optional projection, declared as SQL-ish strings.
@@ -471,30 +331,22 @@ impl Pipe for SqlFilterTransformer {
     fn transform(&self, _ctx: &PipeContext, inputs: &[Dataset]) -> Result<Vec<Dataset>> {
         let mut ds = inputs[0].clone();
         if let Some(f) = &self.filter {
-            let expr = Arc::new(compile(f, &ds.schema)?);
-            let e = expr.clone();
-            ds = ds.filter(move |r| truthy(&eval(&e, r)));
+            // structured Plan::FilterExpr: the optimizer can fold, split
+            // and push this predicate (an opaque closure could not move)
+            ds = ds.filter_expr(compile(f, &ds.schema)?);
         }
         if !self.select.is_empty() {
-            let schema = &ds.schema;
             let idxs: Vec<usize> = self
                 .select
                 .iter()
                 .map(|c| {
-                    schema
+                    ds.schema
                         .idx(c)
                         .ok_or_else(|| DdpError::schema(format!("unknown column '{c}' in select")))
                 })
                 .collect::<Result<_>>()?;
-            let out_schema: SchemaRef = Schema::new(
-                idxs.iter()
-                    .map(|&i| schema.field(i))
-                    .collect::<Vec<_>>(),
-            );
-            let idxs2 = idxs.clone();
-            ds = ds.map(out_schema, move |r| {
-                Row::new(idxs2.iter().map(|&i| r.get(i).clone()).collect())
-            });
+            // structured Plan::Project: collapsible / pushable
+            ds = ds.project(idxs);
         }
         Ok(vec![ds])
     }
@@ -503,7 +355,7 @@ impl Pipe for SqlFilterTransformer {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::row::FieldType;
+    use crate::engine::row::{FieldType, Row, SchemaRef};
     use crate::row;
 
     fn schema() -> SchemaRef {
@@ -544,6 +396,81 @@ mod tests {
         assert_eq!(eval_str("lower(name)", &r), Field::Str("hello world".into()));
         assert_eq!(eval_str("contains(name, 'World')", &r), Field::Bool(true));
         assert_eq!(eval_str("starts_with(lower(name), 'hello')", &r), Field::Bool(true));
+    }
+
+    // Edge-case semantics pinned before constant folding relies on them
+    // (folding evaluates literal subtrees with the same `eval`, so these
+    // behaviours must hold whether an expression folds or runs per-row).
+
+    #[test]
+    fn division_by_zero_yields_inf_and_nan() {
+        let r = row!(1i64, "x", 2.0);
+        match eval_str("1 / 0", &r) {
+            Field::F64(v) => assert!(v.is_infinite() && v > 0.0),
+            other => panic!("1/0 gave {other:?}"),
+        }
+        match eval_str("-1 / 0", &r) {
+            Field::F64(v) => assert!(v.is_infinite() && v < 0.0),
+            other => panic!("-1/0 gave {other:?}"),
+        }
+        match eval_str("0 / 0", &r) {
+            Field::F64(v) => assert!(v.is_nan()),
+            other => panic!("0/0 gave {other:?}"),
+        }
+        // NaN compares unequal to itself, both folded and unfolded
+        assert_eq!(eval_str("0 / 0 = 0 / 0", &r), Field::Bool(false));
+        assert_eq!(eval_str("0 / 0 != 0 / 0", &r), Field::Bool(true));
+    }
+
+    #[test]
+    fn mismatched_type_comparisons_are_false() {
+        // field_cmp returns None for str-vs-number; every ordering
+        // comparison on None evaluates false (so both `x < y` and
+        // `x >= y` can be false at once — pinned, relied on by folding)
+        let r = row!(5i64, "hello", 0.5);
+        assert_eq!(eval_str("name < 5", &r), Field::Bool(false));
+        assert_eq!(eval_str("name >= 5", &r), Field::Bool(false));
+        assert_eq!(eval_str("name > 5", &r), Field::Bool(false));
+        assert_eq!(field_cmp(&Field::Str("a".into()), &Field::F64(1.0)), None);
+        assert_eq!(field_cmp(&Field::Null, &Field::I64(1)), None);
+        // equality does not coerce str/number: unequal, not an error
+        assert_eq!(eval_str("name = 5", &r), Field::Bool(false));
+        assert_eq!(eval_str("name != 5", &r), Field::Bool(true));
+    }
+
+    #[test]
+    fn not_binds_looser_than_comparison() {
+        let r = row!(5i64, "hello", 0.5);
+        // `not id = 5` parses as `not (id = 5)`, not `(not id) = 5`
+        assert_eq!(eval_str("not id = 5", &r), Field::Bool(false));
+        assert_eq!(eval_str("not id = 4", &r), Field::Bool(true));
+        // arithmetic binds tighter than comparison, which binds tighter
+        // than `not`
+        assert_eq!(eval_str("not id + 1 > 5", &r), Field::Bool(false));
+        assert_eq!(eval_str("not id - 1 > 5", &r), Field::Bool(true));
+    }
+
+    #[test]
+    fn folded_and_runtime_eval_agree_on_literal_exprs() {
+        use crate::engine::expr::fold;
+        let s = schema();
+        let empty = Row::new(vec![]);
+        for src in [
+            "1 / 0",
+            "0 / 0 = 0 / 0",
+            "not (1 > 2)",
+            "'a' < 'b' and 3 * 4 >= 12",
+            "length('héllo') = 5",
+            "contains(upper('abc'), 'AB')",
+            "-(2 + 3) * 4",
+            "null or 1",
+            "'x' > 5",
+        ] {
+            let e = compile(src, &s).unwrap();
+            let (folded, _) = fold(&e);
+            assert!(matches!(folded, Expr::Lit(_)), "'{src}' should fold fully");
+            assert_eq!(eval(&folded, &empty), eval(&e, &empty), "fold changed '{src}'");
+        }
     }
 
     #[test]

@@ -90,6 +90,7 @@ fn spark_interface_config() {
         default_partitions: 3,
         cache_budget_bytes: 1 << 20,
         fusion: false,
+        optimize: true,
         max_task_attempts: 5,
         record_trace: true,
     };

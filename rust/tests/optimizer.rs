@@ -1,0 +1,596 @@
+//! Logical plan optimizer test suite:
+//!
+//! * differential property test — optimizer-on vs optimizer-off produce
+//!   byte-identical collected output (same rows, same order, same
+//!   partition layout) across ~100 randomly generated DAGs;
+//! * shuffle-byte regression tests — pushdown strictly reduces
+//!   `EngineStats::shuffle_bytes` where legal, leaves it unchanged where
+//!   illegal (e.g. a predicate spanning both join sides);
+//! * golden per-rule tests — before/after plan shapes via `plan_display`.
+
+use ddp::engine::expr::{BinOp, Expr, UnOp};
+use ddp::engine::optimizer::optimize;
+use ddp::engine::stats::StatsSnapshot;
+use ddp::engine::{
+    Dataset, EngineConfig, EngineCtx, Field, FieldType, JoinKind, Partitioned, Row, Schema,
+};
+use ddp::pipes::sql::compile;
+use ddp::row;
+use ddp::util::testkit::{property, Gen};
+
+// ---------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------
+
+fn layout(p: &Partitioned) -> Vec<Vec<Row>> {
+    p.parts.iter().map(|part| (**part).clone()).collect()
+}
+
+fn run(optimize: bool, ds: &Dataset) -> (Vec<Vec<Row>>, StatsSnapshot) {
+    let c = EngineCtx::new(EngineConfig { workers: 2, optimize, ..Default::default() });
+    let parts = layout(&c.collect(ds).unwrap());
+    (parts, c.stats.snapshot())
+}
+
+fn no_barrier(_: u64) -> bool {
+    false
+}
+
+// ---------------------------------------------------------------------
+// random plan generator
+// ---------------------------------------------------------------------
+
+fn base_source(g: &mut Gen, name: &str) -> Dataset {
+    let schema = Schema::new(vec![
+        ("id", FieldType::I64),
+        ("grp", FieldType::I64),
+        ("name", FieldType::Str),
+        ("score", FieldType::F64),
+    ]);
+    let n = 5 + g.usize(40);
+    let rows = (0..n)
+        .map(|_| {
+            row!(
+                g.i64(0, 30),
+                g.i64(0, 6),
+                g.ident(1, 6),
+                (g.i64(0, 100) as f64) / 10.0
+            )
+        })
+        .collect();
+    Dataset::from_rows(name, schema, rows, 1 + g.usize(4))
+}
+
+/// One random comparison on a random column — deliberately includes
+/// type-mismatched literals (str column vs number) to exercise the
+/// `field_cmp → None → false` path under folding and pushdown.
+fn rand_cmp(g: &mut Gen, schema: &Schema) -> Expr {
+    let i = g.usize(schema.len());
+    let (name, ty) = schema.field(i);
+    let col = Expr::Col(i, name.to_string());
+    let lit = match ty {
+        FieldType::Str if g.bool() => Expr::Lit(Field::Str(g.ident(1, 3))),
+        _ => Expr::Lit(Field::F64(g.i64(0, 30) as f64)),
+    };
+    let op = match g.u64(6) {
+        0 => BinOp::Eq,
+        1 => BinOp::Ne,
+        2 => BinOp::Lt,
+        3 => BinOp::Le,
+        4 => BinOp::Gt,
+        _ => BinOp::Ge,
+    };
+    Expr::Binary(op, Box::new(col), Box::new(lit))
+}
+
+fn rand_pred(g: &mut Gen, schema: &Schema) -> Expr {
+    let mut e = rand_cmp(g, schema);
+    for _ in 0..g.usize(3) {
+        let rhs = rand_cmp(g, schema);
+        let op = if g.bool() { BinOp::And } else { BinOp::Or };
+        e = Expr::Binary(op, Box::new(e), Box::new(rhs));
+    }
+    if g.u64(4) == 0 {
+        e = Expr::Unary(UnOp::Not, Box::new(e));
+    }
+    e
+}
+
+fn rand_project(g: &mut Gen, ds: &Dataset) -> Dataset {
+    let width = ds.schema.len();
+    let k = 1 + g.usize(width);
+    let mut remaining: Vec<usize> = (0..width).collect();
+    let mut picked = Vec::with_capacity(k);
+    for _ in 0..k {
+        picked.push(remaining.remove(g.usize(remaining.len())));
+    }
+    ds.project(picked)
+}
+
+fn rand_reduce(g: &mut Gen, ds: &Dataset) -> Dataset {
+    let width = ds.schema.len();
+    let kc = g.usize(width);
+    let f64_cols: Vec<usize> = (0..width)
+        .filter(|&i| i != kc && ds.schema.field_type(i) == FieldType::F64)
+        .collect();
+    let parts = 1 + g.usize(3);
+    if !f64_cols.is_empty() && g.bool() {
+        let vc = f64_cols[g.usize(f64_cols.len())];
+        // sum one value column, keep everything else from the accumulator
+        // (key column preserved, per the reduce_by_key_col contract)
+        ds.reduce_by_key_col(parts, kc, move |acc: Row, r: &Row| {
+            let mut fields = acc.fields;
+            let a = fields[vc].as_f64().unwrap_or(0.0);
+            let b = r.get(vc).as_f64().unwrap_or(0.0);
+            fields[vc] = Field::F64(a + b);
+            Row::new(fields)
+        })
+    } else {
+        // keep-first representative per key
+        ds.reduce_by_key_col(parts, kc, |acc: Row, _r: &Row| acc)
+    }
+}
+
+fn rand_join(g: &mut Gen, pool: &[Dataset]) -> Option<Dataset> {
+    let a = pool[g.usize(pool.len())].clone();
+    let b = pool[g.usize(pool.len())].clone();
+    // joining two large derived sets can explode; keep inputs modest
+    if a.schema.len() + b.schema.len() > 12 {
+        return None;
+    }
+    let lcands: Vec<usize> = (0..a.schema.len())
+        .filter(|&i| a.schema.field_type(i) == FieldType::I64)
+        .collect();
+    let rcands: Vec<usize> = (0..b.schema.len())
+        .filter(|&i| b.schema.field_type(i) == FieldType::I64)
+        .collect();
+    if lcands.is_empty() || rcands.is_empty() {
+        return None;
+    }
+    let lk = lcands[g.usize(lcands.len())];
+    let rk = rcands[g.usize(rcands.len())];
+    let mut fields: Vec<(String, FieldType)> = Vec::new();
+    for (i, n) in a.schema.names().iter().enumerate() {
+        fields.push((format!("l{i}_{n}"), a.schema.field_type(i)));
+    }
+    for (i, n) in b.schema.names().iter().enumerate() {
+        fields.push((format!("r{i}_{n}"), b.schema.field_type(i)));
+    }
+    let out = Schema::new(fields.iter().map(|(n, t)| (n.as_str(), *t)).collect::<Vec<_>>());
+    let kind = if g.bool() { JoinKind::Inner } else { JoinKind::Left };
+    Some(a.join_on(&b, out, kind, 1 + g.usize(3), lk, rk))
+}
+
+fn rand_plan(g: &mut Gen) -> Dataset {
+    let mut pool: Vec<Dataset> = (0..1 + g.usize(2))
+        .map(|i| base_source(g, &format!("s{i}")))
+        .collect();
+    let ops = 3 + g.usize(6);
+    for _ in 0..ops {
+        let ds = pool[g.usize(pool.len())].clone();
+        let next = match g.u64(8) {
+            0 | 1 => ds.filter_expr(rand_pred(g, &ds.schema)),
+            2 => rand_project(g, &ds),
+            3 => ds.repartition(1 + g.usize(4)),
+            4 => ds.distinct(1 + g.usize(3)),
+            5 => rand_reduce(g, &ds),
+            6 => match rand_join(g, &pool) {
+                Some(j) => j,
+                None => ds.filter_expr(rand_pred(g, &ds.schema)),
+            },
+            _ => {
+                let partner = pool
+                    .iter()
+                    .find(|d| *d.schema == *ds.schema)
+                    .cloned()
+                    .unwrap_or_else(|| ds.clone());
+                ds.union(&[partner])
+            }
+        };
+        pool.push(next);
+    }
+    pool.last().unwrap().clone()
+}
+
+// ---------------------------------------------------------------------
+// differential property test
+// ---------------------------------------------------------------------
+
+#[test]
+fn differential_optimizer_on_off_byte_identical() {
+    property(100, |g| {
+        let plan = rand_plan(g);
+        let (on, _) = run(true, &plan);
+        let (off, _) = run(false, &plan);
+        assert_eq!(
+            off, on,
+            "optimizer changed collected output (case {})\nplan:\n{}",
+            g.case,
+            plan.plan_display()
+        );
+    });
+}
+
+// ---------------------------------------------------------------------
+// shuffle-byte regressions
+// ---------------------------------------------------------------------
+
+fn fat_kv(n: i64, keys: i64, parts: usize) -> Dataset {
+    let schema = Schema::new(vec![("k", FieldType::I64), ("pad", FieldType::Str)]);
+    let rows = (0..n).map(|i| row!(i % keys, format!("{:0>120}", i))).collect();
+    Dataset::from_rows("kv", schema, rows, parts)
+}
+
+#[test]
+fn filter_below_reduce_cuts_shuffle_bytes() {
+    let ds = fat_kv(400, 40, 4);
+    let agg = ds.reduce_by_key_col(4, 0, |acc: Row, _r: &Row| acc);
+    let out = agg.filter_expr(compile("k < 8", &agg.schema).unwrap());
+    let (on_parts, on) = run(true, &out);
+    let (off_parts, off) = run(false, &out);
+    assert_eq!(on_parts, off_parts);
+    assert!(on.plan_rewrites > 0);
+    assert!(
+        on.shuffle_bytes < off.shuffle_bytes,
+        "expected fewer shuffle bytes ({} vs {})",
+        on.shuffle_bytes,
+        off.shuffle_bytes
+    );
+    // acceptance: ≥30% shuffle-byte reduction on a filter-below-shuffle plan
+    assert!(
+        (on.shuffle_bytes as f64) <= 0.7 * off.shuffle_bytes as f64,
+        "expected ≥30% reduction: {} vs {}",
+        on.shuffle_bytes,
+        off.shuffle_bytes
+    );
+}
+
+fn fat_join() -> (Dataset, Schema) {
+    let ls = Schema::new(vec![("id", FieldType::I64), ("pad", FieldType::Str)]);
+    let rs = Schema::new(vec![("rid", FieldType::I64), ("rv", FieldType::I64)]);
+    let left = Dataset::from_rows(
+        "l",
+        ls,
+        (0..300i64).map(|i| row!(i % 30, format!("{:0>120}", i))).collect(),
+        4,
+    );
+    let right = Dataset::from_rows(
+        "r",
+        rs,
+        (0..30i64).map(|i| row!(i, i * 2)).collect(),
+        2,
+    );
+    let out = Schema::new(vec![
+        ("id", FieldType::I64),
+        ("pad", FieldType::Str),
+        ("rid", FieldType::I64),
+        ("rv", FieldType::I64),
+    ]);
+    let joined = left.join_on(&right, out.clone(), JoinKind::Inner, 4, 0, 0);
+    (joined, (*out).clone())
+}
+
+#[test]
+fn filter_into_join_side_cuts_shuffle_bytes() {
+    let (joined, schema) = fat_join();
+    let out = joined.filter_expr(compile("id < 6", &schema).unwrap());
+    let (on_parts, on) = run(true, &out);
+    let (off_parts, off) = run(false, &out);
+    assert_eq!(on_parts, off_parts);
+    assert!(
+        (on.shuffle_bytes as f64) <= 0.7 * off.shuffle_bytes as f64,
+        "expected ≥30% reduction: {} vs {}",
+        on.shuffle_bytes,
+        off.shuffle_bytes
+    );
+}
+
+#[test]
+fn illegal_pushdown_leaves_shuffle_bytes_unchanged() {
+    // predicate spans both join sides: no conjunct may move
+    let (joined, schema) = fat_join();
+    let out = joined.filter_expr(compile("id = rv", &schema).unwrap());
+    let (on_parts, on) = run(true, &out);
+    let (off_parts, off) = run(false, &out);
+    assert_eq!(on_parts, off_parts);
+    assert_eq!(on.plan_rewrites, 0, "no rewrite should fire");
+    assert_eq!(on.shuffle_bytes, off.shuffle_bytes);
+}
+
+#[test]
+fn projection_below_join_cuts_shuffle_bytes() {
+    let (joined, _) = fat_join();
+    // keep only the two key columns: the fat pad column must not cross
+    // the shuffle
+    let out = joined.project(vec![0, 3]);
+    let (on_parts, on) = run(true, &out);
+    let (off_parts, off) = run(false, &out);
+    assert_eq!(on_parts, off_parts);
+    assert!(on.plan_rewrites > 0);
+    assert!(
+        (on.shuffle_bytes as f64) <= 0.7 * off.shuffle_bytes as f64,
+        "expected ≥30% reduction: {} vs {}",
+        on.shuffle_bytes,
+        off.shuffle_bytes
+    );
+}
+
+#[test]
+fn left_join_right_side_predicate_stays_put() {
+    let ls = Schema::new(vec![("id", FieldType::I64), ("t", FieldType::Str)]);
+    let rs = Schema::new(vec![("rid", FieldType::I64), ("rv", FieldType::I64)]);
+    let left = Dataset::from_rows(
+        "l",
+        ls,
+        (0..20i64).map(|i| row!(i, format!("t{i}"))).collect(),
+        2,
+    );
+    let right = Dataset::from_rows("r", rs, (0..10i64).map(|i| row!(i, i)).collect(), 2);
+    let out = Schema::new(vec![
+        ("id", FieldType::I64),
+        ("t", FieldType::Str),
+        ("rid", FieldType::I64),
+        ("rv", FieldType::I64),
+    ]);
+    let joined = left.join_on(&right, out.clone(), JoinKind::Left, 3, 0, 0);
+    // `rv >= 0` is false for null-extended rows; pushing it below the left
+    // join would wrongly keep them — the optimizer must not move it
+    let pred = compile("rv >= 0", &out).unwrap();
+    let filtered = joined.filter_expr(pred);
+    let opt = optimize(&filtered, &no_barrier);
+    assert_eq!(opt.counts.filter_pushdown_join, 0);
+    let (on_parts, _) = run(true, &filtered);
+    let (off_parts, _) = run(false, &filtered);
+    assert_eq!(on_parts, off_parts);
+}
+
+// ---------------------------------------------------------------------
+// golden per-rule tests (plan_display before/after)
+// ---------------------------------------------------------------------
+
+fn golden_src() -> Dataset {
+    let schema = Schema::new(vec![
+        ("id", FieldType::I64),
+        ("grp", FieldType::I64),
+        ("name", FieldType::Str),
+    ]);
+    let rows = (0..12i64).map(|i| row!(i, i % 3, format!("n{i}"))).collect();
+    Dataset::from_rows("src", schema, rows, 2)
+}
+
+#[test]
+fn golden_constant_folding() {
+    let ds = golden_src();
+    let f = ds.filter_expr(compile("id > 1 + 2", &ds.schema).unwrap());
+    assert_eq!(f.plan_display(), "filter_expr[(id > (1 + 2))]\n  source[src]\n");
+    let opt = optimize(&f, &no_barrier);
+    assert_eq!(opt.counts.constant_folds, 1);
+    assert_eq!(opt.plan.plan_display(), "filter_expr[(id > 3)]\n  source[src]\n");
+}
+
+#[test]
+fn golden_trivial_filter_dropped() {
+    let ds = golden_src();
+    let f = ds.filter_expr(compile("1 < 2", &ds.schema).unwrap());
+    let opt = optimize(&f, &no_barrier);
+    assert_eq!(opt.counts.trivial_filters_dropped, 1);
+    assert_eq!(opt.plan.plan_display(), "source[src]\n");
+    // an always-false filter stays (dropping it would change the
+    // partition layout)
+    let f = ds.filter_expr(compile("1 > 2", &ds.schema).unwrap());
+    let opt = optimize(&f, &no_barrier);
+    assert_eq!(opt.counts.trivial_filters_dropped, 0);
+    assert_eq!(opt.plan.plan_display(), "filter_expr[false]\n  source[src]\n");
+}
+
+#[test]
+fn golden_adjacent_filters_merge() {
+    let ds = golden_src();
+    let f = ds
+        .filter_expr(compile("id > 1", &ds.schema).unwrap())
+        .filter_expr(compile("id < 5", &ds.schema).unwrap());
+    let opt = optimize(&f, &no_barrier);
+    assert_eq!(opt.counts.filters_merged, 1);
+    assert_eq!(
+        opt.plan.plan_display(),
+        "filter_expr[((id > 1) and (id < 5))]\n  source[src]\n"
+    );
+}
+
+#[test]
+fn golden_filter_pushdown_union() {
+    let a = golden_src();
+    let b = golden_src();
+    let f = a.union(&[b]).filter_expr(compile("id > 2", &a.schema).unwrap());
+    let opt = optimize(&f, &no_barrier);
+    assert_eq!(opt.counts.filter_pushdown_union, 1);
+    assert_eq!(
+        opt.plan.plan_display(),
+        "union\n  filter_expr[(id > 2)]\n    source[src]\n  filter_expr[(id > 2)]\n    source[src]\n"
+    );
+}
+
+#[test]
+fn golden_filter_pushdown_repartition() {
+    let ds = golden_src();
+    let f = ds.repartition(3).filter_expr(compile("id > 2", &ds.schema).unwrap());
+    let opt = optimize(&f, &no_barrier);
+    assert_eq!(opt.counts.filter_pushdown_repartition, 1);
+    assert_eq!(
+        opt.plan.plan_display(),
+        "repartition[parts 3]\n  filter_expr[(id > 2)]\n    source[src]\n"
+    );
+}
+
+#[test]
+fn golden_filter_pushdown_distinct() {
+    let ds = golden_src();
+    let f = ds.distinct(3).filter_expr(compile("grp = 1", &ds.schema).unwrap());
+    let opt = optimize(&f, &no_barrier);
+    assert_eq!(opt.counts.filter_pushdown_distinct, 1);
+    assert_eq!(
+        opt.plan.plan_display(),
+        "distinct[parts 3]\n  filter_expr[(grp = 1)]\n    source[src]\n"
+    );
+}
+
+#[test]
+fn golden_filter_pushdown_project_remaps_columns() {
+    let ds = golden_src();
+    // projected frame: [name, id]; predicate on projected col 1 ("id")
+    // must remap to source col 0
+    let p = ds.project(vec![2, 0]);
+    let f = p.filter_expr(compile("id > 3", &p.schema).unwrap());
+    let opt = optimize(&f, &no_barrier);
+    assert_eq!(opt.counts.filter_pushdown_project, 1);
+    assert_eq!(
+        opt.plan.plan_display(),
+        "project[name, id]\n  filter_expr[(id > 3)]\n    source[src]\n"
+    );
+}
+
+#[test]
+fn golden_filter_pushdown_join_splits_conjuncts() {
+    let (joined, schema) = {
+        let ls = Schema::new(vec![("lid", FieldType::I64), ("lv", FieldType::I64)]);
+        let rs = Schema::new(vec![("rid", FieldType::I64), ("rv", FieldType::I64)]);
+        let left = Dataset::from_rows("l", ls, (0..10i64).map(|i| row!(i, i)).collect(), 2);
+        let right = Dataset::from_rows("r", rs, (0..10i64).map(|i| row!(i, i)).collect(), 2);
+        let out = Schema::new(vec![
+            ("lid", FieldType::I64),
+            ("lv", FieldType::I64),
+            ("rid", FieldType::I64),
+            ("rv", FieldType::I64),
+        ]);
+        (left.join_on(&right, out.clone(), JoinKind::Inner, 2, 0, 0), out)
+    };
+    let f = joined.filter_expr(compile("lid > 1 and rv < 8 and lv = rv", &schema).unwrap());
+    let opt = optimize(&f, &no_barrier);
+    assert_eq!(opt.counts.filter_pushdown_join, 2);
+    assert_eq!(
+        opt.plan.plan_display(),
+        "filter_expr[(lv = rv)]\n  join[inner, parts 2, on 0=0]\n    filter_expr[(lid > 1)]\n      source[l]\n    filter_expr[(rv < 8)]\n      source[r]\n"
+    );
+}
+
+#[test]
+fn golden_filter_pushdown_reduce_key_column_only() {
+    let ds = golden_src();
+    let agg = ds.reduce_by_key_col(4, 1, |acc: Row, _r: &Row| acc);
+    // key-column predicate: pushes
+    let f = agg.filter_expr(compile("grp = 1", &agg.schema).unwrap());
+    let opt = optimize(&f, &no_barrier);
+    assert_eq!(opt.counts.filter_pushdown_reduce, 1);
+    assert_eq!(
+        opt.plan.plan_display(),
+        "reduce_by_key[col 1, parts 4]\n  filter_expr[(grp = 1)]\n    source[src]\n"
+    );
+    // value-column predicate: must stay above the aggregation
+    let f = agg.filter_expr(compile("id > 3", &agg.schema).unwrap());
+    let opt = optimize(&f, &no_barrier);
+    assert_eq!(opt.counts.total(), 0);
+    assert_eq!(
+        opt.plan.plan_display(),
+        "filter_expr[(id > 3)]\n  reduce_by_key[col 1, parts 4]\n    source[src]\n"
+    );
+}
+
+#[test]
+fn golden_projection_collapse_and_identity() {
+    let ds = golden_src();
+    // [2,0] then [1] collapses to [0]
+    let p = ds.project(vec![2, 0]).project(vec![1]);
+    let opt = optimize(&p, &no_barrier);
+    assert_eq!(opt.counts.projects_collapsed, 1);
+    assert_eq!(opt.plan.plan_display(), "project[id]\n  source[src]\n");
+    // identity projection disappears
+    let p = ds.project(vec![0, 1, 2]);
+    let opt = optimize(&p, &no_barrier);
+    assert_eq!(opt.counts.trivial_projects_dropped, 1);
+    assert_eq!(opt.plan.plan_display(), "source[src]\n");
+}
+
+#[test]
+fn golden_projection_pushdown_union() {
+    let a = golden_src();
+    let b = golden_src();
+    let p = a.union(&[b]).project(vec![0]);
+    let opt = optimize(&p, &no_barrier);
+    assert_eq!(opt.counts.project_pushdown_union, 1);
+    assert_eq!(
+        opt.plan.plan_display(),
+        "union\n  project[id]\n    source[src]\n  project[id]\n    source[src]\n"
+    );
+}
+
+#[test]
+fn golden_projection_pushdown_join_prunes_inputs() {
+    let ls = Schema::new(vec![("id", FieldType::I64), ("pad", FieldType::Str)]);
+    let rs = Schema::new(vec![("rid", FieldType::I64), ("rv", FieldType::I64)]);
+    let left = Dataset::from_rows("l", ls, (0..10i64).map(|i| row!(i, format!("p{i}"))).collect(), 2);
+    let right = Dataset::from_rows("r", rs, (0..10i64).map(|i| row!(i, i * 2)).collect(), 2);
+    let out = Schema::new(vec![
+        ("id", FieldType::I64),
+        ("pad", FieldType::Str),
+        ("rid", FieldType::I64),
+        ("rv", FieldType::I64),
+    ]);
+    let joined = left.join_on(&right, out, JoinKind::Inner, 2, 0, 0);
+    let p = joined.project(vec![0, 3]);
+    let opt = optimize(&p, &no_barrier);
+    assert_eq!(opt.counts.project_pushdown_join, 1);
+    // left prunes pad away; right keeps both columns (rid is the key,
+    // rv is projected), so no right-side project is inserted
+    assert_eq!(
+        opt.plan.plan_display(),
+        "project[id, rv]\n  join[inner, parts 2, on 0=0]\n    project[id]\n      source[l]\n    source[r]\n"
+    );
+}
+
+#[test]
+fn golden_repartition_collapse() {
+    let ds = golden_src();
+    let p = ds.repartition(3).repartition(3);
+    let opt = optimize(&p, &no_barrier);
+    assert_eq!(opt.counts.repartitions_collapsed, 1);
+    assert_eq!(opt.plan.plan_display(), "repartition[parts 3]\n  source[src]\n");
+    // different widths must NOT collapse (ordering would change)
+    let p = ds.repartition(2).repartition(3);
+    let opt = optimize(&p, &no_barrier);
+    assert_eq!(opt.counts.repartitions_collapsed, 0);
+}
+
+// ---------------------------------------------------------------------
+// context integration
+// ---------------------------------------------------------------------
+
+#[test]
+fn engine_ctx_accumulates_rewrite_counts() {
+    let c = EngineCtx::new(EngineConfig { workers: 2, optimize: true, ..Default::default() });
+    let ds = golden_src();
+    let f = ds.repartition(2).filter_expr(compile("id > 2", &ds.schema).unwrap());
+    c.collect(&f).unwrap();
+    let counts = c.rewrite_counts();
+    assert_eq!(counts.filter_pushdown_repartition, 1);
+    assert_eq!(c.stats.snapshot().plan_rewrites, counts.total());
+}
+
+#[test]
+fn persisted_datasets_still_hit_cache_with_optimizer_on() {
+    use std::sync::atomic::{AtomicU32, Ordering};
+    use std::sync::Arc;
+    let c = EngineCtx::new(EngineConfig { workers: 2, optimize: true, ..Default::default() });
+    let ds = golden_src();
+    let calls = Arc::new(AtomicU32::new(0));
+    let calls2 = calls.clone();
+    let mapped = ds.map(ds.schema.clone(), move |r| {
+        calls2.fetch_add(1, Ordering::SeqCst);
+        r.clone()
+    });
+    c.persist(&mapped);
+    let a = mapped.filter_expr(compile("id > 2", &mapped.schema).unwrap());
+    let b = mapped.filter_expr(compile("id > 5", &mapped.schema).unwrap());
+    c.count(&a).unwrap();
+    c.count(&b).unwrap();
+    assert_eq!(calls.load(Ordering::SeqCst), 12, "map ran once; cache hit on reuse");
+}
