@@ -1,0 +1,169 @@
+//! Streaming runtime benchmark: sustained micro-batch throughput and
+//! end-to-end batch latency (p50/p99) over the enterprise corpus, plus a
+//! backpressure case where the source outpaces the pipeline and the
+//! bounded queue must hold the line.
+//!
+//! ```bash
+//! cargo bench --bench streaming                      # full run
+//! cargo bench --bench streaming -- --records 2000 --smoke   # CI smoke
+//! ```
+
+use ddp::bench::Table;
+use ddp::config::PipelineSpec;
+use ddp::corpus::enterprise::EnterpriseGen;
+use ddp::ddp::streaming::{StreamReport, StreamingConfig, StreamingDriver};
+use ddp::ddp::{registry, DriverConfig, PipelineDriver};
+use ddp::engine::stream::{CorpusSource, RateLimitedSource, StreamSource};
+use ddp::engine::{Dataset, EngineConfig};
+use ddp::io::IoRegistry;
+use ddp::util::cli::Args;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+const PIPELINE: &str = r#"{
+  "name": "stream_bench",
+  "settings": {"metricsCadenceSecs": 1.0, "workers": 4},
+  "data": [
+    {"id": "Records", "schema": [
+      {"name": "id", "type": "i64"},
+      {"name": "name", "type": "str"},
+      {"name": "email", "type": "str"},
+      {"name": "city", "type": "str"},
+      {"name": "value", "type": "f64"},
+      {"name": "dup_of", "type": "i64"}]}
+  ],
+  "pipes": [
+    {"inputDataId": "Records", "transformerType": "SqlFilterTransformer",
+     "outputDataId": "Valid", "params": {"filter": "length(name) >= 3"}},
+    {"inputDataId": "Valid", "transformerType": "DedupTransformer",
+     "outputDataId": "Unique",
+     "params": {"method": "exact", "textColumn": "email"}},
+    {"inputDataId": "Unique", "transformerType": "AggregateTransformer",
+     "outputDataId": "CityStats",
+     "params": {"groupBy": "city", "aggregations": [
+        {"op": "count"}, {"op": "mean", "column": "value"}]}}
+  ]
+}"#;
+
+fn driver(cfg: StreamingConfig, workers: usize) -> StreamingDriver {
+    let spec = PipelineSpec::parse(PIPELINE).expect("pipeline parses");
+    StreamingDriver::new(
+        spec,
+        registry::GLOBAL.clone(),
+        Arc::new(IoRegistry::with_sim_cloud()),
+        EngineConfig { workers, ..Default::default() },
+        cfg,
+        BTreeMap::new(),
+    )
+    .expect("driver builds")
+}
+
+fn run_case(
+    label: &str,
+    source: &mut dyn StreamSource,
+    cfg: StreamingConfig,
+    workers: usize,
+    table: &mut Table,
+) -> StreamReport {
+    let mut d = driver(cfg, workers);
+    let report = d.run_stream(source).expect("stream runs");
+    table.row(&[
+        label.to_string(),
+        report.records_in.to_string(),
+        report.batches.to_string(),
+        format!("{:.0}", report.records_per_sec),
+        format!("{:.2}", report.p50_batch_latency_secs * 1e3),
+        format!("{:.2}", report.p99_batch_latency_secs * 1e3),
+        report.max_queue_depth_rows.to_string(),
+        report.backpressure_waits.to_string(),
+    ]);
+    report
+}
+
+fn main() {
+    ddp::util::logger::init();
+    let args = Args::from_env();
+    let n = args.opt_usize("records", 50_000);
+    let smoke = args.has_flag("smoke");
+
+    let gen = EnterpriseGen { seed: 5, dup_rate: 0.15 };
+    let (schema, rows) = gen.generate_rows(n);
+
+    let mut table = Table::new(
+        &format!("Streaming runtime — {n} enterprise records"),
+        &[
+            "case",
+            "records",
+            "batches",
+            "rec/s",
+            "p50 ms",
+            "p99 ms",
+            "max queue",
+            "bp waits",
+        ],
+    );
+
+    // 1. steady state, adaptive batch sizing
+    let adaptive = StreamingConfig {
+        source_id: "Records".to_string(),
+        initial_batch_rows: 256,
+        min_batch_rows: 32,
+        max_batch_rows: 8192,
+        target_batch_latency_secs: 0.02,
+        queue_capacity_rows: 16_384,
+        retain_output: true,
+    };
+    let mut src = CorpusSource::new(schema.clone(), rows.clone());
+    let steady = run_case("adaptive", &mut src, adaptive.clone(), 4, &mut table);
+
+    // 2. fixed small batches (latency-biased)
+    let fixed = StreamingConfig {
+        initial_batch_rows: 64,
+        min_batch_rows: 64,
+        max_batch_rows: 64,
+        ..adaptive.clone()
+    };
+    let mut src = CorpusSource::new(schema.clone(), rows.clone());
+    run_case("fixed-64", &mut src, fixed, 4, &mut table);
+
+    // 3. source outpaces pipeline: bounded queue + backpressure
+    let pressured = StreamingConfig {
+        queue_capacity_rows: 1024,
+        ..adaptive.clone()
+    };
+    let cap = pressured.queue_capacity_rows;
+    let inner = CorpusSource::new(schema.clone(), rows.clone());
+    let mut src = RateLimitedSource::new(inner, 1_000_000);
+    let report = run_case("saturating-source", &mut src, pressured, 4, &mut table);
+    assert!(
+        report.max_queue_depth_rows <= cap,
+        "queue bound violated: {} > {cap}",
+        report.max_queue_depth_rows
+    );
+
+    table.save("streaming");
+
+    if smoke {
+        // batch-parity spot check so CI smoke catches drift, not just perf
+        let spec = PipelineSpec::parse(PIPELINE).expect("pipeline parses");
+        let bdriver = PipelineDriver::new(
+            spec,
+            registry::GLOBAL.clone(),
+            Arc::new(IoRegistry::with_sim_cloud()),
+            DriverConfig::default(),
+        )
+        .expect("batch driver builds");
+        let mut provided = BTreeMap::new();
+        provided.insert("Records".to_string(), Dataset::from_rows("Records", schema, rows, 8));
+        let breport = bdriver.run(provided).expect("batch runs");
+        let want = bdriver
+            .ctx
+            .engine
+            .collect(breport.anchors.get("CityStats").expect("sink anchor"))
+            .expect("batch collects")
+            .rows();
+        let got = steady.outputs["CityStats"].rows();
+        assert_eq!(got, want, "stream drain must equal batch output");
+        println!("smoke OK: stream drain == batch output ({} rows)", want.len());
+    }
+}

@@ -43,7 +43,9 @@ use crate::config::{DataLocation, PipelineSpec};
 use crate::engine::dataset::Dataset;
 use crate::engine::executor::{EngineConfig, EngineCtx};
 use crate::io::IoRegistry;
-use crate::metrics::{MetricsPublisher, MetricsRegistry, PublisherConfig, Sink};
+use crate::metrics::{
+    EngineMetricsExporter, MetricsPublisher, MetricsRegistry, PublisherConfig, Sink,
+};
 use crate::util::clock::{self, ClockRef};
 use crate::util::error::{DdpError, Result};
 use crate::util::threadpool::ThreadPool;
@@ -123,6 +125,9 @@ pub struct PipelineDriver {
     cfg_eager: bool,
     sink: Option<Arc<dyn Sink>>,
     max_concurrent: usize,
+    /// delta-publishes engine counters (cache hits/evictions, fault
+    /// injections, shuffle bytes) into the run's metrics registry
+    exporter: Mutex<EngineMetricsExporter>,
 }
 
 /// One scheduled pipe's terminal message back to the dispatch loop.
@@ -182,6 +187,7 @@ impl PipelineDriver {
             cfg_eager: cfg.eager,
             sink: cfg.sink,
             max_concurrent,
+            exporter: Mutex::new(EngineMetricsExporter::new()),
         })
     }
 
@@ -254,6 +260,12 @@ impl PipelineDriver {
 
         let elapsed = start.elapsed().as_secs_f64();
         let (pipes, anchors) = result?;
+        // surface engine counters (cache/fault/shuffle) in the metrics
+        // snapshot the report carries
+        self.exporter
+            .lock()
+            .unwrap()
+            .publish(&self.ctx.metrics, &self.ctx.engine);
         let stats1 = self.ctx.engine.stats.snapshot();
         let delta = stats1.delta(&stats0);
         let cpu_utilization = if elapsed > 0.0 {

@@ -7,6 +7,8 @@
 //!   management (§3.2), declarative I/O + encryption, metrics publishing;
 //! * [`lifecycle`] — record/partition/instance object scopes (§3.7);
 //! * [`context`] — what a pipe may touch;
+//! * [`streaming`] — continuous micro-batch execution of the same
+//!   declarative specs (unmodified pipes in a backpressured loop);
 //! * [`viz`] — real-time GraphViz rendering (§3.6, Fig. 3).
 
 pub mod pipe;
@@ -15,6 +17,7 @@ pub mod dag;
 pub mod driver;
 pub mod lifecycle;
 pub mod context;
+pub mod streaming;
 pub mod viz;
 
 pub use context::PipeContext;
@@ -23,3 +26,4 @@ pub use driver::{DriverConfig, PipeReport, PipeState, PipelineDriver, RunReport}
 pub use lifecycle::{AnchorRefCounts, ObjectPool, Scope};
 pub use pipe::{Pipe, PipeContract};
 pub use registry::{PipeRegistry, GLOBAL};
+pub use streaming::{StreamReport, StreamingConfig, StreamingDriver};

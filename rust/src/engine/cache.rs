@@ -28,6 +28,7 @@ struct CacheInner {
     budget_bytes: usize,
     used_bytes: usize,
     evictions: u64,
+    hits_total: u64,
 }
 
 impl CacheManager {
@@ -39,6 +40,7 @@ impl CacheManager {
                 budget_bytes,
                 used_bytes: 0,
                 evictions: 0,
+                hits_total: 0,
             }),
         }
     }
@@ -78,11 +80,14 @@ impl CacheManager {
 
     pub fn get(&self, id: u64) -> Option<Partitioned> {
         let mut g = self.inner.lock().unwrap();
-        if let Some(e) = g.entries.get_mut(&id) {
-            e.hits += 1;
-            Some(e.data.clone())
-        } else {
-            None
+        match g.entries.get_mut(&id) {
+            Some(e) => {
+                e.hits += 1;
+                let data = e.data.clone();
+                g.hits_total += 1;
+                Some(data)
+            }
+            None => None,
         }
     }
 
@@ -94,6 +99,11 @@ impl CacheManager {
         let mut g = self.inner.lock().unwrap();
         if bytes > g.budget_bytes {
             return;
+        }
+        // re-caching an id must release the old entry's accounting first,
+        // or the replaced bytes would be charged forever
+        if let Some(old) = g.entries.remove(&id) {
+            g.used_bytes -= old.bytes;
         }
         while g.used_bytes + bytes > g.budget_bytes {
             // evict the least-hit entry
@@ -130,6 +140,11 @@ impl CacheManager {
 
     pub fn evictions(&self) -> u64 {
         self.inner.lock().unwrap().evictions
+    }
+
+    /// Total entry-level hits over the cache's lifetime.
+    pub fn hits(&self) -> u64 {
+        self.inner.lock().unwrap().hits_total
     }
 }
 
@@ -191,5 +206,68 @@ mod tests {
         c.clear();
         assert!(c.is_empty());
         assert_eq!(c.used_bytes(), 0);
+    }
+
+    #[test]
+    fn byte_pressure_evicts_least_hit_first() {
+        let one = pd(100).approx_bytes();
+        let c = CacheManager::new(one * 3 + 10);
+        c.put(1, pd(100));
+        c.put(2, pd(100));
+        c.put(3, pd(100));
+        // heat 1 twice, 3 once; 2 stays cold
+        let _ = c.get(1);
+        let _ = c.get(1);
+        let _ = c.get(3);
+        assert_eq!(c.hits(), 3);
+        c.put(4, pd(100));
+        assert!(c.get(2).is_none(), "coldest entry evicted first");
+        assert!(c.get(1).is_some() && c.get(3).is_some() && c.get(4).is_some());
+        // keep 1 the hottest and apply two more rounds of pressure: the
+        // newcomers churn, the hot entry stays resident
+        let _ = c.get(3);
+        let _ = c.get(4);
+        c.put(5, pd(100));
+        c.put(6, pd(100));
+        assert!(c.get(1).is_some(), "hottest entry survives repeated pressure");
+    }
+
+    #[test]
+    fn recached_entry_keeps_byte_accounting_exact() {
+        let c = CacheManager::new(1 << 20);
+        c.register(1);
+        c.put(1, pd(100));
+        let after_first = c.used_bytes();
+        assert!(after_first > 0);
+        // re-caching the same id must not double-charge
+        c.put(1, pd(100));
+        assert_eq!(c.used_bytes(), after_first);
+        assert_eq!(c.len(), 1);
+        // replacing with a smaller payload shrinks the account
+        c.put(1, pd(10));
+        let after_small = c.used_bytes();
+        assert!(after_small < after_first);
+        assert_eq!(after_small, pd(10).approx_bytes());
+        c.unpersist(1);
+        assert_eq!(c.used_bytes(), 0);
+        assert_eq!(c.evictions(), 0, "replacement is not an eviction");
+    }
+
+    #[test]
+    fn evictions_counter_is_exact() {
+        let one = pd(100).approx_bytes();
+        let c = CacheManager::new(one * 2 + 10);
+        c.put(1, pd(100));
+        c.put(2, pd(100));
+        assert_eq!(c.evictions(), 0);
+        c.put(3, pd(100)); // evicts exactly one
+        assert_eq!(c.evictions(), 1);
+        c.put(4, pd(150)); // larger entry displaces both residents
+        assert_eq!(c.evictions(), 3);
+        assert_eq!(c.len(), 1);
+        // oversized and replacement paths never count as evictions
+        c.put(5, pd(10_000));
+        c.put(4, pd(150));
+        assert_eq!(c.evictions(), 3);
     }
 }

@@ -131,6 +131,14 @@ impl EngineCtx {
         Ok(self.collect(ds)?.rows())
     }
 
+    /// Materialize without the optimizer pass — for callers that already
+    /// optimized the plan they hold (the streaming runtime optimizes its
+    /// template once at compile; re-walking the rewriter on every
+    /// micro-batch would cost latency for zero rewrites).
+    pub(crate) fn collect_unprepared(&self, ds: &Dataset) -> Result<Partitioned> {
+        self.eval(ds)
+    }
+
     pub fn count(&self, ds: &Dataset) -> Result<usize> {
         Ok(self.collect(ds)?.num_rows())
     }
@@ -511,9 +519,8 @@ impl EngineCtx {
 
     fn exec_distinct(&self, ds: &Dataset, input: Partitioned, num_parts: usize) -> Result<Partitioned> {
         self.stats.add(&self.stats.stages_run, 1);
-        let whole_row_key: super::dataset::KeyFn =
-            Arc::new(|r: &Row| Field::I64(row_hash(r) as i64));
-        let bucketed = self.shuffle_buckets(ds.id, &input, num_parts, whole_row_key)?;
+        let key: super::dataset::KeyFn = Arc::new(whole_row_key);
+        let bucketed = self.shuffle_buckets(ds.id, &input, num_parts, key)?;
         let exchanged = transpose_buckets(bucketed, num_parts);
         let tasks: Vec<_> = exchanged
             .into_iter()
@@ -606,7 +613,7 @@ impl EngineCtx {
     fn exec_repartition(&self, ds: &Dataset, input: Partitioned, num_parts: usize) -> Result<Partitioned> {
         self.stats.add(&self.stats.stages_run, 1);
         // round-robin by row hash for determinism
-        let key: super::dataset::KeyFn = Arc::new(|r: &Row| Field::I64(row_hash(r) as i64));
+        let key: super::dataset::KeyFn = Arc::new(whole_row_key);
         let bucketed = self.shuffle_buckets(ds.id, &input, num_parts, key)?;
         let exchanged = transpose_buckets(bucketed, num_parts);
         let parts: Vec<PartRef> = exchanged
@@ -703,16 +710,28 @@ fn apply_chain_materialized(part: &[Row], steps: &[Step]) -> Vec<Row> {
 // hashing / bucket helpers
 // ---------------------------------------------------------------------
 
-fn field_hash(f: &Field) -> u64 {
+/// Deterministic key hash used for shuffle bucket assignment. Shared with
+/// the streaming runtime (`engine::stream`), which must reproduce the
+/// exact bucket layout the batch executor would produce.
+pub(crate) fn field_hash(f: &Field) -> u64 {
     let mut h = std::collections::hash_map::DefaultHasher::new();
     f.hash(&mut h);
     h.finish()
 }
 
-fn row_hash(r: &Row) -> u64 {
+/// Deterministic whole-row hash (distinct / repartition bucketing).
+pub(crate) fn row_hash(r: &Row) -> u64 {
     let mut h = std::collections::hash_map::DefaultHasher::new();
     r.hash(&mut h);
     h.finish()
+}
+
+/// The whole-row shuffle key `Distinct` and `Repartition` bucket on.
+/// Single definition on purpose: the streaming runtime reproduces batch
+/// bucket layouts with it, so a drift here would silently desynchronize
+/// stream drains from batch output.
+pub(crate) fn whole_row_key(r: &Row) -> Field {
+    Field::I64(row_hash(r) as i64)
 }
 
 /// Turn per-input-partition bucket lists into per-bucket partition lists.

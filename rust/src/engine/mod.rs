@@ -12,6 +12,8 @@
 //! * [`fault`] — failure injection for recovery tests.
 //! * [`cluster`] — virtual-time cluster simulator for scale-out studies.
 //! * [`stats`] — execution counters.
+//! * [`stream`] — micro-batch streaming runtime over the same Plan DAG
+//!   (stateful operators, watermarks, backpressure).
 
 pub mod row;
 pub mod dataset;
@@ -22,6 +24,7 @@ pub mod cache;
 pub mod fault;
 pub mod cluster;
 pub mod stats;
+pub mod stream;
 
 pub use dataset::{Dataset, JoinKind, Partitioned};
 pub use executor::{EngineConfig, EngineCtx, TaskRecord, TaskTrace};

@@ -26,10 +26,15 @@
 //! Rules implemented: constant folding, trivially-true filter removal,
 //! adjacent filter conjunction, adjacent projection collapsing, identity
 //! projection removal, predicate pushdown (below `Union`, `Repartition`,
-//! `Distinct`, `Project` with column remapping, into `Join` sides per
-//! conjunct, below column-keyed `ReduceByKey`), projection pushdown
-//! (below `Union`, into both sides of a column-keyed `Join`), and
-//! adjacent equal-width repartition collapsing.
+//! `Distinct`, `Sort`, `Project` with column remapping, into `Join`
+//! sides per conjunct, below column-keyed `ReduceByKey`), projection
+//! pushdown (below `Union`, into both sides of a column-keyed `Join`),
+//! and adjacent equal-width repartition collapsing.
+//!
+//! `Filter` commutes with `SortBy` because the gather-sort is *stable*:
+//! stably sorting a filtered subsequence yields exactly the subsequence
+//! of the stably sorted whole, so filtering first shrinks the sort
+//! without changing a byte of output.
 //!
 //! Cache-registered (persisted) datasets are rewrite barriers: rewriting
 //! one would mint a new node id and detach its cache registration, so the
@@ -58,6 +63,7 @@ pub struct RewriteCounts {
     pub filter_pushdown_project: u64,
     pub filter_pushdown_join: u64,
     pub filter_pushdown_reduce: u64,
+    pub filter_pushdown_sort: u64,
     pub project_pushdown_union: u64,
     pub project_pushdown_join: u64,
     pub repartitions_collapsed: u64,
@@ -76,6 +82,7 @@ impl RewriteCounts {
             + self.filter_pushdown_project
             + self.filter_pushdown_join
             + self.filter_pushdown_reduce
+            + self.filter_pushdown_sort
             + self.project_pushdown_union
             + self.project_pushdown_join
             + self.repartitions_collapsed
@@ -93,6 +100,7 @@ impl RewriteCounts {
         self.filter_pushdown_project += o.filter_pushdown_project;
         self.filter_pushdown_join += o.filter_pushdown_join;
         self.filter_pushdown_reduce += o.filter_pushdown_reduce;
+        self.filter_pushdown_sort += o.filter_pushdown_sort;
         self.project_pushdown_union += o.project_pushdown_union;
         self.project_pushdown_join += o.project_pushdown_join;
         self.repartitions_collapsed += o.repartitions_collapsed;
@@ -104,7 +112,7 @@ impl fmt::Display for RewriteCounts {
         write!(
             f,
             "rewrites: {} (fold {}, drop-filter {}, drop-project {}, merge-filter {}, \
-             collapse-project {}, push-filter u/r/d/p/j/k {}/{}/{}/{}/{}/{}, \
+             collapse-project {}, push-filter u/r/d/p/j/k/s {}/{}/{}/{}/{}/{}/{}, \
              push-project u/j {}/{}, collapse-repartition {})",
             self.total(),
             self.constant_folds,
@@ -118,6 +126,7 @@ impl fmt::Display for RewriteCounts {
             self.filter_pushdown_project,
             self.filter_pushdown_join,
             self.filter_pushdown_reduce,
+            self.filter_pushdown_sort,
             self.project_pushdown_union,
             self.project_pushdown_join,
             self.repartitions_collapsed,
@@ -364,6 +373,17 @@ fn apply_once(
                     let pushed = fixpoint(filter_over(gin, expr.clone()), barrier, counts);
                     Some(Dataset::with_node(
                         Plan::Distinct { input: pushed, num_parts: *num_parts },
+                        ds.schema.clone(),
+                    ))
+                }
+                Plan::Sort { input: gin, cmp } => {
+                    // stable gather-sort: sorting the filtered subsequence
+                    // equals filtering the sorted whole, byte for byte —
+                    // and the sort now handles fewer rows
+                    counts.filter_pushdown_sort += 1;
+                    let pushed = fixpoint(filter_over(gin, expr.clone()), barrier, counts);
+                    Some(Dataset::with_node(
+                        Plan::Sort { input: pushed, cmp: cmp.clone() },
                         ds.schema.clone(),
                     ))
                 }

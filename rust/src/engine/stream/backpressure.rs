@@ -1,0 +1,199 @@
+//! Backpressure: a bounded ingest queue plus an AIMD micro-batch sizer.
+//!
+//! The streaming loop is pull-based, so backpressure is structural: the
+//! source is only polled for as many rows as the bounded queue has free,
+//! which caps in-flight memory no matter how fast the source produces.
+//! What *adapts* is the micro-batch size — an AIMD controller (the same
+//! shape TCP congestion control and tf.data's autotuning use) grows the
+//! batch while per-batch latency is comfortably under target and halves
+//! it when a batch overshoots, so steady-state latency converges below
+//! the target without starving throughput.
+
+use super::super::row::Row;
+use std::collections::VecDeque;
+
+/// Bounded FIFO of pending rows between the source and the pipeline.
+pub struct BoundedRowQueue {
+    cap: usize,
+    q: VecDeque<Row>,
+    max_depth: usize,
+}
+
+impl BoundedRowQueue {
+    pub fn new(cap_rows: usize) -> BoundedRowQueue {
+        BoundedRowQueue { cap: cap_rows.max(1), q: VecDeque::new(), max_depth: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.q.len() >= self.cap
+    }
+
+    /// Free row slots (what the source may be polled for).
+    pub fn free(&self) -> usize {
+        self.cap.saturating_sub(self.q.len())
+    }
+
+    /// Enqueue rows; panics if the caller overfills (the driver polls
+    /// the source for at most [`BoundedRowQueue::free`] rows).
+    pub fn push(&mut self, rows: Vec<Row>) {
+        assert!(
+            self.q.len() + rows.len() <= self.cap,
+            "bounded queue overfilled ({} + {} > {})",
+            self.q.len(),
+            rows.len(),
+            self.cap
+        );
+        self.q.extend(rows);
+        self.max_depth = self.max_depth.max(self.q.len());
+    }
+
+    /// Dequeue up to `n` rows in FIFO order.
+    pub fn take(&mut self, n: usize) -> Vec<Row> {
+        let k = n.min(self.q.len());
+        self.q.drain(..k).collect()
+    }
+
+    /// High-water mark over the queue's lifetime (the bounded-memory
+    /// evidence the backpressure tests assert on).
+    pub fn max_depth(&self) -> usize {
+        self.max_depth
+    }
+}
+
+/// AIMD micro-batch sizer targeting a per-batch latency.
+#[derive(Debug, Clone, Copy)]
+pub struct BackpressureController {
+    pub target_latency_secs: f64,
+    min_rows: usize,
+    max_rows: usize,
+    cur: usize,
+    shrinks: u64,
+    grows: u64,
+}
+
+impl BackpressureController {
+    pub fn new(
+        target_latency_secs: f64,
+        min_rows: usize,
+        max_rows: usize,
+        initial_rows: usize,
+    ) -> BackpressureController {
+        let min_rows = min_rows.max(1);
+        let max_rows = max_rows.max(min_rows);
+        BackpressureController {
+            target_latency_secs: target_latency_secs.max(1e-6),
+            min_rows,
+            max_rows,
+            cur: initial_rows.clamp(min_rows, max_rows),
+            shrinks: 0,
+            grows: 0,
+        }
+    }
+
+    /// Rows to take for the next micro-batch.
+    pub fn batch_rows(&self) -> usize {
+        self.cur
+    }
+
+    /// Feed back the latency of the batch just processed: multiplicative
+    /// decrease on overshoot, additive increase while well under target.
+    pub fn observe(&mut self, latency_secs: f64) {
+        if latency_secs > self.target_latency_secs {
+            let next = (self.cur / 2).max(self.min_rows);
+            if next < self.cur {
+                self.shrinks += 1;
+            }
+            self.cur = next;
+        } else if latency_secs < 0.5 * self.target_latency_secs {
+            let next = (self.cur + (self.cur / 4).max(1)).min(self.max_rows);
+            if next > self.cur {
+                self.grows += 1;
+            }
+            self.cur = next;
+        }
+    }
+
+    pub fn shrinks(&self) -> u64 {
+        self.shrinks
+    }
+
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::row;
+
+    fn rows(n: i64) -> Vec<Row> {
+        (0..n).map(|i| row!(i)).collect()
+    }
+
+    #[test]
+    fn queue_bounds_and_fifo() {
+        let mut q = BoundedRowQueue::new(10);
+        q.push(rows(6));
+        assert_eq!(q.free(), 4);
+        q.push(rows(4));
+        assert!(q.is_full());
+        assert_eq!(q.free(), 0);
+        let got = q.take(3);
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0].get(0).as_i64(), Some(0), "FIFO order");
+        assert_eq!(q.len(), 7);
+        assert_eq!(q.max_depth(), 10);
+        q.take(100);
+        assert!(q.is_empty());
+        assert_eq!(q.max_depth(), 10, "high-water mark sticks");
+    }
+
+    #[test]
+    #[should_panic(expected = "overfilled")]
+    fn queue_rejects_overfill() {
+        let mut q = BoundedRowQueue::new(4);
+        q.push(rows(5));
+    }
+
+    #[test]
+    fn controller_shrinks_on_overshoot_and_grows_when_idle() {
+        let mut c = BackpressureController::new(0.1, 8, 1024, 256);
+        c.observe(0.5); // way over target -> halve
+        assert_eq!(c.batch_rows(), 128);
+        c.observe(0.2);
+        assert_eq!(c.batch_rows(), 64);
+        // fast batches -> additive growth, never past max
+        for _ in 0..100 {
+            c.observe(0.01);
+        }
+        assert_eq!(c.batch_rows(), 1024);
+        assert!(c.shrinks() >= 2 && c.grows() > 0);
+        // floor respected
+        for _ in 0..100 {
+            c.observe(1.0);
+        }
+        assert_eq!(c.batch_rows(), 8);
+    }
+
+    #[test]
+    fn controller_holds_steady_in_band() {
+        let mut c = BackpressureController::new(0.1, 1, 1000, 100);
+        // between 50% and 100% of target: no change
+        c.observe(0.07);
+        c.observe(0.09);
+        assert_eq!(c.batch_rows(), 100);
+    }
+}

@@ -1,0 +1,29 @@
+//! Micro-batch streaming runtime — continuous execution over the same
+//! declarative Plan DAG the batch engine runs (tf.data-style: one
+//! operator graph, two drivers).
+//!
+//! * [`source`] — replayable corpus-backed and rate-limited row sources;
+//! * [`query`] — [`StreamQuery`]/[`StreamingCtx`]: splice each
+//!   micro-batch into a compiled template plan, run the per-batch prefix
+//!   through the existing optimizer + executor, fold wide operators into
+//!   cross-batch state, and drain to output **byte-identical** to the
+//!   one-shot batch run;
+//! * [`window`] — event-time tumbling windows with watermarks (the
+//!   streaming-native operator set: windowed aggregation, streaming
+//!   dedup keyed on content hash);
+//! * [`backpressure`] — bounded ingest queue + AIMD batch sizing that
+//!   keeps steady-state per-batch latency under a target.
+//!
+//! The `ddp`-layer [`crate::ddp::streaming::StreamingDriver`] builds on
+//! this so declaratively configured Pipes run unmodified in a continuous
+//! loop.
+
+pub mod backpressure;
+pub mod query;
+pub mod source;
+pub mod window;
+
+pub use backpressure::{BackpressureController, BoundedRowQueue};
+pub use query::{StreamQuery, StreamingCtx};
+pub use source::{CorpusSource, RateLimitedSource, StreamSource};
+pub use window::{StreamingDedup, TumblingWindow, WatermarkTracker, WindowAgg};

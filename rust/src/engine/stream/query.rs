@@ -1,0 +1,827 @@
+//! Micro-batch execution of a (possibly stateful) Plan DAG.
+//!
+//! A [`StreamQuery`] is compiled once from a *template* plan built over a
+//! placeholder source dataset. Each micro-batch is spliced into the
+//! template in place of that placeholder and the **existing** engine —
+//! optimizer, fused narrow stages, shuffle operators — evaluates the
+//! per-batch work; nothing below re-implements row transformation.
+//!
+//! ## Plan segmentation
+//!
+//! Compiling classifies every template node:
+//!
+//! * **Streaming** — the placeholder source and any narrow chain above
+//!   it: evaluated once per micro-batch, emitting a per-batch delta;
+//! * **Static** — subtrees that never read the streaming source (e.g.
+//!   the bounded side of a join): left untouched until drain;
+//! * **Finish** — wide/stateful operators fed (directly or transitively)
+//!   by streaming rows, plus everything above them.
+//!
+//! Every Streaming node consumed by a Finish node is a *capture point*:
+//! its per-batch delta is absorbed into the [`StreamQuery`]'s state. A
+//! capture consumed by exactly one `ReduceByKey` folds incrementally
+//! (state = one accumulator row per key); one consumed by exactly one
+//! `Distinct` keeps a first-seen set bucketed exactly like the batch
+//! shuffle. Other consumers (sort, join, union, repartition — inherently
+//! blocking ops) accumulate raw rows in arrival order.
+//!
+//! ## Batch parity
+//!
+//! At drain, incremental captures (`ReduceByKey`, `Distinct`) are
+//! materialized with the *exact partition layout the batch executor
+//! would have produced at that node* — same bucket assignment via the
+//! executor's own hashes, same canonical key order — so everything
+//! above them, evaluated by the regular executor, is byte-identical to
+//! the batch run including partition boundaries. Raw captures
+//! (sort/join/union/repartition inputs) preserve exact **row content
+//! and order** but concatenate to a single partition; their consumers
+//! either gather (`Sort`) or re-bucket by content (`Join`,
+//! `Repartition`, `Distinct`), which re-normalizes the layout — only a
+//! partition-*boundary*-sensitive operator directly above a `Union` of
+//! a raw capture would observe the difference, which the
+//! `map_partitions` contract below already excludes. Replaying a corpus
+//! therefore yields byte-identical final output to the one-shot batch
+//! run, at any micro-batch size, provided:
+//!
+//! * reduce functions are **associative** (the batch engine's map-side
+//!   combine already assumes this; counts, min/max, keep-first/lowest
+//!   qualify — chained f64 sums are only approximately associative);
+//! * `map_partitions` closures are batch-boundary-agnostic (per-row
+//!   outputs, e.g. batched inference — partition *sizes* differ between
+//!   a micro-batch run and a batch run).
+//!
+//! The differential suite in `tests/streaming.rs` asserts this parity at
+//! batch sizes {1, 100, whole-corpus}, optimizer on and off.
+
+use super::super::dataset::{Dataset, KeyFn, Partitioned, Plan, ReduceFn};
+use super::super::executor::{field_hash, whole_row_key, EngineCtx};
+use super::super::optimizer;
+use super::super::row::{Field, Row, SchemaRef};
+use crate::util::error::{DdpError, Result};
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+/// Node classification (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Class {
+    Static,
+    Streaming,
+    Finish,
+}
+
+/// Cross-batch state of one capture point.
+enum CapState {
+    /// raw rows in arrival order (blocking consumers); substituted for
+    /// the captured node itself at drain
+    Raw(Vec<Row>),
+    /// incremental fold for a single `ReduceByKey` consumer; the
+    /// *consumer* node is substituted at drain
+    Reduce {
+        consumer: Dataset,
+        key: KeyFn,
+        reduce: ReduceFn,
+        num_parts: usize,
+        accs: HashMap<Field, Row>,
+    },
+    /// first-seen set for a single `Distinct` consumer, bucketed exactly
+    /// like the batch shuffle; the consumer is substituted at drain.
+    /// Rows are shared (`Arc`) between the seen-set and the bucket lists
+    /// so each distinct row is held once, not twice.
+    Distinct {
+        consumer: Dataset,
+        seen: HashSet<Arc<Row>>,
+        buckets: Vec<Vec<Arc<Row>>>,
+    },
+}
+
+struct Capture {
+    /// the Streaming node whose per-batch delta feeds this state
+    node: Dataset,
+    state: CapState,
+}
+
+/// A compiled streaming query over one template plan.
+pub struct StreamQuery {
+    root: Dataset,
+    source_id: u64,
+    source_schema: SchemaRef,
+    captures: Vec<Capture>,
+    emit_root: bool,
+    retain_output: bool,
+    emitted: Vec<Row>,
+    rows_in: u64,
+    rows_out: u64,
+    batches: u64,
+    finished: bool,
+}
+
+impl StreamQuery {
+    /// Compile a query from a template plan and the placeholder source
+    /// dataset the template was built over.
+    pub fn compile(root: &Dataset, source: &Dataset) -> Result<StreamQuery> {
+        let source_id = source.id;
+        let source_schema = match &*source.node {
+            Plan::Source { .. } => source.schema.clone(),
+            _ => {
+                return Err(DdpError::engine(
+                    "streaming placeholder must be a source dataset",
+                ))
+            }
+        };
+        let mut classes: HashMap<u64, Class> = HashMap::new();
+        let root_class = classify(root, source_id, &mut classes);
+        if root_class == Class::Static {
+            return Err(DdpError::engine(
+                "streaming query never reads the streaming source",
+            ));
+        }
+        // capture edges: Finish consumers of Streaming nodes
+        let mut consumers: HashMap<u64, Vec<Dataset>> = HashMap::new();
+        let mut snodes: HashMap<u64, Dataset> = HashMap::new();
+        let mut visited: HashSet<u64> = HashSet::new();
+        collect_edges(root, &classes, &mut consumers, &mut snodes, &mut visited);
+
+        let mut ids: Vec<u64> = consumers.keys().copied().collect();
+        ids.sort_unstable();
+        let mut captures = Vec::with_capacity(ids.len());
+        for id in ids {
+            let node = snodes[&id].clone();
+            // dedupe consumers (a self-join wires the same node twice)
+            let mut uniq: Vec<Dataset> = Vec::new();
+            for c in &consumers[&id] {
+                if !uniq.iter().any(|u| u.id == c.id) {
+                    uniq.push(c.clone());
+                }
+            }
+            let state = if uniq.len() == 1 {
+                match &*uniq[0].node {
+                    Plan::ReduceByKey { key, reduce, num_parts, .. } => CapState::Reduce {
+                        consumer: uniq[0].clone(),
+                        key: key.clone(),
+                        reduce: reduce.clone(),
+                        num_parts: *num_parts,
+                        accs: HashMap::new(),
+                    },
+                    Plan::Distinct { num_parts, .. } => CapState::Distinct {
+                        consumer: uniq[0].clone(),
+                        seen: HashSet::new(),
+                        buckets: (0..*num_parts).map(|_| Vec::new()).collect(),
+                    },
+                    _ => CapState::Raw(Vec::new()),
+                }
+            } else {
+                CapState::Raw(Vec::new())
+            };
+            captures.push(Capture { node, state });
+        }
+        let emit_root = root_class == Class::Streaming;
+        debug_assert!(!emit_root || captures.is_empty());
+        Ok(StreamQuery {
+            root: root.clone(),
+            source_id,
+            source_schema,
+            captures,
+            emit_root,
+            retain_output: true,
+            emitted: Vec::new(),
+            rows_in: 0,
+            rows_out: 0,
+            batches: 0,
+            finished: false,
+        })
+    }
+
+    /// Whether per-batch emissions are retained for
+    /// [`StreamQuery::finish`] (needed for drain parity; disable for
+    /// unbounded append-mode runs whose sink is elsewhere).
+    pub fn set_retain_output(&mut self, retain: bool) {
+        self.retain_output = retain;
+    }
+
+    /// True when the plan is fully stateless (append mode): every batch
+    /// emits its delta and drain adds nothing new.
+    pub fn is_append_mode(&self) -> bool {
+        self.emit_root
+    }
+
+    pub fn records_in(&self) -> u64 {
+        self.rows_in
+    }
+
+    pub fn records_out(&self) -> u64 {
+        self.rows_out
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    /// Rows currently held in cross-batch state (accumulators, dedup
+    /// sets, blocked-op buffers) — the quantity backpressure bounds.
+    pub fn state_rows(&self) -> usize {
+        self.captures
+            .iter()
+            .map(|c| match &c.state {
+                CapState::Raw(v) => v.len(),
+                CapState::Reduce { accs, .. } => accs.len(),
+                CapState::Distinct { seen, .. } => seen.len(),
+            })
+            .sum()
+    }
+
+    /// Process one micro-batch: splice it in as the source, run the
+    /// per-batch prefix through the engine, absorb deltas into state,
+    /// and return the rows emitted by this batch (append-mode plans
+    /// emit; stateful plans emit at drain).
+    pub fn push_batch(&mut self, ctx: &EngineCtx, rows: &[Row]) -> Result<Vec<Row>> {
+        if self.finished {
+            return Err(DdpError::engine("stream query already finished"));
+        }
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.rows_in += rows.len() as u64;
+        self.batches += 1;
+        let batch = Partitioned {
+            schema: self.source_schema.clone(),
+            parts: vec![Arc::new(rows.to_vec())],
+        };
+        let mut subs: HashMap<u64, Partitioned> = HashMap::new();
+        subs.insert(self.source_id, batch);
+        let mut memo: HashMap<u64, Dataset> = HashMap::new();
+        for cap in self.captures.iter_mut() {
+            let rebuilt = substitute(&cap.node, &subs, &mut memo);
+            // the template was optimized at compile; skip the per-batch
+            // optimizer pass (pure latency, zero rewrites)
+            let delta = ctx.collect_unprepared(&rebuilt)?.rows();
+            match &mut cap.state {
+                CapState::Raw(v) => v.extend(delta),
+                CapState::Reduce { key, reduce, accs, .. } => {
+                    let key = key.clone();
+                    let reduce = reduce.clone();
+                    for r in delta {
+                        let k = key(&r);
+                        match accs.remove(&k) {
+                            Some(acc) => {
+                                accs.insert(k, reduce(acc, &r));
+                            }
+                            None => {
+                                accs.insert(k, r);
+                            }
+                        }
+                    }
+                }
+                CapState::Distinct { seen, buckets, .. } => {
+                    let num_parts = buckets.len().max(1);
+                    for r in delta {
+                        let r = Arc::new(r);
+                        if seen.insert(r.clone()) {
+                            let b = (distinct_bucket(&r) % num_parts as u64) as usize;
+                            buckets[b].push(r);
+                        }
+                    }
+                }
+            }
+        }
+        if self.emit_root {
+            let rebuilt = substitute(&self.root, &subs, &mut memo);
+            let out = ctx.collect_unprepared(&rebuilt)?.rows();
+            self.rows_out += out.len() as u64;
+            if self.retain_output {
+                self.emitted.extend(out.iter().cloned());
+            }
+            return Ok(out);
+        }
+        Ok(Vec::new())
+    }
+
+    /// Drain the query: materialize every capture with the batch
+    /// executor's exact layout and evaluate the remaining plan suffix.
+    /// The result is byte-identical to the one-shot batch run over the
+    /// full replayed corpus (see module docs for the contract).
+    pub fn finish(&mut self, ctx: &EngineCtx) -> Result<Partitioned> {
+        if self.finished {
+            return Err(DdpError::engine("stream query already finished"));
+        }
+        self.finished = true;
+        if self.emit_root {
+            let rows = std::mem::take(&mut self.emitted);
+            return Ok(Partitioned {
+                schema: self.root.schema.clone(),
+                parts: vec![Arc::new(rows)],
+            });
+        }
+        let mut subs: HashMap<u64, Partitioned> = HashMap::new();
+        for cap in self.captures.iter_mut() {
+            match &mut cap.state {
+                CapState::Raw(rows) => {
+                    let rows = std::mem::take(rows);
+                    subs.insert(
+                        cap.node.id,
+                        Partitioned {
+                            schema: cap.node.schema.clone(),
+                            parts: vec![Arc::new(rows)],
+                        },
+                    );
+                }
+                CapState::Reduce { consumer, num_parts, accs, .. } => {
+                    let num_parts = (*num_parts).max(1);
+                    let mut buckets: Vec<Vec<(Field, Row)>> =
+                        (0..num_parts).map(|_| Vec::new()).collect();
+                    for (k, r) in accs.drain() {
+                        let b = (field_hash(&k) % num_parts as u64) as usize;
+                        buckets[b].push((k, r));
+                    }
+                    let parts = buckets
+                        .into_iter()
+                        .map(|mut b| {
+                            // canonical key order, matching the batch
+                            // executor's reduce-side emission
+                            b.sort_by(|x, y| x.0.canonical_cmp(&y.0));
+                            Arc::new(b.into_iter().map(|(_, r)| r).collect::<Vec<Row>>())
+                        })
+                        .collect();
+                    subs.insert(
+                        consumer.id,
+                        Partitioned { schema: consumer.schema.clone(), parts },
+                    );
+                }
+                CapState::Distinct { consumer, buckets, .. } => {
+                    let parts = std::mem::take(buckets)
+                        .into_iter()
+                        .map(|b| {
+                            Arc::new(b.into_iter().map(|r| (*r).clone()).collect::<Vec<Row>>())
+                        })
+                        .collect();
+                    subs.insert(
+                        consumer.id,
+                        Partitioned { schema: consumer.schema.clone(), parts },
+                    );
+                }
+            }
+        }
+        let mut memo: HashMap<u64, Dataset> = HashMap::new();
+        let rebuilt = substitute(&self.root, &subs, &mut memo);
+        let out = ctx.collect_unprepared(&rebuilt)?;
+        self.rows_out += out.num_rows() as u64;
+        Ok(out)
+    }
+}
+
+/// Batch-identical bucket for a distinct row: the executor's own
+/// whole-row shuffle key, hashed the way `shuffle_buckets` does.
+fn distinct_bucket(r: &Row) -> u64 {
+    field_hash(&whole_row_key(r))
+}
+
+fn classify(ds: &Dataset, source_id: u64, memo: &mut HashMap<u64, Class>) -> Class {
+    if let Some(c) = memo.get(&ds.id) {
+        return *c;
+    }
+    let c = match &*ds.node {
+        Plan::Source { .. } => {
+            if ds.id == source_id {
+                Class::Streaming
+            } else {
+                Class::Static
+            }
+        }
+        Plan::Map { input, .. }
+        | Plan::Filter { input, .. }
+        | Plan::FilterExpr { input, .. }
+        | Plan::Project { input, .. }
+        | Plan::FlatMap { input, .. }
+        | Plan::MapPartitions { input, .. } => classify(input, source_id, memo),
+        Plan::ReduceByKey { input, .. }
+        | Plan::Distinct { input, .. }
+        | Plan::Sort { input, .. }
+        | Plan::Repartition { input, .. } => match classify(input, source_id, memo) {
+            Class::Static => Class::Static,
+            _ => Class::Finish,
+        },
+        Plan::Join { left, right, .. } => {
+            let l = classify(left, source_id, memo);
+            let r = classify(right, source_id, memo);
+            if l == Class::Static && r == Class::Static {
+                Class::Static
+            } else {
+                Class::Finish
+            }
+        }
+        // union interleaves branch deltas if streamed through, which
+        // would break append-order parity — treat it as a stateful
+        // barrier whenever a streaming branch feeds it
+        Plan::Union { inputs } => {
+            let cs: Vec<Class> = inputs
+                .iter()
+                .map(|i| classify(i, source_id, memo))
+                .collect();
+            if cs.iter().all(|c| *c == Class::Static) {
+                Class::Static
+            } else {
+                Class::Finish
+            }
+        }
+    };
+    memo.insert(ds.id, c);
+    c
+}
+
+fn collect_edges(
+    ds: &Dataset,
+    classes: &HashMap<u64, Class>,
+    consumers: &mut HashMap<u64, Vec<Dataset>>,
+    snodes: &mut HashMap<u64, Dataset>,
+    visited: &mut HashSet<u64>,
+) {
+    if !visited.insert(ds.id) {
+        return;
+    }
+    let my_class = classes.get(&ds.id).copied().unwrap_or(Class::Static);
+    for input in ds.inputs() {
+        if my_class == Class::Finish
+            && classes.get(&input.id).copied() == Some(Class::Streaming)
+        {
+            consumers.entry(input.id).or_default().push(ds.clone());
+            snodes.entry(input.id).or_insert_with(|| input.clone());
+        }
+        collect_edges(&input, classes, consumers, snodes, visited);
+    }
+}
+
+/// Clone the template with `subs` node ids replaced by materialized
+/// sources; keeps original handles (and ids) where nothing changed, so
+/// static subtrees keep their identity across batches.
+fn substitute(
+    ds: &Dataset,
+    subs: &HashMap<u64, Partitioned>,
+    memo: &mut HashMap<u64, Dataset>,
+) -> Dataset {
+    if let Some(done) = memo.get(&ds.id) {
+        return done.clone();
+    }
+    let out = if let Some(data) = subs.get(&ds.id) {
+        Dataset::with_node(
+            Plan::Source { name: format!("stream:{}", ds.name()), data: data.clone() },
+            ds.schema.clone(),
+        )
+    } else {
+        rebuild_children(ds, subs, memo)
+    };
+    memo.insert(ds.id, out.clone());
+    out
+}
+
+fn rebuild_children(
+    ds: &Dataset,
+    subs: &HashMap<u64, Partitioned>,
+    memo: &mut HashMap<u64, Dataset>,
+) -> Dataset {
+    let node = match &*ds.node {
+        Plan::Source { .. } => return ds.clone(),
+        Plan::Map { input, f, schema } => {
+            let ni = substitute(input, subs, memo);
+            if ni.id == input.id {
+                return ds.clone();
+            }
+            Plan::Map { input: ni, f: f.clone(), schema: schema.clone() }
+        }
+        Plan::Filter { input, f } => {
+            let ni = substitute(input, subs, memo);
+            if ni.id == input.id {
+                return ds.clone();
+            }
+            Plan::Filter { input: ni, f: f.clone() }
+        }
+        Plan::FilterExpr { input, expr } => {
+            let ni = substitute(input, subs, memo);
+            if ni.id == input.id {
+                return ds.clone();
+            }
+            Plan::FilterExpr { input: ni, expr: expr.clone() }
+        }
+        Plan::Project { input, cols, schema } => {
+            let ni = substitute(input, subs, memo);
+            if ni.id == input.id {
+                return ds.clone();
+            }
+            Plan::Project { input: ni, cols: cols.clone(), schema: schema.clone() }
+        }
+        Plan::FlatMap { input, f, schema } => {
+            let ni = substitute(input, subs, memo);
+            if ni.id == input.id {
+                return ds.clone();
+            }
+            Plan::FlatMap { input: ni, f: f.clone(), schema: schema.clone() }
+        }
+        Plan::MapPartitions { input, f, schema } => {
+            let ni = substitute(input, subs, memo);
+            if ni.id == input.id {
+                return ds.clone();
+            }
+            Plan::MapPartitions { input: ni, f: f.clone(), schema: schema.clone() }
+        }
+        Plan::ReduceByKey { input, key, reduce, num_parts, key_col } => {
+            let ni = substitute(input, subs, memo);
+            if ni.id == input.id {
+                return ds.clone();
+            }
+            Plan::ReduceByKey {
+                input: ni,
+                key: key.clone(),
+                reduce: reduce.clone(),
+                num_parts: *num_parts,
+                key_col: *key_col,
+            }
+        }
+        Plan::Distinct { input, num_parts } => {
+            let ni = substitute(input, subs, memo);
+            if ni.id == input.id {
+                return ds.clone();
+            }
+            Plan::Distinct { input: ni, num_parts: *num_parts }
+        }
+        Plan::Sort { input, cmp } => {
+            let ni = substitute(input, subs, memo);
+            if ni.id == input.id {
+                return ds.clone();
+            }
+            Plan::Sort { input: ni, cmp: cmp.clone() }
+        }
+        Plan::Repartition { input, num_parts } => {
+            let ni = substitute(input, subs, memo);
+            if ni.id == input.id {
+                return ds.clone();
+            }
+            Plan::Repartition { input: ni, num_parts: *num_parts }
+        }
+        Plan::Join { left, right, lkey, rkey, kind, num_parts, schema, lkey_col, rkey_col } => {
+            let nl = substitute(left, subs, memo);
+            let nr = substitute(right, subs, memo);
+            if nl.id == left.id && nr.id == right.id {
+                return ds.clone();
+            }
+            Plan::Join {
+                left: nl,
+                right: nr,
+                lkey: lkey.clone(),
+                rkey: rkey.clone(),
+                kind: *kind,
+                num_parts: *num_parts,
+                schema: schema.clone(),
+                lkey_col: *lkey_col,
+                rkey_col: *rkey_col,
+            }
+        }
+        Plan::Union { inputs } => {
+            let nis: Vec<Dataset> = inputs
+                .iter()
+                .map(|i| substitute(i, subs, memo))
+                .collect();
+            if nis.iter().zip(inputs.iter()).all(|(a, b)| a.id == b.id) {
+                return ds.clone();
+            }
+            Plan::Union { inputs: nis }
+        }
+    };
+    Dataset::with_node(node, ds.schema.clone())
+}
+
+/// Engine-layer streaming context: owns the engine handle and a compiled
+/// query, optimizing the template once (honouring
+/// [`super::super::executor::EngineConfig::optimize`]) before
+/// segmentation — "the existing optimized Plan DAG, once per micro-batch".
+pub struct StreamingCtx {
+    pub engine: Arc<EngineCtx>,
+    query: StreamQuery,
+}
+
+impl StreamingCtx {
+    /// Compile a streaming context over `root`, a template plan reading
+    /// the placeholder `source` dataset.
+    pub fn new(engine: Arc<EngineCtx>, root: &Dataset, source: &Dataset) -> Result<StreamingCtx> {
+        let optimized = if engine.cfg.optimize {
+            optimizer::optimize(root, &|id| engine.cache.is_registered(id)).plan
+        } else {
+            root.clone()
+        };
+        let query = StreamQuery::compile(&optimized, source)?;
+        Ok(StreamingCtx { engine, query })
+    }
+
+    pub fn set_retain_output(&mut self, retain: bool) {
+        self.query.set_retain_output(retain);
+    }
+
+    pub fn is_append_mode(&self) -> bool {
+        self.query.is_append_mode()
+    }
+
+    pub fn records_in(&self) -> u64 {
+        self.query.records_in()
+    }
+
+    pub fn records_out(&self) -> u64 {
+        self.query.records_out()
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.query.batches()
+    }
+
+    pub fn state_rows(&self) -> usize {
+        self.query.state_rows()
+    }
+
+    /// Drive one micro-batch through the plan.
+    pub fn push_batch(&mut self, rows: &[Row]) -> Result<Vec<Row>> {
+        self.query.push_batch(&self.engine, rows)
+    }
+
+    /// Drain: final output, byte-identical to the batch run.
+    pub fn finish(&mut self) -> Result<Partitioned> {
+        self.query.finish(&self.engine)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::executor::EngineConfig;
+    use crate::engine::row::{FieldType, Schema};
+    use crate::row;
+
+    fn engine() -> Arc<EngineCtx> {
+        EngineCtx::new(EngineConfig { workers: 2, ..Default::default() })
+    }
+
+    fn kv_schema() -> SchemaRef {
+        Schema::new(vec![("k", FieldType::I64), ("v", FieldType::I64)])
+    }
+
+    fn kv_rows(n: i64) -> Vec<Row> {
+        (0..n).map(|i| row!(i % 7, i)).collect()
+    }
+
+    fn placeholder() -> Dataset {
+        Dataset::from_rows("src", kv_schema(), Vec::new(), 1)
+    }
+
+    /// layout = partition structure, the strongest equality.
+    fn layout(p: &Partitioned) -> Vec<Vec<Row>> {
+        p.parts.iter().map(|part| (**part).clone()).collect()
+    }
+
+    fn stream_all(root: &Dataset, src: &Dataset, rows: &[Row], batch: usize) -> Partitioned {
+        let mut sc = StreamingCtx::new(engine(), root, src).unwrap();
+        for chunk in rows.chunks(batch.max(1)) {
+            sc.push_batch(chunk).unwrap();
+        }
+        sc.finish().unwrap()
+    }
+
+    fn double(r: &Row) -> Row {
+        row!(r.get(0).as_i64().unwrap(), r.get(1).as_i64().unwrap() * 2)
+    }
+
+    fn sum_v(acc: Row, r: &Row) -> Row {
+        row!(
+            acc.get(0).as_i64().unwrap(),
+            acc.get(1).as_i64().unwrap() + r.get(1).as_i64().unwrap()
+        )
+    }
+
+    fn max_v(acc: Row, r: &Row) -> Row {
+        row!(
+            acc.get(0).as_i64().unwrap(),
+            acc.get(1).as_i64().unwrap().max(r.get(1).as_i64().unwrap())
+        )
+    }
+
+    #[test]
+    fn stateless_plan_streams_append_mode() {
+        let src = placeholder();
+        let plan = src
+            .map(src.schema.clone(), double)
+            .filter(|r| r.get(1).as_i64().unwrap() % 3 != 0);
+        let rows = kv_rows(50);
+        let mut sc = StreamingCtx::new(engine(), &plan, &src).unwrap();
+        assert!(sc.is_append_mode());
+        let mut emitted = Vec::new();
+        for chunk in rows.chunks(8) {
+            emitted.extend(sc.push_batch(chunk).unwrap());
+        }
+        let fin = sc.finish().unwrap();
+        assert_eq!(fin.rows(), emitted, "drain replays the retained emissions");
+
+        // batch reference over the same rows
+        let batch_src = Dataset::from_rows("src", kv_schema(), rows, 4);
+        let batch_plan = batch_src
+            .map(batch_src.schema.clone(), double)
+            .filter(|r| r.get(1).as_i64().unwrap() % 3 != 0);
+        let want = engine().collect(&batch_plan).unwrap().rows();
+        assert_eq!(emitted, want);
+    }
+
+    #[test]
+    fn incremental_reduce_matches_batch_layout() {
+        let src = placeholder();
+        let plan = src.reduce_by_key_col(4, 0, sum_v);
+        let rows = kv_rows(100);
+        for batch in [1usize, 13, 100] {
+            let got = stream_all(&plan, &src, &rows, batch);
+            let batch_src = Dataset::from_rows("src", kv_schema(), rows.clone(), 5);
+            let batch_plan = batch_src.reduce_by_key_col(4, 0, sum_v);
+            let want = engine().collect(&batch_plan).unwrap();
+            assert_eq!(layout(&got), layout(&want), "batch size {batch}");
+        }
+    }
+
+    #[test]
+    fn incremental_distinct_matches_batch_layout() {
+        let src = placeholder();
+        let plan = src.distinct(3);
+        let rows: Vec<Row> = (0..120).map(|i| row!(i % 11, i % 4)).collect();
+        for batch in [1usize, 17, 120] {
+            let got = stream_all(&plan, &src, &rows, batch);
+            let batch_src = Dataset::from_rows("src", kv_schema(), rows.clone(), 6);
+            let want = engine().collect(&batch_src.distinct(3)).unwrap();
+            assert_eq!(layout(&got), layout(&want), "batch size {batch}");
+        }
+    }
+
+    #[test]
+    fn sort_and_suffix_above_reduce_match_batch() {
+        // narrow → reduce (incremental) → filter → sort: the suffix above
+        // the frontier runs through the batch executor at drain
+        fn bump(r: &Row) -> Row {
+            row!(r.get(0).as_i64().unwrap(), r.get(1).as_i64().unwrap() + 1)
+        }
+        let build = |src: &Dataset| {
+            src.map(src.schema.clone(), bump)
+                .reduce_by_key_col(3, 0, max_v)
+                .filter(|r| r.get(0).as_i64().unwrap() != 2)
+                .sort_by(|a, b| a.get(1).as_i64().unwrap().cmp(&b.get(1).as_i64().unwrap()))
+        };
+        let src = placeholder();
+        let plan = build(&src);
+        let rows = kv_rows(90);
+        let got = stream_all(&plan, &src, &rows, 7);
+        let batch_src = Dataset::from_rows("src", kv_schema(), rows, 4);
+        let want = engine().collect(&build(&batch_src)).unwrap();
+        assert_eq!(layout(&got), layout(&want));
+    }
+
+    #[test]
+    fn join_with_static_side_matches_batch() {
+        let dim_schema = Schema::new(vec![("k2", FieldType::I64), ("label", FieldType::Str)]);
+        let dim_rows: Vec<Row> = (0..7).map(|i| row!(i, format!("g{i}"))).collect();
+        use crate::engine::dataset::JoinKind;
+        let out_schema = Schema::of_names(&["k", "v", "k2", "label"]);
+        let build = |src: &Dataset, dim: &Dataset| {
+            src.join_on(dim, out_schema.clone(), JoinKind::Inner, 3, 0, 0)
+        };
+        let src = placeholder();
+        let dim = Dataset::from_rows("dim", dim_schema.clone(), dim_rows.clone(), 2);
+        let plan = build(&src, &dim);
+        let rows = kv_rows(60);
+        let got = stream_all(&plan, &src, &rows, 9);
+        let batch_src = Dataset::from_rows("src", kv_schema(), rows, 4);
+        let batch_dim = Dataset::from_rows("dim", dim_schema, dim_rows, 2);
+        let want = engine().collect(&build(&batch_src, &batch_dim)).unwrap();
+        assert_eq!(layout(&got), layout(&want));
+    }
+
+    #[test]
+    fn state_stays_bounded_for_incremental_ops() {
+        let src = placeholder();
+        let plan = src.reduce_by_key_col(2, 0, |acc: Row, _r: &Row| acc);
+        let mut sc = StreamingCtx::new(engine(), &plan, &src).unwrap();
+        let rows = kv_rows(500); // keys 0..7 only
+        for chunk in rows.chunks(50) {
+            sc.push_batch(chunk).unwrap();
+        }
+        assert_eq!(sc.state_rows(), 7, "one accumulator per key, not per row");
+        assert_eq!(sc.records_in(), 500);
+        sc.finish().unwrap();
+    }
+
+    #[test]
+    fn finish_is_terminal() {
+        let src = placeholder();
+        let plan = src.filter(|_| true);
+        let mut sc = StreamingCtx::new(engine(), &plan, &src).unwrap();
+        sc.push_batch(&kv_rows(3)).unwrap();
+        sc.finish().unwrap();
+        assert!(sc.push_batch(&kv_rows(3)).is_err());
+        assert!(sc.finish().is_err());
+    }
+
+    #[test]
+    fn static_only_plan_rejected() {
+        let src = placeholder();
+        let other = Dataset::from_rows("other", kv_schema(), kv_rows(5), 1);
+        let plan = other.filter(|_| true);
+        assert!(StreamingCtx::new(engine(), &plan, &src).is_err());
+    }
+}

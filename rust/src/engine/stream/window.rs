@@ -1,0 +1,362 @@
+//! Event-time tumbling windows with watermarks.
+//!
+//! Unlike the [`super::StreamQuery`] capture states — which exist to be
+//! byte-identical with a batch replay — windows are a *streaming-native*
+//! operator: results are emitted continuously as event time progresses,
+//! not at drain. Determinism still holds, just with a different anchor:
+//! given the same rows in the same arrival order, window closure happens
+//! at the same points and emissions come out in the same order (windows
+//! ascending by start, keys in canonical field order within a window).
+//!
+//! The watermark is the classic low-watermark heuristic: `max event time
+//! seen − allowed lateness`. A window `[start, start+width)` closes when
+//! the watermark reaches its end; rows arriving for an already-closed
+//! window are counted as late drops rather than reopening it (emitting a
+//! window twice would break downstream exactly-once accounting).
+
+use super::super::dataset::ReduceFn;
+use super::super::executor::field_hash;
+use super::super::row::{Field, Row};
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+/// Tracks the event-time low watermark.
+#[derive(Debug, Clone, Copy)]
+pub struct WatermarkTracker {
+    max_event_ts: Option<i64>,
+    lateness: i64,
+}
+
+impl WatermarkTracker {
+    pub fn new(allowed_lateness: i64) -> WatermarkTracker {
+        WatermarkTracker { max_event_ts: None, lateness: allowed_lateness.max(0) }
+    }
+
+    pub fn observe(&mut self, ts: i64) {
+        self.max_event_ts = Some(self.max_event_ts.map_or(ts, |m| m.max(ts)));
+    }
+
+    /// Current watermark; `i64::MIN` until the first observation.
+    pub fn watermark(&self) -> i64 {
+        self.max_event_ts
+            .map(|m| m.saturating_sub(self.lateness))
+            .unwrap_or(i64::MIN)
+    }
+}
+
+/// Tumbling window geometry over an integer event-time column.
+#[derive(Debug, Clone, Copy)]
+pub struct TumblingWindow {
+    /// window width in event-time units (must be > 0)
+    pub width: i64,
+    /// column holding the event timestamp (i64)
+    pub ts_col: usize,
+    /// optional grouping column (None = one group per window)
+    pub key_col: Option<usize>,
+}
+
+impl TumblingWindow {
+    /// Window start containing `ts` (euclidean floor, so negative
+    /// timestamps land in the right window too).
+    pub fn window_start(&self, ts: i64) -> i64 {
+        ts.div_euclid(self.width) * self.width
+    }
+}
+
+/// Windowed streaming aggregation: folds rows per (window, key) with a
+/// reduce function, closing windows as the watermark passes them.
+///
+/// Emitted rows are `[window_start: i64] ++ accumulator fields`.
+pub struct WindowAgg {
+    win: TumblingWindow,
+    reduce: ReduceFn,
+    wm: WatermarkTracker,
+    open: HashMap<(i64, Field), Row>,
+    /// all windows ending at or before this are closed (late frontier)
+    frontier: i64,
+    late_drops: u64,
+    /// rows whose timestamp column was missing or non-i64 — data
+    /// breakage, counted apart from genuine lateness so alarms can tell
+    /// the two failure modes apart
+    invalid_ts_drops: u64,
+    windows_emitted: u64,
+}
+
+impl WindowAgg {
+    pub fn new(
+        win: TumblingWindow,
+        allowed_lateness: i64,
+        reduce: impl Fn(Row, &Row) -> Row + Send + Sync + 'static,
+    ) -> WindowAgg {
+        assert!(win.width > 0, "window width must be positive");
+        WindowAgg {
+            win,
+            reduce: Arc::new(reduce),
+            wm: WatermarkTracker::new(allowed_lateness),
+            open: HashMap::new(),
+            frontier: i64::MIN,
+            late_drops: 0,
+            invalid_ts_drops: 0,
+            windows_emitted: 0,
+        }
+    }
+
+    /// Absorb a micro-batch. Rows for already-closed windows are dropped
+    /// (late) and counted.
+    pub fn push(&mut self, rows: &[Row]) {
+        let reduce = self.reduce.clone();
+        for r in rows {
+            let ts = match r.get(self.win.ts_col).as_i64() {
+                Some(t) => t,
+                None => {
+                    self.invalid_ts_drops += 1;
+                    continue;
+                }
+            };
+            let start = self.win.window_start(ts);
+            if self.frontier != i64::MIN && start + self.win.width <= self.frontier {
+                self.late_drops += 1;
+                continue;
+            }
+            let key = self
+                .win
+                .key_col
+                .map(|c| r.get(c).clone())
+                .unwrap_or(Field::Null);
+            let slot = (start, key);
+            match self.open.remove(&slot) {
+                Some(acc) => {
+                    self.open.insert(slot, reduce(acc, r));
+                }
+                None => {
+                    self.open.insert(slot, r.clone());
+                }
+            }
+            self.wm.observe(ts);
+        }
+    }
+
+    /// Emit every window the watermark has passed, deterministically
+    /// ordered (window start ascending, then canonical key order).
+    pub fn poll_closed(&mut self) -> Vec<Row> {
+        let wm = self.wm.watermark();
+        if wm == i64::MIN {
+            return Vec::new();
+        }
+        let closed = self.take_closed(|start, width| start + width <= wm);
+        if wm > self.frontier {
+            self.frontier = wm;
+        }
+        closed
+    }
+
+    /// End of stream: close and emit every remaining window.
+    pub fn finish(&mut self) -> Vec<Row> {
+        self.frontier = i64::MAX;
+        self.take_closed(|_, _| true)
+    }
+
+    fn take_closed(&mut self, ready: impl Fn(i64, i64) -> bool) -> Vec<Row> {
+        let width = self.win.width;
+        let mut keys: Vec<(i64, Field)> = self
+            .open
+            .keys()
+            .filter(|(start, _)| ready(*start, width))
+            .cloned()
+            .collect();
+        keys.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.canonical_cmp(&b.1)));
+        let mut out = Vec::with_capacity(keys.len());
+        for k in keys {
+            if let Some(acc) = self.open.remove(&k) {
+                let mut fields = Vec::with_capacity(acc.fields.len() + 1);
+                fields.push(Field::I64(k.0));
+                fields.extend(acc.fields);
+                out.push(Row::new(fields));
+                self.windows_emitted += 1;
+            }
+        }
+        out
+    }
+
+    pub fn watermark(&self) -> i64 {
+        self.wm.watermark()
+    }
+
+    pub fn open_windows(&self) -> usize {
+        self.open.len()
+    }
+
+    pub fn late_drops(&self) -> u64 {
+        self.late_drops
+    }
+
+    pub fn invalid_ts_drops(&self) -> u64 {
+        self.invalid_ts_drops
+    }
+
+    pub fn windows_emitted(&self) -> u64 {
+        self.windows_emitted
+    }
+}
+
+/// Streaming de-duplication keyed on a content hash of one column:
+/// first occurrence passes through (append mode), repeats are dropped.
+/// State is one `u64` per distinct content hash, not one row.
+pub struct StreamingDedup {
+    key_col: usize,
+    seen: HashSet<u64>,
+    passed: u64,
+    dropped: u64,
+}
+
+impl StreamingDedup {
+    pub fn new(key_col: usize) -> StreamingDedup {
+        StreamingDedup { key_col, seen: HashSet::new(), passed: 0, dropped: 0 }
+    }
+
+    /// Keep only first-seen rows, in arrival order.
+    pub fn push(&mut self, rows: Vec<Row>) -> Vec<Row> {
+        let mut out = Vec::with_capacity(rows.len());
+        for r in rows {
+            let h = field_hash(r.get(self.key_col));
+            if self.seen.insert(h) {
+                self.passed += 1;
+                out.push(r);
+            } else {
+                self.dropped += 1;
+            }
+        }
+        out
+    }
+
+    pub fn distinct_seen(&self) -> usize {
+        self.seen.len()
+    }
+
+    pub fn passed(&self) -> u64 {
+        self.passed
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::row;
+
+    fn count_reduce() -> impl Fn(Row, &Row) -> Row + Send + Sync + 'static {
+        // rows are (ts, key, n); fold sums n
+        |acc: Row, r: &Row| {
+            row!(
+                acc.get(0).as_i64().unwrap(),
+                acc.get(1).as_i64().unwrap(),
+                acc.get(2).as_i64().unwrap() + r.get(2).as_i64().unwrap()
+            )
+        }
+    }
+
+    fn agg(lateness: i64) -> WindowAgg {
+        WindowAgg::new(
+            TumblingWindow { width: 10, ts_col: 0, key_col: Some(1) },
+            lateness,
+            count_reduce(),
+        )
+    }
+
+    #[test]
+    fn windows_close_as_watermark_passes() {
+        let mut w = agg(0);
+        w.push(&[row!(1i64, 0i64, 1i64), row!(5i64, 1i64, 1i64), row!(12i64, 0i64, 1i64)]);
+        // watermark 12: window [0,10) closed, [10,20) still open
+        let closed = w.poll_closed();
+        assert_eq!(closed.len(), 2);
+        // deterministic order: window 0 / key 0, then window 0 / key 1
+        assert_eq!(closed[0].get(0).as_i64(), Some(0));
+        assert_eq!(closed[0].get(2).as_i64(), Some(0));
+        assert_eq!(closed[1].get(2).as_i64(), Some(1));
+        assert_eq!(w.open_windows(), 1);
+
+        w.push(&[row!(25i64, 0i64, 1i64)]);
+        let closed = w.poll_closed();
+        assert_eq!(closed.len(), 1, "[10,20) closes at watermark 25");
+        assert_eq!(closed[0].get(0).as_i64(), Some(10));
+
+        let last = w.finish();
+        assert_eq!(last.len(), 1, "[20,30) closes at end of stream");
+        assert_eq!(w.windows_emitted(), 4);
+    }
+
+    #[test]
+    fn lateness_holds_windows_open_and_late_rows_drop() {
+        let mut w = agg(5);
+        w.push(&[row!(1i64, 0i64, 1i64), row!(12i64, 0i64, 1i64)]);
+        // watermark = 12 - 5 = 7: nothing closes yet
+        assert!(w.poll_closed().is_empty());
+        w.push(&[row!(3i64, 0i64, 1i64)]); // within lateness: still folds
+        w.push(&[row!(16i64, 0i64, 1i64)]);
+        // watermark 11: [0,10) closes with both early rows folded
+        let closed = w.poll_closed();
+        assert_eq!(closed.len(), 1);
+        assert_eq!(closed[0].get(3).as_i64(), Some(2), "late-but-allowed row included");
+        // a row for the closed window is now a late drop
+        w.push(&[row!(2i64, 0i64, 1i64)]);
+        assert_eq!(w.late_drops(), 1);
+        assert_eq!(w.finish().len(), 1);
+    }
+
+    #[test]
+    fn deterministic_across_replays() {
+        let rows: Vec<Row> = (0..100)
+            .map(|i| row!((i * 3 % 47) as i64, (i % 3) as i64, 1i64))
+            .collect();
+        let run = || {
+            let mut w = agg(2);
+            let mut out = Vec::new();
+            for chunk in rows.chunks(9) {
+                w.push(chunk);
+                out.extend(w.poll_closed());
+            }
+            out.extend(w.finish());
+            (out, w.late_drops())
+        };
+        let (a, la) = run();
+        let (b, lb) = run();
+        assert_eq!(a, b);
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn invalid_timestamps_counted_apart_from_lateness() {
+        let mut w = agg(0);
+        w.push(&[row!("not a ts", 0i64, 1i64), row!(5i64, 0i64, 1i64)]);
+        assert_eq!(w.invalid_ts_drops(), 1);
+        assert_eq!(w.late_drops(), 0, "data breakage is not lateness");
+        assert_eq!(w.finish().len(), 1, "valid row still aggregates");
+    }
+
+    #[test]
+    fn negative_timestamps_window_correctly() {
+        let w = TumblingWindow { width: 10, ts_col: 0, key_col: None };
+        assert_eq!(w.window_start(-1), -10);
+        assert_eq!(w.window_start(-10), -10);
+        assert_eq!(w.window_start(-11), -20);
+        assert_eq!(w.window_start(0), 0);
+        assert_eq!(w.window_start(9), 0);
+    }
+
+    #[test]
+    fn streaming_dedup_first_seen_wins() {
+        let mut d = StreamingDedup::new(1);
+        let out = d.push(vec![row!(0i64, "a"), row!(1i64, "b"), row!(2i64, "a")]);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].get(0).as_i64(), Some(0), "first occurrence kept");
+        let out = d.push(vec![row!(3i64, "b"), row!(4i64, "c")]);
+        assert_eq!(out.len(), 1);
+        assert_eq!(d.distinct_seen(), 3);
+        assert_eq!(d.passed(), 3);
+        assert_eq!(d.dropped(), 2);
+    }
+}

@@ -3,8 +3,10 @@
 //! snapshots and ships them to a sink at a configurable cadence (30 s by
 //! default, matching the paper) without any involvement from pipe code.
 
-pub mod registry;
+pub mod engine_export;
 pub mod publisher;
+pub mod registry;
 
+pub use engine_export::EngineMetricsExporter;
 pub use publisher::{LogSink, MemorySink, MetricsPublisher, PublisherConfig, Sink, StorageSink};
 pub use registry::{HistogramSummary, MetricsRegistry, MetricsSnapshot};

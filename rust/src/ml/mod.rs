@@ -6,12 +6,16 @@
 //! * [`embedded`] — PJRT-backed model services (langdetect, embedder,
 //!   pairwise scorer, tiny LLM), instance-level cached;
 //! * [`microservice`] — the REST-hop baseline the paper measures 10×
-//!   slower.
+//!   slower;
+//! * [`streaming`] — batch-boundary-agnostic batched inference for the
+//!   micro-batch streaming runtime.
 
 pub mod featurizer;
 pub mod embedded;
 pub mod microservice;
+pub mod streaming;
 
 pub use embedded::{Embedder, LangDetector, ModelMeta, PairwiseScorer, TinyLlm};
 pub use featurizer::Featurizer;
 pub use microservice::{MicroserviceDetector, RestModel};
+pub use streaming::BatchedEmbedder;

@@ -168,7 +168,7 @@ fn rand_plan(g: &mut Gen) -> Dataset {
     let ops = 3 + g.usize(6);
     for _ in 0..ops {
         let ds = pool[g.usize(pool.len())].clone();
-        let next = match g.u64(8) {
+        let next = match g.u64(9) {
             0 | 1 => ds.filter_expr(rand_pred(g, &ds.schema)),
             2 => rand_project(g, &ds),
             3 => ds.repartition(1 + g.usize(4)),
@@ -178,6 +178,12 @@ fn rand_plan(g: &mut Gen) -> Dataset {
                 Some(j) => j,
                 None => ds.filter_expr(rand_pred(g, &ds.schema)),
             },
+            7 => {
+                // stable gather-sort on a random column (canonical field
+                // order) — exercises the filter-commutes-with-sort rule
+                let c = g.usize(ds.schema.len());
+                ds.sort_by(move |a, b| a.get(c).canonical_cmp(b.get(c)))
+            }
             _ => {
                 let partner = pool
                     .iter()
@@ -432,6 +438,25 @@ fn golden_filter_pushdown_distinct() {
         opt.plan.plan_display(),
         "distinct[parts 3]\n  filter_expr[(grp = 1)]\n    source[src]\n"
     );
+}
+
+#[test]
+fn golden_filter_pushdown_sort() {
+    let ds = golden_src();
+    let sorted = ds.sort_by(|a, b| a.get(0).canonical_cmp(b.get(0)));
+    let f = sorted.filter_expr(compile("id > 2", &ds.schema).unwrap());
+    let opt = optimize(&f, &no_barrier);
+    assert_eq!(opt.counts.filter_pushdown_sort, 1);
+    assert_eq!(
+        opt.plan.plan_display(),
+        "sort\n  filter_expr[(id > 2)]\n    source[src]\n"
+    );
+    // stable sort: filtered-then-sorted equals sorted-then-filtered,
+    // byte for byte
+    let (on, on_stats) = run(true, &f);
+    let (off, _) = run(false, &f);
+    assert_eq!(on, off);
+    assert!(on_stats.plan_rewrites > 0);
 }
 
 #[test]

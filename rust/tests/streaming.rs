@@ -1,0 +1,384 @@
+//! Streaming runtime test suite:
+//!
+//! * **differential batch-vs-stream** — replaying the enterprise corpus
+//!   through the micro-batch streaming runtime at batch sizes {1 row,
+//!   100 rows, whole corpus} produces output byte-identical (same rows,
+//!   same order, same partition layout) to the one-shot batch pipeline,
+//!   with the plan optimizer on and off;
+//! * **append-mode parity** — a stateless pipeline's per-batch emissions
+//!   concatenate to exactly the batch run's output;
+//! * **backpressure** — a source that outpaces the pipeline never grows
+//!   the ingest queue past its bound, and the run still drains to the
+//!   batch-identical result;
+//! * **batched inference** — the ml-layer streaming embedder is
+//!   batch-boundary-agnostic end to end.
+
+use ddp::config::PipelineSpec;
+use ddp::corpus::enterprise::EnterpriseGen;
+use ddp::ddp::streaming::{StreamingConfig, StreamingDriver};
+use ddp::ddp::{registry, DriverConfig, PipelineDriver};
+use ddp::engine::row::Row;
+use ddp::engine::stream::{CorpusSource, RateLimitedSource};
+use ddp::engine::{Dataset, EngineConfig, Partitioned};
+use ddp::io::IoRegistry;
+use ddp::ml::{BatchedEmbedder, Featurizer};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// The Table 3 enterprise shape: validate → dedup (stateful, content
+/// hash) → group-by aggregation. The dedup reduce is the streaming
+/// frontier (incremental state); the aggregation above it is evaluated
+/// at drain by the batch executor.
+const PIPELINE: &str = r#"{
+  "name": "stream_enterprise",
+  "settings": {"metricsCadenceSecs": 0.5, "workers": 2},
+  "data": [
+    {"id": "Records", "schema": [
+      {"name": "id", "type": "i64"},
+      {"name": "name", "type": "str"},
+      {"name": "email", "type": "str"},
+      {"name": "city", "type": "str"},
+      {"name": "value", "type": "f64"},
+      {"name": "dup_of", "type": "i64"}]}
+  ],
+  "pipes": [
+    {"inputDataId": "Records", "transformerType": "SqlFilterTransformer",
+     "outputDataId": "Valid", "params": {"filter": "length(name) >= 3"}},
+    {"inputDataId": "Valid", "transformerType": "DedupTransformer",
+     "outputDataId": "Unique",
+     "params": {"method": "exact", "textColumn": "email"}},
+    {"inputDataId": "Unique", "transformerType": "AggregateTransformer",
+     "outputDataId": "CityStats",
+     "params": {"groupBy": "city", "aggregations": [
+        {"op": "count"},
+        {"op": "sum", "column": "value"},
+        {"op": "min", "column": "value"},
+        {"op": "max", "column": "value"}]}}
+  ]
+}"#;
+
+const N: usize = 600;
+
+fn corpus() -> (ddp::engine::SchemaRef, Vec<Row>) {
+    EnterpriseGen { seed: 11, dup_rate: 0.25 }.generate_rows(N)
+}
+
+/// Partition-structure equality — the strongest byte-identity.
+fn layout(p: &Partitioned) -> Vec<Vec<Row>> {
+    p.parts.iter().map(|part| (**part).clone()).collect()
+}
+
+fn engine_cfg(optimize: bool) -> EngineConfig {
+    EngineConfig { workers: 2, optimize, ..Default::default() }
+}
+
+fn batch_run_cfg(engine: EngineConfig) -> Vec<Vec<Row>> {
+    let spec = PipelineSpec::parse(PIPELINE).unwrap();
+    let driver = PipelineDriver::new(
+        spec,
+        registry::GLOBAL.clone(),
+        Arc::new(IoRegistry::with_sim_cloud()),
+        DriverConfig { engine, ..Default::default() },
+    )
+    .unwrap();
+    let (schema, rows) = corpus();
+    let mut provided = BTreeMap::new();
+    provided.insert("Records".to_string(), Dataset::from_rows("Records", schema, rows, 4));
+    let report = driver.run(provided).unwrap();
+    let out = report.anchors.get("CityStats").unwrap();
+    layout(&driver.ctx.engine.collect(out).unwrap())
+}
+
+fn batch_run(optimize: bool) -> Vec<Vec<Row>> {
+    batch_run_cfg(engine_cfg(optimize))
+}
+
+fn stream_run_cfg(engine: EngineConfig, batch_rows: usize) -> Vec<Vec<Row>> {
+    let spec = PipelineSpec::parse(PIPELINE).unwrap();
+    let cfg = StreamingConfig {
+        source_id: "Records".to_string(),
+        initial_batch_rows: batch_rows,
+        min_batch_rows: batch_rows,
+        max_batch_rows: batch_rows,
+        queue_capacity_rows: batch_rows.max(1024),
+        ..Default::default()
+    };
+    let mut driver = StreamingDriver::new(
+        spec,
+        registry::GLOBAL.clone(),
+        Arc::new(IoRegistry::with_sim_cloud()),
+        engine,
+        cfg,
+        BTreeMap::new(),
+    )
+    .unwrap();
+    let (schema, rows) = corpus();
+    let mut src = CorpusSource::new(schema, rows);
+    let report = driver.run_stream(&mut src).unwrap();
+    assert_eq!(report.records_in, N as u64);
+    layout(&report.outputs["CityStats"])
+}
+
+fn stream_run(optimize: bool, batch_rows: usize) -> Vec<Vec<Row>> {
+    stream_run_cfg(engine_cfg(optimize), batch_rows)
+}
+
+#[test]
+fn differential_batch_vs_stream_one_row_batches() {
+    // 1-row micro-batches: the most adversarial interleaving
+    assert_eq!(stream_run(true, 1), batch_run(true));
+}
+
+#[test]
+fn differential_batch_vs_stream_hundred_row_batches() {
+    assert_eq!(stream_run(true, 100), batch_run(true));
+}
+
+#[test]
+fn differential_batch_vs_stream_whole_corpus_batch() {
+    assert_eq!(stream_run(true, N), batch_run(true));
+}
+
+#[test]
+fn differential_holds_with_optimizer_off() {
+    let want = batch_run(false);
+    assert_eq!(stream_run(false, 1), want);
+    assert_eq!(stream_run(false, 100), want);
+    assert_eq!(stream_run(false, N), want);
+    // and optimizer on/off agree with each other
+    assert_eq!(want, batch_run(true));
+}
+
+#[test]
+fn differential_with_default_engine_config_honors_env_toggle() {
+    // EngineConfig::default() is the only reader of DDP_OPTIMIZE, so this
+    // is the test the CI "plan optimizer off" streaming leg actually
+    // flips — the pinned-config tests above are env-independent
+    let workers = |mut c: EngineConfig| {
+        c.workers = 2;
+        c
+    };
+    let want = batch_run_cfg(workers(EngineConfig::default()));
+    assert_eq!(stream_run_cfg(workers(EngineConfig::default()), 73), want);
+}
+
+#[test]
+fn union_of_stream_and_static_matches_batch() {
+    // a Union frontier takes the raw-capture path: row content/order are
+    // preserved exactly; the distinct above re-buckets by content, so
+    // even the final partition layout matches the batch run
+    use ddp::engine::stream::StreamingCtx;
+    use ddp::engine::EngineCtx;
+    let (schema, rows) = corpus();
+    let static_rows: Vec<Row> = rows.iter().take(50).cloned().collect();
+    let build = |src: &Dataset, stat: &Dataset| src.union(&[stat.clone()]);
+
+    let engine = EngineCtx::new(engine_cfg(true));
+    let src = Dataset::from_rows("Records", schema.clone(), Vec::new(), 1);
+    let stat = Dataset::from_rows("Static", schema.clone(), static_rows.clone(), 3);
+    let union_plan = build(&src, &stat);
+    let mut sc = StreamingCtx::new(engine, &union_plan, &src).unwrap();
+    for chunk in rows.chunks(71) {
+        sc.push_batch(chunk).unwrap();
+    }
+    let got_union = sc.finish().unwrap();
+
+    let engine = EngineCtx::new(engine_cfg(true));
+    let bsrc = Dataset::from_rows("Records", schema.clone(), rows.clone(), 4);
+    let bstat = Dataset::from_rows("Static", schema.clone(), static_rows.clone(), 3);
+    let want_union = engine.collect(&build(&bsrc, &bstat)).unwrap();
+    assert_eq!(
+        got_union.rows(),
+        want_union.rows(),
+        "union drain preserves exact row content and order"
+    );
+
+    // with a wide op above the union, full layout parity returns
+    let engine = EngineCtx::new(engine_cfg(true));
+    let src = Dataset::from_rows("Records", schema.clone(), Vec::new(), 1);
+    let stat = Dataset::from_rows("Static", schema.clone(), static_rows.clone(), 3);
+    let distinct_plan = build(&src, &stat).distinct(4);
+    let mut sc = StreamingCtx::new(engine, &distinct_plan, &src).unwrap();
+    for chunk in rows.chunks(71) {
+        sc.push_batch(chunk).unwrap();
+    }
+    let got = sc.finish().unwrap();
+
+    let engine = EngineCtx::new(engine_cfg(true));
+    let bsrc = Dataset::from_rows("Records", schema.clone(), rows, 4);
+    let bstat = Dataset::from_rows("Static", schema, static_rows, 3);
+    let want = engine.collect(&build(&bsrc, &bstat).distinct(4)).unwrap();
+    assert_eq!(layout(&got), layout(&want));
+}
+
+#[test]
+fn append_mode_emissions_match_batch_output() {
+    // stateless pipeline: filter + projection only
+    let spec_text = r#"{
+      "name": "stream_stateless",
+      "settings": {"metricsCadenceSecs": 0.5, "workers": 2},
+      "data": [
+        {"id": "Records", "schema": [
+          {"name": "id", "type": "i64"},
+          {"name": "name", "type": "str"},
+          {"name": "email", "type": "str"},
+          {"name": "city", "type": "str"},
+          {"name": "value", "type": "f64"},
+          {"name": "dup_of", "type": "i64"}]}
+      ],
+      "pipes": [
+        {"inputDataId": "Records", "transformerType": "SqlFilterTransformer",
+         "outputDataId": "Slim",
+         "params": {"filter": "value >= 1000", "select": ["id", "city", "value"]}}
+      ]
+    }"#;
+    let (schema, rows) = corpus();
+
+    let spec = PipelineSpec::parse(spec_text).unwrap();
+    let driver = PipelineDriver::new(
+        spec,
+        registry::GLOBAL.clone(),
+        Arc::new(IoRegistry::with_sim_cloud()),
+        DriverConfig { engine: engine_cfg(true), ..Default::default() },
+    )
+    .unwrap();
+    let mut provided = BTreeMap::new();
+    provided.insert(
+        "Records".to_string(),
+        Dataset::from_rows("Records", schema.clone(), rows.clone(), 4),
+    );
+    let report = driver.run(provided).unwrap();
+    let want = driver
+        .ctx
+        .engine
+        .collect(report.anchors.get("Slim").unwrap())
+        .unwrap()
+        .rows();
+
+    let spec = PipelineSpec::parse(spec_text).unwrap();
+    let cfg = StreamingConfig {
+        source_id: "Records".to_string(),
+        initial_batch_rows: 37,
+        min_batch_rows: 37,
+        max_batch_rows: 37,
+        ..Default::default()
+    };
+    let mut sdriver = StreamingDriver::new(
+        spec,
+        registry::GLOBAL.clone(),
+        Arc::new(IoRegistry::with_sim_cloud()),
+        engine_cfg(true),
+        cfg,
+        BTreeMap::new(),
+    )
+    .unwrap();
+    let mut src = CorpusSource::new(schema, rows);
+    let sreport = sdriver.run_stream(&mut src).unwrap();
+    assert_eq!(sreport.outputs["Slim"].rows(), want);
+    // emissions were continuous, not drain-only
+    assert_eq!(
+        *sreport.metrics.counters.get("stream.records_emitted").unwrap() as usize,
+        want.len()
+    );
+}
+
+#[test]
+fn backpressure_bounds_queue_when_source_outpaces_pipeline() {
+    let spec = PipelineSpec::parse(PIPELINE).unwrap();
+    let cap = 128usize;
+    let cfg = StreamingConfig {
+        source_id: "Records".to_string(),
+        initial_batch_rows: 32,
+        min_batch_rows: 8,
+        max_batch_rows: 64,
+        queue_capacity_rows: cap,
+        ..Default::default()
+    };
+    let mut driver = StreamingDriver::new(
+        spec,
+        registry::GLOBAL.clone(),
+        Arc::new(IoRegistry::with_sim_cloud()),
+        engine_cfg(true),
+        cfg,
+        BTreeMap::new(),
+    )
+    .unwrap();
+    let (schema, rows) = corpus();
+    // the source can hand out far more rows per poll than the queue holds
+    let mut src = RateLimitedSource::new(CorpusSource::new(schema, rows), 100_000);
+    let report = driver.run_stream(&mut src).unwrap();
+    assert!(
+        report.max_queue_depth_rows <= cap,
+        "queue depth {} exceeded bound {cap}",
+        report.max_queue_depth_rows
+    );
+    assert!(
+        report.backpressure_waits > 0,
+        "a saturating source must trip backpressure"
+    );
+    assert_eq!(report.records_in, N as u64, "no rows dropped under pressure");
+    // and the pressured run still drains to the batch-identical answer
+    assert_eq!(layout(&report.outputs["CityStats"]), batch_run(true));
+}
+
+#[test]
+fn streaming_metrics_surface_engine_counters() {
+    let spec = PipelineSpec::parse(PIPELINE).unwrap();
+    let cfg = StreamingConfig {
+        source_id: "Records".to_string(),
+        initial_batch_rows: 64,
+        min_batch_rows: 64,
+        max_batch_rows: 64,
+        ..Default::default()
+    };
+    let mut driver = StreamingDriver::new(
+        spec,
+        registry::GLOBAL.clone(),
+        Arc::new(IoRegistry::with_sim_cloud()),
+        engine_cfg(true),
+        cfg,
+        BTreeMap::new(),
+    )
+    .unwrap();
+    let (schema, rows) = corpus();
+    let mut src = CorpusSource::new(schema, rows);
+    let report = driver.run_stream(&mut src).unwrap();
+    let c = &report.metrics.counters;
+    assert_eq!(*c.get("stream.records_in").unwrap(), N as u64);
+    assert!(*c.get("stream.batches").unwrap() > 0);
+    assert!(*c.get("engine.tasks_launched").unwrap() > 0, "engine stats exported");
+    assert!(c.contains_key("engine.cache.evictions"), "cache counters exported");
+    assert!(report.metrics.histograms.contains_key("stream.batch_latency_secs"));
+    assert!(report.records_per_sec > 0.0);
+    assert!(report.p99_batch_latency_secs >= report.p50_batch_latency_secs);
+}
+
+#[test]
+fn streaming_embedded_inference_is_batch_invariant_end_to_end() {
+    // ml-layer batched inference inside the streaming loop: attach the
+    // embedder to a template plan, stream at two batch sizes, and expect
+    // identical drained output both times and vs the batch engine
+    use ddp::engine::stream::StreamingCtx;
+    let (schema, rows) = corpus();
+    let run = |batch: usize| -> Vec<Row> {
+        let engine = ddp::engine::EngineCtx::new(engine_cfg(true));
+        let src = Dataset::from_rows("Records", schema.clone(), Vec::new(), 1);
+        let emb = BatchedEmbedder::new(Featurizer::new(128, vec![1, 2]), 1, 16);
+        let plan = emb.attach(&src);
+        let mut sc = StreamingCtx::new(engine, &plan, &src).unwrap();
+        let mut out = Vec::new();
+        for chunk in rows.chunks(batch) {
+            out.extend(sc.push_batch(chunk).unwrap());
+        }
+        out
+    };
+    let a = run(5);
+    let b = run(170);
+    assert_eq!(a.len(), N);
+    assert_eq!(a, b, "inference output must not depend on micro-batch size");
+    let engine = ddp::engine::EngineCtx::new(engine_cfg(true));
+    let batch_src = Dataset::from_rows("Records", schema.clone(), rows.clone(), 4);
+    let emb = BatchedEmbedder::new(Featurizer::new(128, vec![1, 2]), 1, 16);
+    let want = engine.collect(&emb.attach(&batch_src)).unwrap().rows();
+    assert_eq!(a, want, "streamed inference equals batch inference");
+}
