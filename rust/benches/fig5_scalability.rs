@@ -157,6 +157,62 @@ fn bench_optimizer_pushdown(args: &Args) {
     t.save("fig5_optimizer");
 }
 
+/// Out-of-core probe: the same wide pipeline (distinct → group-by) over
+/// an incompressible corpus at memory budgets {∞, 64 MB, 8 MB} — spill
+/// bytes/files vs wall clock, with byte-identical output asserted across
+/// budgets. Real execution, no artifacts needed.
+fn bench_spill_budgets(args: &Args) {
+    let rows_n = args.opt_usize("spill-rows", 40_000) as i64;
+    let schema = Schema::new(vec![("k", FieldType::I64), ("pad", FieldType::Str)]);
+    let mut rng = ddp::util::rng::Rng64::new(7);
+    let data: Vec<ddp::engine::Row> = (0..rows_n)
+        .map(|i| {
+            let pad: String = (0..12).map(|_| format!("{:016x}", rng.next_u64())).collect();
+            row!(i % (rows_n / 4).max(1), pad)
+        })
+        .collect();
+    type Layout = Vec<Vec<ddp::engine::Row>>;
+    let probe = |budget: Option<usize>| -> (u64, u64, f64, Layout) {
+        let c = EngineCtx::new(EngineConfig {
+            workers: 4,
+            memory_budget_bytes: budget,
+            ..Default::default()
+        });
+        let ds = Dataset::from_rows("corpus", schema.clone(), data.clone(), 8);
+        let out = ds.distinct(8).reduce_by_key_col(8, 0, |acc, _| acc);
+        let t0 = std::time::Instant::now();
+        let got = c.collect(&out).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        let s = c.stats.snapshot();
+        let layout: Layout = got.parts.iter().map(|p| (**p).clone()).collect();
+        (s.spill_bytes, s.spill_files, secs, layout)
+    };
+    let fmt_budget = |b: Option<usize>| match b {
+        None => "∞ (in-memory)".to_string(),
+        Some(b) => format!("{} MB", b >> 20),
+    };
+    let mut t = Table::new(
+        "Out-of-core shuffle — spill bytes vs runtime at memory budgets (distinct→reduce)",
+        &["memory budget", "spill bytes", "spill files", "wall clock"],
+    );
+    let mut baseline: Option<Layout> = None;
+    for budget in [None, Some(64usize << 20), Some(8usize << 20)] {
+        let (bytes, files, secs, layout) = probe(budget);
+        match &baseline {
+            None => baseline = Some(layout),
+            // full layout equality: same rows, same order, same partitions
+            Some(want) => assert_eq!(&layout, want, "budget changed query output"),
+        }
+        t.row(&[
+            fmt_budget(budget),
+            bytes.to_string(),
+            files.to_string(),
+            fmt_duration(secs),
+        ]);
+    }
+    t.save("fig5_spill");
+}
+
 fn main() {
     ddp::util::logger::init();
     let args = Args::from_env();
@@ -166,6 +222,9 @@ fn main() {
 
     // plan-optimizer shuffle savings: real execution, no artifacts needed
     bench_optimizer_pushdown(&args);
+
+    // out-of-core spill probe: real execution, no artifacts needed
+    bench_spill_budgets(&args);
 
     let n_docs = args.opt_usize("docs", 3_000);
     let artifacts = default_artifacts_dir();

@@ -5,21 +5,30 @@
 //! completes ("like the `delete` clause in C++").
 
 use super::dataset::Partitioned;
+use super::memory::{MemoryGovernor, MemoryReservation};
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Per-entry bookkeeping.
 struct Entry {
     data: Partitioned,
     bytes: usize,
     hits: u64,
+    /// governor reservation backing this entry; released on drop, so
+    /// eviction/unpersist/clear automatically return the bytes
+    _res: Option<MemoryReservation>,
 }
 
 /// Thread-safe cache keyed by plan-node id, with a byte budget and
 /// LRU-ish eviction (least-hit entry evicted first; good enough for
-/// pipeline-shaped reuse).
+/// pipeline-shaped reuse). Entries also reserve from the engine's shared
+/// [`MemoryGovernor`]: cached datasets and in-flight shuffle state
+/// compete for one budget, and an entry that can't get a reservation
+/// (even after evicting colder entries) is simply not cached — caching
+/// is an optimization, never a correctness requirement.
 pub struct CacheManager {
     inner: Mutex<CacheInner>,
+    governor: Arc<MemoryGovernor>,
 }
 
 struct CacheInner {
@@ -33,6 +42,11 @@ struct CacheInner {
 
 impl CacheManager {
     pub fn new(budget_bytes: usize) -> Self {
+        CacheManager::with_governor(budget_bytes, Arc::new(MemoryGovernor::unbounded()))
+    }
+
+    /// Cache sharing the engine's memory budget with shuffle/stream state.
+    pub fn with_governor(budget_bytes: usize, governor: Arc<MemoryGovernor>) -> Self {
         CacheManager {
             inner: Mutex::new(CacheInner {
                 registered: HashMap::new(),
@@ -42,6 +56,7 @@ impl CacheManager {
                 evictions: 0,
                 hits_total: 0,
             }),
+            governor,
         }
     }
 
@@ -93,7 +108,9 @@ impl CacheManager {
 
     /// Insert a materialized dataset, evicting least-used entries if the
     /// budget would be exceeded. Entries larger than the whole budget are
-    /// not cached (unbounded inputs must not pin memory — §3.2).
+    /// not cached (unbounded inputs must not pin memory — §3.2), and an
+    /// entry the shared governor refuses (even with the cache emptied)
+    /// is skipped rather than forced in.
     pub fn put(&self, id: u64, data: Partitioned) {
         let bytes = data.approx_bytes();
         let mut g = self.inner.lock().unwrap();
@@ -105,8 +122,27 @@ impl CacheManager {
         if let Some(old) = g.entries.remove(&id) {
             g.used_bytes -= old.bytes;
         }
-        while g.used_bytes + bytes > g.budget_bytes {
-            // evict the least-hit entry
+        let res = loop {
+            if g.used_bytes + bytes <= g.budget_bytes {
+                if let Some(res) = MemoryGovernor::try_reserve(&self.governor, bytes) {
+                    break res;
+                }
+                // governor refused: evicting own entries can free at most
+                // `used_bytes` of governor budget. If even that plus the
+                // governor's current headroom can't fit the entry, the
+                // pressure is external (in-flight shuffle/stream state) —
+                // give up now instead of pointlessly wiping the cache
+                let gov_free = self
+                    .governor
+                    .budget_bytes()
+                    .map(|b| b.saturating_sub(self.governor.reserved_bytes()))
+                    .unwrap_or(usize::MAX);
+                if bytes > g.used_bytes.saturating_add(gov_free) {
+                    return;
+                }
+            }
+            // evict the least-hit entry to make room (own budget or the
+            // shared governor budget — either pressure frees real bytes)
             let victim = g
                 .entries
                 .iter()
@@ -119,11 +155,12 @@ impl CacheManager {
                         g.evictions += 1;
                     }
                 }
-                None => break,
+                // nothing left to evict and still no room: don't cache
+                None => return,
             }
-        }
+        };
         g.used_bytes += bytes;
-        g.entries.insert(id, Entry { data, bytes, hits: 0 });
+        g.entries.insert(id, Entry { data, bytes, hits: 0, _res: Some(res) });
     }
 
     pub fn used_bytes(&self) -> usize {
@@ -251,6 +288,55 @@ mod tests {
         c.unpersist(1);
         assert_eq!(c.used_bytes(), 0);
         assert_eq!(c.evictions(), 0, "replacement is not an eviction");
+    }
+
+    #[test]
+    fn shared_governor_budget_bounds_cache() {
+        use crate::engine::memory::MemoryGovernor;
+        let one = pd(100).approx_bytes();
+        // cache's own budget is generous; the shared governor is the
+        // binding constraint
+        let gov = Arc::new(MemoryGovernor::new(Some(one * 2 + 10)));
+        let c = CacheManager::with_governor(1 << 20, gov.clone());
+        c.put(1, pd(100));
+        c.put(2, pd(100));
+        assert_eq!(gov.reserved_bytes(), one * 2);
+        // governor pressure forces an eviction
+        c.put(3, pd(100));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.evictions(), 1);
+        assert_eq!(gov.reserved_bytes(), one * 2);
+        c.clear();
+        assert_eq!(gov.reserved_bytes(), 0, "clear releases every reservation");
+        // an outside holder (shuffle state) owns nearly the whole budget:
+        // with nothing left to evict, the entry is skipped, not forced in
+        let outside = MemoryGovernor::try_reserve(&gov, one * 2).unwrap();
+        c.put(4, pd(100));
+        assert!(c.get(4).is_none(), "refused entry is not cached");
+        drop(outside);
+        c.put(4, pd(100));
+        assert!(c.get(4).is_some(), "cache works again once the budget frees");
+        // external pressure that eviction can't possibly relieve must not
+        // wipe resident entries one by one on the way to failing anyway
+        let hog = MemoryGovernor::try_reserve(&gov, one + 10).unwrap();
+        let evictions_before = c.evictions();
+        c.put(5, pd(200)); // needs 2*one; cache holds one, governor has 0 free
+        assert!(c.get(5).is_none());
+        assert!(c.get(4).is_some(), "futile insert must not evict resident entries");
+        assert_eq!(c.evictions(), evictions_before);
+        drop(hog);
+    }
+
+    #[test]
+    fn unpersist_releases_governor_bytes() {
+        use crate::engine::memory::MemoryGovernor;
+        let gov = Arc::new(MemoryGovernor::new(Some(1 << 20)));
+        let c = CacheManager::with_governor(1 << 20, gov.clone());
+        c.register(1);
+        c.put(1, pd(50));
+        assert!(gov.reserved_bytes() > 0);
+        c.unpersist(1);
+        assert_eq!(gov.reserved_bytes(), 0);
     }
 
     #[test]

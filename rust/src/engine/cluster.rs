@@ -242,15 +242,23 @@ fn schedule_lpt(task_secs: &[f64], cfg: &ClusterConfig) -> f64 {
 }
 
 /// Group a recorded [`TaskTrace`] into `StageSpec`s (stage order = first
-/// appearance order), attaching measured shuffle bytes.
+/// appearance order). Shuffle bytes come from the per-task records when
+/// the trace carries them (the executor charges real measured bytes, so
+/// partition skew is visible per stage); traces without byte accounting
+/// fall back to spreading `shuffle_bytes_total` evenly.
 pub fn trace_to_stages(trace: &TaskTrace, shuffle_bytes_total: u64) -> Vec<StageSpec> {
     let mut order: Vec<u64> = Vec::new();
     let mut by_stage: std::collections::HashMap<u64, Vec<f64>> = std::collections::HashMap::new();
+    let mut shuffle_by_stage: std::collections::HashMap<u64, u64> =
+        std::collections::HashMap::new();
+    let mut measured_total = 0u64;
     for rec in trace {
         if !by_stage.contains_key(&rec.stage_id) {
             order.push(rec.stage_id);
         }
         by_stage.entry(rec.stage_id).or_default().push(rec.duration_secs);
+        *shuffle_by_stage.entry(rec.stage_id).or_insert(0) += rec.shuffle_bytes;
+        measured_total += rec.shuffle_bytes;
     }
     let n = order.len().max(1) as u64;
     order
@@ -258,7 +266,11 @@ pub fn trace_to_stages(trace: &TaskTrace, shuffle_bytes_total: u64) -> Vec<Stage
         .map(|sid| StageSpec {
             name: format!("stage-{sid}"),
             task_secs: by_stage.remove(&sid).unwrap_or_default(),
-            shuffle_bytes: shuffle_bytes_total / n,
+            shuffle_bytes: if measured_total > 0 {
+                shuffle_by_stage.get(&sid).copied().unwrap_or(0)
+            } else {
+                shuffle_bytes_total / n
+            },
             collect_bytes: 0,
             working_set_bytes: 0,
         })
@@ -351,5 +363,38 @@ mod tests {
         assert_eq!(stages.len(), 2);
         assert_eq!(stages[0].task_secs.len(), 2);
         assert_eq!(stages[1].task_secs.len(), 1);
+        // no measured bytes: fallback spreads the provided total evenly
+        assert_eq!(stages[0].shuffle_bytes, 50);
+        assert_eq!(stages[1].shuffle_bytes, 50);
+    }
+
+    #[test]
+    fn trace_with_measured_bytes_keeps_per_stage_skew() {
+        use crate::engine::executor::TaskRecord;
+        let trace = vec![
+            TaskRecord { stage_id: 1, duration_secs: 0.1, input_rows: 5, output_bytes: 900, shuffle_bytes: 900 },
+            TaskRecord { stage_id: 1, duration_secs: 0.1, input_rows: 5, output_bytes: 100, shuffle_bytes: 100 },
+            TaskRecord { stage_id: 2, duration_secs: 0.1, input_rows: 5, output_bytes: 40, shuffle_bytes: 0 },
+        ];
+        // the provided total is ignored when the trace carries real bytes
+        let stages = trace_to_stages(&trace, 999_999);
+        assert_eq!(stages[0].shuffle_bytes, 1000, "measured map-side bytes per stage");
+        assert_eq!(stages[1].shuffle_bytes, 0, "result stage moved nothing");
+    }
+
+    #[test]
+    fn real_trace_replays_with_measured_bytes() {
+        use crate::engine::{Dataset, EngineConfig, EngineCtx};
+        use crate::row;
+        let c = EngineCtx::new(EngineConfig { workers: 2, record_trace: true, ..Default::default() });
+        let schema = crate::engine::Schema::of_names(&["x"]);
+        let ds = Dataset::from_rows("n", schema, (0..200i64).map(|i| row!(i % 13)).collect(), 4);
+        c.count(&ds.distinct(3)).unwrap();
+        let trace = c.take_trace();
+        let stages = trace_to_stages(&trace, 0);
+        let total: u64 = stages.iter().map(|s| s.shuffle_bytes).sum();
+        assert!(total > 0, "executor-recorded traces carry real shuffle bytes");
+        let sim = simulate(&stages, &ClusterConfig::glue_like(8));
+        assert!(sim.ok());
     }
 }

@@ -4,17 +4,24 @@
 //! one per-partition pipeline (no intermediate materialization — the
 //! paper's "chained via system memory" property); wide transformations
 //! (reduce/join/distinct/sort/repartition) become shuffle boundaries with
-//! map-side combining. Tasks run on a fixed thread pool with bounded
-//! retries; injected faults exercise lineage recomputation. Every task is
-//! optionally recorded into a [`TaskTrace`] that the virtual-time cluster
+//! map-side combining. Shuffle state is governed by a shared
+//! [`MemoryGovernor`] budget: map-side buckets that don't fit spill to
+//! disk ([`super::spill`]) and are merge-read back per reduce partition,
+//! so corpora larger than the budget complete instead of OOMing — with
+//! byte-identical output either way. Tasks run on a fixed thread pool
+//! with bounded retries; injected faults exercise lineage recomputation.
+//! Every task is optionally recorded into a [`TaskTrace`] (with real
+//! measured output/shuffle bytes) that the virtual-time cluster
 //! simulator replays at other cluster sizes.
 
 use super::cache::CacheManager;
 use super::dataset::{Dataset, JoinKind, PartRef, Partitioned, Plan};
 use super::expr;
 use super::fault::FaultInjector;
+use super::memory::{self, MemoryGovernor};
 use super::optimizer::{self, RewriteCounts};
 use super::row::{Field, Row};
+use super::spill::{transpose_segments, BucketSet, SpillDir};
 use super::stats::EngineStats;
 use crate::util::error::{DdpError, Result};
 use crate::util::threadpool::ThreadPool;
@@ -42,6 +49,16 @@ pub struct EngineConfig {
     pub max_task_attempts: u32,
     /// record a task trace for the cluster simulator
     pub record_trace: bool,
+    /// process memory the engine may hold in bulky intermediate state
+    /// (shuffle buckets, streaming blocking-op buffers, cache entries —
+    /// one shared [`MemoryGovernor`] budget). `None` = unbounded; the
+    /// default honours the `DDP_MEMORY_BUDGET` env var (bytes, with
+    /// optional `k`/`m`/`g` suffix; `0` = unbounded). When a reservation
+    /// fails, the state spills to disk instead of OOMing.
+    pub memory_budget_bytes: Option<usize>,
+    /// base directory for spill files (a unique per-context subdirectory
+    /// is created under it). Default: system temp dir, or `DDP_SPILL_DIR`.
+    pub spill_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for EngineConfig {
@@ -56,6 +73,10 @@ impl Default for EngineConfig {
                 .unwrap_or(true),
             max_task_attempts: 3,
             record_trace: false,
+            memory_budget_bytes: memory::budget_from_env("DDP_MEMORY_BUDGET"),
+            spill_dir: std::env::var("DDP_SPILL_DIR")
+                .ok()
+                .map(std::path::PathBuf::from),
         }
     }
 }
@@ -74,36 +95,41 @@ pub struct TaskRecord {
 /// Ordered list of task records from a real run.
 pub type TaskTrace = Vec<TaskRecord>;
 
-/// Execution context ("SparkContext"): thread pool + cache + stats.
+/// Execution context ("SparkContext"): thread pool + cache + stats +
+/// memory governor (out-of-core spill arbiter).
 pub struct EngineCtx {
     pub cfg: EngineConfig,
     pub pool: ThreadPool,
     pub cache: CacheManager,
     pub stats: EngineStats,
     pub fault: Option<Arc<FaultInjector>>,
+    /// shared byte budget for shuffle state, streaming buffers and cache
+    pub governor: Arc<MemoryGovernor>,
+    /// per-context spill directory (lazy; removed when the context drops)
+    pub spill: Arc<SpillDir>,
     trace: Mutex<TaskTrace>,
     rewrites: Mutex<RewriteCounts>,
 }
 
 impl EngineCtx {
     pub fn new(cfg: EngineConfig) -> Arc<EngineCtx> {
-        Arc::new(EngineCtx {
-            pool: ThreadPool::new(cfg.workers),
-            cache: CacheManager::new(cfg.cache_budget_bytes),
-            stats: EngineStats::new(),
-            fault: None,
-            trace: Mutex::new(Vec::new()),
-            rewrites: Mutex::new(RewriteCounts::default()),
-            cfg,
-        })
+        EngineCtx::build(cfg, None)
     }
 
     pub fn with_faults(cfg: EngineConfig, fault: FaultInjector) -> Arc<EngineCtx> {
+        EngineCtx::build(cfg, Some(Arc::new(fault)))
+    }
+
+    fn build(cfg: EngineConfig, fault: Option<Arc<FaultInjector>>) -> Arc<EngineCtx> {
+        let governor = Arc::new(MemoryGovernor::new(cfg.memory_budget_bytes));
+        let spill = Arc::new(SpillDir::new(cfg.spill_dir.clone()));
         Arc::new(EngineCtx {
             pool: ThreadPool::new(cfg.workers),
-            cache: CacheManager::new(cfg.cache_budget_bytes),
+            cache: CacheManager::with_governor(cfg.cache_budget_bytes, governor.clone()),
             stats: EngineStats::new(),
-            fault: Some(Arc::new(fault)),
+            fault,
+            governor,
+            spill,
             trace: Mutex::new(Vec::new()),
             rewrites: Mutex::new(RewriteCounts::default()),
             cfg,
@@ -314,8 +340,8 @@ impl EngineCtx {
     /// Run tasks with retry + fault injection + stats + tracing.
     fn run_tasks<T, F>(&self, stage_id: u64, tasks: Vec<F>, input: &Partitioned) -> Result<Vec<T>>
     where
-        T: Send + 'static,
-        F: Fn() -> T + Send + Sync + 'static,
+        T: Send + 'static + TaskMeasure,
+        F: FnOnce() -> T + Send + 'static,
     {
         let fault = self.fault.clone();
         let max_attempts = self.cfg.max_task_attempts;
@@ -325,22 +351,23 @@ impl EngineCtx {
             .map(|t| {
                 let fault = fault.clone();
                 move || -> (T, f64, u32) {
+                    // injected faults strike before the body runs, so the
+                    // task body itself executes exactly once (FnOnce —
+                    // spill-consuming tasks move their segments)
                     let mut attempt = 0u32;
-                    loop {
-                        let start = Instant::now();
-                        let injected = fault
-                            .as_ref()
-                            .map(|f| f.should_fail(attempt))
-                            .unwrap_or(false);
-                        if !injected {
-                            let out = t();
-                            return (out, start.elapsed().as_secs_f64(), attempt);
-                        }
+                    while fault
+                        .as_ref()
+                        .map(|f| f.should_fail(attempt))
+                        .unwrap_or(false)
+                    {
                         attempt += 1;
                         if attempt >= max_attempts {
                             panic!("task failed after {attempt} attempts (injected)");
                         }
                     }
+                    let start = Instant::now();
+                    let out = t();
+                    (out, start.elapsed().as_secs_f64(), attempt)
                 }
             })
             .collect();
@@ -357,12 +384,15 @@ impl EngineCtx {
                     self.stats
                         .add(&self.stats.rows_read, input_rows.get(i).copied().unwrap_or(0));
                     if self.cfg.record_trace {
+                        // real measured bytes, so trace replay through the
+                        // cluster simulator sees per-task costs and skew
+                        let (output_bytes, shuffle_bytes) = v.measured();
                         trace_rows.push(TaskRecord {
                             stage_id,
                             duration_secs: dur,
                             input_rows: input_rows.get(i).copied().unwrap_or(0),
-                            output_bytes: 0,
-                            shuffle_bytes: 0,
+                            output_bytes,
+                            shuffle_bytes,
                         });
                     }
                     outs.push(v);
@@ -385,45 +415,66 @@ impl EngineCtx {
     // wide (shuffle) operators
     // ------------------------------------------------------------------
 
+    /// Charge shuffle/spill stats for the map side of a wide operator.
+    /// `row_bytes` (uncompressed) is identical whether a set spilled or
+    /// stayed resident, so shuffle-byte assertions hold in both modes.
+    fn charge_shuffle(&self, sets: &[BucketSet], with_records: bool) {
+        let mut moved = 0u64;
+        let mut recs = 0u64;
+        let mut spill_bytes = 0u64;
+        let mut spill_files = 0u64;
+        for s in sets {
+            moved += s.row_bytes();
+            recs += s.records();
+            if let Some(fb) = s.spilled_file_bytes() {
+                spill_bytes += fb;
+                spill_files += 1;
+            }
+        }
+        self.stats.add(&self.stats.shuffle_bytes, moved);
+        if with_records {
+            self.stats.add(&self.stats.shuffle_records, recs);
+        }
+        if spill_files > 0 {
+            self.stats.add(&self.stats.spill_bytes, spill_bytes);
+            self.stats.add(&self.stats.spill_files, spill_files);
+        }
+    }
+
     /// Hash-bucket every input partition into `num_parts` buckets (the map
-    /// side of a shuffle), charging shuffle bytes to stats.
+    /// side of a shuffle), charging shuffle bytes to stats. Each task's
+    /// buckets stay resident under a governor reservation or spill to
+    /// disk (out-of-core mode) — the reduce side reads both identically.
     fn shuffle_buckets(
         &self,
         stage_id: u64,
         input: &Partitioned,
         num_parts: usize,
         key: super::dataset::KeyFn,
-    ) -> Result<Vec<Vec<Vec<Row>>>> {
+    ) -> Result<Vec<BucketSet>> {
+        let gov = self.governor.clone();
+        let dir = self.spill.clone();
         let tasks: Vec<_> = input
             .parts
             .iter()
             .map(|part| {
                 let part = part.clone();
                 let key = key.clone();
-                move || -> Vec<Vec<Row>> {
+                let gov = gov.clone();
+                let dir = dir.clone();
+                move || -> Result<BucketSet> {
                     let mut buckets: Vec<Vec<Row>> = (0..num_parts).map(|_| Vec::new()).collect();
                     for row in part.iter() {
                         let k = key(row);
                         let b = (field_hash(&k) % num_parts as u64) as usize;
                         buckets[b].push(row.clone());
                     }
-                    buckets
+                    BucketSet::build(&gov, &dir, buckets)
                 }
             })
             .collect();
-        let outs = self.run_tasks(stage_id, tasks, input)?;
-        let moved: u64 = outs
-            .iter()
-            .flat_map(|bs| bs.iter())
-            .map(|b| b.iter().map(|r| r.approx_size() as u64).sum::<u64>())
-            .sum();
-        let recs: u64 = outs
-            .iter()
-            .flat_map(|bs| bs.iter())
-            .map(|b| b.len() as u64)
-            .sum();
-        self.stats.add(&self.stats.shuffle_bytes, moved);
-        self.stats.add(&self.stats.shuffle_records, recs);
+        let outs = collect_results(self.run_tasks(stage_id, tasks, input)?)?;
+        self.charge_shuffle(&outs, true);
         Ok(outs)
     }
 
@@ -436,9 +487,11 @@ impl EngineCtx {
         num_parts: usize,
     ) -> Result<Partitioned> {
         self.stats.add(&self.stats.stages_run, 1);
-        // map-side combine, then bucket
+        // map-side combine, then bucket (reserve-or-spill per task)
         let combine_key = key.clone();
         let combine_reduce = reduce.clone();
+        let gov = self.governor.clone();
+        let dir = self.spill.clone();
         let tasks: Vec<_> = input
             .parts
             .iter()
@@ -446,7 +499,9 @@ impl EngineCtx {
                 let part = part.clone();
                 let key = combine_key.clone();
                 let reduce = combine_reduce.clone();
-                move || -> Vec<Vec<Row>> {
+                let gov = gov.clone();
+                let dir = dir.clone();
+                move || -> Result<BucketSet> {
                     let mut local: HashMap<Field, Row> = HashMap::new();
                     for row in part.iter() {
                         let k = key(row);
@@ -464,38 +519,34 @@ impl EngineCtx {
                         let b = (field_hash(&k) % num_parts as u64) as usize;
                         buckets[b].push(row);
                     }
-                    buckets
+                    BucketSet::build(&gov, &dir, buckets)
                 }
             })
             .collect();
-        let bucketed = self.run_tasks(ds.id, tasks, &input)?;
-        let moved: u64 = bucketed
-            .iter()
-            .flat_map(|bs| bs.iter())
-            .map(|b| b.iter().map(|r| r.approx_size() as u64).sum::<u64>())
-            .sum();
-        self.stats.add(&self.stats.shuffle_bytes, moved);
+        let bucketed = collect_results(self.run_tasks(ds.id, tasks, &input)?)?;
+        self.charge_shuffle(&bucketed, false);
 
-        // reduce side
-        let exchanged = transpose_buckets(bucketed, num_parts);
+        // reduce side: merge-read each bucket's segments in partition
+        // order (memory or disk — same rows, same order)
+        let exchanged = transpose_segments(bucketed, num_parts);
         let reduce2 = reduce.clone();
         let key2 = key.clone();
         let rtasks: Vec<_> = exchanged
             .into_iter()
-            .map(|bucket_parts| {
+            .map(|segments| {
                 let reduce = reduce2.clone();
                 let key = key2.clone();
-                move || -> Vec<Row> {
+                move || -> Result<Vec<Row>> {
                     let mut agg: HashMap<Field, Row> = HashMap::new();
-                    for part in &bucket_parts {
-                        for row in part {
-                            let k = key(row);
+                    for seg in segments {
+                        for row in seg.take_rows()? {
+                            let k = key(&row);
                             match agg.remove(&k) {
                                 Some(acc) => {
-                                    agg.insert(k, reduce(acc, row));
+                                    agg.insert(k, reduce(acc, &row));
                                 }
                                 None => {
-                                    agg.insert(k, row.clone());
+                                    agg.insert(k, row);
                                 }
                             }
                         }
@@ -505,12 +556,12 @@ impl EngineCtx {
                     // change it by pre-filtering groups)
                     let mut pairs: Vec<(Field, Row)> = agg.into_iter().collect();
                     pairs.sort_by(|a, b| a.0.canonical_cmp(&b.0));
-                    pairs.into_iter().map(|(_, r)| r).collect()
+                    Ok(pairs.into_iter().map(|(_, r)| r).collect())
                 }
             })
             .collect();
         let empty = Partitioned { schema: ds.schema.clone(), parts: vec![] };
-        let outs = self.run_tasks(ds.id, rtasks, &empty)?;
+        let outs = collect_results(self.run_tasks(ds.id, rtasks, &empty)?)?;
         Ok(Partitioned {
             schema: ds.schema.clone(),
             parts: outs.into_iter().map(Arc::new).collect(),
@@ -521,26 +572,38 @@ impl EngineCtx {
         self.stats.add(&self.stats.stages_run, 1);
         let key: super::dataset::KeyFn = Arc::new(whole_row_key);
         let bucketed = self.shuffle_buckets(ds.id, &input, num_parts, key)?;
-        let exchanged = transpose_buckets(bucketed, num_parts);
+        let exchanged = transpose_segments(bucketed, num_parts);
         let tasks: Vec<_> = exchanged
             .into_iter()
-            .map(|bucket_parts| {
-                move || -> Vec<Row> {
-                    let mut seen: std::collections::HashSet<&Row> = std::collections::HashSet::new();
-                    let mut out = Vec::new();
-                    for part in &bucket_parts {
-                        for row in part {
-                            if seen.insert(row) {
-                                out.push(row.clone());
+            .map(|segments| {
+                move || -> Result<Vec<Row>> {
+                    // first-seen order over segments in partition order —
+                    // identical to the in-memory path. Rows are shared
+                    // (`Arc`) between the seen-set and the output so each
+                    // distinct row is held once, then unwrapped copy-free
+                    // once the set drops (same trick as the streaming
+                    // Distinct frontier).
+                    let mut seen: std::collections::HashSet<Arc<Row>> =
+                        std::collections::HashSet::new();
+                    let mut out: Vec<Arc<Row>> = Vec::new();
+                    for seg in segments {
+                        for row in seg.take_rows()? {
+                            let row = Arc::new(row);
+                            if seen.insert(row.clone()) {
+                                out.push(row);
                             }
                         }
                     }
-                    out
+                    drop(seen);
+                    Ok(out
+                        .into_iter()
+                        .map(|r| Arc::try_unwrap(r).unwrap_or_else(|a| (*a).clone()))
+                        .collect())
                 }
             })
             .collect();
         let empty = Partitioned { schema: ds.schema.clone(), parts: vec![] };
-        let outs = self.run_tasks(ds.id, tasks, &empty)?;
+        let outs = collect_results(self.run_tasks(ds.id, tasks, &empty)?)?;
         Ok(Partitioned {
             schema: ds.schema.clone(),
             parts: outs.into_iter().map(Arc::new).collect(),
@@ -562,32 +625,35 @@ impl EngineCtx {
         self.stats.add(&self.stats.stages_run, 1);
         let lb = self.shuffle_buckets(ds.id, &left, num_parts, lkey.clone())?;
         let rb = self.shuffle_buckets(ds.id, &right, num_parts, rkey.clone())?;
-        let lex = transpose_buckets(lb, num_parts);
-        let rex = transpose_buckets(rb, num_parts);
+        let lex = transpose_segments(lb, num_parts);
+        let rex = transpose_segments(rb, num_parts);
         let right_width = right.schema.len();
         let tasks: Vec<_> = lex
             .into_iter()
             .zip(rex)
-            .map(|(lparts, rparts)| {
+            .map(|(lsegs, rsegs)| {
                 let lkey = lkey.clone();
                 let rkey = rkey.clone();
-                move || -> Vec<Row> {
-                    // build from right, probe from left
-                    let mut table: HashMap<Field, Vec<&Row>> = HashMap::new();
-                    for part in &rparts {
-                        for row in part {
-                            table.entry(rkey(row)).or_default().push(row);
-                        }
+                move || -> Result<Vec<Row>> {
+                    // build from right, probe from left; right rows are
+                    // materialized once per bucket (memory or disk)
+                    let mut rrows: Vec<Row> = Vec::new();
+                    for seg in rsegs {
+                        rrows.extend(seg.take_rows()?);
+                    }
+                    let mut table: HashMap<Field, Vec<usize>> = HashMap::new();
+                    for (i, row) in rrows.iter().enumerate() {
+                        table.entry(rkey(row)).or_default().push(i);
                     }
                     let mut out = Vec::new();
-                    for part in &lparts {
-                        for lrow in part {
-                            let k = lkey(lrow);
+                    for seg in lsegs {
+                        for lrow in seg.take_rows()? {
+                            let k = lkey(&lrow);
                             match table.get(&k) {
                                 Some(matches) => {
-                                    for rrow in matches {
+                                    for &i in matches {
                                         let mut fields = lrow.fields.clone();
-                                        fields.extend(rrow.fields.iter().cloned());
+                                        fields.extend(rrows[i].fields.iter().cloned());
                                         out.push(Row::new(fields));
                                     }
                                 }
@@ -601,12 +667,12 @@ impl EngineCtx {
                             }
                         }
                     }
-                    out
+                    Ok(out)
                 }
             })
             .collect();
         let empty = Partitioned { schema: schema.clone(), parts: vec![] };
-        let outs = self.run_tasks(ds.id, tasks, &empty)?;
+        let outs = collect_results(self.run_tasks(ds.id, tasks, &empty)?)?;
         Ok(Partitioned { schema, parts: outs.into_iter().map(Arc::new).collect() })
     }
 
@@ -615,11 +681,15 @@ impl EngineCtx {
         // round-robin by row hash for determinism
         let key: super::dataset::KeyFn = Arc::new(whole_row_key);
         let bucketed = self.shuffle_buckets(ds.id, &input, num_parts, key)?;
-        let exchanged = transpose_buckets(bucketed, num_parts);
-        let parts: Vec<PartRef> = exchanged
-            .into_iter()
-            .map(|bucket_parts| Arc::new(bucket_parts.into_iter().flatten().collect::<Vec<Row>>()))
-            .collect();
+        let exchanged = transpose_segments(bucketed, num_parts);
+        let mut parts: Vec<PartRef> = Vec::with_capacity(num_parts);
+        for segments in exchanged {
+            let mut rows = Vec::new();
+            for seg in segments {
+                rows.extend(seg.take_rows()?);
+            }
+            parts.push(Arc::new(rows));
+        }
         Ok(Partitioned { schema: ds.schema.clone(), parts })
     }
 }
@@ -734,15 +804,44 @@ pub(crate) fn whole_row_key(r: &Row) -> Field {
     Field::I64(row_hash(r) as i64)
 }
 
-/// Turn per-input-partition bucket lists into per-bucket partition lists.
-fn transpose_buckets(bucketed: Vec<Vec<Vec<Row>>>, num_parts: usize) -> Vec<Vec<Vec<Row>>> {
-    let mut out: Vec<Vec<Vec<Row>>> = (0..num_parts).map(|_| Vec::new()).collect();
-    for part_buckets in bucketed {
-        for (b, rows) in part_buckets.into_iter().enumerate() {
-            out[b].push(rows);
+// ---------------------------------------------------------------------
+// task output measurement (real bytes into TaskRecords)
+// ---------------------------------------------------------------------
+
+/// Measured bytes of a task's output, recorded into [`TaskRecord`]s so
+/// the cluster simulator replays real per-task costs (and sees partition
+/// skew) instead of zeros.
+pub(crate) trait TaskMeasure {
+    /// `(output_bytes, shuffle_bytes)` for this task's output.
+    fn measured(&self) -> (u64, u64);
+}
+
+impl TaskMeasure for Vec<Row> {
+    fn measured(&self) -> (u64, u64) {
+        let bytes = self.iter().map(|r| r.approx_size() as u64).sum();
+        (bytes, 0)
+    }
+}
+
+impl TaskMeasure for BucketSet {
+    fn measured(&self) -> (u64, u64) {
+        // bucketed map-side output *is* the task's shuffle contribution
+        (self.row_bytes(), self.row_bytes())
+    }
+}
+
+impl<T: TaskMeasure> TaskMeasure for Result<T> {
+    fn measured(&self) -> (u64, u64) {
+        match self {
+            Ok(v) => v.measured(),
+            Err(_) => (0, 0),
         }
     }
-    out
+}
+
+/// Surface the first in-task error (spill IO) as the stage's failure.
+fn collect_results<T>(outs: Vec<Result<T>>) -> Result<Vec<T>> {
+    outs.into_iter().collect()
 }
 
 #[cfg(test)]
@@ -982,6 +1081,64 @@ mod tests {
         let ds = nums(100, 4);
         c.count(&ds.distinct(4)).unwrap();
         assert!(c.stats.snapshot().shuffle_bytes > 0);
+    }
+
+    #[test]
+    fn trace_records_real_bytes() {
+        let c = EngineCtx::new(EngineConfig { workers: 2, record_trace: true, ..Default::default() });
+        let ds = nums(100, 4);
+        c.count(&ds.map(ds.schema.clone(), |r| r.clone()).distinct(3)).unwrap();
+        let trace = c.take_trace();
+        assert!(
+            trace.iter().any(|t| t.output_bytes > 0),
+            "task records must charge real output bytes"
+        );
+        assert!(
+            trace.iter().any(|t| t.shuffle_bytes > 0),
+            "shuffle map tasks must record their shuffle contribution"
+        );
+        // narrow map tasks move no shuffle bytes
+        assert!(trace.iter().any(|t| t.shuffle_bytes == 0 && t.output_bytes > 0));
+    }
+
+    fn wide_chain_layout(budget: Option<usize>) -> (Vec<Vec<Row>>, crate::engine::stats::StatsSnapshot) {
+        let c = EngineCtx::new(EngineConfig {
+            workers: 2,
+            memory_budget_bytes: budget,
+            ..Default::default()
+        });
+        let schema = Schema::new(vec![("k", FieldType::I64), ("pad", FieldType::Str)]);
+        let rows = (0..400i64).map(|i| row!(i % 37, format!("{i:0>64}"))).collect();
+        let ds = Dataset::from_rows("kv", schema, rows, 5);
+        let out = ds
+            .distinct(4)
+            .reduce_by_key_col(3, 0, |acc: Row, _r: &Row| acc)
+            .repartition(6);
+        let parts = c
+            .collect(&out)
+            .unwrap()
+            .parts
+            .iter()
+            .map(|p| (**p).clone())
+            .collect();
+        let snap = c.stats.snapshot();
+        assert_eq!(c.governor.reserved_bytes(), 0, "all reservations released after collect");
+        (parts, snap)
+    }
+
+    #[test]
+    fn forced_spill_is_byte_identical_to_in_memory() {
+        let (mem_parts, mem_stats) = wide_chain_layout(None);
+        let (spill_parts, spill_stats) = wide_chain_layout(Some(1024));
+        assert_eq!(mem_parts, spill_parts, "spilling must not change collected output");
+        assert_eq!(mem_stats.spill_bytes, 0);
+        assert_eq!(mem_stats.spill_files, 0);
+        assert!(spill_stats.spill_bytes > 0, "tiny budget must spill");
+        assert!(spill_stats.spill_files > 0);
+        assert_eq!(
+            mem_stats.shuffle_bytes, spill_stats.shuffle_bytes,
+            "shuffle accounting is mode-independent"
+        );
     }
 
     #[test]

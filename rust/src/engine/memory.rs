@@ -1,0 +1,295 @@
+//! Process-wide memory governor for out-of-core execution.
+//!
+//! One [`MemoryGovernor`] is shared by everything in an engine context
+//! that holds bulky intermediate state: shuffle buckets on the map side
+//! of wide operators, the streaming runtime's blocking-op buffers, and
+//! the [`super::cache::CacheManager`] (one budget — cached datasets and
+//! in-flight shuffle state compete for the same bytes, exactly like
+//! Spark's unified memory manager).
+//!
+//! The protocol is reserve-or-spill: a holder asks for a reservation
+//! sized by `Row::approx_size` accounting; on success the bytes stay
+//! resident and the RAII [`MemoryReservation`] releases them when the
+//! rows are dropped; on failure the holder writes its rows to disk via
+//! [`super::spill`] instead of keeping them. Nothing blocks and nothing
+//! is evicted behind the holder's back, so the governor can never
+//! deadlock — the worst case is "everything spills", which is the
+//! correct degradation for a corpus larger than RAM.
+//!
+//! An unbounded governor (no budget) always grants reservations, which
+//! keeps the default in-memory fast path byte-for-byte identical to the
+//! pre-governor engine.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Byte-budget arbiter. Cheap (two atomics), shared via `Arc`.
+#[derive(Debug)]
+pub struct MemoryGovernor {
+    /// `None` = unbounded (every reservation succeeds).
+    budget: Option<u64>,
+    reserved: AtomicU64,
+    /// lifetime count of refused reservations (spill decisions)
+    refused: AtomicU64,
+}
+
+impl MemoryGovernor {
+    pub fn new(budget_bytes: Option<usize>) -> MemoryGovernor {
+        MemoryGovernor {
+            budget: budget_bytes.map(|b| b as u64),
+            reserved: AtomicU64::new(0),
+            refused: AtomicU64::new(0),
+        }
+    }
+
+    pub fn unbounded() -> MemoryGovernor {
+        MemoryGovernor::new(None)
+    }
+
+    /// Configured budget, if any.
+    pub fn budget_bytes(&self) -> Option<usize> {
+        self.budget.map(|b| b as usize)
+    }
+
+    /// Bytes currently reserved across all holders.
+    pub fn reserved_bytes(&self) -> usize {
+        self.reserved.load(Ordering::Relaxed) as usize
+    }
+
+    /// Lifetime count of refused reservations.
+    pub fn refusals(&self) -> u64 {
+        self.refused.load(Ordering::Relaxed)
+    }
+
+    /// Try to reserve `bytes` against `gov`; on success the returned
+    /// RAII guard keeps the shared handle and holds the reservation
+    /// until dropped (or grown / shrunk explicitly).
+    pub fn try_reserve(gov: &Arc<MemoryGovernor>, bytes: usize) -> Option<MemoryReservation> {
+        if gov.admit(bytes as u64) {
+            Some(MemoryReservation { gov: gov.clone(), bytes: bytes as u64 })
+        } else {
+            None
+        }
+    }
+
+    /// An empty reservation that always succeeds — a growable account
+    /// for incrementally filled buffers.
+    pub fn open(gov: &Arc<MemoryGovernor>) -> MemoryReservation {
+        MemoryReservation { gov: gov.clone(), bytes: 0 }
+    }
+
+    fn admit(&self, bytes: u64) -> bool {
+        match self.budget {
+            None => {
+                self.reserved.fetch_add(bytes, Ordering::Relaxed);
+                true
+            }
+            Some(budget) => {
+                let mut cur = self.reserved.load(Ordering::Relaxed);
+                loop {
+                    if cur.saturating_add(bytes) > budget {
+                        self.refused.fetch_add(1, Ordering::Relaxed);
+                        return false;
+                    }
+                    match self.reserved.compare_exchange_weak(
+                        cur,
+                        cur + bytes,
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    ) {
+                        Ok(_) => return true,
+                        Err(seen) => cur = seen,
+                    }
+                }
+            }
+        }
+    }
+
+    fn release(&self, bytes: u64) {
+        // saturating: a release can never underflow the account
+        let mut cur = self.reserved.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(bytes);
+            match self.reserved.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+/// RAII reservation: releases its bytes back to the governor on drop.
+#[derive(Debug)]
+pub struct MemoryReservation {
+    gov: Arc<MemoryGovernor>,
+    bytes: u64,
+}
+
+impl MemoryReservation {
+    /// Bytes currently held by this reservation.
+    pub fn bytes(&self) -> usize {
+        self.bytes as usize
+    }
+
+    /// Try to grow the reservation by `more` bytes (incremental buffers).
+    pub fn try_grow(&mut self, more: usize) -> bool {
+        if self.gov.admit(more as u64) {
+            self.bytes += more as u64;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Release everything now (e.g. after spilling the buffer the
+    /// reservation covered) while keeping the account open for regrowth.
+    pub fn release_all(&mut self) {
+        self.gov.release(self.bytes);
+        self.bytes = 0;
+    }
+}
+
+impl Drop for MemoryReservation {
+    fn drop(&mut self) {
+        self.gov.release(self.bytes);
+    }
+}
+
+/// Parse a human byte size: plain bytes, or a `k`/`m`/`g` suffix
+/// (case-insensitive, powers of 1024, optional trailing `b` as in
+/// `512mb`). `Ok(None)` — no budget — for `0`, empty, and `unbounded`.
+/// Malformed or overflowing values are an **error**, never silently
+/// unbounded: a typo in `DDP_MEMORY_BUDGET` must not disable the OOM
+/// protection the knob exists for.
+pub fn parse_bytes(s: &str) -> std::result::Result<Option<usize>, String> {
+    let t = s.trim();
+    if t.is_empty() || t == "0" || t.eq_ignore_ascii_case("unbounded") {
+        return Ok(None);
+    }
+    // optional trailing 'b' ("64mb" == "64m"; bare "b" is not a size)
+    let t = match t.strip_suffix(['b', 'B']) {
+        Some(rest) if !rest.is_empty() && !rest.ends_with(['b', 'B']) => rest,
+        _ => t,
+    };
+    let (num, mult) = match t.chars().last() {
+        Some(c) if c.eq_ignore_ascii_case(&'k') => (&t[..t.len() - 1], 1usize << 10),
+        Some(c) if c.eq_ignore_ascii_case(&'m') => (&t[..t.len() - 1], 1usize << 20),
+        Some(c) if c.eq_ignore_ascii_case(&'g') => (&t[..t.len() - 1], 1usize << 30),
+        _ => (t, 1usize),
+    };
+    num.trim()
+        .parse::<usize>()
+        .ok()
+        .and_then(|n| n.checked_mul(mult))
+        // zero is "unbounded" in every spelling ("0", "0k", "0mb", ...),
+        // never a spill-everything budget
+        .map(|n| if n == 0 { None } else { Some(n) })
+        .ok_or_else(|| format!("invalid byte size '{s}' (expected e.g. 1048576, 64m, 2g, 512mb)"))
+}
+
+/// `DDP_MEMORY_BUDGET` env reader for [`EngineConfig` defaults]; panics
+/// with a clear message on malformed values (loud beats silently
+/// unbounded).
+///
+/// [`EngineConfig` defaults]: super::executor::EngineConfig
+pub(crate) fn budget_from_env(var: &str) -> Option<usize> {
+    match std::env::var(var) {
+        Err(_) => None,
+        Ok(v) => match parse_bytes(&v) {
+            Ok(b) => b,
+            Err(e) => panic!("{var}: {e}"),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbounded_always_admits() {
+        let g = Arc::new(MemoryGovernor::unbounded());
+        let r = MemoryGovernor::try_reserve(&g, usize::MAX / 2).unwrap();
+        assert_eq!(g.reserved_bytes(), usize::MAX / 2);
+        drop(r);
+        assert_eq!(g.reserved_bytes(), 0);
+        assert_eq!(g.refusals(), 0);
+    }
+
+    #[test]
+    fn budget_enforced_and_released() {
+        let g = Arc::new(MemoryGovernor::new(Some(100)));
+        let a = MemoryGovernor::try_reserve(&g, 60).unwrap();
+        assert!(MemoryGovernor::try_reserve(&g, 50).is_none(), "over budget must refuse");
+        assert_eq!(g.refusals(), 1);
+        let b = MemoryGovernor::try_reserve(&g, 40).unwrap();
+        assert_eq!(g.reserved_bytes(), 100);
+        drop(a);
+        assert_eq!(g.reserved_bytes(), 40);
+        let c = MemoryGovernor::try_reserve(&g, 60).unwrap();
+        drop(b);
+        drop(c);
+        assert_eq!(g.reserved_bytes(), 0);
+    }
+
+    #[test]
+    fn open_reservation_grows_and_releases() {
+        let g = Arc::new(MemoryGovernor::new(Some(64)));
+        let mut r = MemoryGovernor::open(&g);
+        assert!(r.try_grow(40));
+        assert!(r.try_grow(24));
+        assert!(!r.try_grow(1), "budget exhausted");
+        assert_eq!(r.bytes(), 64);
+        r.release_all();
+        assert_eq!(g.reserved_bytes(), 0);
+        assert!(r.try_grow(10), "account stays usable after release_all");
+        drop(r);
+        assert_eq!(g.reserved_bytes(), 0);
+    }
+
+    #[test]
+    fn parse_bytes_suffixes() {
+        assert_eq!(parse_bytes("1234"), Ok(Some(1234)));
+        assert_eq!(parse_bytes("4k"), Ok(Some(4096)));
+        assert_eq!(parse_bytes("8M"), Ok(Some(8 << 20)));
+        assert_eq!(parse_bytes("2g"), Ok(Some(2 << 30)));
+        assert_eq!(parse_bytes("512mb"), Ok(Some(512 << 20)));
+        assert_eq!(parse_bytes("64KB"), Ok(Some(64 << 10)));
+        assert_eq!(parse_bytes("0"), Ok(None));
+        assert_eq!(parse_bytes("0k"), Ok(None), "zero is unbounded in every spelling");
+        assert_eq!(parse_bytes("0mb"), Ok(None));
+        assert_eq!(parse_bytes(""), Ok(None));
+        assert_eq!(parse_bytes("unbounded"), Ok(None));
+        // malformed or overflowing values are errors, never silently
+        // unbounded — the knob's whole point is OOM protection
+        assert!(parse_bytes("nonsense").is_err());
+        assert!(parse_bytes("1.5g").is_err());
+        assert!(parse_bytes("b").is_err());
+        assert!(parse_bytes("99999999999999999999g").is_err());
+    }
+
+    #[test]
+    fn concurrent_reserve_release_balances() {
+        let g = Arc::new(MemoryGovernor::new(Some(1 << 20)));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let g = g.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    if let Some(r) = MemoryGovernor::try_reserve(&g, 512) {
+                        drop(r);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(g.reserved_bytes(), 0);
+    }
+}

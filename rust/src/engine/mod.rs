@@ -9,6 +9,10 @@
 //! * [`executor`] — fused narrow stages, shuffling wide stages, task
 //!   retry, trace recording.
 //! * [`cache`] — explicit persist/unpersist with a byte budget.
+//! * [`memory`] — process-wide memory governor (shared byte budget for
+//!   shuffle state, streaming buffers and the cache).
+//! * [`spill`] — out-of-core disk spill: hash buckets and blocking-op
+//!   buffers move to disk when a governor reservation fails.
 //! * [`fault`] — failure injection for recovery tests.
 //! * [`cluster`] — virtual-time cluster simulator for scale-out studies.
 //! * [`stats`] — execution counters.
@@ -21,6 +25,8 @@ pub mod expr;
 pub mod optimizer;
 pub mod executor;
 pub mod cache;
+pub mod memory;
+pub mod spill;
 pub mod fault;
 pub mod cluster;
 pub mod stats;
@@ -28,5 +34,6 @@ pub mod stream;
 
 pub use dataset::{Dataset, JoinKind, Partitioned};
 pub use executor::{EngineConfig, EngineCtx, TaskRecord, TaskTrace};
+pub use memory::MemoryGovernor;
 pub use optimizer::RewriteCounts;
 pub use row::{Field, FieldType, Row, Schema, SchemaRef};

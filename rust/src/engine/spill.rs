@@ -1,0 +1,585 @@
+//! Disk spill for out-of-core execution.
+//!
+//! When a [`super::memory::MemoryGovernor`] reservation fails, bulky
+//! intermediate state moves to disk instead of staying resident:
+//!
+//! * **Shuffle buckets** — the map side of every wide operator
+//!   (reduce/distinct/join/repartition) produces per-partition hash
+//!   buckets. A [`BucketSet`] holds them in memory under a reservation,
+//!   or as one [`SpillFile`] whose per-bucket segments are merge-read
+//!   back on the reduce side, one bucket at a time, in the exact input
+//!   partition order the in-memory path uses — so collected output is
+//!   byte-identical with spilling forced on or off.
+//! * **Streaming blocking-op buffers** — [`SpilledRows`] is the
+//!   arrival-order buffer behind raw capture points in
+//!   [`super::stream::query`]: an in-memory tail under a growable
+//!   reservation, flushed to spill chunks whenever the governor refuses
+//!   growth, drained back in arrival order.
+//!
+//! Spill blobs are the repo's own columnar format ([`crate::io::colbin`])
+//! under an all-`Any` schema: every value carries its own type tag, so
+//! rows round-trip exactly (including `F64` bit patterns) regardless of
+//! how loosely the logical schema was declared. Files live in a unique
+//! per-context directory and are deleted as soon as their handle drops;
+//! the directory itself is removed when its last holder — the context
+//! or any still-live spill handle — goes away.
+
+use super::memory::{MemoryGovernor, MemoryReservation};
+use super::row::{Field, FieldType, Row, Schema, SchemaRef};
+use crate::io::colbin;
+use crate::util::error::Result;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Process-wide sequence so every context's spill dir is unique.
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A per-context spill directory: created lazily on first spill, unique
+/// under the configured base (or the system temp dir), removed on drop.
+#[derive(Debug)]
+pub struct SpillDir {
+    path: PathBuf,
+    counter: AtomicU64,
+}
+
+impl SpillDir {
+    pub fn new(base: Option<PathBuf>) -> SpillDir {
+        let root = base.unwrap_or_else(std::env::temp_dir);
+        let path = root.join(format!(
+            "ddp-spill-{}-{}",
+            std::process::id(),
+            SPILL_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        SpillDir { path, counter: AtomicU64::new(0) }
+    }
+
+    pub fn path(&self) -> &PathBuf {
+        &self.path
+    }
+
+    fn next_path(&self) -> Result<PathBuf> {
+        // idempotent; first spill creates the directory
+        std::fs::create_dir_all(&self.path)?;
+        let n = self.counter.fetch_add(1, Ordering::Relaxed);
+        Ok(self.path.join(format!("spill-{n:06}.colbin")))
+    }
+
+    /// Spill files written over this directory's lifetime.
+    pub fn files_written(&self) -> u64 {
+        self.counter.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for SpillDir {
+    fn drop(&mut self) {
+        // best effort; never created = nothing to remove
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+/// Self-describing spill schema: `width` columns, all `Any` (per-value
+/// type tags in colbin v2 make the round-trip exact).
+fn spill_schema(width: usize) -> SchemaRef {
+    let names: Vec<String> = (0..width).map(|i| format!("c{i}")).collect();
+    Schema::new(names.iter().map(|n| (n.as_str(), FieldType::Any)).collect())
+}
+
+/// Byte range of one bucket inside a [`SpillFile`].
+#[derive(Debug, Clone)]
+struct SegmentMeta {
+    offset: u64,
+    len: u64,
+    rows: u64,
+    width: usize,
+    /// per-row true widths when the bucket was ragged: the engine never
+    /// enforces row arity, so a query that runs in memory must also run
+    /// spilled. Ragged buckets are padded to rectangular with `Null` for
+    /// encoding and truncated back on read — trailing *real* nulls
+    /// survive because truncation uses these recorded widths, not a
+    /// null scan.
+    widths: Option<Vec<u32>>,
+}
+
+/// One spilled task output: per-bucket colbin blobs concatenated into a
+/// single file, read back bucket-at-a-time. Deletes its file on drop,
+/// and keeps its [`SpillDir`] alive so a context dropped mid-query (a
+/// `StreamQuery` outliving its `EngineCtx`) cannot sweep the directory
+/// out from under live spill handles.
+#[derive(Debug)]
+pub struct SpillFile {
+    path: PathBuf,
+    segments: Vec<SegmentMeta>,
+    file_bytes: u64,
+    _dir: Arc<SpillDir>,
+}
+
+impl SpillFile {
+    /// Encode `buckets` (one blob per bucket) into a fresh spill file.
+    /// Buckets stream to the file one at a time — this path runs exactly
+    /// when memory is exhausted, so at most one bucket's encoding is
+    /// resident, never a whole-task blob alongside the live rows.
+    pub fn write_buckets(dir: &Arc<SpillDir>, buckets: &[Vec<Row>]) -> Result<SpillFile> {
+        let path = dir.next_path()?;
+        let out = Self::write_buckets_to(dir, &path, buckets);
+        if out.is_err() {
+            // don't leave partial files behind on encode/IO failure
+            let _ = std::fs::remove_file(&path);
+        }
+        out
+    }
+
+    fn write_buckets_to(
+        dir: &Arc<SpillDir>,
+        path: &std::path::Path,
+        buckets: &[Vec<Row>],
+    ) -> Result<SpillFile> {
+        let mut file = std::fs::File::create(path)?;
+        let mut segments = Vec::with_capacity(buckets.len());
+        let mut offset = 0u64;
+        for bucket in buckets {
+            let width = bucket.iter().map(|r| r.fields.len()).max().unwrap_or(0);
+            let ragged = bucket.iter().any(|r| r.fields.len() != width);
+            let schema = spill_schema(width);
+            let (enc, widths) = if ragged {
+                // see SegmentMeta::widths: pad to rectangular, remember
+                // the true arities so the read restores rows exactly
+                let padded: Vec<Row> = bucket
+                    .iter()
+                    .map(|r| {
+                        let mut fields = r.fields.clone();
+                        fields.resize(width, Field::Null);
+                        Row::new(fields)
+                    })
+                    .collect();
+                let widths = bucket.iter().map(|r| r.fields.len() as u32).collect();
+                (colbin::encode(&schema, &padded)?, Some(widths))
+            } else {
+                (colbin::encode(&schema, bucket)?, None)
+            };
+            file.write_all(&enc)?;
+            segments.push(SegmentMeta {
+                offset,
+                len: enc.len() as u64,
+                rows: bucket.len() as u64,
+                width,
+                widths,
+            });
+            offset += enc.len() as u64;
+        }
+        Ok(SpillFile {
+            path: path.to_path_buf(),
+            segments,
+            file_bytes: offset,
+            _dir: dir.clone(),
+        })
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Total rows across all buckets.
+    pub fn num_rows(&self) -> u64 {
+        self.segments.iter().map(|s| s.rows).sum()
+    }
+
+    /// Compressed on-disk size.
+    pub fn file_bytes(&self) -> u64 {
+        self.file_bytes
+    }
+
+    /// Rows in one bucket (from the index — no I/O).
+    pub fn bucket_rows(&self, b: usize) -> u64 {
+        self.segments[b].rows
+    }
+
+    /// Decode one bucket's rows (exact round-trip, original order).
+    pub fn read_bucket(&self, b: usize) -> Result<Vec<Row>> {
+        let seg = &self.segments[b];
+        let mut f = std::fs::File::open(&self.path)?;
+        f.seek(SeekFrom::Start(seg.offset))?;
+        let mut buf = vec![0u8; seg.len as usize];
+        f.read_exact(&mut buf)?;
+        let mut rows = colbin::decode(&spill_schema(seg.width), &buf)?;
+        if let Some(widths) = &seg.widths {
+            for (row, w) in rows.iter_mut().zip(widths.iter()) {
+                row.fields.truncate(*w as usize);
+            }
+        }
+        Ok(rows)
+    }
+}
+
+impl Drop for SpillFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+// ---------------------------------------------------------------------
+// shuffle-side containers (used by the executor)
+// ---------------------------------------------------------------------
+
+/// Map-side output of one shuffle task: the task's hash buckets, either
+/// resident under a governor reservation or spilled to one file.
+pub enum BucketSet {
+    Mem {
+        buckets: Vec<Vec<Row>>,
+        row_bytes: u64,
+        rows: u64,
+        /// released when the last [`Segment`] of this set drops
+        res: Option<MemoryReservation>,
+    },
+    Spilled {
+        file: Arc<SpillFile>,
+        row_bytes: u64,
+        rows: u64,
+    },
+}
+
+impl BucketSet {
+    /// Reserve-or-spill: keep `buckets` resident if the governor admits
+    /// their approximate byte size, else write them to `dir`.
+    pub fn build(
+        gov: &Arc<MemoryGovernor>,
+        dir: &Arc<SpillDir>,
+        buckets: Vec<Vec<Row>>,
+    ) -> Result<BucketSet> {
+        let mut row_bytes = 0u64;
+        let mut rows = 0u64;
+        for b in &buckets {
+            rows += b.len() as u64;
+            row_bytes += b.iter().map(|r| r.approx_size() as u64).sum::<u64>();
+        }
+        match MemoryGovernor::try_reserve(gov, row_bytes as usize) {
+            Some(res) => Ok(BucketSet::Mem { buckets, row_bytes, rows, res: Some(res) }),
+            None => {
+                let file = SpillFile::write_buckets(dir, &buckets)?;
+                Ok(BucketSet::Spilled { file: Arc::new(file), row_bytes, rows })
+            }
+        }
+    }
+
+    /// Uncompressed row bytes this task contributes to the shuffle
+    /// (identical whether the set spilled or stayed resident).
+    pub fn row_bytes(&self) -> u64 {
+        match self {
+            BucketSet::Mem { row_bytes, .. } | BucketSet::Spilled { row_bytes, .. } => *row_bytes,
+        }
+    }
+
+    pub fn records(&self) -> u64 {
+        match self {
+            BucketSet::Mem { rows, .. } | BucketSet::Spilled { rows, .. } => *rows,
+        }
+    }
+
+    /// On-disk bytes when spilled.
+    pub fn spilled_file_bytes(&self) -> Option<u64> {
+        match self {
+            BucketSet::Mem { .. } => None,
+            BucketSet::Spilled { file, .. } => Some(file.file_bytes()),
+        }
+    }
+}
+
+/// One input partition's slice of one reduce bucket: resident rows
+/// (sharing their set's reservation) or a segment of a spill file.
+pub enum Segment {
+    Mem(Vec<Row>, Option<Arc<MemoryReservation>>),
+    Disk(Arc<SpillFile>, usize),
+}
+
+impl Segment {
+    /// Materialize this segment's rows (original order).
+    pub fn take_rows(self) -> Result<Vec<Row>> {
+        match self {
+            Segment::Mem(rows, _res) => Ok(rows),
+            Segment::Disk(file, b) => file.read_bucket(b),
+        }
+    }
+}
+
+/// Regroup per-partition bucket sets into per-bucket segment lists,
+/// preserving input partition order — the reduce side consumes bucket
+/// `b` as `[part0's b, part1's b, ...]` exactly like the in-memory
+/// transpose, so spilling cannot reorder output.
+pub fn transpose_segments(sets: Vec<BucketSet>, num_parts: usize) -> Vec<Vec<Segment>> {
+    let mut out: Vec<Vec<Segment>> = (0..num_parts).map(|_| Vec::new()).collect();
+    for set in sets {
+        match set {
+            BucketSet::Mem { buckets, res, .. } => {
+                let res = res.map(Arc::new);
+                for (b, rows) in buckets.into_iter().enumerate() {
+                    // empty slices contribute nothing to the merge
+                    if !rows.is_empty() {
+                        out[b].push(Segment::Mem(rows, res.clone()));
+                    }
+                }
+            }
+            BucketSet::Spilled { file, .. } => {
+                for (b, slot) in out.iter_mut().enumerate().take(file.num_buckets()) {
+                    // skipping zero-row segments avoids a file open +
+                    // decode per empty bucket (skewed keys make many)
+                    if file.bucket_rows(b) > 0 {
+                        slot.push(Segment::Disk(file.clone(), b));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// streaming blocking-op buffer
+// ---------------------------------------------------------------------
+
+/// Arrival-order row buffer with governed residency: rows accumulate in
+/// an in-memory tail while the governor grants growth; a refused grow
+/// flushes the tail to a spill chunk and zeroes the reservation. Drain
+/// returns chunks then tail — exact arrival order.
+#[derive(Default)]
+pub struct SpilledRows {
+    tail: Vec<Row>,
+    res: Option<MemoryReservation>,
+    chunks: Vec<SpillFile>,
+    rows_spilled: u64,
+    spilled_bytes: u64,
+    spilled_files: u64,
+}
+
+impl SpilledRows {
+    pub fn new() -> SpilledRows {
+        SpilledRows::default()
+    }
+
+    /// Buffered rows (resident tail + spilled chunks).
+    pub fn len_rows(&self) -> usize {
+        self.tail.len() + self.rows_spilled as usize
+    }
+
+    /// Total bytes written to spill chunks so far.
+    pub fn spilled_bytes(&self) -> u64 {
+        self.spilled_bytes
+    }
+
+    pub fn spilled_files(&self) -> u64 {
+        self.spilled_files
+    }
+
+    /// Append `rows`; returns `(spill_bytes_delta, spill_files_delta)`
+    /// for stats accounting (zero when the rows stayed resident).
+    pub fn push(
+        &mut self,
+        gov: &Arc<MemoryGovernor>,
+        dir: &Arc<SpillDir>,
+        rows: Vec<Row>,
+    ) -> Result<(u64, u64)> {
+        if rows.is_empty() {
+            return Ok((0, 0));
+        }
+        let add: usize = rows.iter().map(|r| r.approx_size()).sum();
+        let res = self.res.get_or_insert_with(|| MemoryGovernor::open(gov));
+        if res.try_grow(add) {
+            self.tail.extend(rows);
+            return Ok((0, 0));
+        }
+        // refused: everything buffered so far (tail + incoming) becomes
+        // one spill chunk, and the reservation returns to zero. State is
+        // only committed after the write succeeds — on spill I/O failure
+        // (ENOSPC is realistic exactly here) the tail is restored to its
+        // reserved size and the incoming batch is DROPPED with the error
+        // (not recoverable by the caller; the query is failing anyway),
+        // so the buffer never holds rows the governor didn't account for.
+        let incoming = rows.len();
+        let mut pending = std::mem::take(&mut self.tail);
+        pending.extend(rows);
+        match SpillFile::write_buckets(dir, std::slice::from_ref(&pending)) {
+            Ok(chunk) => {
+                let delta = chunk.file_bytes();
+                self.rows_spilled += pending.len() as u64;
+                self.spilled_bytes += delta;
+                self.spilled_files += 1;
+                self.chunks.push(chunk);
+                res.release_all();
+                Ok((delta, 1))
+            }
+            Err(e) => {
+                pending.truncate(pending.len() - incoming);
+                self.tail = pending;
+                Err(e)
+            }
+        }
+    }
+
+    /// Drain everything in arrival order, deleting chunk files and
+    /// releasing the reservation.
+    pub fn drain(&mut self) -> Result<Vec<Row>> {
+        let mut out = Vec::with_capacity(self.len_rows());
+        for chunk in self.chunks.drain(..) {
+            out.extend(chunk.read_bucket(0)?);
+        }
+        out.append(&mut self.tail);
+        self.rows_spilled = 0;
+        if let Some(res) = &mut self.res {
+            res.release_all();
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::row::Field;
+    use crate::row;
+
+    fn dir() -> Arc<SpillDir> {
+        Arc::new(SpillDir::new(None))
+    }
+
+    fn gov(budget: Option<usize>) -> Arc<MemoryGovernor> {
+        Arc::new(MemoryGovernor::new(budget))
+    }
+
+    fn rows(lo: i64, hi: i64) -> Vec<Row> {
+        (lo..hi).map(|i| row!(i, format!("v{i}"), (i as f64) / 3.0)).collect()
+    }
+
+    #[test]
+    fn spill_file_roundtrips_buckets_exactly() {
+        let d = dir();
+        let buckets = vec![rows(0, 7), Vec::new(), rows(100, 103)];
+        let f = SpillFile::write_buckets(&d, &buckets).unwrap();
+        assert_eq!(f.num_buckets(), 3);
+        assert_eq!(f.num_rows(), 10);
+        assert!(f.file_bytes() > 0);
+        for (b, want) in buckets.iter().enumerate() {
+            assert_eq!(&f.read_bucket(b).unwrap(), want);
+        }
+        let path = f.path.clone();
+        assert!(path.exists());
+        drop(f);
+        assert!(!path.exists(), "spill file deleted on drop");
+    }
+
+    #[test]
+    fn ragged_rows_roundtrip_exactly() {
+        // the engine never enforces row arity, so spilling must accept
+        // whatever the in-memory path accepts — including a trailing
+        // *real* Null, which must not be confused with pad Nulls
+        let d = dir();
+        let bucket = vec![
+            row!(1i64),
+            Row::new(vec![Field::I64(1), Field::I64(2)]),
+            Row::new(vec![]),
+            Row::new(vec![Field::Null, Field::Str("x".into()), Field::Null]),
+        ];
+        let f = SpillFile::write_buckets(&d, std::slice::from_ref(&bucket)).unwrap();
+        assert_eq!(f.read_bucket(0).unwrap(), bucket);
+    }
+
+    #[test]
+    fn bucket_set_spills_only_when_refused() {
+        let d = dir();
+        let big = gov(Some(1 << 20));
+        let set = BucketSet::build(&big, &d, vec![rows(0, 20)]).unwrap();
+        assert!(set.spilled_file_bytes().is_none());
+        assert!(big.reserved_bytes() > 0);
+        let bytes = set.row_bytes();
+        assert_eq!(set.records(), 20);
+        drop(set);
+        assert_eq!(big.reserved_bytes(), 0, "reservation released with the set");
+
+        let tiny = gov(Some(8));
+        let set = BucketSet::build(&tiny, &d, vec![rows(0, 20)]).unwrap();
+        assert!(set.spilled_file_bytes().is_some());
+        assert_eq!(set.row_bytes(), bytes, "row-byte accounting identical spilled or not");
+        assert_eq!(tiny.reserved_bytes(), 0);
+    }
+
+    #[test]
+    fn transpose_preserves_partition_order_across_mem_and_disk() {
+        let d = dir();
+        let g_mem = gov(None);
+        let g_spill = gov(Some(1));
+        // part 0 resident, part 1 spilled — bucket must still read p0 then p1
+        let p0 = BucketSet::build(&g_mem, &d, vec![rows(0, 3), rows(10, 12)]).unwrap();
+        let p1 = BucketSet::build(&g_spill, &d, vec![rows(3, 5), rows(12, 15)]).unwrap();
+        let per_bucket = transpose_segments(vec![p0, p1], 2);
+        let merged: Vec<Vec<Row>> = per_bucket
+            .into_iter()
+            .map(|segs| {
+                let mut out = Vec::new();
+                for s in segs {
+                    out.extend(s.take_rows().unwrap());
+                }
+                out
+            })
+            .collect();
+        assert_eq!(merged[0], rows(0, 5));
+        let mut want1 = rows(10, 12);
+        want1.extend(rows(12, 15));
+        assert_eq!(merged[1], want1);
+    }
+
+    #[test]
+    fn spilled_rows_drain_in_arrival_order_and_release() {
+        let d = dir();
+        let g = gov(Some(200)); // a handful of rows fit, then chunks flush
+        let mut buf = SpilledRows::new();
+        let all = rows(0, 50);
+        for chunk in all.chunks(7) {
+            buf.push(&g, &d, chunk.to_vec()).unwrap();
+        }
+        assert_eq!(buf.len_rows(), 50);
+        assert!(buf.spilled_files() > 0, "tiny budget must have flushed chunks");
+        assert!(buf.spilled_bytes() > 0);
+        let drained = buf.drain().unwrap();
+        assert_eq!(drained, all, "arrival order preserved through spill chunks");
+        assert_eq!(g.reserved_bytes(), 0);
+        drop(buf);
+        assert_eq!(g.reserved_bytes(), 0);
+    }
+
+    #[test]
+    fn spilled_rows_drop_releases_reservation_and_files() {
+        let d = dir();
+        let g = gov(None); // unbounded: everything resident
+        let mut buf = SpilledRows::new();
+        buf.push(&g, &d, rows(0, 30)).unwrap();
+        assert!(g.reserved_bytes() > 0);
+        drop(buf);
+        assert_eq!(g.reserved_bytes(), 0, "no leak after buffer drop");
+    }
+
+    #[test]
+    fn spill_dir_removed_on_drop() {
+        let d = dir();
+        let f = SpillFile::write_buckets(&d, &[rows(0, 3)]).unwrap();
+        let dir_path = d.path().clone();
+        assert!(dir_path.is_dir());
+        drop(f);
+        drop(d);
+        assert!(!dir_path.exists());
+    }
+
+    #[test]
+    fn spill_file_keeps_dir_alive_past_context_drop() {
+        // a StreamQuery can outlive the EngineCtx whose SpillDir it wrote
+        // into; live spill handles must keep the directory (and their
+        // data) readable until they drop
+        let d = dir();
+        let want = rows(0, 10);
+        let f = SpillFile::write_buckets(&d, std::slice::from_ref(&want)).unwrap();
+        let dir_path = d.path().clone();
+        drop(d); // last *context* handle gone
+        assert!(dir_path.is_dir(), "dir survives while a spill file lives");
+        assert_eq!(f.read_bucket(0).unwrap(), want);
+        drop(f);
+        assert!(!dir_path.exists(), "dir removed with the last holder");
+    }
+}

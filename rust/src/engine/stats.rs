@@ -21,6 +21,10 @@ pub struct EngineStats {
     pub stages_run: AtomicU64,
     /// logical plan rewrites applied by the optimizer
     pub plan_rewrites: AtomicU64,
+    /// bytes written to disk by the out-of-core spill path
+    pub spill_bytes: AtomicU64,
+    /// spill files created (shuffle bucket sets + streaming chunks)
+    pub spill_files: AtomicU64,
 }
 
 impl EngineStats {
@@ -47,6 +51,8 @@ impl EngineStats {
             task_nanos: self.task_nanos.load(Ordering::Relaxed),
             stages_run: self.stages_run.load(Ordering::Relaxed),
             plan_rewrites: self.plan_rewrites.load(Ordering::Relaxed),
+            spill_bytes: self.spill_bytes.load(Ordering::Relaxed),
+            spill_files: self.spill_files.load(Ordering::Relaxed),
         }
     }
 }
@@ -66,6 +72,8 @@ pub struct StatsSnapshot {
     pub task_nanos: u64,
     pub stages_run: u64,
     pub plan_rewrites: u64,
+    pub spill_bytes: u64,
+    pub spill_files: u64,
 }
 
 impl StatsSnapshot {
@@ -84,6 +92,8 @@ impl StatsSnapshot {
             task_nanos: self.task_nanos - earlier.task_nanos,
             stages_run: self.stages_run - earlier.stages_run,
             plan_rewrites: self.plan_rewrites - earlier.plan_rewrites,
+            spill_bytes: self.spill_bytes - earlier.spill_bytes,
+            spill_files: self.spill_files - earlier.spill_files,
         }
     }
 }

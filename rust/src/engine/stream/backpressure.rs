@@ -196,4 +196,52 @@ mod tests {
         c.observe(0.09);
         assert_eq!(c.batch_rows(), 100);
     }
+
+    #[test]
+    fn controller_pinned_when_min_equals_max() {
+        let mut c = BackpressureController::new(0.1, 64, 64, 64);
+        for lat in [10.0, 0.0, 0.5, 0.001, 2.0] {
+            c.observe(lat);
+            assert_eq!(c.batch_rows(), 64, "degenerate band must pin the batch size");
+        }
+        assert_eq!(c.shrinks(), 0, "clamped halving is not a shrink");
+        assert_eq!(c.grows(), 0, "clamped growth is not a grow");
+    }
+
+    #[test]
+    fn controller_survives_zero_and_negative_latency() {
+        let mut c = BackpressureController::new(0.1, 8, 512, 256);
+        // a zero-duration batch (timer resolution) reads as "fast": grow
+        c.observe(0.0);
+        assert!(c.batch_rows() > 256);
+        // negative latency (clock skew) must not panic or shrink
+        let before = c.batch_rows();
+        c.observe(-1.0);
+        assert!(c.batch_rows() >= before);
+        assert!((8..=512).contains(&c.batch_rows()));
+        assert_eq!(c.shrinks(), 0);
+    }
+
+    #[test]
+    fn controller_clamps_degenerate_construction() {
+        // zero/min>max/zero-target inputs normalize instead of panicking
+        let c = BackpressureController::new(0.0, 0, 0, 0);
+        assert_eq!(c.batch_rows(), 1, "floors clamp to 1");
+        let mut c = BackpressureController::new(-5.0, 100, 10, 1000);
+        // max clamps up to min, initial clamps into [min, max]
+        assert_eq!(c.batch_rows(), 100);
+        c.observe(1.0);
+        assert_eq!(c.batch_rows(), 100, "collapsed band stays pinned");
+    }
+
+    #[test]
+    fn queue_zero_capacity_clamps_to_one() {
+        let mut q = BoundedRowQueue::new(0);
+        assert_eq!(q.capacity(), 1, "zero capacity would deadlock the poll loop");
+        assert_eq!(q.free(), 1);
+        q.push(rows(1));
+        assert!(q.is_full());
+        assert_eq!(q.take(5).len(), 1);
+        assert!(q.is_empty());
+    }
 }

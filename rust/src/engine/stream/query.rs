@@ -57,6 +57,7 @@ use super::super::dataset::{Dataset, KeyFn, Partitioned, Plan, ReduceFn};
 use super::super::executor::{field_hash, whole_row_key, EngineCtx};
 use super::super::optimizer;
 use super::super::row::{Field, Row, SchemaRef};
+use super::super::spill::SpilledRows;
 use crate::util::error::{DdpError, Result};
 use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
@@ -72,8 +73,11 @@ enum Class {
 /// Cross-batch state of one capture point.
 enum CapState {
     /// raw rows in arrival order (blocking consumers); substituted for
-    /// the captured node itself at drain
-    Raw(Vec<Row>),
+    /// the captured node itself at drain. The buffer reserves from the
+    /// engine's [`super::super::memory::MemoryGovernor`] and spills to
+    /// disk chunks when refused, so a long-running query's blocking
+    /// state stays within the memory budget
+    Raw(SpilledRows),
     /// incremental fold for a single `ReduceByKey` consumer; the
     /// *consumer* node is substituted at drain
     Reduce {
@@ -167,10 +171,10 @@ impl StreamQuery {
                         seen: HashSet::new(),
                         buckets: (0..*num_parts).map(|_| Vec::new()).collect(),
                     },
-                    _ => CapState::Raw(Vec::new()),
+                    _ => CapState::Raw(SpilledRows::new()),
                 }
             } else {
-                CapState::Raw(Vec::new())
+                CapState::Raw(SpilledRows::new())
             };
             captures.push(Capture { node, state });
         }
@@ -222,7 +226,7 @@ impl StreamQuery {
         self.captures
             .iter()
             .map(|c| match &c.state {
-                CapState::Raw(v) => v.len(),
+                CapState::Raw(v) => v.len_rows(),
                 CapState::Reduce { accs, .. } => accs.len(),
                 CapState::Distinct { seen, .. } => seen.len(),
             })
@@ -255,7 +259,14 @@ impl StreamQuery {
             // optimizer pass (pure latency, zero rewrites)
             let delta = ctx.collect_unprepared(&rebuilt)?.rows();
             match &mut cap.state {
-                CapState::Raw(v) => v.extend(delta),
+                CapState::Raw(buf) => {
+                    let (spill_bytes, spill_files) =
+                        buf.push(&ctx.governor, &ctx.spill, delta)?;
+                    if spill_files > 0 {
+                        ctx.stats.add(&ctx.stats.spill_bytes, spill_bytes);
+                        ctx.stats.add(&ctx.stats.spill_files, spill_files);
+                    }
+                }
                 CapState::Reduce { key, reduce, accs, .. } => {
                     let key = key.clone();
                     let reduce = reduce.clone();
@@ -314,8 +325,8 @@ impl StreamQuery {
         let mut subs: HashMap<u64, Partitioned> = HashMap::new();
         for cap in self.captures.iter_mut() {
             match &mut cap.state {
-                CapState::Raw(rows) => {
-                    let rows = std::mem::take(rows);
+                CapState::Raw(buf) => {
+                    let rows = buf.drain()?;
                     subs.insert(
                         cap.node.id,
                         Partitioned {
@@ -815,6 +826,54 @@ mod tests {
         sc.finish().unwrap();
         assert!(sc.push_batch(&kv_rows(3)).is_err());
         assert!(sc.finish().is_err());
+    }
+
+    fn by_v(a: &Row, b: &Row) -> std::cmp::Ordering {
+        a.get(1).as_i64().unwrap().cmp(&b.get(1).as_i64().unwrap())
+    }
+
+    #[test]
+    fn raw_capture_spills_under_tiny_budget_and_stays_byte_identical() {
+        // a Sort consumer takes the raw-capture path; a few-hundred-byte
+        // budget forces the buffer onto disk chunk by chunk
+        let eng = EngineCtx::new(EngineConfig {
+            workers: 2,
+            memory_budget_bytes: Some(512),
+            ..Default::default()
+        });
+        let gov = eng.governor.clone();
+        let src = placeholder();
+        let plan = src.sort_by(by_v);
+        let rows = kv_rows(200);
+        let mut sc = StreamingCtx::new(eng, &plan, &src).unwrap();
+        for chunk in rows.chunks(9) {
+            sc.push_batch(chunk).unwrap();
+        }
+        let got = sc.finish().unwrap();
+        let snap = sc.engine.stats.snapshot();
+        assert!(snap.spill_bytes > 0, "tiny budget must spill the raw buffer");
+        assert!(snap.spill_files > 0);
+
+        let batch_src = Dataset::from_rows("src", kv_schema(), rows, 4);
+        let want = engine().collect(&batch_src.sort_by(by_v)).unwrap();
+        assert_eq!(layout(&got), layout(&want), "spilled drain is byte-identical");
+        drop(sc);
+        assert_eq!(gov.reserved_bytes(), 0, "no reservation leak after drop");
+    }
+
+    #[test]
+    fn dropping_unfinished_query_releases_reservations() {
+        let eng = EngineCtx::new(EngineConfig { workers: 2, ..Default::default() });
+        let gov = eng.governor.clone();
+        let src = placeholder();
+        let plan = src.sort_by(by_v);
+        let mut sc = StreamingCtx::new(eng, &plan, &src).unwrap();
+        for chunk in kv_rows(300).chunks(50) {
+            sc.push_batch(chunk).unwrap();
+        }
+        assert!(gov.reserved_bytes() > 0, "raw buffer holds a live reservation");
+        drop(sc);
+        assert_eq!(gov.reserved_bytes(), 0, "drop releases without finish()");
     }
 
     #[test]

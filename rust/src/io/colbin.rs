@@ -9,6 +9,13 @@
 //! compressed block: per column -> null bitmap | packed values
 //! trailing crc32 of the compressed block
 //! ```
+//!
+//! `Any`-typed columns are self-describing: each present value carries a
+//! one-byte type tag before its payload (format v2). v1 wrote `Any`
+//! values untagged and decoded them as strings — silently corrupting any
+//! non-string value; v1 blobs are still readable with that legacy
+//! behaviour. The engine's disk-spill path (`engine::spill`) relies on
+//! tagged `Any` columns for exact row round-trips.
 
 use crate::engine::row::{Field, FieldType, Row, Schema, SchemaRef};
 use crate::util::error::{DdpError, Result};
@@ -18,7 +25,7 @@ use flate2::Compression;
 use std::io::{Read, Write};
 
 const MAGIC: &[u8; 4] = b"DDPC";
-const VERSION: u8 = 1;
+const VERSION: u8 = 2;
 
 fn type_tag(t: FieldType) -> u8 {
     match t {
@@ -29,6 +36,25 @@ fn type_tag(t: FieldType) -> u8 {
         FieldType::Str => 4,
         FieldType::Bytes => 5,
     }
+}
+
+/// Concrete type of a value (the one numbering source for per-value
+/// tags is [`type_tag`]/[`tag_type`]; `Null` maps to `Any` but never
+/// appears in a payload — the bitmap already encodes it).
+fn value_type(f: &Field) -> FieldType {
+    match f {
+        Field::Null => FieldType::Any,
+        Field::Bool(_) => FieldType::Bool,
+        Field::I64(_) => FieldType::I64,
+        Field::F64(_) => FieldType::F64,
+        Field::Str(_) => FieldType::Str,
+        Field::Bytes(_) => FieldType::Bytes,
+    }
+}
+
+/// Per-value tag for `Any`-typed columns.
+fn field_tag(f: &Field) -> u8 {
+    type_tag(value_type(f))
 }
 
 fn tag_type(tag: u8) -> Result<FieldType> {
@@ -68,8 +94,13 @@ pub fn encode(schema: &Schema, rows: &[Row]) -> Result<Vec<u8>> {
             }
         }
         payload.extend_from_slice(&bitmap);
+        let tagged = schema.field(col).1 == FieldType::Any;
         for row in rows {
-            match row.get(col) {
+            let f = row.get(col);
+            if tagged && !f.is_null() {
+                payload.push(field_tag(f));
+            }
+            match f {
                 Field::Null => {}
                 Field::Bool(b) => payload.push(*b as u8),
                 Field::I64(v) => payload.extend_from_slice(&v.to_le_bytes()),
@@ -106,7 +137,8 @@ pub fn decode(schema: &SchemaRef, bytes: &[u8]) -> Result<Vec<Row>> {
     if cur.take(4)? != MAGIC {
         return Err(DdpError::format("colbin", "bad magic"));
     }
-    if cur.u8()? != VERSION {
+    let version = cur.u8()?;
+    if version == 0 || version > VERSION {
         return Err(DdpError::format("colbin", "unsupported version"));
     }
     let ncols = cur.u16()? as usize;
@@ -161,21 +193,17 @@ pub fn decode(schema: &SchemaRef, bytes: &[u8]) -> Result<Vec<Row>> {
                 continue;
             }
             col.push(match ty {
-                FieldType::Bool => Field::Bool(cur.u8()? != 0),
-                FieldType::I64 => Field::I64(i64::from_le_bytes(cur.arr8()?)),
-                FieldType::F64 => Field::F64(f64::from_le_bytes(cur.arr8()?)),
-                FieldType::Str | FieldType::Any => {
-                    let len = cur.u32()? as usize;
-                    Field::Str(
-                        std::str::from_utf8(cur.take(len)?)
-                            .map_err(|_| DdpError::format("colbin", "bad utf8"))?
-                            .to_string(),
-                    )
+                FieldType::Any => {
+                    if version >= 2 {
+                        // self-describing value (see module docs)
+                        let vt = tag_type(cur.u8()?)?;
+                        read_value(&mut cur, vt)?
+                    } else {
+                        // v1 legacy: Any columns were written as strings
+                        read_str(&mut cur)?
+                    }
                 }
-                FieldType::Bytes => {
-                    let len = cur.u32()? as usize;
-                    Field::Bytes(cur.take(len)?.to_vec())
-                }
+                ty => read_value(&mut cur, ty)?,
             });
         }
         cols.push(col);
@@ -186,6 +214,34 @@ pub fn decode(schema: &SchemaRef, bytes: &[u8]) -> Result<Vec<Row>> {
         rows.push(Row::new(cols.iter_mut().map(|c| std::mem::replace(&mut c[r], Field::Null)).collect()));
     }
     Ok(rows)
+}
+
+fn read_str(cur: &mut Cursor<'_>) -> Result<Field> {
+    let len = cur.u32()? as usize;
+    Ok(Field::Str(
+        std::str::from_utf8(cur.take(len)?)
+            .map_err(|_| DdpError::format("colbin", "bad utf8"))?
+            .to_string(),
+    ))
+}
+
+/// Read one present value of a concrete type — shared by the typed
+/// column path and the tagged `Any` path, so the encode/decode type
+/// tables can't drift apart.
+fn read_value(cur: &mut Cursor<'_>, ty: FieldType) -> Result<Field> {
+    Ok(match ty {
+        FieldType::Bool => Field::Bool(cur.u8()? != 0),
+        FieldType::I64 => Field::I64(i64::from_le_bytes(cur.arr8()?)),
+        FieldType::F64 => Field::F64(f64::from_le_bytes(cur.arr8()?)),
+        FieldType::Str => read_str(cur)?,
+        FieldType::Bytes => {
+            let len = cur.u32()? as usize;
+            Field::Bytes(cur.take(len)?.to_vec())
+        }
+        // tag 0 inside a payload would mean "a value of type Any" —
+        // nothing ever writes that
+        FieldType::Any => return Err(DdpError::format("colbin", "bad value tag 0")),
+    })
 }
 
 struct Cursor<'a> {
@@ -298,6 +354,21 @@ mod tests {
             ("blob", FieldType::Bytes),
         ]);
         assert!(decode(&renamed, &blob).is_err());
+    }
+
+    #[test]
+    fn any_column_roundtrips_mixed_types() {
+        // the spill path serializes shuffle buckets under all-Any schemas,
+        // so every variant must round-trip exactly through an Any column
+        let s = Schema::new(vec![("a", FieldType::Any), ("b", FieldType::Any)]);
+        let rows = vec![
+            Row::new(vec![Field::I64(-7), Field::Str("x".into())]),
+            Row::new(vec![Field::F64(0.125), Field::Bool(true)]),
+            Row::new(vec![Field::Bytes(vec![0, 255, 3]), Field::Null]),
+            Row::new(vec![Field::Str(String::new()), Field::I64(i64::MIN)]),
+        ];
+        let blob = encode(&s, &rows).unwrap();
+        assert_eq!(decode(&s, &blob).unwrap(), rows);
     }
 
     #[test]

@@ -43,6 +43,12 @@ impl EngineMetricsExporter {
         m.counter_add("engine.cache_hits", d.cache_hits);
         m.counter_add("engine.cache_misses", d.cache_misses);
         m.counter_add("engine.plan_rewrites", d.plan_rewrites);
+        m.counter_add("engine.spill_bytes", d.spill_bytes);
+        m.counter_add("engine.spill_files", d.spill_files);
+        m.gauge_set(
+            "engine.memory.reserved_bytes",
+            engine.governor.reserved_bytes() as f64,
+        );
 
         // cache-manager counters (entry-level hits + byte-budget
         // evictions) and residency gauges
@@ -104,6 +110,23 @@ mod tests {
         c.count(&ds.filter(|_| true)).unwrap();
         ex.publish(&m, &c);
         assert!(m.counter("engine.tasks_launched") > first);
+    }
+
+    #[test]
+    fn spill_counters_surface_under_forced_spill() {
+        let c = EngineCtx::new(EngineConfig {
+            workers: 2,
+            memory_budget_bytes: Some(512),
+            ..Default::default()
+        });
+        let m = MetricsRegistry::new();
+        let mut ex = EngineMetricsExporter::new();
+        let ds = nums(500);
+        c.count(&ds.distinct(4)).unwrap();
+        ex.publish(&m, &c);
+        assert!(m.counter("engine.spill_bytes") > 0, "forced spill must surface");
+        assert!(m.counter("engine.spill_files") > 0);
+        assert_eq!(m.gauge("engine.memory.reserved_bytes"), 0.0, "idle engine holds nothing");
     }
 
     #[test]

@@ -1,19 +1,32 @@
 //! Thread-safe metrics registry: counters, gauges, histograms.
 
+use crate::util::fnv1a64;
+use crate::util::rng::Rng64;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
-/// Bounded-reservoir histogram (fixed capacity, overwrite-oldest) — cheap
-/// and adequate for latency quantiles at pipeline cadence.
+/// Uniform-reservoir histogram: Vitter's Algorithm R over the whole
+/// stream, so long-run p50/p99 reflect *all* samples, not just the most
+/// recent window. (The previous implementation was a sliding ring of the
+/// last `RESERVOIR` samples, which silently biased long-run quantiles to
+/// recent batches.) Sampling uses the house PRNG with a seed derived
+/// from the histogram's name, so summaries are deterministic across
+/// runs. Non-finite observations (NaN/±inf) are excluded from the
+/// reservoir and the min/mean/max aggregates — they would otherwise
+/// poison every quantile — and surface separately as
+/// [`HistogramSummary::nonfinite`].
 struct Histogram {
     values: Mutex<HistState>,
 }
 
 struct HistState {
     buf: Vec<f64>,
-    next: usize,
+    rng: Rng64,
+    /// finite samples observed (reservoir population base)
     count: u64,
+    /// NaN/±inf samples skipped
+    nonfinite: u64,
     sum: f64,
     min: f64,
     max: f64,
@@ -22,12 +35,13 @@ struct HistState {
 const RESERVOIR: usize = 4096;
 
 impl Histogram {
-    fn new() -> Self {
+    fn new(seed: u64) -> Self {
         Histogram {
             values: Mutex::new(HistState {
                 buf: Vec::with_capacity(RESERVOIR),
-                next: 0,
+                rng: Rng64::new(seed),
                 count: 0,
+                nonfinite: 0,
                 sum: 0.0,
                 min: f64::INFINITY,
                 max: f64::NEG_INFINITY,
@@ -37,23 +51,33 @@ impl Histogram {
 
     fn record(&self, v: f64) {
         let mut s = self.values.lock().unwrap();
-        if s.buf.len() < RESERVOIR {
-            s.buf.push(v);
-        } else {
-            let i = s.next % RESERVOIR;
-            s.buf[i] = v;
-            s.next = s.next.wrapping_add(1);
+        if !v.is_finite() {
+            s.nonfinite += 1;
+            return;
         }
         s.count += 1;
         s.sum += v;
         s.min = s.min.min(v);
         s.max = s.max.max(v);
+        if s.buf.len() < RESERVOIR {
+            s.buf.push(v);
+        } else {
+            // Algorithm R: the n-th sample replaces a random slot with
+            // probability RESERVOIR/n — every sample ends up in the
+            // reservoir with equal probability
+            let n = s.count;
+            let j = s.rng.gen_range(n);
+            if (j as usize) < RESERVOIR {
+                s.buf[j as usize] = v;
+            }
+        }
     }
 
     fn summary(&self) -> HistogramSummary {
         let s = self.values.lock().unwrap();
         let mut sorted = s.buf.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total order: never panics, even if a non-finite value slipped in
+        sorted.sort_by(f64::total_cmp);
         let q = |p: f64| -> f64 {
             if sorted.is_empty() {
                 return 0.0;
@@ -63,6 +87,7 @@ impl Histogram {
         };
         HistogramSummary {
             count: s.count,
+            nonfinite: s.nonfinite,
             mean: if s.count > 0 { s.sum / s.count as f64 } else { 0.0 },
             min: if s.count > 0 { s.min } else { 0.0 },
             max: if s.count > 0 { s.max } else { 0.0 },
@@ -73,10 +98,12 @@ impl Histogram {
     }
 }
 
-/// Point-in-time histogram stats.
+/// Point-in-time histogram stats. `count` covers finite samples only;
+/// `nonfinite` counts skipped NaN/±inf observations.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct HistogramSummary {
     pub count: u64,
+    pub nonfinite: u64,
     pub mean: f64,
     pub min: f64,
     pub max: f64,
@@ -160,8 +187,9 @@ impl MetricsRegistry {
             return;
         }
         let mut w = self.inner.histograms.write().unwrap();
+        // name-derived seed: deterministic reservoirs across runs
         w.entry(name.to_string())
-            .or_insert_with(|| Arc::new(Histogram::new()))
+            .or_insert_with(|| Arc::new(Histogram::new(fnv1a64(name.as_bytes()))))
             .record(v);
     }
 
@@ -244,6 +272,7 @@ impl MetricsSnapshot {
                     k.clone(),
                     Value::obj(vec![
                         ("count", Value::Num(h.count as f64)),
+                        ("nonfinite", Value::Num(h.nonfinite as f64)),
                         ("mean", Value::Num(h.mean)),
                         ("min", Value::Num(h.min)),
                         ("max", Value::Num(h.max)),
@@ -298,6 +327,56 @@ mod tests {
         let h = m.histogram("big").unwrap();
         assert_eq!(h.count, 20_000);
         assert_eq!(h.max, 19_999.0);
+    }
+
+    #[test]
+    fn reservoir_is_uniform_over_whole_stream_not_recent_window() {
+        // ramp 0..20k: a uniform reservoir's p50 sits near 10k; the old
+        // last-4096 ring would report ~17.9k. Deterministic (name-seeded).
+        let m = MetricsRegistry::new();
+        for i in 0..20_000 {
+            m.observe("ramp", i as f64);
+        }
+        let h = m.histogram("ramp").unwrap();
+        assert!(
+            (8_000.0..=12_000.0).contains(&h.p50),
+            "p50 {} biased away from stream median",
+            h.p50
+        );
+        assert!(h.p99 > 18_000.0, "upper tail still represented: {}", h.p99);
+    }
+
+    #[test]
+    fn non_finite_samples_do_not_panic_or_poison() {
+        let m = MetricsRegistry::new();
+        m.observe("lat", 1.0);
+        m.observe("lat", f64::NAN);
+        m.observe("lat", f64::INFINITY);
+        m.observe("lat", f64::NEG_INFINITY);
+        m.observe("lat", 3.0);
+        // summary() used to panic on NaN via partial_cmp().unwrap()
+        let h = m.histogram("lat").unwrap();
+        assert_eq!(h.count, 2, "finite samples only");
+        assert_eq!(h.nonfinite, 3, "skipped samples are counted");
+        assert_eq!(h.min, 1.0);
+        assert_eq!(h.max, 3.0);
+        assert!((h.mean - 2.0).abs() < 1e-9);
+        assert!(h.p50.is_finite() && h.p99.is_finite());
+        // and the snapshot path (publisher) survives too
+        let j = m.snapshot().to_json(1.0);
+        assert!(j.get("histograms").unwrap().get("lat").unwrap().get("nonfinite").is_some());
+    }
+
+    #[test]
+    fn reservoir_deterministic_across_identical_runs() {
+        let run = || {
+            let m = MetricsRegistry::new();
+            for i in 0..10_000 {
+                m.observe("d", (i % 977) as f64);
+            }
+            m.histogram("d").unwrap()
+        };
+        assert_eq!(run(), run(), "name-seeded Algorithm R is reproducible");
     }
 
     #[test]

@@ -1,0 +1,331 @@
+//! Out-of-core execution test suite:
+//!
+//! * **forced-spill differential** — random plan DAGs over every wide
+//!   operator produce byte-identical collected output (same rows, same
+//!   order, same partition layout) with an unbounded budget vs a budget
+//!   tiny enough that shuffle state must spill to disk;
+//! * **streaming parity under spill** — replaying a corpus through the
+//!   micro-batch runtime with a tiny budget drains to the exact batch
+//!   answer while the blocking-op buffers spill;
+//! * **beyond-budget completion** — a dataset whose shuffle state is a
+//!   multiple of the configured budget completes instead of OOMing
+//!   (Table 3's "Scalability Limit" failure mode, solved by spill);
+//! * **governor hygiene** — reservation/release balance: nothing stays
+//!   reserved once work is done or dropped.
+
+use ddp::engine::row::{Field, FieldType, Row, Schema};
+use ddp::engine::stream::StreamingCtx;
+use ddp::engine::{Dataset, EngineConfig, EngineCtx, JoinKind, Partitioned};
+use ddp::row;
+use ddp::util::testkit::{property, Gen};
+
+/// Budget small enough that any realistic shuffle must spill.
+const TINY: usize = 2 * 1024;
+
+fn cfg(budget: Option<usize>) -> EngineConfig {
+    EngineConfig { workers: 2, memory_budget_bytes: budget, ..Default::default() }
+}
+
+fn layout(p: &Partitioned) -> Vec<Vec<Row>> {
+    p.parts.iter().map(|part| (**part).clone()).collect()
+}
+
+// ---------------------------------------------------------------------
+// random plan generator (wide-op heavy: every op with a spill path)
+// ---------------------------------------------------------------------
+
+fn base_source(g: &mut Gen, name: &str) -> Dataset {
+    let schema = Schema::new(vec![
+        ("id", FieldType::I64),
+        ("grp", FieldType::I64),
+        ("pad", FieldType::Str),
+    ]);
+    let n = 20 + g.usize(60);
+    let rows = (0..n)
+        .map(|_| row!(g.i64(0, 25), g.i64(0, 5), g.string(8, 40)))
+        .collect();
+    Dataset::from_rows(name, schema, rows, 1 + g.usize(4))
+}
+
+fn rand_plan(g: &mut Gen) -> Dataset {
+    let mut pool: Vec<Dataset> = (0..1 + g.usize(2))
+        .map(|i| base_source(g, &format!("s{i}")))
+        .collect();
+    let ops = 3 + g.usize(5);
+    for _ in 0..ops {
+        let ds = pool[g.usize(pool.len())].clone();
+        let next = match g.u64(7) {
+            0 => ds.filter(|r| r.get(0).as_i64().unwrap_or(0) % 3 != 0),
+            1 => ds.distinct(1 + g.usize(4)),
+            2 => ds.repartition(1 + g.usize(5)),
+            3 => {
+                // keep-first representative per grp (key-preserving)
+                let kc = 1usize.min(ds.schema.len() - 1);
+                ds.reduce_by_key_col(1 + g.usize(3), kc, |acc: Row, _r: &Row| acc)
+            }
+            4 => {
+                // join against a same-width partner on the first column
+                let other = pool[g.usize(pool.len())].clone();
+                if ds.schema.len() + other.schema.len() > 8 {
+                    ds.distinct(2)
+                } else {
+                    let names: Vec<String> = ds
+                        .schema
+                        .names()
+                        .iter()
+                        .enumerate()
+                        .map(|(i, n)| format!("l{i}_{n}"))
+                        .chain(
+                            other
+                                .schema
+                                .names()
+                                .iter()
+                                .enumerate()
+                                .map(|(i, n)| format!("r{i}_{n}")),
+                        )
+                        .collect();
+                    let out =
+                        Schema::of_names(&names.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+                    let kind = if g.bool() { JoinKind::Inner } else { JoinKind::Left };
+                    ds.join_on(&other, out, kind, 1 + g.usize(3), 0, 0)
+                }
+            }
+            5 => {
+                let c = g.usize(ds.schema.len());
+                ds.sort_by(move |a, b| a.get(c).canonical_cmp(b.get(c)))
+            }
+            _ => {
+                let partner = pool
+                    .iter()
+                    .find(|d| *d.schema == *ds.schema)
+                    .cloned()
+                    .unwrap_or_else(|| ds.clone());
+                ds.union(&[partner])
+            }
+        };
+        pool.push(next);
+    }
+    pool.last().unwrap().clone()
+}
+
+#[test]
+fn differential_forced_spill_byte_identical() {
+    let mut spilled_total = 0u64;
+    property(100, |g| {
+        let plan = rand_plan(g);
+        let mem = EngineCtx::new(cfg(None));
+        let spill = EngineCtx::new(cfg(Some(TINY)));
+        let want = layout(&mem.collect(&plan).unwrap());
+        let got = layout(&spill.collect(&plan).unwrap());
+        assert_eq!(
+            want,
+            got,
+            "spilling changed collected output (case {})\nplan:\n{}",
+            g.case,
+            plan.plan_display()
+        );
+        assert_eq!(mem.stats.snapshot().spill_bytes, 0, "unbounded run must not spill");
+        assert_eq!(
+            mem.governor.reserved_bytes(),
+            0,
+            "in-memory run releases every reservation"
+        );
+        assert_eq!(
+            spill.governor.reserved_bytes(),
+            0,
+            "spill run releases every reservation"
+        );
+        spilled_total += spill.stats.snapshot().spill_bytes;
+    });
+    assert!(
+        spilled_total > 0,
+        "a {TINY}-byte budget across 100 wide-op DAGs must have spilled"
+    );
+}
+
+// ---------------------------------------------------------------------
+// streaming parity under forced spill
+// ---------------------------------------------------------------------
+
+fn stream_rows(n: i64) -> Vec<Row> {
+    (0..n).map(|i| row!(i % 17, i, format!("{i:0>32}"))).collect()
+}
+
+fn stream_schema() -> ddp::engine::SchemaRef {
+    Schema::new(vec![
+        ("k", FieldType::I64),
+        ("v", FieldType::I64),
+        ("pad", FieldType::Str),
+    ])
+}
+
+#[test]
+fn streaming_drain_matches_batch_under_forced_spill() {
+    // sort above the source: a raw (blocking) capture that must buffer
+    // the whole corpus — the governed, spillable streaming state
+    fn by_v(a: &Row, b: &Row) -> std::cmp::Ordering {
+        a.get(1).as_i64().unwrap().cmp(&b.get(1).as_i64().unwrap())
+    }
+    let rows = stream_rows(400);
+
+    let eng = EngineCtx::new(cfg(Some(TINY)));
+    let gov = eng.governor.clone();
+    let src = Dataset::from_rows("src", stream_schema(), Vec::new(), 1);
+    let plan = src.sort_by(by_v).distinct(3);
+    let mut sc = StreamingCtx::new(eng, &plan, &src).unwrap();
+    for chunk in rows.chunks(23) {
+        sc.push_batch(chunk).unwrap();
+    }
+    let got = sc.finish().unwrap();
+    let snap = sc.engine.stats.snapshot();
+    assert!(snap.spill_bytes > 0, "streaming buffers must spill under a tiny budget");
+    assert!(snap.spill_files > 0);
+
+    let batch = EngineCtx::new(cfg(None));
+    let bsrc = Dataset::from_rows("src", stream_schema(), rows, 4);
+    let want = batch.collect(&bsrc.sort_by(by_v).distinct(3)).unwrap();
+    assert_eq!(layout(&got), layout(&want), "spilled streaming drain is byte-identical");
+
+    drop(sc);
+    assert_eq!(gov.reserved_bytes(), 0, "no reservation leak after query drop");
+}
+
+// ---------------------------------------------------------------------
+// beyond-budget completion (the "Scalability Limit" failure mode)
+// ---------------------------------------------------------------------
+
+#[test]
+fn dataset_larger_than_budget_completes() {
+    // ~3 MB of shuffle state vs a 256 KB budget: without spill this
+    // working set could never be resident within the budget
+    let budget = 256 * 1024;
+    let c = EngineCtx::new(cfg(Some(budget)));
+    let schema = Schema::new(vec![("k", FieldType::I64), ("pad", FieldType::Str)]);
+    let n = 12_000i64;
+    // incompressible-ish pads so spill files measure real bytes, not a
+    // zlib artifact of a repetitive test corpus
+    let mut rng = ddp::util::rng::Rng64::new(42);
+    let rows: Vec<Row> = (0..n)
+        .map(|i| {
+            let pad: String = (0..24).map(|_| format!("{:016x}", rng.next_u64())).collect();
+            row!(i % 4_000, pad)
+        })
+        .collect();
+    let ds = Dataset::from_rows("big", schema, rows, 8);
+    let out = ds.distinct(6).reduce_by_key_col(4, 0, |acc: Row, _r: &Row| acc);
+    let got = c.collect(&out).unwrap();
+    assert_eq!(got.num_rows(), 4_000, "every key survives the out-of-core path");
+    let snap = c.stats.snapshot();
+    assert!(
+        snap.spill_bytes > budget as u64,
+        "spilled bytes ({}) should exceed the whole budget ({budget})",
+        snap.spill_bytes
+    );
+    assert!(snap.spill_files > 0);
+    assert_eq!(c.governor.reserved_bytes(), 0);
+}
+
+// ---------------------------------------------------------------------
+// governor hygiene across engine + cache
+// ---------------------------------------------------------------------
+
+#[test]
+fn persisted_dataset_shares_budget_with_shuffle() {
+    let budget = 64 * 1024;
+    let c = EngineCtx::new(cfg(Some(budget)));
+    let schema = Schema::new(vec![("x", FieldType::I64), ("pad", FieldType::Str)]);
+    let rows: Vec<Row> = (0..500i64).map(|i| row!(i, format!("{i:0>40}"))).collect();
+    let ds = Dataset::from_rows("p", schema, rows, 4);
+    let mapped = ds.map(ds.schema.clone(), |r| r.clone());
+    c.persist(&mapped);
+    c.count(&mapped).unwrap();
+    let cached = c.governor.reserved_bytes();
+    assert!(cached > 0, "persisted dataset holds a governor reservation");
+    assert_eq!(cached, c.cache.used_bytes(), "cache and governor agree");
+    // shuffle work proceeds alongside the cached entry within one budget
+    c.count(&mapped.distinct(3)).unwrap();
+    assert_eq!(c.governor.reserved_bytes(), cached, "shuffle state fully released");
+    c.unpersist(&mapped);
+    assert_eq!(c.governor.reserved_bytes(), 0, "unpersist returns the budget");
+}
+
+#[test]
+fn unbounded_default_keeps_fast_path() {
+    // without DDP_MEMORY_BUDGET in the environment the default config is
+    // unbounded and nothing spills (this also documents the env knob)
+    let c = EngineCtx::new(cfg(None));
+    let schema = Schema::new(vec![("x", FieldType::I64)]);
+    let ds = Dataset::from_rows(
+        "n",
+        schema,
+        (0..2_000i64).map(|i| row!(i % 100)).collect(),
+        4,
+    );
+    assert_eq!(c.count(&ds.distinct(4)).unwrap(), 100);
+    let snap = c.stats.snapshot();
+    assert_eq!(snap.spill_bytes, 0);
+    assert_eq!(snap.spill_files, 0);
+    assert_eq!(c.governor.budget_bytes(), None);
+}
+
+#[test]
+fn join_both_sides_spilled_matches_in_memory() {
+    let ls = Schema::new(vec![("id", FieldType::I64), ("pad", FieldType::Str)]);
+    let rs = Schema::new(vec![("rid", FieldType::I64), ("rv", FieldType::I64)]);
+    let left = Dataset::from_rows(
+        "l",
+        ls,
+        (0..600i64).map(|i| row!(i % 50, format!("{i:0>64}"))).collect(),
+        4,
+    );
+    // rid covers only 0..29, so left ids 30..49 take the null-extend path
+    let right = Dataset::from_rows(
+        "r",
+        rs,
+        (0..120i64).map(|i| row!(i % 30, i)).collect(),
+        3,
+    );
+    let out = Schema::new(vec![
+        ("id", FieldType::I64),
+        ("pad", FieldType::Str),
+        ("rid", FieldType::I64),
+        ("rv", FieldType::I64),
+    ]);
+    let plan = left.join_on(&right, out, JoinKind::Left, 5, 0, 0);
+    let mem = EngineCtx::new(cfg(None));
+    let spill = EngineCtx::new(cfg(Some(TINY)));
+    let want = layout(&mem.collect(&plan).unwrap());
+    let got = layout(&spill.collect(&plan).unwrap());
+    assert_eq!(want, got);
+    assert!(spill.stats.snapshot().spill_files >= 2, "join map side spills per partition");
+    // null-extended left rows survive the disk round-trip
+    let nulls = want
+        .iter()
+        .flatten()
+        .filter(|r| matches!(r.get(2), Field::Null))
+        .count();
+    assert!(nulls > 0, "test corpus must exercise the left-join null path");
+}
+
+/// Repeated spill runs don't accumulate files: every spill file is
+/// deleted once consumed, and the context's spill dir dies with it.
+#[test]
+fn spill_files_are_cleaned_up() {
+    let c = EngineCtx::new(cfg(Some(TINY)));
+    let spill_dir = c.spill.path().clone();
+    let schema = Schema::new(vec![("x", FieldType::I64), ("pad", FieldType::Str)]);
+    for round in 0..3 {
+        let rows: Vec<Row> = (0..300i64)
+            .map(|i| row!(i % 37, format!("{:0>64}", i + round)))
+            .collect();
+        let ds = Dataset::from_rows("n", schema.clone(), rows, 4);
+        c.count(&ds.distinct(3)).unwrap();
+        let leftover = std::fs::read_dir(&spill_dir)
+            .map(|d| d.count())
+            .unwrap_or(0);
+        assert_eq!(leftover, 0, "consumed spill files must be deleted (round {round})");
+    }
+    assert!(c.stats.snapshot().spill_files > 0);
+    drop(c);
+    assert!(!spill_dir.exists(), "spill dir removed when the context drops");
+}
