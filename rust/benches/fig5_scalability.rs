@@ -30,6 +30,14 @@ use std::sync::Arc;
 
 const PAPER_DOCS: f64 = 2_100_000.0;
 
+fn fmt_budget(b: Option<usize>) -> String {
+    match b {
+        None => "∞ (in-memory)".to_string(),
+        Some(b) if b < (1 << 20) => format!("{} KB", b >> 10),
+        Some(b) => format!("{} MB", b >> 20),
+    }
+}
+
 /// CPU-bound pipe: per row, iterate an FNV hash chain `spins` times.
 struct Busy {
     spins: u64,
@@ -96,9 +104,10 @@ fn run_fanout(branches: usize, width: usize, rows: i64, spins: u64) -> f64 {
 }
 
 fn bench_scheduler_fanout(args: &Args) {
-    let branches = args.opt_usize("branches", 8);
-    let rows = args.opt_usize("rows", 2_000) as i64;
-    let spins = args.opt_u64("spins", 2_000);
+    let smoke = args.has_flag("smoke");
+    let branches = args.opt_usize("branches", if smoke { 4 } else { 8 });
+    let rows = args.opt_usize("rows", if smoke { 300 } else { 2_000 }) as i64;
+    let spins = args.opt_u64("spins", if smoke { 200 } else { 2_000 });
     let mut t = Table::new(
         "Stage-parallel scheduler — wide fan-out wall clock (branches of Busy×2, 1 partition each)",
         &["maxConcurrentPipes", "wall clock", "speedup vs serial"],
@@ -117,7 +126,8 @@ fn bench_scheduler_fanout(args: &Args) {
 /// responsible for placement). Reports shuffle bytes and wall clock with
 /// the optimizer off vs on. Real execution, no artifacts needed.
 fn bench_optimizer_pushdown(args: &Args) {
-    let rows = args.opt_usize("opt-rows", 20_000) as i64;
+    let smoke = args.has_flag("smoke");
+    let rows = args.opt_usize("opt-rows", if smoke { 3_000 } else { 20_000 }) as i64;
     let keys = 200i64;
     let schema = Schema::new(vec![("k", FieldType::I64), ("payload", FieldType::Str)]);
     let data: Vec<ddp::engine::Row> = (0..rows)
@@ -162,7 +172,8 @@ fn bench_optimizer_pushdown(args: &Args) {
 /// bytes/files vs wall clock, with byte-identical output asserted across
 /// budgets. Real execution, no artifacts needed.
 fn bench_spill_budgets(args: &Args) {
-    let rows_n = args.opt_usize("spill-rows", 40_000) as i64;
+    let smoke = args.has_flag("smoke");
+    let rows_n = args.opt_usize("spill-rows", if smoke { 4_000 } else { 40_000 }) as i64;
     let schema = Schema::new(vec![("k", FieldType::I64), ("pad", FieldType::Str)]);
     let mut rng = ddp::util::rng::Rng64::new(7);
     let data: Vec<ddp::engine::Row> = (0..rows_n)
@@ -187,16 +198,19 @@ fn bench_spill_budgets(args: &Args) {
         let layout: Layout = got.parts.iter().map(|p| (**p).clone()).collect();
         (s.spill_bytes, s.spill_files, secs, layout)
     };
-    let fmt_budget = |b: Option<usize>| match b {
-        None => "∞ (in-memory)".to_string(),
-        Some(b) => format!("{} MB", b >> 20),
-    };
     let mut t = Table::new(
         "Out-of-core shuffle — spill bytes vs runtime at memory budgets (distinct→reduce)",
         &["memory budget", "spill bytes", "spill files", "wall clock"],
     );
     let mut baseline: Option<Layout> = None;
-    for budget in [None, Some(64usize << 20), Some(8usize << 20)] {
+    // smoke shrinks the budgets with the corpus so the spill path still
+    // triggers (and the identity assert still bites) at toy sizes
+    let budgets = if smoke {
+        [None, Some(1usize << 20), Some(256usize << 10)]
+    } else {
+        [None, Some(64usize << 20), Some(8usize << 20)]
+    };
+    for budget in budgets {
         let (bytes, files, secs, layout) = probe(budget);
         match &baseline {
             None => baseline = Some(layout),
@@ -213,6 +227,64 @@ fn bench_spill_budgets(args: &Args) {
     t.save("fig5_spill");
 }
 
+/// External-sort probe: a global sort over an incompressible corpus at
+/// shrinking memory budgets — sorted runs, sort spill bytes and wall
+/// clock, with byte-identical output asserted across budgets. Real
+/// execution, no artifacts needed.
+fn bench_external_sort(args: &Args) {
+    let smoke = args.has_flag("smoke");
+    let rows_n = args.opt_usize("sort-rows", if smoke { 4_000 } else { 40_000 }) as i64;
+    let schema = Schema::new(vec![("k", FieldType::I64), ("pad", FieldType::Str)]);
+    let mut rng = ddp::util::rng::Rng64::new(13);
+    let data: Vec<ddp::engine::Row> = (0..rows_n)
+        .map(|_| {
+            let pad: String = (0..12).map(|_| format!("{:016x}", rng.next_u64())).collect();
+            row!(rng.next_u64() as i64, pad)
+        })
+        .collect();
+    type Layout = Vec<Vec<ddp::engine::Row>>;
+    let probe = |budget: Option<usize>| -> (u64, u64, f64, Layout) {
+        let c = EngineCtx::new(EngineConfig {
+            workers: 4,
+            memory_budget_bytes: budget,
+            ..Default::default()
+        });
+        let ds = Dataset::from_rows("corpus", schema.clone(), data.clone(), 8);
+        let out = ds.sort_by(|a, b| a.get(0).canonical_cmp(b.get(0)));
+        let t0 = std::time::Instant::now();
+        let got = c.collect(&out).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        let s = c.stats.snapshot();
+        let layout: Layout = got.parts.iter().map(|p| (**p).clone()).collect();
+        (s.sort_runs, s.sort_spill_bytes, secs, layout)
+    };
+    let budgets = if smoke {
+        [None, Some(256usize << 10), Some(64usize << 10)]
+    } else {
+        [None, Some(4usize << 20), Some(1usize << 20)]
+    };
+    let mut t = Table::new(
+        "External merge sort — sorted runs / spill bytes vs runtime at memory budgets",
+        &["memory budget", "sorted runs", "sort spill bytes", "wall clock"],
+    );
+    let mut baseline: Option<Layout> = None;
+    for budget in budgets {
+        let (runs, spill, secs, layout) = probe(budget);
+        match &baseline {
+            None => baseline = Some(layout),
+            // full layout equality: same rows, same order, same partitions
+            Some(want) => assert_eq!(&layout, want, "budget changed sort output"),
+        }
+        t.row(&[
+            fmt_budget(budget),
+            runs.to_string(),
+            spill.to_string(),
+            fmt_duration(secs),
+        ]);
+    }
+    t.save("fig5_external_sort");
+}
+
 fn main() {
     ddp::util::logger::init();
     let args = Args::from_env();
@@ -225,6 +297,17 @@ fn main() {
 
     // out-of-core spill probe: real execution, no artifacts needed
     bench_spill_budgets(&args);
+
+    // external merge sort probe: real execution, no artifacts needed
+    bench_external_sort(&args);
+
+    if args.has_flag("smoke") {
+        // CI smoke: the spill and sort probes above asserted byte-
+        // identity across budgets; the model-backed Fig 5 section needs
+        // AOT artifacts and full-size corpora, so stop here
+        println!("smoke OK: spill + external-sort outputs byte-identical across memory budgets");
+        return;
+    }
 
     let n_docs = args.opt_usize("docs", 3_000);
     let artifacts = default_artifacts_dir();

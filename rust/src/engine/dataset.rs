@@ -401,7 +401,9 @@ impl Dataset {
         self.derive(Plan::Union { inputs }, self.schema.clone())
     }
 
-    /// Global sort (gather-sort: result is a single partition).
+    /// Global stable sort (result is a single totally-ordered partition;
+    /// executed as a memory-governed external merge sort — per-partition
+    /// sorted runs, spilled under budget pressure, k-way merged).
     pub fn sort_by(
         &self,
         cmp: impl Fn(&Row, &Row) -> std::cmp::Ordering + Send + Sync + 'static,

@@ -7,7 +7,9 @@
 //! map-side combining. Shuffle state is governed by a shared
 //! [`MemoryGovernor`] budget: map-side buckets that don't fit spill to
 //! disk ([`super::spill`]) and are merge-read back per reduce partition,
-//! so corpora larger than the budget complete instead of OOMing — with
+//! and `Sort` runs as an external merge sort (per-partition sorted runs,
+//! spilled when refused, k-way merged with input-order tie-breaking) —
+//! so corpora larger than the budget complete instead of OOMing, with
 //! byte-identical output either way. Tasks run on a fixed thread pool
 //! with bounded retries; injected faults exercise lineage recomputation.
 //! Every task is optionally recorded into a [`TaskTrace`] (with real
@@ -21,7 +23,7 @@ use super::fault::FaultInjector;
 use super::memory::{self, MemoryGovernor};
 use super::optimizer::{self, RewriteCounts};
 use super::row::{Field, Row};
-use super::spill::{transpose_segments, BucketSet, SpillDir};
+use super::spill::{transpose_segments, BucketSet, SortedRun, SortedRunSet, SpillDir};
 use super::stats::EngineStats;
 use crate::util::error::{DdpError, Result};
 use crate::util::threadpool::ThreadPool;
@@ -245,11 +247,7 @@ impl EngineCtx {
             }
             Plan::Sort { input, cmp } => {
                 let inp = self.eval(input)?;
-                let mut rows = inp.rows();
-                let cmp = cmp.clone();
-                rows.sort_by(|a, b| cmp(a, b));
-                self.stats.add(&self.stats.stages_run, 1);
-                Ok(Partitioned { schema: ds.schema.clone(), parts: vec![Arc::new(rows)] })
+                self.exec_sort(ds, inp, cmp.clone())
             }
             Plan::Repartition { input, num_parts } => {
                 let inp = self.eval(input)?;
@@ -676,6 +674,69 @@ impl EngineCtx {
         Ok(Partitioned { schema, parts: outs.into_iter().map(Arc::new).collect() })
     }
 
+    /// External merge sort. The map stage stably pre-sorts each input
+    /// partition into a governed [`SortedRun`] — resident under a
+    /// reservation, or spilled as chunked colbin segments when the
+    /// budget refuses — so per-partition sort cost and skew show up as
+    /// real per-task output/shuffle bytes in the trace instead of being
+    /// hidden inside one driver-side gather. The merge stage then
+    /// streams a k-way merge over run cursors (heap keyed by the user
+    /// comparator, ties broken by run index), which reproduces the
+    /// stable sort of the concatenation byte for byte at any budget.
+    /// Output stays a single totally-ordered partition — the `Sort`
+    /// contract every consumer (and the streaming drain) relies on.
+    fn exec_sort(
+        &self,
+        ds: &Dataset,
+        input: Partitioned,
+        cmp: super::dataset::CmpFn,
+    ) -> Result<Partitioned> {
+        // map stage: per-partition sorted runs
+        self.stats.add(&self.stats.stages_run, 1);
+        let gov = self.governor.clone();
+        let dir = self.spill.clone();
+        let sort_cmp = cmp.clone();
+        let tasks: Vec<_> = input
+            .parts
+            .iter()
+            .map(|part| {
+                let part = part.clone();
+                let cmp = sort_cmp.clone();
+                let gov = gov.clone();
+                let dir = dir.clone();
+                move || -> Result<SortedRun> {
+                    let mut rows = (*part).clone();
+                    rows.sort_by(|a, b| cmp(a, b));
+                    SortedRun::build(&gov, &dir, rows)
+                }
+            })
+            .collect();
+        let runs =
+            SortedRunSet::from_runs(collect_results(self.run_tasks(ds.id, tasks, &input)?)?);
+        // the runs are this stage's exchange to the merge side: charge
+        // them to shuffle_bytes so the global counter reconciles with the
+        // per-task TaskRecord shuffle bytes (mode-independent — row bytes
+        // are identical whether a run spilled or stayed resident)
+        self.stats.add(&self.stats.shuffle_bytes, runs.row_bytes());
+        self.stats.add(&self.stats.sort_runs, runs.num_runs() as u64);
+        let (spill_bytes, spill_files) = (runs.spilled_bytes(), runs.spilled_files());
+        if spill_files > 0 {
+            self.stats.add(&self.stats.sort_spill_bytes, spill_bytes);
+            self.stats.add(&self.stats.spill_bytes, spill_bytes);
+            self.stats.add(&self.stats.spill_files, spill_files);
+        }
+
+        // merge stage: one reduce task streams the k-way merge
+        self.stats.add(&self.stats.stages_run, 1);
+        let merge_tasks = vec![move || -> Result<Vec<Row>> { runs.merge(&gov, &*cmp) }];
+        let empty = Partitioned { schema: ds.schema.clone(), parts: vec![] };
+        let outs = collect_results(self.run_tasks(ds.id, merge_tasks, &empty)?)?;
+        Ok(Partitioned {
+            schema: ds.schema.clone(),
+            parts: outs.into_iter().map(Arc::new).collect(),
+        })
+    }
+
     fn exec_repartition(&self, ds: &Dataset, input: Partitioned, num_parts: usize) -> Result<Partitioned> {
         self.stats.add(&self.stats.stages_run, 1);
         // round-robin by row hash for determinism
@@ -826,6 +887,15 @@ impl TaskMeasure for Vec<Row> {
 impl TaskMeasure for BucketSet {
     fn measured(&self) -> (u64, u64) {
         // bucketed map-side output *is* the task's shuffle contribution
+        (self.row_bytes(), self.row_bytes())
+    }
+}
+
+impl TaskMeasure for SortedRun {
+    fn measured(&self) -> (u64, u64) {
+        // a sorted run is handed whole to the merge stage: it is both
+        // this task's output and its contribution to the sort exchange —
+        // per-partition, so the simulator sees sort skew
         (self.row_bytes(), self.row_bytes())
     }
 }

@@ -31,10 +31,11 @@
 //! pushdown (below `Union`, into both sides of a column-keyed `Join`),
 //! and adjacent equal-width repartition collapsing.
 //!
-//! `Filter` commutes with `SortBy` because the gather-sort is *stable*:
-//! stably sorting a filtered subsequence yields exactly the subsequence
-//! of the stably sorted whole, so filtering first shrinks the sort
-//! without changing a byte of output.
+//! `Filter` commutes with `SortBy` because the engine's sort is *stable*
+//! (the external merge sort's run-index tie-breaking reproduces a stable
+//! gather-sort exactly): stably sorting a filtered subsequence yields
+//! exactly the subsequence of the stably sorted whole, so filtering
+//! first shrinks the sort without changing a byte of output.
 //!
 //! Cache-registered (persisted) datasets are rewrite barriers: rewriting
 //! one would mint a new node id and detach its cache registration, so the
@@ -377,9 +378,10 @@ fn apply_once(
                     ))
                 }
                 Plan::Sort { input: gin, cmp } => {
-                    // stable gather-sort: sorting the filtered subsequence
-                    // equals filtering the sorted whole, byte for byte —
-                    // and the sort now handles fewer rows
+                    // the sort is stable (external merge sort with
+                    // input-order tie-breaking): sorting the filtered
+                    // subsequence equals filtering the sorted whole, byte
+                    // for byte — and the sort now handles fewer rows
                     counts.filter_pushdown_sort += 1;
                     let pushed = fixpoint(filter_over(gin, expr.clone()), barrier, counts);
                     Some(Dataset::with_node(

@@ -10,6 +10,13 @@
 //!   back on the reduce side, one bucket at a time, in the exact input
 //!   partition order the in-memory path uses — so collected output is
 //!   byte-identical with spilling forced on or off.
+//! * **Sorted runs** — the external merge sort's map side pre-sorts each
+//!   partition (or micro-batch delta) into a [`SortedRun`]: resident
+//!   under a reservation, or spilled as [`RUN_CHUNK_ROWS`]-row colbin
+//!   segments. A [`SortedRunSet`] then streams a k-way merge over run
+//!   cursors (heap keyed by the user comparator, ties broken by run
+//!   index) with bounded read-ahead — byte-identical to a driver-side
+//!   stable gather-sort at any budget.
 //! * **Streaming blocking-op buffers** — [`SpilledRows`] is the
 //!   arrival-order buffer behind raw capture points in
 //!   [`super::stream::query`]: an in-memory tail under a growable
@@ -197,8 +204,20 @@ impl SpillFile {
 
     /// Decode one bucket's rows (exact round-trip, original order).
     pub fn read_bucket(&self, b: usize) -> Result<Vec<Row>> {
+        let mut f = self.open()?;
+        self.read_bucket_at(&mut f, b)
+    }
+
+    /// Open a read handle for repeated bucket reads — a chunk-streaming
+    /// cursor reads many segments from one file and must not pay an
+    /// open/close syscall per segment.
+    fn open(&self) -> Result<std::fs::File> {
+        Ok(std::fs::File::open(&self.path)?)
+    }
+
+    /// Decode one bucket's rows through an already-open handle.
+    fn read_bucket_at(&self, f: &mut std::fs::File, b: usize) -> Result<Vec<Row>> {
         let seg = &self.segments[b];
-        let mut f = std::fs::File::open(&self.path)?;
         f.seek(SeekFrom::Start(seg.offset))?;
         let mut buf = vec![0u8; seg.len as usize];
         f.read_exact(&mut buf)?;
@@ -331,6 +350,273 @@ pub fn transpose_segments(sets: Vec<BucketSet>, num_parts: usize) -> Vec<Vec<Seg
         }
     }
     out
+}
+
+// ---------------------------------------------------------------------
+// external merge sort: sorted runs + k-way merge
+// ---------------------------------------------------------------------
+
+/// Rows per segment when a sorted run spills — and therefore the merge
+/// side's read-ahead unit. One chunk per live cursor is the most the
+/// merge ever holds from a spilled run, so reduce-side memory stays
+/// bounded by `fan_in * RUN_CHUNK_ROWS` rows regardless of run length.
+pub const RUN_CHUNK_ROWS: usize = 1024;
+
+/// One sorted run of the external merge sort: a map task's partition (or
+/// a streaming micro-batch delta), stably pre-sorted by the user
+/// comparator, either resident under a governor reservation or spilled
+/// to a chunked spill file ([`RUN_CHUNK_ROWS`] rows per colbin segment)
+/// so the merge side can stream it back with bounded read-ahead.
+pub enum SortedRun {
+    Mem {
+        rows: Vec<Row>,
+        row_bytes: u64,
+        /// released when the merge cursor (or the run itself) drops
+        res: Option<MemoryReservation>,
+    },
+    Spilled {
+        file: SpillFile,
+        row_bytes: u64,
+        rows: u64,
+    },
+}
+
+impl SortedRun {
+    /// Reserve-or-spill: keep the (already sorted) `rows` resident if the
+    /// governor admits their approximate byte size, else write them to
+    /// `dir` in [`RUN_CHUNK_ROWS`]-row segments.
+    pub fn build(
+        gov: &Arc<MemoryGovernor>,
+        dir: &Arc<SpillDir>,
+        rows: Vec<Row>,
+    ) -> Result<SortedRun> {
+        let row_bytes: u64 = rows.iter().map(|r| r.approx_size() as u64).sum();
+        match MemoryGovernor::try_reserve(gov, row_bytes as usize) {
+            Some(res) => Ok(SortedRun::Mem { rows, row_bytes, res: Some(res) }),
+            None => {
+                // this path runs exactly when memory is exhausted, so the
+                // rows are MOVED into chunk vecs (no row deep-copy — only
+                // the chunk headers are new allocations) before encoding
+                let n = rows.len() as u64;
+                let mut chunks: Vec<Vec<Row>> =
+                    Vec::with_capacity((n as usize).div_ceil(RUN_CHUNK_ROWS).max(1));
+                let mut it = rows.into_iter().peekable();
+                while it.peek().is_some() {
+                    chunks.push(it.by_ref().take(RUN_CHUNK_ROWS).collect());
+                }
+                let file = SpillFile::write_buckets(dir, &chunks)?;
+                Ok(SortedRun::Spilled { file, row_bytes, rows: n })
+            }
+        }
+    }
+
+    pub fn len_rows(&self) -> usize {
+        match self {
+            SortedRun::Mem { rows, .. } => rows.len(),
+            SortedRun::Spilled { rows, .. } => *rows as usize,
+        }
+    }
+
+    /// Uncompressed row bytes (identical whether the run spilled or not).
+    pub fn row_bytes(&self) -> u64 {
+        match self {
+            SortedRun::Mem { row_bytes, .. } | SortedRun::Spilled { row_bytes, .. } => *row_bytes,
+        }
+    }
+
+    /// On-disk bytes when spilled.
+    pub fn spilled_file_bytes(&self) -> Option<u64> {
+        match self {
+            SortedRun::Mem { .. } => None,
+            SortedRun::Spilled { file, .. } => Some(file.file_bytes()),
+        }
+    }
+
+    fn into_cursor(self, gov: &Arc<MemoryGovernor>) -> RunCursor {
+        match self {
+            SortedRun::Mem { rows, res, .. } => {
+                RunCursor::Mem { rows: rows.into_iter(), _res: res }
+            }
+            SortedRun::Spilled { file, .. } => RunCursor::Disk {
+                file,
+                handle: None,
+                next_chunk: 0,
+                buf: Vec::new().into_iter(),
+                res: MemoryGovernor::open(gov),
+            },
+        }
+    }
+}
+
+/// Streaming reader over one sorted run: resident rows verbatim (the
+/// run's reservation rides along until the cursor drops), or chunk-at-a-
+/// time from the run's spill file with the in-flight chunk charged to
+/// the governor. A refused charge still proceeds — the merge must
+/// advance — so the worst transient overdraft is one bounded chunk per
+/// live cursor.
+enum RunCursor {
+    Mem {
+        rows: std::vec::IntoIter<Row>,
+        _res: Option<MemoryReservation>,
+    },
+    Disk {
+        file: SpillFile,
+        /// one handle for the whole run — opened on the first chunk read,
+        /// seeked per chunk (no open/close syscall per segment)
+        handle: Option<std::fs::File>,
+        next_chunk: usize,
+        buf: std::vec::IntoIter<Row>,
+        res: MemoryReservation,
+    },
+}
+
+impl RunCursor {
+    fn next(&mut self) -> Result<Option<Row>> {
+        match self {
+            RunCursor::Mem { rows, .. } => Ok(rows.next()),
+            RunCursor::Disk { file, handle, next_chunk, buf, res } => loop {
+                if let Some(r) = buf.next() {
+                    return Ok(Some(r));
+                }
+                if *next_chunk >= file.num_buckets() {
+                    res.release_all();
+                    return Ok(None);
+                }
+                if handle.is_none() {
+                    *handle = Some(file.open()?);
+                }
+                let rows = file.read_bucket_at(handle.as_mut().unwrap(), *next_chunk)?;
+                *next_chunk += 1;
+                res.release_all();
+                let bytes: usize = rows.iter().map(|r| r.approx_size()).sum();
+                let _ = res.try_grow(bytes);
+                *buf = rows.into_iter();
+            },
+        }
+    }
+}
+
+/// The map-side output of one external merge sort: every sorted run
+/// feeding one merge, in input-partition (batch) / arrival (streaming)
+/// order. The sibling of [`BucketSet`] for order-preserving exchanges.
+#[derive(Default)]
+pub struct SortedRunSet {
+    runs: Vec<SortedRun>,
+}
+
+impl SortedRunSet {
+    pub fn new() -> SortedRunSet {
+        SortedRunSet::default()
+    }
+
+    pub fn from_runs(runs: Vec<SortedRun>) -> SortedRunSet {
+        SortedRunSet { runs }
+    }
+
+    pub fn push(&mut self, run: SortedRun) {
+        self.runs.push(run);
+    }
+
+    pub fn num_runs(&self) -> usize {
+        self.runs.len()
+    }
+
+    /// Total rows across all runs.
+    pub fn len_rows(&self) -> usize {
+        self.runs.iter().map(SortedRun::len_rows).sum()
+    }
+
+    /// Uncompressed row bytes across all runs (mode-independent).
+    pub fn row_bytes(&self) -> u64 {
+        self.runs.iter().map(SortedRun::row_bytes).sum()
+    }
+
+    /// On-disk bytes across spilled runs.
+    pub fn spilled_bytes(&self) -> u64 {
+        self.runs.iter().filter_map(SortedRun::spilled_file_bytes).sum()
+    }
+
+    /// Number of spilled runs (= spill files written).
+    pub fn spilled_files(&self) -> u64 {
+        self.runs
+            .iter()
+            .filter(|r| r.spilled_file_bytes().is_some())
+            .count() as u64
+    }
+
+    /// Streaming k-way merge over run cursors: a binary min-heap of run
+    /// heads keyed by the user comparator with **run-index tie-breaking**
+    /// (among equal heads the earlier run wins, and rows within a run
+    /// keep their order). Merging stably pre-sorted runs this way
+    /// reproduces the stable sort of their concatenation byte for byte,
+    /// at any memory budget — spilled runs stream back one
+    /// [`RUN_CHUNK_ROWS`] segment at a time, charged to `gov`.
+    pub fn merge<C>(self, gov: &Arc<MemoryGovernor>, cmp: &C) -> Result<Vec<Row>>
+    where
+        C: Fn(&Row, &Row) -> std::cmp::Ordering + ?Sized,
+    {
+        use std::cmp::Ordering;
+        let total = self.len_rows();
+        let mut cursors: Vec<RunCursor> = Vec::with_capacity(self.runs.len());
+        for run in self.runs {
+            cursors.push(run.into_cursor(gov));
+        }
+        let mut heap: Vec<(Row, usize)> = Vec::with_capacity(cursors.len());
+        for (i, c) in cursors.iter_mut().enumerate() {
+            if let Some(row) = c.next()? {
+                heap.push((row, i));
+            }
+        }
+        let less = |a: &(Row, usize), b: &(Row, usize)| match cmp(&a.0, &b.0) {
+            Ordering::Less => true,
+            Ordering::Greater => false,
+            Ordering::Equal => a.1 < b.1,
+        };
+        for i in (0..heap.len() / 2).rev() {
+            sift_down(&mut heap, i, &less);
+        }
+        let mut out = Vec::with_capacity(total);
+        while !heap.is_empty() {
+            let run = heap[0].1;
+            match cursors[run].next()? {
+                Some(next) => {
+                    let (row, _) = std::mem::replace(&mut heap[0], (next, run));
+                    out.push(row);
+                }
+                None => {
+                    let (row, _) = heap.swap_remove(0);
+                    out.push(row);
+                }
+            }
+            sift_down(&mut heap, 0, &less);
+        }
+        Ok(out)
+    }
+}
+
+/// Restore the min-heap property from slot `i` downward (`less` is the
+/// strict ordering over `(row, run-index)` heads). No-op on an empty or
+/// single-entry heap.
+fn sift_down<F>(h: &mut [(Row, usize)], mut i: usize, less: &F)
+where
+    F: Fn(&(Row, usize), &(Row, usize)) -> bool,
+{
+    loop {
+        let l = 2 * i + 1;
+        let r = 2 * i + 2;
+        let mut m = i;
+        if l < h.len() && less(&h[l], &h[m]) {
+            m = l;
+        }
+        if r < h.len() && less(&h[r], &h[m]) {
+            m = r;
+        }
+        if m == i {
+            return;
+        }
+        h.swap(i, m);
+        i = m;
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -554,6 +840,70 @@ mod tests {
         assert!(g.reserved_bytes() > 0);
         drop(buf);
         assert_eq!(g.reserved_bytes(), 0, "no leak after buffer drop");
+    }
+
+    fn by_col0(a: &Row, b: &Row) -> std::cmp::Ordering {
+        a.get(0).canonical_cmp(b.get(0))
+    }
+
+    #[test]
+    fn sorted_runs_merge_like_a_stable_sort() {
+        // two stably pre-sorted runs, one resident and one spilled, with
+        // duplicate keys across runs: the merge must interleave by cmp
+        // with run-order tie-breaking — exactly the stable sort of the
+        // concatenation
+        let d = dir();
+        let g = gov(None);
+        let g_tiny = gov(Some(1));
+        let a = vec![row!(0i64, "a0"), row!(2i64, "a1"), row!(2i64, "a2"), row!(5i64, "a3")];
+        let b = vec![row!(0i64, "b0"), row!(2i64, "b1"), row!(3i64, "b2")];
+        let run_a = SortedRun::build(&g, &d, a.clone()).unwrap();
+        assert!(run_a.spilled_file_bytes().is_none());
+        assert!(g.reserved_bytes() > 0, "resident run holds a reservation");
+        let run_b = SortedRun::build(&g_tiny, &d, b.clone()).unwrap();
+        assert!(run_b.spilled_file_bytes().is_some(), "one-byte budget must spill");
+        assert_eq!(run_a.len_rows() + run_b.len_rows(), 7);
+
+        let set = SortedRunSet::from_runs(vec![run_a, run_b]);
+        assert_eq!(set.num_runs(), 2);
+        assert_eq!(set.spilled_files(), 1);
+        assert!(set.spilled_bytes() > 0);
+        let merged = set.merge(&g, &by_col0).unwrap();
+        let mut want = a;
+        want.extend(b);
+        want.sort_by(by_col0); // Vec::sort_by is stable — the reference semantics
+        assert_eq!(merged, want);
+        assert_eq!(g.reserved_bytes(), 0, "cursor released the resident run");
+        assert_eq!(g_tiny.reserved_bytes(), 0);
+    }
+
+    #[test]
+    fn spilled_run_streams_back_in_bounded_chunks() {
+        let d = dir();
+        let tiny = gov(Some(1));
+        let n = (RUN_CHUNK_ROWS * 2 + 100) as i64;
+        let rows: Vec<Row> = (0..n).map(|i| row!(i)).collect();
+        let run = SortedRun::build(&tiny, &d, rows.clone()).unwrap();
+        match &run {
+            SortedRun::Spilled { file, .. } => {
+                assert_eq!(file.num_buckets(), 3, "run split into chunk segments");
+            }
+            SortedRun::Mem { .. } => panic!("one-byte budget must spill the run"),
+        }
+        let merged = SortedRunSet::from_runs(vec![run]).merge(&tiny, &by_col0).unwrap();
+        assert_eq!(merged, rows);
+        assert_eq!(tiny.reserved_bytes(), 0, "chunk charges released with the cursor");
+    }
+
+    #[test]
+    fn empty_run_set_merges_to_nothing() {
+        let g = gov(None);
+        let merged = SortedRunSet::new().merge(&g, &by_col0).unwrap();
+        assert!(merged.is_empty());
+        let d = dir();
+        let empty_run = SortedRun::build(&g, &d, Vec::new()).unwrap();
+        let merged = SortedRunSet::from_runs(vec![empty_run]).merge(&g, &by_col0).unwrap();
+        assert!(merged.is_empty());
     }
 
     #[test]

@@ -25,6 +25,12 @@ pub struct EngineStats {
     pub spill_bytes: AtomicU64,
     /// spill files created (shuffle bucket sets + streaming chunks)
     pub spill_files: AtomicU64,
+    /// sorted runs produced by the external merge sort's map side (one
+    /// per input partition, or per streaming micro-batch delta)
+    pub sort_runs: AtomicU64,
+    /// bytes written to disk by spilled sort runs (also counted in
+    /// `spill_bytes`; split out so sort pressure is attributable)
+    pub sort_spill_bytes: AtomicU64,
 }
 
 impl EngineStats {
@@ -53,6 +59,8 @@ impl EngineStats {
             plan_rewrites: self.plan_rewrites.load(Ordering::Relaxed),
             spill_bytes: self.spill_bytes.load(Ordering::Relaxed),
             spill_files: self.spill_files.load(Ordering::Relaxed),
+            sort_runs: self.sort_runs.load(Ordering::Relaxed),
+            sort_spill_bytes: self.sort_spill_bytes.load(Ordering::Relaxed),
         }
     }
 }
@@ -74,6 +82,8 @@ pub struct StatsSnapshot {
     pub plan_rewrites: u64,
     pub spill_bytes: u64,
     pub spill_files: u64,
+    pub sort_runs: u64,
+    pub sort_spill_bytes: u64,
 }
 
 impl StatsSnapshot {
@@ -94,6 +104,8 @@ impl StatsSnapshot {
             plan_rewrites: self.plan_rewrites - earlier.plan_rewrites,
             spill_bytes: self.spill_bytes - earlier.spill_bytes,
             spill_files: self.spill_files - earlier.spill_files,
+            sort_runs: self.sort_runs - earlier.sort_runs,
+            sort_spill_bytes: self.sort_spill_bytes - earlier.sort_spill_bytes,
         }
     }
 }

@@ -22,20 +22,25 @@
 //! capture consumed by exactly one `ReduceByKey` folds incrementally
 //! (state = one accumulator row per key); one consumed by exactly one
 //! `Distinct` keeps a first-seen set bucketed exactly like the batch
-//! shuffle. Other consumers (sort, join, union, repartition — inherently
-//! blocking ops) accumulate raw rows in arrival order.
+//! shuffle; one consumed by exactly one `Sort` keeps governed sorted
+//! runs (each batch delta pre-sorted, spilled when the budget refuses)
+//! that drain through the external merge sort's k-way merge. Other
+//! consumers (join, union, repartition — inherently blocking ops)
+//! accumulate raw rows in arrival order.
 //!
 //! ## Batch parity
 //!
 //! At drain, incremental captures (`ReduceByKey`, `Distinct`) are
 //! materialized with the *exact partition layout the batch executor
 //! would have produced at that node* — same bucket assignment via the
-//! executor's own hashes, same canonical key order — so everything
+//! executor's own hashes, same canonical key order (`Sort` frontiers
+//! merge their runs with batch-order tie-breaking, which equals the
+//! stable sort of the arrival-order concatenation) — so everything
 //! above them, evaluated by the regular executor, is byte-identical to
 //! the batch run including partition boundaries. Raw captures
-//! (sort/join/union/repartition inputs) preserve exact **row content
+//! (join/union/repartition inputs) preserve exact **row content
 //! and order** but concatenate to a single partition; their consumers
-//! either gather (`Sort`) or re-bucket by content (`Join`,
+//! re-bucket by content (`Join`,
 //! `Repartition`, `Distinct`), which re-normalizes the layout — only a
 //! partition-*boundary*-sensitive operator directly above a `Union` of
 //! a raw capture would observe the difference, which the
@@ -53,11 +58,11 @@
 //! The differential suite in `tests/streaming.rs` asserts this parity at
 //! batch sizes {1, 100, whole-corpus}, optimizer on and off.
 
-use super::super::dataset::{Dataset, KeyFn, Partitioned, Plan, ReduceFn};
+use super::super::dataset::{CmpFn, Dataset, KeyFn, Partitioned, Plan, ReduceFn};
 use super::super::executor::{field_hash, whole_row_key, EngineCtx};
 use super::super::optimizer;
 use super::super::row::{Field, Row, SchemaRef};
-use super::super::spill::SpilledRows;
+use super::super::spill::{SortedRun, SortedRunSet, SpilledRows};
 use crate::util::error::{DdpError, Result};
 use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
@@ -95,6 +100,19 @@ enum CapState {
         consumer: Dataset,
         seen: HashSet<Arc<Row>>,
         buckets: Vec<Vec<Arc<Row>>>,
+    },
+    /// sorted-run frontier for a single `Sort` consumer: each micro-batch
+    /// delta is stably pre-sorted into a governed [`SortedRun`] (spilled
+    /// when the budget refuses), and drain k-way merges the runs — the
+    /// external merge sort's reduce side — instead of materializing the
+    /// whole buffer in memory first. Merging batch-order runs with
+    /// run-index tie-breaking equals the stable sort of the arrival-order
+    /// concatenation, which is exactly what the batch executor produces.
+    /// The consumer is substituted at drain.
+    Sort {
+        consumer: Dataset,
+        cmp: CmpFn,
+        runs: SortedRunSet,
     },
 }
 
@@ -171,6 +189,11 @@ impl StreamQuery {
                         seen: HashSet::new(),
                         buckets: (0..*num_parts).map(|_| Vec::new()).collect(),
                     },
+                    Plan::Sort { cmp, .. } => CapState::Sort {
+                        consumer: uniq[0].clone(),
+                        cmp: cmp.clone(),
+                        runs: SortedRunSet::new(),
+                    },
                     _ => CapState::Raw(SpilledRows::new()),
                 }
             } else {
@@ -229,6 +252,7 @@ impl StreamQuery {
                 CapState::Raw(v) => v.len_rows(),
                 CapState::Reduce { accs, .. } => accs.len(),
                 CapState::Distinct { seen, .. } => seen.len(),
+                CapState::Sort { runs, .. } => runs.len_rows(),
             })
             .sum()
     }
@@ -290,6 +314,21 @@ impl StreamQuery {
                             let b = (distinct_bucket(&r) % num_parts as u64) as usize;
                             buckets[b].push(r);
                         }
+                    }
+                }
+                CapState::Sort { cmp, runs, .. } => {
+                    if !delta.is_empty() {
+                        let cmp = cmp.clone();
+                        let mut run_rows = delta;
+                        run_rows.sort_by(|a, b| cmp(a, b));
+                        let run = SortedRun::build(&ctx.governor, &ctx.spill, run_rows)?;
+                        ctx.stats.add(&ctx.stats.sort_runs, 1);
+                        if let Some(fb) = run.spilled_file_bytes() {
+                            ctx.stats.add(&ctx.stats.sort_spill_bytes, fb);
+                            ctx.stats.add(&ctx.stats.spill_bytes, fb);
+                            ctx.stats.add(&ctx.stats.spill_files, 1);
+                        }
+                        runs.push(run);
                     }
                 }
             }
@@ -367,6 +406,21 @@ impl StreamQuery {
                     subs.insert(
                         consumer.id,
                         Partitioned { schema: consumer.schema.clone(), parts },
+                    );
+                }
+                CapState::Sort { consumer, cmp, runs } => {
+                    // the external merge sort's reduce side, run in place:
+                    // spilled runs stream back chunk-at-a-time, so drain
+                    // memory stays governed instead of materializing the
+                    // whole buffer before sorting
+                    let cmp = cmp.clone();
+                    let rows = std::mem::take(runs).merge(&ctx.governor, &*cmp)?;
+                    subs.insert(
+                        consumer.id,
+                        Partitioned {
+                            schema: consumer.schema.clone(),
+                            parts: vec![Arc::new(rows)],
+                        },
                     );
                 }
             }
@@ -834,8 +888,39 @@ mod tests {
 
     #[test]
     fn raw_capture_spills_under_tiny_budget_and_stays_byte_identical() {
-        // a Sort consumer takes the raw-capture path; a few-hundred-byte
-        // budget forces the buffer onto disk chunk by chunk
+        // a Repartition consumer takes the raw-capture path; a
+        // few-hundred-byte budget forces the buffer onto disk chunk by
+        // chunk
+        let eng = EngineCtx::new(EngineConfig {
+            workers: 2,
+            memory_budget_bytes: Some(512),
+            ..Default::default()
+        });
+        let gov = eng.governor.clone();
+        let src = placeholder();
+        let plan = src.repartition(3);
+        let rows = kv_rows(200);
+        let mut sc = StreamingCtx::new(eng, &plan, &src).unwrap();
+        for chunk in rows.chunks(9) {
+            sc.push_batch(chunk).unwrap();
+        }
+        let got = sc.finish().unwrap();
+        let snap = sc.engine.stats.snapshot();
+        assert!(snap.spill_bytes > 0, "tiny budget must spill the raw buffer");
+        assert!(snap.spill_files > 0);
+
+        let batch_src = Dataset::from_rows("src", kv_schema(), rows, 4);
+        let want = engine().collect(&batch_src.repartition(3)).unwrap();
+        assert_eq!(layout(&got), layout(&want), "spilled drain is byte-identical");
+        drop(sc);
+        assert_eq!(gov.reserved_bytes(), 0, "no reservation leak after drop");
+    }
+
+    #[test]
+    fn sort_frontier_merges_runs_and_spills_under_tiny_budget() {
+        // a Sort consumer takes the sorted-run frontier: per-batch runs
+        // (spilled under the tiny budget) k-way merged at drain, never
+        // materializing the whole buffer unsorted
         let eng = EngineCtx::new(EngineConfig {
             workers: 2,
             memory_budget_bytes: Some(512),
@@ -849,14 +934,16 @@ mod tests {
         for chunk in rows.chunks(9) {
             sc.push_batch(chunk).unwrap();
         }
+        assert_eq!(sc.state_rows(), 200, "sort frontier accounts its buffered rows");
         let got = sc.finish().unwrap();
         let snap = sc.engine.stats.snapshot();
-        assert!(snap.spill_bytes > 0, "tiny budget must spill the raw buffer");
-        assert!(snap.spill_files > 0);
+        assert!(snap.sort_runs > 0, "each micro-batch contributes a run");
+        assert!(snap.sort_spill_bytes > 0, "tiny budget must spill sort runs");
+        assert!(snap.spill_bytes >= snap.sort_spill_bytes);
 
         let batch_src = Dataset::from_rows("src", kv_schema(), rows, 4);
         let want = engine().collect(&batch_src.sort_by(by_v)).unwrap();
-        assert_eq!(layout(&got), layout(&want), "spilled drain is byte-identical");
+        assert_eq!(layout(&got), layout(&want), "spilled merge drain is byte-identical");
         drop(sc);
         assert_eq!(gov.reserved_bytes(), 0, "no reservation leak after drop");
     }

@@ -45,6 +45,8 @@ impl EngineMetricsExporter {
         m.counter_add("engine.plan_rewrites", d.plan_rewrites);
         m.counter_add("engine.spill_bytes", d.spill_bytes);
         m.counter_add("engine.spill_files", d.spill_files);
+        m.counter_add("engine.sort_runs", d.sort_runs);
+        m.counter_add("engine.sort_spill_bytes", d.sort_spill_bytes);
         m.gauge_set(
             "engine.memory.reserved_bytes",
             engine.governor.reserved_bytes() as f64,
@@ -127,6 +129,27 @@ mod tests {
         assert!(m.counter("engine.spill_bytes") > 0, "forced spill must surface");
         assert!(m.counter("engine.spill_files") > 0);
         assert_eq!(m.gauge("engine.memory.reserved_bytes"), 0.0, "idle engine holds nothing");
+    }
+
+    #[test]
+    fn sort_counters_surface_under_forced_spill() {
+        let c = EngineCtx::new(EngineConfig {
+            workers: 2,
+            memory_budget_bytes: Some(512),
+            ..Default::default()
+        });
+        let m = MetricsRegistry::new();
+        let mut ex = EngineMetricsExporter::new();
+        let ds = nums(2000);
+        c.collect(&ds.sort_by(|a, b| a.get(0).canonical_cmp(b.get(0))))
+            .unwrap();
+        ex.publish(&m, &c);
+        assert!(m.counter("engine.sort_runs") > 0, "sort must report its runs");
+        assert!(
+            m.counter("engine.sort_spill_bytes") > 0,
+            "a 512-byte budget must spill sort runs"
+        );
+        assert!(m.counter("engine.spill_bytes") >= m.counter("engine.sort_spill_bytes"));
     }
 
     #[test]
