@@ -22,7 +22,7 @@ use super::expr;
 use super::fault::FaultInjector;
 use super::memory::{self, MemoryGovernor};
 use super::optimizer::{self, RewriteCounts};
-use super::row::{Field, Row};
+use super::row::{ColumnBatch, Field, Row};
 use super::spill::{transpose_segments, BucketSet, SortedRun, SortedRunSet, SpillDir};
 use super::stats::EngineStats;
 use crate::util::error::{DdpError, Result};
@@ -47,6 +47,13 @@ pub struct EngineConfig {
     /// switch, like `fusion`; default honours the `DDP_OPTIMIZE` env var —
     /// `0`/`false` disables)
     pub optimize: bool,
+    /// evaluate structured narrow steps (`filter_expr` / `project`)
+    /// column-at-a-time over [`super::row::ColumnBatch`]es, falling back
+    /// to row-wise execution at opaque-closure boundaries and for inputs
+    /// that cannot form a typed batch (ragged arity / mixed-type
+    /// columns). Ablation switch like `optimize`; default honours the
+    /// `DDP_VECTORIZE` env var — `0`/`false` disables.
+    pub vectorize: bool,
     /// max attempts per task (1 = no retry)
     pub max_task_attempts: u32,
     /// record a task trace for the cluster simulator
@@ -71,6 +78,9 @@ impl Default for EngineConfig {
             cache_budget_bytes: 512 << 20,
             fusion: true,
             optimize: std::env::var("DDP_OPTIMIZE")
+                .map(|v| v != "0" && !v.eq_ignore_ascii_case("false"))
+                .unwrap_or(true),
+            vectorize: std::env::var("DDP_VECTORIZE")
                 .map(|v| v != "0" && !v.eq_ignore_ascii_case("false"))
                 .unwrap_or(true),
             max_task_attempts: 3,
@@ -276,18 +286,15 @@ impl EngineCtx {
                     steps.push(Step::Filter(f.clone()));
                     cur = input.clone();
                 }
+                // expression-backed steps stay structured so the stage can
+                // run them column-at-a-time (closure steps are opaque and
+                // always execute row-wise)
                 Plan::FilterExpr { input, expr } => {
-                    let e = expr.clone();
-                    steps.push(Step::Filter(Arc::new(move |r: &Row| {
-                        expr::truthy(&expr::eval(&e, r))
-                    })));
+                    steps.push(Step::FilterExpr(expr.clone()));
                     cur = input.clone();
                 }
                 Plan::Project { input, cols, .. } => {
-                    let cols = cols.clone();
-                    steps.push(Step::Map(Arc::new(move |r: &Row| {
-                        Row::new(cols.iter().map(|&i| r.get(i).clone()).collect())
-                    })));
+                    steps.push(Step::Project(cols.clone()));
                     cur = input.clone();
                 }
                 Plan::FlatMap { input, f, .. } => {
@@ -316,23 +323,42 @@ impl EngineCtx {
         self.stats.add(&self.stats.stages_run, 1);
         let steps = Arc::new(steps);
         let fusion = self.cfg.fusion;
+        let vectorize = self.cfg.vectorize;
         let tasks: Vec<_> = input
             .parts
             .iter()
             .map(|part| {
                 let part = part.clone();
                 let steps = steps.clone();
-                move || -> Vec<Row> {
-                    if fusion {
-                        apply_chain_fused(&part, &steps)
+                move || -> ChainOut {
+                    if fusion && vectorize {
+                        apply_chain_vectorized(&part, &steps)
+                    } else if fusion {
+                        ChainOut::rows_only(apply_chain_fused(&part, &steps))
                     } else {
-                        apply_chain_materialized(&part, &steps)
+                        // materialize-per-step ablation stays row-wise
+                        ChainOut::rows_only(apply_chain_materialized(&part, &steps))
                     }
                 }
             })
             .collect();
         let outs = self.run_tasks(stage_id, tasks, &input)?;
-        Ok(Partitioned { schema, parts: outs.into_iter().map(Arc::new).collect() })
+        let (mut batches, mut fallbacks) = (0u64, 0u64);
+        let parts = outs
+            .into_iter()
+            .map(|o| {
+                batches += o.vec_batches;
+                fallbacks += o.vec_fallbacks;
+                Arc::new(o.rows)
+            })
+            .collect();
+        if batches > 0 {
+            self.stats.add(&self.stats.vectorized_batches, batches);
+        }
+        if fallbacks > 0 {
+            self.stats.add(&self.stats.vectorized_fallbacks, fallbacks);
+        }
+        Ok(Partitioned { schema, parts })
     }
 
     /// Run tasks with retry + fault injection + stats + tracing.
@@ -762,8 +788,115 @@ impl EngineCtx {
 enum Step {
     Map(super::dataset::MapFn),
     Filter(super::dataset::PredFn),
+    /// structured predicate — vectorizable
+    FilterExpr(Arc<expr::Expr>),
+    /// structured column selection — vectorizable
+    Project(Vec<usize>),
     FlatMap(super::dataset::FlatMapFn),
     PartWise(super::dataset::PartFn),
+}
+
+/// True for steps the columnar evaluator can run over a whole batch.
+fn is_vectorizable(s: &Step) -> bool {
+    matches!(s, Step::FilterExpr(_) | Step::Project(_))
+}
+
+/// A narrow stage task's output: the rows plus vectorization counters
+/// (how many column batches ran, how many segments fell back to rows).
+struct ChainOut {
+    rows: Vec<Row>,
+    vec_batches: u64,
+    vec_fallbacks: u64,
+}
+
+impl ChainOut {
+    fn rows_only(rows: Vec<Row>) -> ChainOut {
+        ChainOut { rows, vec_batches: 0, vec_fallbacks: 0 }
+    }
+}
+
+/// Vectorized execution: maximal runs of expression-backed steps
+/// ([`Step::FilterExpr`] / [`Step::Project`]) evaluate column-at-a-time
+/// over a [`ColumnBatch`]; opaque-closure steps run row-wise between
+/// batch segments (the closure-boundary fallback rule). A vectorizable
+/// segment whose input cannot form a typed batch — ragged arity or a
+/// column mixing concrete types — falls back to the row path for that
+/// segment and counts a `vec_fallbacks`. Byte-identical to
+/// [`apply_chain_fused`] by construction: the kernels share the scalar
+/// core with `expr::eval` (pinned by the vectorize differential suite).
+fn apply_chain_vectorized(part: &[Row], steps: &[Step]) -> ChainOut {
+    if steps.is_empty() {
+        return ChainOut::rows_only(part.to_vec());
+    }
+    let mut batches = 0u64;
+    let mut fallbacks = 0u64;
+    let mut cur: Option<Vec<Row>> = None;
+    let mut i = 0;
+    while i < steps.len() {
+        if is_vectorizable(&steps[i]) {
+            let start = i;
+            while i < steps.len() && is_vectorizable(&steps[i]) {
+                i += 1;
+            }
+            let run = &steps[start..i];
+            let input: &[Row] = cur.as_deref().unwrap_or(part);
+            if input.is_empty() {
+                // trivially vectorized: filters/projections of nothing
+                batches += 1;
+                cur = Some(Vec::new());
+                continue;
+            }
+            match ColumnBatch::try_from_rows(input) {
+                Some(mut batch) => {
+                    batches += 1;
+                    for step in run {
+                        batch = match step {
+                            Step::FilterExpr(e) => {
+                                let keep = expr::eval_mask(e, &batch);
+                                batch.filter(&keep)
+                            }
+                            Step::Project(cols) => batch.project(cols),
+                            _ => unreachable!("segment holds only vectorizable steps"),
+                        };
+                    }
+                    cur = Some(batch.into_rows());
+                }
+                None => {
+                    fallbacks += 1;
+                    let mut out = Vec::with_capacity(input.len());
+                    for row in input {
+                        push_rowwise(row.clone(), run, &mut out);
+                    }
+                    cur = Some(out);
+                }
+            }
+        } else if let Step::PartWise(f) = &steps[i] {
+            let input = cur.take().unwrap_or_else(|| part.to_vec());
+            cur = Some(f(input));
+            i += 1;
+        } else {
+            // a maximal run of opaque row-wise closures
+            let start = i;
+            while i < steps.len()
+                && !is_vectorizable(&steps[i])
+                && !matches!(steps[i], Step::PartWise(_))
+            {
+                i += 1;
+            }
+            let run = &steps[start..i];
+            let input: &[Row] = cur.as_deref().unwrap_or(part);
+            let mut out = Vec::with_capacity(input.len());
+            for row in input {
+                push_rowwise(row.clone(), run, &mut out);
+            }
+            cur = Some(out);
+        }
+    }
+    ChainOut {
+        rows: cur.unwrap_or_else(|| part.to_vec()),
+        vec_batches: batches,
+        vec_fallbacks: fallbacks,
+    }
 }
 
 /// Fused execution: rows stream through consecutive row-wise steps without
@@ -813,6 +946,16 @@ fn push_rowwise(row: Row, ops: &[Step], out: &mut Vec<Row>) {
                     push_rowwise(row, rest, out);
                 }
             }
+            Step::FilterExpr(e) => {
+                if expr::truthy(&expr::eval(e, &row)) {
+                    push_rowwise(row, rest, out);
+                }
+            }
+            Step::Project(cols) => push_rowwise(
+                Row::new(cols.iter().map(|&i| row.get(i).clone()).collect()),
+                rest,
+                out,
+            ),
             Step::FlatMap(f) => {
                 for r in f(&row) {
                     push_rowwise(r, rest, out);
@@ -830,6 +973,14 @@ fn apply_chain_materialized(part: &[Row], steps: &[Step]) -> Vec<Row> {
         cur = match step {
             Step::Map(f) => cur.iter().map(|r| f(r)).collect(),
             Step::Filter(f) => cur.into_iter().filter(|r| f(r)).collect(),
+            Step::FilterExpr(e) => cur
+                .into_iter()
+                .filter(|r| expr::truthy(&expr::eval(e, r)))
+                .collect(),
+            Step::Project(cols) => cur
+                .iter()
+                .map(|r| Row::new(cols.iter().map(|&i| r.get(i).clone()).collect()))
+                .collect(),
             Step::FlatMap(f) => cur.iter().flat_map(|r| f(r)).collect(),
             Step::PartWise(f) => f(cur),
         };
@@ -881,6 +1032,12 @@ impl TaskMeasure for Vec<Row> {
     fn measured(&self) -> (u64, u64) {
         let bytes = self.iter().map(|r| r.approx_size() as u64).sum();
         (bytes, 0)
+    }
+}
+
+impl TaskMeasure for ChainOut {
+    fn measured(&self) -> (u64, u64) {
+        self.rows.measured()
     }
 }
 
@@ -1266,6 +1423,62 @@ mod tests {
             on_stats.shuffle_bytes,
             off_stats.shuffle_bytes
         );
+    }
+
+    #[test]
+    fn vectorize_toggle_identical_and_counted() {
+        use crate::engine::expr::{BinOp, Expr};
+        let run = |vectorize: bool| {
+            let c = EngineCtx::new(EngineConfig { workers: 2, vectorize, ..Default::default() });
+            let schema = Schema::new(vec![("x", FieldType::I64), ("y", FieldType::I64)]);
+            let rows = (0..120i64).map(|i| row!(i, i * 3)).collect();
+            let ds = Dataset::from_rows("xy", schema, rows, 4);
+            let pred = Expr::Binary(
+                BinOp::Gt,
+                Box::new(Expr::Col(1, "y".into())),
+                Box::new(Expr::Lit(Field::I64(30))),
+            );
+            let out = ds.filter_expr(pred).project(vec![1, 0]);
+            let parts: Vec<Vec<Row>> = c
+                .collect(&out)
+                .unwrap()
+                .parts
+                .iter()
+                .map(|p| (**p).clone())
+                .collect();
+            (parts, c.stats.snapshot())
+        };
+        let (on_parts, on_stats) = run(true);
+        let (off_parts, off_stats) = run(false);
+        assert_eq!(on_parts, off_parts, "vectorization changed collected output");
+        assert!(on_stats.vectorized_batches > 0, "columnar path must have run");
+        assert_eq!(on_stats.vectorized_fallbacks, 0, "typed input needs no fallback");
+        assert_eq!(off_stats.vectorized_batches, 0, "row path must not count batches");
+        assert_eq!(off_stats.vectorized_fallbacks, 0);
+    }
+
+    #[test]
+    fn mixed_type_column_falls_back_to_rows() {
+        use crate::engine::expr::{BinOp, Expr};
+        // explicit vectorize=true: the default honours DDP_VECTORIZE, and
+        // this test must observe the fallback counter under any CI matrix
+        let c = EngineCtx::new(EngineConfig { workers: 2, vectorize: true, ..Default::default() });
+        let schema = Schema::new(vec![("v", FieldType::Any)]);
+        // one column alternating I64/Str: no typed batch possible
+        let rows = (0..40i64)
+            .map(|i| if i % 2 == 0 { row!(i) } else { row!(format!("s{i}")) })
+            .collect();
+        let ds = Dataset::from_rows("mixed", schema, rows, 2);
+        let pred = Expr::Binary(
+            BinOp::Ne,
+            Box::new(Expr::Col(0, "v".into())),
+            Box::new(Expr::Lit(Field::I64(0))),
+        );
+        let got = c.collect_rows(&ds.filter_expr(pred)).unwrap();
+        assert_eq!(got.len(), 39); // only the literal 0 row is dropped
+        let snap = c.stats.snapshot();
+        assert!(snap.vectorized_fallbacks > 0, "mixed column must fall back");
+        assert_eq!(snap.vectorized_batches, 0);
     }
 
     #[test]

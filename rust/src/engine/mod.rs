@@ -36,4 +36,4 @@ pub use dataset::{Dataset, JoinKind, Partitioned};
 pub use executor::{EngineConfig, EngineCtx, TaskRecord, TaskTrace};
 pub use memory::MemoryGovernor;
 pub use optimizer::RewriteCounts;
-pub use row::{Field, FieldType, Row, Schema, SchemaRef};
+pub use row::{Column, ColumnBatch, ColumnData, Field, FieldType, Row, Schema, SchemaRef};

@@ -346,6 +346,295 @@ macro_rules! row {
     };
 }
 
+// --------------------------- columnar batches ---------------------------
+
+/// Typed backing storage for one column of a [`ColumnBatch`].
+///
+/// Typed variants hold a placeholder value at null slots (the validity mask
+/// on [`Column`] is authoritative); the `Any` variant stores per-value
+/// tagged [`Field`]s and is used for mixed-type or all-null columns.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ColumnData {
+    Bool(Vec<bool>),
+    I64(Vec<i64>),
+    F64(Vec<f64>),
+    Str(Vec<String>),
+    Bytes(Vec<Vec<u8>>),
+    Any(Vec<Field>),
+}
+
+impl ColumnData {
+    pub fn len(&self) -> usize {
+        match self {
+            ColumnData::Bool(v) => v.len(),
+            ColumnData::I64(v) => v.len(),
+            ColumnData::F64(v) => v.len(),
+            ColumnData::Str(v) => v.len(),
+            ColumnData::Bytes(v) => v.len(),
+            ColumnData::Any(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One column of a [`ColumnBatch`]: typed values plus an optional null
+/// mask (`nulls[i] == true` marks slot `i` null). Invariants: `Any`
+/// columns never carry a mask (nullness lives in the `Field::Null`
+/// values); a mask, when present, has the same length as the data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Column {
+    pub data: ColumnData,
+    pub nulls: Option<Vec<bool>>,
+}
+
+impl Column {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn is_null(&self, i: usize) -> bool {
+        match &self.data {
+            ColumnData::Any(v) => v[i].is_null(),
+            _ => self.nulls.as_ref().is_some_and(|m| m[i]),
+        }
+    }
+
+    /// Build a column from row-major fields: typed storage when all
+    /// non-null values share one concrete type, `Any` otherwise (mixed
+    /// concrete types, or no non-null values at all). Total — never fails.
+    pub fn from_fields(fields: Vec<Field>) -> Column {
+        #[derive(Clone, Copy, PartialEq)]
+        enum T {
+            None,
+            Bool,
+            I64,
+            F64,
+            Str,
+            Bytes,
+            Mixed,
+        }
+        let mut t = T::None;
+        for f in &fields {
+            let ft = match f {
+                Field::Null => continue,
+                Field::Bool(_) => T::Bool,
+                Field::I64(_) => T::I64,
+                Field::F64(_) => T::F64,
+                Field::Str(_) => T::Str,
+                Field::Bytes(_) => T::Bytes,
+            };
+            t = match t {
+                T::None => ft,
+                cur if cur == ft => cur,
+                _ => T::Mixed,
+            };
+        }
+        macro_rules! build {
+            ($variant:ident, $fvariant:ident, $default:expr) => {{
+                let n = fields.len();
+                let mut data = Vec::with_capacity(n);
+                let mut nulls = vec![false; n];
+                let mut any_null = false;
+                for (i, f) in fields.into_iter().enumerate() {
+                    match f {
+                        Field::$fvariant(v) => data.push(v),
+                        Field::Null => {
+                            data.push($default);
+                            nulls[i] = true;
+                            any_null = true;
+                        }
+                        _ => unreachable!("column type scan found a homogeneous type"),
+                    }
+                }
+                Column {
+                    data: ColumnData::$variant(data),
+                    nulls: any_null.then_some(nulls),
+                }
+            }};
+        }
+        match t {
+            T::None | T::Mixed => Column { data: ColumnData::Any(fields), nulls: None },
+            T::Bool => build!(Bool, Bool, false),
+            T::I64 => build!(I64, I64, 0),
+            T::F64 => build!(F64, F64, 0.0),
+            T::Str => build!(Str, Str, String::new()),
+            T::Bytes => build!(Bytes, Bytes, Vec::new()),
+        }
+    }
+
+    /// True when the column holds at least two distinct concrete value
+    /// types. `from_fields` only produces `Any` for mixed or all-null
+    /// input, so: `Any` + any non-null value ⇒ mixed.
+    pub fn is_mixed(&self) -> bool {
+        match &self.data {
+            ColumnData::Any(v) => v.iter().any(|f| !f.is_null()),
+            _ => false,
+        }
+    }
+
+    /// Clone out the field at slot `i`.
+    pub fn field_at(&self, i: usize) -> Field {
+        if self.is_null(i) {
+            return Field::Null;
+        }
+        match &self.data {
+            ColumnData::Bool(v) => Field::Bool(v[i]),
+            ColumnData::I64(v) => Field::I64(v[i]),
+            ColumnData::F64(v) => Field::F64(v[i]),
+            ColumnData::Str(v) => Field::Str(v[i].clone()),
+            ColumnData::Bytes(v) => Field::Bytes(v[i].clone()),
+            ColumnData::Any(v) => v[i].clone(),
+        }
+    }
+
+    /// Consume the column back into row-major fields.
+    pub fn into_fields(self) -> Vec<Field> {
+        let Column { data, nulls } = self;
+        fn wrap<T>(
+            data: Vec<T>,
+            nulls: Option<Vec<bool>>,
+            mk: impl Fn(T) -> Field,
+        ) -> Vec<Field> {
+            match nulls {
+                None => data.into_iter().map(mk).collect(),
+                Some(m) => data
+                    .into_iter()
+                    .zip(m)
+                    .map(|(v, n)| if n { Field::Null } else { mk(v) })
+                    .collect(),
+            }
+        }
+        match data {
+            ColumnData::Bool(v) => wrap(v, nulls, Field::Bool),
+            ColumnData::I64(v) => wrap(v, nulls, Field::I64),
+            ColumnData::F64(v) => wrap(v, nulls, Field::F64),
+            ColumnData::Str(v) => wrap(v, nulls, Field::Str),
+            ColumnData::Bytes(v) => wrap(v, nulls, Field::Bytes),
+            ColumnData::Any(v) => v,
+        }
+    }
+
+    /// Keep only slots where `keep[i]` is true (`kept` is the precomputed
+    /// survivor count, for allocation).
+    pub fn filtered(&self, keep: &[bool], kept: usize) -> Column {
+        fn sel<T: Clone>(v: &[T], keep: &[bool], kept: usize) -> Vec<T> {
+            let mut out = Vec::with_capacity(kept);
+            for (x, k) in v.iter().zip(keep) {
+                if *k {
+                    out.push(x.clone());
+                }
+            }
+            out
+        }
+        let data = match &self.data {
+            ColumnData::Bool(v) => ColumnData::Bool(sel(v, keep, kept)),
+            ColumnData::I64(v) => ColumnData::I64(sel(v, keep, kept)),
+            ColumnData::F64(v) => ColumnData::F64(sel(v, keep, kept)),
+            ColumnData::Str(v) => ColumnData::Str(sel(v, keep, kept)),
+            ColumnData::Bytes(v) => ColumnData::Bytes(sel(v, keep, kept)),
+            ColumnData::Any(v) => ColumnData::Any(sel(v, keep, kept)),
+        };
+        let nulls = self.nulls.as_ref().map(|m| sel(m, keep, kept));
+        Column { data, nulls }
+    }
+}
+
+/// A rectangular batch of rows in columnar layout: one [`Column`] per
+/// schema position. The batch length is stored explicitly so zero-column
+/// batches (and empty inputs) stay well-defined.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ColumnBatch {
+    pub cols: Vec<Column>,
+    len: usize,
+}
+
+impl ColumnBatch {
+    pub fn new(cols: Vec<Column>, len: usize) -> ColumnBatch {
+        debug_assert!(cols.iter().all(|c| c.len() == len));
+        ColumnBatch { cols, len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn num_cols(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Transpose rows into columns. Returns `None` when the rows cannot be
+    /// represented as a typed batch: ragged arity, or a column mixing two
+    /// concrete value types (the engine falls back to row-at-a-time
+    /// execution for those). Empty input yields an empty batch.
+    pub fn try_from_rows(rows: &[Row]) -> Option<ColumnBatch> {
+        let Some(first) = rows.first() else {
+            return Some(ColumnBatch { cols: Vec::new(), len: 0 });
+        };
+        let width = first.fields.len();
+        if rows.iter().any(|r| r.fields.len() != width) {
+            return None;
+        }
+        let mut cols = Vec::with_capacity(width);
+        for c in 0..width {
+            let col = Column::from_fields(rows.iter().map(|r| r.fields[c].clone()).collect());
+            if col.is_mixed() {
+                return None;
+            }
+            cols.push(col);
+        }
+        Some(ColumnBatch { cols, len: rows.len() })
+    }
+
+    /// Transpose columns back into rows, consuming the batch (no clones).
+    pub fn into_rows(self) -> Vec<Row> {
+        let len = self.len;
+        let mut its: Vec<std::vec::IntoIter<Field>> =
+            self.cols.into_iter().map(|c| c.into_fields().into_iter()).collect();
+        (0..len)
+            .map(|_| Row::new(its.iter_mut().map(|it| it.next().unwrap()).collect()))
+            .collect()
+    }
+
+    /// Clone out row `r`.
+    pub fn row_at(&self, r: usize) -> Row {
+        Row::new(self.cols.iter().map(|c| c.field_at(r)).collect())
+    }
+
+    /// Keep only rows where `keep[i]` is true.
+    pub fn filter(&self, keep: &[bool]) -> ColumnBatch {
+        assert_eq!(keep.len(), self.len);
+        let kept = keep.iter().filter(|k| **k).count();
+        let cols = self.cols.iter().map(|c| c.filtered(keep, kept)).collect();
+        ColumnBatch { cols, len: kept }
+    }
+
+    /// Select (and possibly duplicate/reorder) columns by index. Columns
+    /// used exactly once are moved, not cloned.
+    pub fn project(self, idxs: &[usize]) -> ColumnBatch {
+        let len = self.len;
+        let mut used = vec![false; self.cols.len()];
+        let unique = idxs.iter().all(|&i| !std::mem::replace(&mut used[i], true));
+        let cols = if unique {
+            let mut slots: Vec<Option<Column>> = self.cols.into_iter().map(Some).collect();
+            idxs.iter().map(|&i| slots[i].take().unwrap()).collect()
+        } else {
+            idxs.iter().map(|&i| self.cols[i].clone()).collect()
+        };
+        ColumnBatch { cols, len }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -396,6 +685,101 @@ mod tests {
         assert_eq!(Field::I64(9).canonical_cmp(&Field::F64(1.0)), Ordering::Less);
         // NaN is ordered (IEEE total order), so sorts are never ambiguous
         assert_eq!(Field::F64(f64::NAN).canonical_cmp(&Field::F64(f64::NAN)), Ordering::Equal);
+    }
+
+    #[test]
+    fn canonical_cmp_nonfinite_and_null_total_order() {
+        use std::cmp::Ordering;
+        // IEEE total order over f64: -NaN < -inf < finite < +inf < +NaN
+        let neg_nan = f64::from_bits(f64::NAN.to_bits() | (1u64 << 63));
+        let mut keys = vec![
+            Field::F64(f64::NAN),
+            Field::F64(f64::INFINITY),
+            Field::F64(1.0),
+            Field::F64(f64::NEG_INFINITY),
+            Field::F64(neg_nan),
+            Field::Null,
+        ];
+        keys.sort_by(|a, b| a.canonical_cmp(b));
+        assert_eq!(keys[0], Field::Null); // Null tag sorts before every F64
+        assert!(matches!(keys[1], Field::F64(v) if v.is_nan() && v.is_sign_negative()));
+        assert_eq!(keys[2], Field::F64(f64::NEG_INFINITY));
+        assert_eq!(keys[3], Field::F64(1.0));
+        assert_eq!(keys[4], Field::F64(f64::INFINITY));
+        assert!(matches!(keys[5], Field::F64(v) if v.is_nan() && v.is_sign_positive()));
+        // -0.0 and +0.0 are distinct under total order (deterministic ties)
+        assert_eq!(Field::F64(-0.0).canonical_cmp(&Field::F64(0.0)), Ordering::Less);
+        // antisymmetric spot-check so both paths sort identically
+        for a in &keys {
+            for b in &keys {
+                assert_eq!(a.canonical_cmp(b), b.canonical_cmp(a).reverse());
+            }
+        }
+    }
+
+    #[test]
+    fn column_from_fields_typed_and_mixed() {
+        // homogeneous → typed, nulls carried in the mask
+        let c = Column::from_fields(vec![Field::I64(1), Field::Null, Field::I64(3)]);
+        assert!(matches!(&c.data, ColumnData::I64(v) if v == &vec![1, 0, 3]));
+        assert!(c.is_null(1) && !c.is_null(0));
+        assert!(!c.is_mixed());
+        assert_eq!(c.field_at(1), Field::Null);
+        assert_eq!(c.field_at(2), Field::I64(3));
+        // mixed concrete types → Any, flagged
+        let m = Column::from_fields(vec![Field::I64(1), Field::Str("x".into())]);
+        assert!(matches!(&m.data, ColumnData::Any(_)));
+        assert!(m.is_mixed());
+        // all-null → Any but NOT mixed (vectorizable)
+        let n = Column::from_fields(vec![Field::Null, Field::Null]);
+        assert!(!n.is_mixed());
+        assert!(n.is_null(0));
+    }
+
+    #[test]
+    fn batch_row_roundtrip() {
+        let rows = vec![
+            row!(1i64, "a", 1.5),
+            Row::new(vec![Field::Null, Field::Str("b".into()), Field::F64(f64::NAN)]),
+            row!(3i64, "c", -0.0),
+        ];
+        let b = ColumnBatch::try_from_rows(&rows).unwrap();
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.num_cols(), 3);
+        assert_eq!(b.row_at(1).fields[1], Field::Str("b".into()));
+        let back = b.into_rows();
+        // NaN != NaN under PartialEq; compare via canonical order
+        assert_eq!(back.len(), rows.len());
+        for (x, y) in back.iter().zip(&rows) {
+            for (fx, fy) in x.fields.iter().zip(&y.fields) {
+                assert_eq!(fx.canonical_cmp(fy), std::cmp::Ordering::Equal);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_rejects_ragged_and_mixed() {
+        let ragged = vec![row!(1i64), row!(1i64, 2i64)];
+        assert!(ColumnBatch::try_from_rows(&ragged).is_none());
+        let mixed = vec![row!(1i64), row!("s")];
+        assert!(ColumnBatch::try_from_rows(&mixed).is_none());
+        // empty input is fine (zero-width, zero-length batch)
+        let empty = ColumnBatch::try_from_rows(&[]).unwrap();
+        assert!(empty.is_empty());
+        assert_eq!(empty.into_rows(), Vec::<Row>::new());
+    }
+
+    #[test]
+    fn batch_filter_and_project() {
+        let rows = vec![row!(1i64, "a"), row!(2i64, "b"), row!(3i64, "c")];
+        let b = ColumnBatch::try_from_rows(&rows).unwrap();
+        let f = b.filter(&[true, false, true]);
+        assert_eq!(f.len(), 2);
+        assert_eq!(f.row_at(1), row!(3i64, "c"));
+        // duplicate + reorder projection
+        let p = f.project(&[1, 0, 1]);
+        assert_eq!(p.row_at(0), row!("a", 1i64, "a"));
+        assert_eq!(p.into_rows()[1], row!("c", 3i64, "c"));
     }
 
     #[test]

@@ -32,7 +32,7 @@
 //! or any still-live spill handle — goes away.
 
 use super::memory::{MemoryGovernor, MemoryReservation};
-use super::row::{Field, FieldType, Row, Schema, SchemaRef};
+use super::row::{ColumnBatch, Field, FieldType, Row, Schema, SchemaRef};
 use crate::io::colbin;
 use crate::util::error::Result;
 use std::io::{Read, Seek, SeekFrom, Write};
@@ -206,6 +206,23 @@ impl SpillFile {
     pub fn read_bucket(&self, b: usize) -> Result<Vec<Row>> {
         let mut f = self.open()?;
         self.read_bucket_at(&mut f, b)
+    }
+
+    /// Decode one bucket straight into a [`ColumnBatch`] — colbin's
+    /// native decode direction, no intermediate rows. Returns `None` for
+    /// ragged buckets: those were padded to rectangular for encoding and
+    /// must be truncated back per row, so they only exist as rows
+    /// ([`SpillFile::read_bucket`] handles them).
+    pub fn read_bucket_batch(&self, b: usize) -> Result<Option<ColumnBatch>> {
+        let seg = &self.segments[b];
+        if seg.widths.is_some() {
+            return Ok(None);
+        }
+        let mut f = self.open()?;
+        f.seek(SeekFrom::Start(seg.offset))?;
+        let mut buf = vec![0u8; seg.len as usize];
+        f.read_exact(&mut buf)?;
+        Ok(Some(colbin::decode_columns(&spill_schema(seg.width), &buf)?))
     }
 
     /// Open a read handle for repeated bucket reads — a chunk-streaming
@@ -720,7 +737,7 @@ impl SpilledRows {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::row::Field;
+    use crate::engine::row::{ColumnData, Field};
     use crate::row;
 
     fn dir() -> Arc<SpillDir> {
@@ -750,6 +767,31 @@ mod tests {
         assert!(path.exists());
         drop(f);
         assert!(!path.exists(), "spill file deleted on drop");
+    }
+
+    #[test]
+    fn bucket_batch_read_is_column_native() {
+        let d = dir();
+        let buckets = vec![rows(0, 9), Vec::new()];
+        let f = SpillFile::write_buckets(&d, &buckets).unwrap();
+        let batch =
+            f.read_bucket_batch(0).unwrap().expect("rectangular bucket reads as a batch");
+        assert_eq!(batch.len(), 9);
+        // the all-Any spill schema still lands typed columns: each column
+        // of these rows is homogeneous, so decode densifies it
+        assert!(matches!(batch.cols[0].data, ColumnData::I64(_)));
+        assert!(matches!(batch.cols[1].data, ColumnData::Str(_)));
+        assert!(matches!(batch.cols[2].data, ColumnData::F64(_)));
+        assert_eq!(batch.into_rows(), buckets[0]);
+        let empty = f.read_bucket_batch(1).unwrap().expect("empty bucket is rectangular");
+        assert_eq!(empty.len(), 0);
+
+        // ragged buckets have no columnar representation — the row read
+        // (which truncates pad Nulls back off) is the only exact path
+        let ragged = vec![row!(1i64), Row::new(vec![Field::I64(1), Field::I64(2)])];
+        let f2 = SpillFile::write_buckets(&d, std::slice::from_ref(&ragged)).unwrap();
+        assert!(f2.read_bucket_batch(0).unwrap().is_none());
+        assert_eq!(f2.read_bucket(0).unwrap(), ragged);
     }
 
     #[test]

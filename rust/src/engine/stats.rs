@@ -31,6 +31,12 @@ pub struct EngineStats {
     /// bytes written to disk by spilled sort runs (also counted in
     /// `spill_bytes`; split out so sort pressure is attributable)
     pub sort_spill_bytes: AtomicU64,
+    /// column batches executed by the vectorized narrow-stage path (one
+    /// per contiguous run of expression-backed steps per partition)
+    pub vectorized_batches: AtomicU64,
+    /// vectorizable segments that fell back to row-at-a-time execution
+    /// (ragged input arity or a mixed-type column)
+    pub vectorized_fallbacks: AtomicU64,
 }
 
 impl EngineStats {
@@ -61,6 +67,8 @@ impl EngineStats {
             spill_files: self.spill_files.load(Ordering::Relaxed),
             sort_runs: self.sort_runs.load(Ordering::Relaxed),
             sort_spill_bytes: self.sort_spill_bytes.load(Ordering::Relaxed),
+            vectorized_batches: self.vectorized_batches.load(Ordering::Relaxed),
+            vectorized_fallbacks: self.vectorized_fallbacks.load(Ordering::Relaxed),
         }
     }
 }
@@ -84,6 +92,8 @@ pub struct StatsSnapshot {
     pub spill_files: u64,
     pub sort_runs: u64,
     pub sort_spill_bytes: u64,
+    pub vectorized_batches: u64,
+    pub vectorized_fallbacks: u64,
 }
 
 impl StatsSnapshot {
@@ -106,6 +116,8 @@ impl StatsSnapshot {
             spill_files: self.spill_files - earlier.spill_files,
             sort_runs: self.sort_runs - earlier.sort_runs,
             sort_spill_bytes: self.sort_spill_bytes - earlier.sort_spill_bytes,
+            vectorized_batches: self.vectorized_batches - earlier.vectorized_batches,
+            vectorized_fallbacks: self.vectorized_fallbacks - earlier.vectorized_fallbacks,
         }
     }
 }

@@ -17,7 +17,7 @@
 //! behaviour. The engine's disk-spill path (`engine::spill`) relies on
 //! tagged `Any` columns for exact row round-trips.
 
-use crate::engine::row::{Field, FieldType, Row, Schema, SchemaRef};
+use crate::engine::row::{Column, ColumnBatch, ColumnData, Field, FieldType, Row, Schema, SchemaRef};
 use crate::util::error::{DdpError, Result};
 use flate2::read::ZlibDecoder;
 use flate2::write::ZlibEncoder;
@@ -131,8 +131,19 @@ pub fn encode(schema: &Schema, rows: &[Row]) -> Result<Vec<u8>> {
     Ok(out)
 }
 
-/// Decode a colbin blob. The declared schema must match the embedded one.
+/// Decode a colbin blob into rows (a transpose over [`decode_columns`]).
+/// The declared schema must match the embedded one.
 pub fn decode(schema: &SchemaRef, bytes: &[u8]) -> Result<Vec<Row>> {
+    Ok(decode_columns(schema, bytes)?.into_rows())
+}
+
+/// Decode a colbin blob straight into a [`ColumnBatch`] — the natural
+/// direction for this column-major format. Typed columns land in dense
+/// typed vectors (placeholder values at null slots, validity mask
+/// alongside) without materializing intermediate rows; `Any` columns
+/// decode per-value and densify to typed storage when the stored values
+/// turn out homogeneous.
+pub fn decode_columns(schema: &SchemaRef, bytes: &[u8]) -> Result<ColumnBatch> {
     let mut cur = Cursor { b: bytes, p: 0 };
     if cur.take(4)? != MAGIC {
         return Err(DdpError::format("colbin", "bad magic"));
@@ -182,47 +193,79 @@ pub fn decode(schema: &SchemaRef, bytes: &[u8]) -> Result<Vec<Row>> {
         .map_err(|e| DdpError::format("colbin", format!("decompress: {e}")))?;
 
     let mut cur = Cursor { b: &payload, p: 0 };
-    let mut cols: Vec<Vec<Field>> = Vec::with_capacity(ncols);
+    let mut cols: Vec<Column> = Vec::with_capacity(ncols);
     for &ty in &types {
-        let bitmap = cur.take(nrows.div_ceil(8))?.to_vec();
-        let mut col = Vec::with_capacity(nrows);
-        for r in 0..nrows {
-            let present = bitmap[r / 8] & (1 << (r % 8)) != 0;
-            if !present {
-                col.push(Field::Null);
-                continue;
-            }
-            col.push(match ty {
-                FieldType::Any => {
-                    if version >= 2 {
-                        // self-describing value (see module docs)
+        let bitmap = cur.take(nrows.div_ceil(8))?;
+        let null_at: Vec<bool> =
+            (0..nrows).map(|r| bitmap[r / 8] & (1 << (r % 8)) == 0).collect();
+        let mask = null_at.contains(&true).then(|| null_at.clone());
+        cols.push(match ty {
+            FieldType::Any => {
+                // self-describing values (v2) or v1 legacy strings;
+                // nullness lives in the `Field`s, never in a mask
+                let mut v = Vec::with_capacity(nrows);
+                for r in 0..nrows {
+                    v.push(if null_at[r] {
+                        Field::Null
+                    } else if version >= 2 {
                         let vt = tag_type(cur.u8()?)?;
                         read_value(&mut cur, vt)?
                     } else {
-                        // v1 legacy: Any columns were written as strings
-                        read_str(&mut cur)?
-                    }
+                        Field::Str(read_str(&mut cur)?)
+                    });
                 }
-                ty => read_value(&mut cur, ty)?,
-            });
-        }
-        cols.push(col);
+                Column::from_fields(v)
+            }
+            FieldType::Bool => {
+                let mut v = Vec::with_capacity(nrows);
+                for r in 0..nrows {
+                    v.push(if null_at[r] { false } else { cur.u8()? != 0 });
+                }
+                Column { data: ColumnData::Bool(v), nulls: mask }
+            }
+            FieldType::I64 => {
+                let mut v = Vec::with_capacity(nrows);
+                for r in 0..nrows {
+                    v.push(if null_at[r] { 0 } else { i64::from_le_bytes(cur.arr8()?) });
+                }
+                Column { data: ColumnData::I64(v), nulls: mask }
+            }
+            FieldType::F64 => {
+                let mut v = Vec::with_capacity(nrows);
+                for r in 0..nrows {
+                    v.push(if null_at[r] { 0.0 } else { f64::from_le_bytes(cur.arr8()?) });
+                }
+                Column { data: ColumnData::F64(v), nulls: mask }
+            }
+            FieldType::Str => {
+                let mut v = Vec::with_capacity(nrows);
+                for r in 0..nrows {
+                    v.push(if null_at[r] { String::new() } else { read_str(&mut cur)? });
+                }
+                Column { data: ColumnData::Str(v), nulls: mask }
+            }
+            FieldType::Bytes => {
+                let mut v = Vec::with_capacity(nrows);
+                for r in 0..nrows {
+                    v.push(if null_at[r] {
+                        Vec::new()
+                    } else {
+                        let len = cur.u32()? as usize;
+                        cur.take(len)?.to_vec()
+                    });
+                }
+                Column { data: ColumnData::Bytes(v), nulls: mask }
+            }
+        });
     }
-    // transpose to rows
-    let mut rows = Vec::with_capacity(nrows);
-    for r in 0..nrows {
-        rows.push(Row::new(cols.iter_mut().map(|c| std::mem::replace(&mut c[r], Field::Null)).collect()));
-    }
-    Ok(rows)
+    Ok(ColumnBatch::new(cols, nrows))
 }
 
-fn read_str(cur: &mut Cursor<'_>) -> Result<Field> {
+fn read_str(cur: &mut Cursor<'_>) -> Result<String> {
     let len = cur.u32()? as usize;
-    Ok(Field::Str(
-        std::str::from_utf8(cur.take(len)?)
-            .map_err(|_| DdpError::format("colbin", "bad utf8"))?
-            .to_string(),
-    ))
+    Ok(std::str::from_utf8(cur.take(len)?)
+        .map_err(|_| DdpError::format("colbin", "bad utf8"))?
+        .to_string())
 }
 
 /// Read one present value of a concrete type — shared by the typed
@@ -233,7 +276,7 @@ fn read_value(cur: &mut Cursor<'_>, ty: FieldType) -> Result<Field> {
         FieldType::Bool => Field::Bool(cur.u8()? != 0),
         FieldType::I64 => Field::I64(i64::from_le_bytes(cur.arr8()?)),
         FieldType::F64 => Field::F64(f64::from_le_bytes(cur.arr8()?)),
-        FieldType::Str => read_str(cur)?,
+        FieldType::Str => Field::Str(read_str(cur)?),
         FieldType::Bytes => {
             let len = cur.u32()? as usize;
             Field::Bytes(cur.take(len)?.to_vec())
@@ -369,6 +412,50 @@ mod tests {
         ];
         let blob = encode(&s, &rows).unwrap();
         assert_eq!(decode(&s, &blob).unwrap(), rows);
+    }
+
+    #[test]
+    fn decode_columns_typed_layout() {
+        let s = schema();
+        let rows = vec![
+            row!(1i64, "a", 0.5, true, Field::Bytes(vec![1])),
+            Row::new(vec![Field::Null, Field::Null, Field::Null, Field::Null, Field::Null]),
+            row!(3i64, "c", 1.5, false, Field::Bytes(vec![])),
+        ];
+        let blob = encode(&s, &rows).unwrap();
+        let batch = decode_columns(&s, &blob).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert!(matches!(batch.cols[0].data, ColumnData::I64(_)));
+        assert!(matches!(batch.cols[1].data, ColumnData::Str(_)));
+        assert!(matches!(batch.cols[2].data, ColumnData::F64(_)));
+        assert!(matches!(batch.cols[3].data, ColumnData::Bool(_)));
+        assert!(matches!(batch.cols[4].data, ColumnData::Bytes(_)));
+        assert!(batch.cols.iter().all(|c| c.is_null(1)), "row 1 is all null");
+        assert_eq!(batch.into_rows(), rows);
+    }
+
+    #[test]
+    fn decode_columns_densifies_homogeneous_any() {
+        let s = Schema::new(vec![("a", FieldType::Any)]);
+        let rows = vec![row!(1i64), Row::new(vec![Field::Null]), row!(2i64)];
+        let blob = encode(&s, &rows).unwrap();
+        let batch = decode_columns(&s, &blob).unwrap();
+        assert!(
+            matches!(batch.cols[0].data, ColumnData::I64(_)),
+            "homogeneous Any column densifies to typed storage"
+        );
+        assert!(batch.cols[0].is_null(1));
+        assert_eq!(batch.into_rows(), rows);
+    }
+
+    #[test]
+    fn decode_columns_empty_blob() {
+        let s = schema();
+        let blob = encode(&s, &[]).unwrap();
+        let batch = decode_columns(&s, &blob).unwrap();
+        assert_eq!(batch.len(), 0);
+        assert_eq!(batch.num_cols(), 5);
+        assert!(batch.into_rows().is_empty());
     }
 
     #[test]

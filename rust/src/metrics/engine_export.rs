@@ -47,6 +47,8 @@ impl EngineMetricsExporter {
         m.counter_add("engine.spill_files", d.spill_files);
         m.counter_add("engine.sort_runs", d.sort_runs);
         m.counter_add("engine.sort_spill_bytes", d.sort_spill_bytes);
+        m.counter_add("engine.vectorized_batches", d.vectorized_batches);
+        m.counter_add("engine.vectorized_fallbacks", d.vectorized_fallbacks);
         m.gauge_set(
             "engine.memory.reserved_bytes",
             engine.governor.reserved_bytes() as f64,
@@ -112,6 +114,25 @@ mod tests {
         c.count(&ds.filter(|_| true)).unwrap();
         ex.publish(&m, &c);
         assert!(m.counter("engine.tasks_launched") > first);
+    }
+
+    #[test]
+    fn vectorized_counters_surface() {
+        use crate::engine::expr::{BinOp, Expr};
+        use crate::engine::row::Field;
+        let c = EngineCtx::new(EngineConfig { workers: 2, vectorize: true, ..Default::default() });
+        let m = MetricsRegistry::new();
+        let mut ex = EngineMetricsExporter::new();
+        let ds = nums(100);
+        let pred = Expr::Binary(
+            BinOp::Ge,
+            Box::new(Expr::Col(0, "x".into())),
+            Box::new(Expr::Lit(Field::I64(10))),
+        );
+        c.count(&ds.filter_expr(pred)).unwrap();
+        ex.publish(&m, &c);
+        assert!(m.counter("engine.vectorized_batches") > 0, "columnar batches must surface");
+        assert_eq!(m.counter("engine.vectorized_fallbacks"), 0);
     }
 
     #[test]

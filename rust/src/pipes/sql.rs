@@ -58,14 +58,40 @@ fn lex(src: &str) -> Result<Vec<Tok>> {
             '\'' => {
                 let mut s = String::new();
                 i += 1;
-                while i < chars.len() && chars[i] != '\'' {
-                    s.push(chars[i]);
-                    i += 1;
+                loop {
+                    if i >= chars.len() {
+                        return Err(DdpError::config("unterminated string literal"));
+                    }
+                    match chars[i] {
+                        '\'' => {
+                            i += 1;
+                            break;
+                        }
+                        '\\' => {
+                            // only \' and \\ are defined — exactly what
+                            // `Expr`'s Display emits, so printed literals
+                            // re-lex to the same string
+                            i += 1;
+                            match chars.get(i) {
+                                Some('\'') => s.push('\''),
+                                Some('\\') => s.push('\\'),
+                                Some(other) => {
+                                    return Err(DdpError::config(format!(
+                                        "unknown escape '\\{other}' in string literal"
+                                    )))
+                                }
+                                None => {
+                                    return Err(DdpError::config("unterminated string literal"))
+                                }
+                            }
+                            i += 1;
+                        }
+                        c => {
+                            s.push(c);
+                            i += 1;
+                        }
+                    }
                 }
-                if i >= chars.len() {
-                    return Err(DdpError::config("unterminated string literal"));
-                }
-                i += 1;
                 toks.push(Tok::Str(s));
             }
             '<' | '>' | '!' => {
@@ -481,6 +507,34 @@ mod tests {
         assert!(compile("frobnicate(id)", &s).is_err());
         assert!(compile("id 5", &s).is_err());
         assert!(compile("'unterminated", &s).is_err());
+        assert!(compile(r"'ends in escape\", &s).is_err());
+        assert!(compile(r"'bad \n escape'", &s).is_err(), "unknown escapes are rejected");
+    }
+
+    #[test]
+    fn string_escapes_lex_and_round_trip() {
+        let s = schema();
+        let r = row!(1i64, "it's", 0.0);
+        // \' and \\ decode inside literals
+        assert_eq!(eval_str(r"name = 'it\'s'", &r), Field::Bool(true));
+        let r2 = row!(1i64, r"a\b", 0.0);
+        assert_eq!(eval_str(r"name = 'a\\b'", &r2), Field::Bool(true));
+
+        // Display emits the same escapes, so display ∘ compile is the
+        // identity on the AST — pinned on literals that need escaping
+        for src in [
+            r"name = 'it\'s'",
+            r"contains(name, 'x\\y')",
+            r"(name != '\\\'') and starts_with(name, 'a')",
+        ] {
+            let e = compile(src, &s).unwrap();
+            let printed = e.to_string();
+            let back = compile(&printed, &s).unwrap();
+            assert_eq!(back, e, "'{src}' printed as '{printed}' did not round-trip");
+        }
+        // golden: the exact printed form of an escaped literal
+        let e = compile(r"name = 'it\'s'", &s).unwrap();
+        assert_eq!(e.to_string(), r"(name = 'it\'s')");
     }
 
     #[test]

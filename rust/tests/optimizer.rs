@@ -32,6 +32,17 @@ fn run(optimize: bool, ds: &Dataset) -> (Vec<Vec<Row>>, StatsSnapshot) {
     (parts, c.stats.snapshot())
 }
 
+fn run_v(optimize: bool, vectorize: bool, ds: &Dataset) -> (Vec<Vec<Row>>, StatsSnapshot) {
+    let c = EngineCtx::new(EngineConfig {
+        workers: 2,
+        optimize,
+        vectorize,
+        ..Default::default()
+    });
+    let parts = layout(&c.collect(ds).unwrap());
+    (parts, c.stats.snapshot())
+}
+
 fn no_barrier(_: u64) -> bool {
     false
 }
@@ -204,16 +215,22 @@ fn rand_plan(g: &mut Gen) -> Dataset {
 
 #[test]
 fn differential_optimizer_on_off_byte_identical() {
+    // full {optimize} × {vectorize} matrix: the optimizer must not change
+    // output, and neither may the columnar execution path under any
+    // optimizer setting
     property(100, |g| {
         let plan = rand_plan(g);
-        let (on, _) = run(true, &plan);
-        let (off, _) = run(false, &plan);
-        assert_eq!(
-            off, on,
-            "optimizer changed collected output (case {})\nplan:\n{}",
-            g.case,
-            plan.plan_display()
-        );
+        let (base, _) = run_v(false, false, &plan);
+        for (optimize, vectorize) in [(false, true), (true, false), (true, true)] {
+            let (got, _) = run_v(optimize, vectorize, &plan);
+            assert_eq!(
+                base,
+                got,
+                "optimize={optimize} vectorize={vectorize} changed collected output (case {})\nplan:\n{}",
+                g.case,
+                plan.plan_display()
+            );
+        }
     });
 }
 

@@ -17,7 +17,8 @@
 //! * **trace skew** — sort map tasks record real per-partition
 //!   output/shuffle bytes so the cluster simulator sees sort skew.
 
-use ddp::engine::row::{FieldType, Row, Schema};
+use ddp::engine::expr::{BinOp, Expr};
+use ddp::engine::row::{Field, FieldType, Row, Schema};
 use ddp::engine::stream::StreamingCtx;
 use ddp::engine::{Dataset, EngineConfig, EngineCtx, Partitioned};
 use ddp::row;
@@ -60,8 +61,17 @@ fn rand_sorted_plan(g: &mut Gen) -> Dataset {
     let mut ds = base_source(g, "s0");
     let ops = 2 + g.usize(4);
     for _ in 0..ops {
-        ds = match g.u64(6) {
+        ds = match g.u64(7) {
             0 => ds.filter(|r| r.get(1).as_i64().unwrap_or(0) % 3 != 0),
+            6 => {
+                // structured predicate: exercises the columnar path in
+                // the narrow stages between sorts when vectorize is on
+                let i = g.usize(2); // k or seq
+                let name = ds.schema.field(i).0.to_string();
+                let op = if g.bool() { BinOp::Ge } else { BinOp::Ne };
+                let lit = Expr::Lit(Field::I64(g.i64(0, 6)));
+                ds.filter_expr(Expr::Binary(op, Box::new(Expr::Col(i, name)), Box::new(lit)))
+            }
             1 => ds.distinct(1 + g.usize(3)),
             2 => ds.repartition(1 + g.usize(4)),
             3 => {
@@ -85,22 +95,29 @@ fn differential_external_sort_byte_identical_all_modes() {
     let mut spilled_total = 0u64;
     property(100, |g| {
         let plan = rand_sorted_plan(g);
-        let base = EngineCtx::new(cfg(None, true));
+        let base = EngineCtx::new(EngineConfig { vectorize: true, ..cfg(None, true) });
         let want = layout(&base.collect(&plan).unwrap());
         let base_snap = base.stats.snapshot();
         assert!(base_snap.sort_runs > 0, "every case runs the external sort");
         assert_eq!(base_snap.sort_spill_bytes, 0, "unbounded run must not spill");
         assert_eq!(base.governor.reserved_bytes(), 0);
-        for (budget, optimize) in [(None, false), (Some(TINY), true), (Some(TINY), false)] {
-            let c = EngineCtx::new(cfg(budget, optimize));
+        for (budget, optimize, vectorize) in [
+            (None, false, true),
+            (None, true, false),
+            (Some(TINY), true, true),
+            (Some(TINY), true, false),
+            (Some(TINY), false, true),
+        ] {
+            let c = EngineCtx::new(EngineConfig { vectorize, ..cfg(budget, optimize) });
             let got = layout(&c.collect(&plan).unwrap());
             assert_eq!(
                 want,
                 got,
-                "external sort changed output (case {}, budget {:?}, optimize {})\nplan:\n{}",
+                "external sort changed output (case {}, budget {:?}, optimize {}, vectorize {})\nplan:\n{}",
                 g.case,
                 budget,
                 optimize,
+                vectorize,
                 plan.plan_display()
             );
             assert_eq!(

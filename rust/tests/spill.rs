@@ -13,6 +13,7 @@
 //! * **governor hygiene** — reservation/release balance: nothing stays
 //!   reserved once work is done or dropped.
 
+use ddp::engine::expr::{BinOp, Expr};
 use ddp::engine::row::{Field, FieldType, Row, Schema};
 use ddp::engine::stream::StreamingCtx;
 use ddp::engine::{Dataset, EngineConfig, EngineCtx, JoinKind, Partitioned};
@@ -24,6 +25,10 @@ const TINY: usize = 2 * 1024;
 
 fn cfg(budget: Option<usize>) -> EngineConfig {
     EngineConfig { workers: 2, memory_budget_bytes: budget, ..Default::default() }
+}
+
+fn cfg_v(budget: Option<usize>, vectorize: bool) -> EngineConfig {
+    EngineConfig { vectorize, ..cfg(budget) }
 }
 
 fn layout(p: &Partitioned) -> Vec<Vec<Row>> {
@@ -54,8 +59,31 @@ fn rand_plan(g: &mut Gen) -> Dataset {
     let ops = 3 + g.usize(5);
     for _ in 0..ops {
         let ds = pool[g.usize(pool.len())].clone();
-        let next = match g.u64(7) {
+        let next = match g.u64(9) {
             0 => ds.filter(|r| r.get(0).as_i64().unwrap_or(0) % 3 != 0),
+            7 => {
+                // structured predicate: rides the columnar path when
+                // vectorize is on, so spill + vectorize compose here
+                let i = g.usize(ds.schema.len());
+                let name = ds.schema.field(i).0.to_string();
+                let op = match g.u64(3) {
+                    0 => BinOp::Gt,
+                    1 => BinOp::Le,
+                    _ => BinOp::Ne,
+                };
+                let lit = Expr::Lit(Field::I64(g.i64(0, 25)));
+                ds.filter_expr(Expr::Binary(op, Box::new(Expr::Col(i, name)), Box::new(lit)))
+            }
+            8 => {
+                let width = ds.schema.len();
+                let k = 1 + g.usize(width);
+                let mut remaining: Vec<usize> = (0..width).collect();
+                let mut picked = Vec::with_capacity(k);
+                for _ in 0..k {
+                    picked.push(remaining.remove(g.usize(remaining.len())));
+                }
+                ds.project(picked)
+            }
             1 => ds.distinct(1 + g.usize(4)),
             2 => ds.repartition(1 + g.usize(5)),
             3 => {
@@ -110,32 +138,44 @@ fn rand_plan(g: &mut Gen) -> Dataset {
 
 #[test]
 fn differential_forced_spill_byte_identical() {
+    // {memory, forced-spill} × {vectorize on, off}: all four modes must
+    // collect byte-identical output
     let mut spilled_total = 0u64;
     property(100, |g| {
         let plan = rand_plan(g);
-        let mem = EngineCtx::new(cfg(None));
-        let spill = EngineCtx::new(cfg(Some(TINY)));
+        let mem = EngineCtx::new(cfg_v(None, true));
         let want = layout(&mem.collect(&plan).unwrap());
-        let got = layout(&spill.collect(&plan).unwrap());
-        assert_eq!(
-            want,
-            got,
-            "spilling changed collected output (case {})\nplan:\n{}",
-            g.case,
-            plan.plan_display()
-        );
         assert_eq!(mem.stats.snapshot().spill_bytes, 0, "unbounded run must not spill");
         assert_eq!(
             mem.governor.reserved_bytes(),
             0,
             "in-memory run releases every reservation"
         );
+        let mem_rows = EngineCtx::new(cfg_v(None, false));
         assert_eq!(
-            spill.governor.reserved_bytes(),
-            0,
-            "spill run releases every reservation"
+            layout(&mem_rows.collect(&plan).unwrap()),
+            want,
+            "row-at-a-time execution changed collected output (case {})\nplan:\n{}",
+            g.case,
+            plan.plan_display()
         );
-        spilled_total += spill.stats.snapshot().spill_bytes;
+        for vectorize in [true, false] {
+            let spill = EngineCtx::new(cfg_v(Some(TINY), vectorize));
+            let got = layout(&spill.collect(&plan).unwrap());
+            assert_eq!(
+                want,
+                got,
+                "spilling (vectorize={vectorize}) changed collected output (case {})\nplan:\n{}",
+                g.case,
+                plan.plan_display()
+            );
+            assert_eq!(
+                spill.governor.reserved_bytes(),
+                0,
+                "spill run releases every reservation"
+            );
+            spilled_total += spill.stats.snapshot().spill_bytes;
+        }
     });
     assert!(
         spilled_total > 0,

@@ -72,6 +72,10 @@ fn engine_cfg(optimize: bool) -> EngineConfig {
     EngineConfig { workers: 2, optimize, ..Default::default() }
 }
 
+fn engine_cfg_v(optimize: bool, vectorize: bool) -> EngineConfig {
+    EngineConfig { vectorize, ..engine_cfg(optimize) }
+}
+
 fn batch_run_cfg(engine: EngineConfig) -> Vec<Vec<Row>> {
     let spec = PipelineSpec::parse(PIPELINE).unwrap();
     let driver = PipelineDriver::new(
@@ -147,6 +151,17 @@ fn differential_holds_with_optimizer_off() {
     assert_eq!(stream_run(false, N), want);
     // and optimizer on/off agree with each other
     assert_eq!(want, batch_run(true));
+}
+
+#[test]
+fn differential_holds_with_vectorize_off() {
+    // the streaming runtime reuses the batch executor's narrow stages, so
+    // the columnar path must be batch-size- and mode-invariant here too
+    let want = batch_run_cfg(engine_cfg_v(true, false));
+    assert_eq!(batch_run_cfg(engine_cfg_v(true, true)), want);
+    assert_eq!(stream_run_cfg(engine_cfg_v(true, false), 100), want);
+    assert_eq!(stream_run_cfg(engine_cfg_v(true, true), 100), want);
+    assert_eq!(stream_run_cfg(engine_cfg_v(true, true), 1), want);
 }
 
 #[test]

@@ -1,0 +1,403 @@
+//! Columnar vectorized execution test suite:
+//!
+//! * **differential on-vs-off** — ~100 random narrow-heavy DAGs (expr
+//!   filters, projections, opaque closures, mixed-type mutations, a few
+//!   wide ops) collect byte-identical output with `vectorize` on and
+//!   off, over data salted with nulls, NaN/±inf, and 2^53-boundary
+//!   integers;
+//! * **segment splitting** — an opaque closure mid-chain splits the
+//!   expression steps into separate columnar batches with the closure
+//!   running row-wise in between, pinned via the batch counter;
+//! * **fallback rules** — mixed-type `Any` columns and ragged row
+//!   arities fall back to row-at-a-time execution (counted, output
+//!   identical);
+//! * **degenerate batches** — empty partitions, single rows and all-null
+//!   columns take the columnar path;
+//! * **exact numeric compare** — 2^53±1 comparisons end to end in both
+//!   modes (the old evaluator coerced both sides to f64 and lost them).
+
+use ddp::engine::expr::{BinOp, Expr, Func, UnOp};
+use ddp::engine::row::{Field, FieldType, Row, Schema};
+use ddp::engine::{Dataset, EngineConfig, EngineCtx, Partitioned};
+use ddp::row;
+use ddp::util::testkit::{property, Gen};
+use std::cmp::Ordering;
+
+const P53: i64 = 1 << 53;
+
+fn cfg(vectorize: bool) -> EngineConfig {
+    EngineConfig { workers: 2, vectorize, ..Default::default() }
+}
+
+fn layout(p: &Partitioned) -> Vec<Vec<Row>> {
+    p.parts.iter().map(|part| (**part).clone()).collect()
+}
+
+/// Byte-identity that also holds for NaN payloads: `PartialEq` on `F64`
+/// makes NaN unequal to itself, so identical layouts containing NaN
+/// would fail `==`. `canonical_cmp` (IEEE total order) equates NaN with
+/// NaN while still distinguishing -0.0 from 0.0.
+fn rows_identical(a: &Row, b: &Row) -> bool {
+    a.fields.len() == b.fields.len()
+        && a.fields
+            .iter()
+            .zip(&b.fields)
+            .all(|(x, y)| x.canonical_cmp(y) == Ordering::Equal)
+}
+
+fn layouts_identical(a: &[Vec<Row>], b: &[Vec<Row>]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(p, q)| {
+            p.len() == q.len() && p.iter().zip(q).all(|(x, y)| rows_identical(x, y))
+        })
+}
+
+// ---------------------------------------------------------------------
+// expression builders
+// ---------------------------------------------------------------------
+
+fn col(i: usize, name: &str) -> Expr {
+    Expr::Col(i, name.to_string())
+}
+
+fn lit_i(v: i64) -> Expr {
+    Expr::Lit(Field::I64(v))
+}
+
+fn bin(op: BinOp, a: Expr, b: Expr) -> Expr {
+    Expr::Binary(op, Box::new(a), Box::new(b))
+}
+
+// ---------------------------------------------------------------------
+// random plan generator (narrow-heavy, adversarial values)
+// ---------------------------------------------------------------------
+
+fn tricky_i64(g: &mut Gen) -> i64 {
+    match g.u64(8) {
+        0 => P53 - 1,
+        1 => P53,
+        2 => P53 + 1,
+        3 => -(P53 + 1),
+        _ => g.i64(-50, 50),
+    }
+}
+
+fn tricky_f64(g: &mut Gen) -> f64 {
+    match g.u64(10) {
+        0 => f64::NAN,
+        1 => f64::INFINITY,
+        2 => f64::NEG_INFINITY,
+        3 => -0.0,
+        4 => (P53 as f64) + 2.0,
+        _ => (g.i64(-40, 40) as f64) / 4.0,
+    }
+}
+
+fn base_source(g: &mut Gen, name: &str) -> Dataset {
+    let schema = Schema::new(vec![
+        ("id", FieldType::I64),
+        ("score", FieldType::F64),
+        ("tag", FieldType::Str),
+    ]);
+    let n = 10 + g.usize(50);
+    let rows = (0..n)
+        .map(|_| {
+            let id = if g.u64(8) == 0 { Field::Null } else { Field::I64(tricky_i64(g)) };
+            let score = if g.u64(8) == 0 { Field::Null } else { Field::F64(tricky_f64(g)) };
+            let tag = if g.u64(8) == 0 { Field::Null } else { Field::Str(g.ident(1, 4)) };
+            Row::new(vec![id, score, tag])
+        })
+        .collect();
+    Dataset::from_rows(name, schema, rows, 1 + g.usize(4))
+}
+
+fn rand_lit(g: &mut Gen) -> Expr {
+    Expr::Lit(match g.u64(5) {
+        0 => Field::I64(tricky_i64(g)),
+        1 => Field::F64(tricky_f64(g)),
+        2 => Field::Str(g.ident(1, 3)),
+        3 => Field::Null,
+        _ => Field::I64(g.i64(-10, 10)),
+    })
+}
+
+fn rand_cmp(g: &mut Gen, schema: &Schema) -> Expr {
+    let i = g.usize(schema.len());
+    let mut lhs = col(i, schema.field(i).0);
+    if g.u64(4) == 0 {
+        // arithmetic subexpression above the column reference
+        let op = if g.bool() { BinOp::Add } else { BinOp::Mul };
+        lhs = bin(op, lhs, lit_i(g.i64(1, 4)));
+    }
+    let op = match g.u64(6) {
+        0 => BinOp::Eq,
+        1 => BinOp::Ne,
+        2 => BinOp::Lt,
+        3 => BinOp::Le,
+        4 => BinOp::Gt,
+        _ => BinOp::Ge,
+    };
+    let rhs = rand_lit(g);
+    if g.bool() {
+        bin(op, lhs, rhs)
+    } else {
+        bin(op, rhs, lhs)
+    }
+}
+
+fn rand_pred(g: &mut Gen, schema: &Schema) -> Expr {
+    let mut e = rand_cmp(g, schema);
+    for _ in 0..g.usize(3) {
+        let rhs = if g.u64(5) == 0 {
+            // string-function predicate
+            let i = g.usize(schema.len());
+            bin(
+                BinOp::Ge,
+                Expr::Call(Func::Length, vec![col(i, schema.field(i).0)]),
+                lit_i(2),
+            )
+        } else {
+            rand_cmp(g, schema)
+        };
+        let op = if g.bool() { BinOp::And } else { BinOp::Or };
+        e = bin(op, e, rhs);
+    }
+    if g.u64(4) == 0 {
+        e = Expr::Unary(UnOp::Not, Box::new(e));
+    }
+    e
+}
+
+fn rand_project(g: &mut Gen, ds: &Dataset) -> Dataset {
+    let width = ds.schema.len();
+    let k = 1 + g.usize(width);
+    let mut remaining: Vec<usize> = (0..width).collect();
+    let mut picked = Vec::with_capacity(k);
+    for _ in 0..k {
+        picked.push(remaining.remove(g.usize(remaining.len())));
+    }
+    ds.project(picked)
+}
+
+fn rand_plan(g: &mut Gen) -> Dataset {
+    let mut ds = base_source(g, "v0");
+    let ops = 3 + g.usize(6);
+    for _ in 0..ops {
+        ds = match g.u64(8) {
+            0 | 1 | 2 => ds.filter_expr(rand_pred(g, &ds.schema)),
+            3 => rand_project(g, &ds),
+            // opaque closure mid-chain: splits columnar segments
+            4 => ds.filter(|r| !matches!(r.get(0), Field::Null)),
+            5 => {
+                // mixed-type mutation: downstream expression segments on
+                // column 0 must fall back to rows
+                let schema = ds.schema.clone();
+                ds.map(schema, |r| {
+                    let mut f = r.fields.clone();
+                    if let Field::I64(v) = f[0] {
+                        if v % 2 == 0 {
+                            f[0] = Field::Str(format!("s{v}"));
+                        }
+                    }
+                    Row::new(f)
+                })
+            }
+            6 => ds.repartition(1 + g.usize(4)),
+            _ => ds.distinct(1 + g.usize(3)),
+        };
+    }
+    ds
+}
+
+// ---------------------------------------------------------------------
+// differential property test
+// ---------------------------------------------------------------------
+
+#[test]
+fn differential_vectorize_on_off_byte_identical() {
+    let mut batches_total = 0u64;
+    let mut fallbacks_total = 0u64;
+    property(100, |g| {
+        let plan = rand_plan(g);
+        let on = EngineCtx::new(cfg(true));
+        let off = EngineCtx::new(cfg(false));
+        let a = layout(&on.collect(&plan).unwrap());
+        let b = layout(&off.collect(&plan).unwrap());
+        assert!(
+            layouts_identical(&a, &b),
+            "vectorized execution changed collected output (case {})\nplan:\n{}",
+            g.case,
+            plan.plan_display()
+        );
+        let s_on = on.stats.snapshot();
+        let s_off = off.stats.snapshot();
+        batches_total += s_on.vectorized_batches;
+        fallbacks_total += s_on.vectorized_fallbacks;
+        assert_eq!(s_off.vectorized_batches, 0, "row mode must not touch the columnar path");
+        assert_eq!(s_off.vectorized_fallbacks, 0);
+    });
+    assert!(batches_total > 0, "narrow-heavy DAGs must execute columnar batches");
+    assert!(fallbacks_total > 0, "mixed-type mutations must force some row fallbacks");
+}
+
+// ---------------------------------------------------------------------
+// segment splitting around opaque closures
+// ---------------------------------------------------------------------
+
+#[test]
+fn closure_mid_chain_splits_batches_and_stays_identical() {
+    // filter_expr | closure | filter_expr → project: the two expression
+    // segments batch separately (the trailing filter_expr+project fuse
+    // into one segment), the closure runs row-wise in between
+    let schema = Schema::new(vec![("x", FieldType::I64), ("y", FieldType::I64)]);
+    let rows: Vec<Row> = (0..200i64).map(|i| row!(i, i * 3 % 17)).collect();
+    let build = |vectorize: bool| {
+        let c = EngineCtx::new(EngineConfig {
+            workers: 2,
+            optimize: false, // pin the plan shape so batch counts are exact
+            vectorize,
+            ..Default::default()
+        });
+        let ds = Dataset::from_rows("c", schema.clone(), rows.clone(), 4);
+        let plan = ds
+            .filter_expr(bin(BinOp::Gt, col(0, "x"), lit_i(4)))
+            .filter(|r| r.get(1).as_i64().unwrap() != 5)
+            .filter_expr(bin(BinOp::Lt, col(1, "y"), lit_i(30)))
+            .project(vec![1, 0]);
+        let out = layout(&c.collect(&plan).unwrap());
+        (out, c.stats.snapshot())
+    };
+    let (on, s_on) = build(true);
+    let (off, s_off) = build(false);
+    assert_eq!(on, off, "closure-split chain must agree between modes");
+    assert_eq!(s_on.vectorized_batches, 8, "two expression segments × four partitions");
+    assert_eq!(s_on.vectorized_fallbacks, 0);
+    assert_eq!(s_off.vectorized_batches, 0);
+}
+
+// ---------------------------------------------------------------------
+// fallback rules
+// ---------------------------------------------------------------------
+
+#[test]
+fn mixed_type_columns_fall_back_and_agree() {
+    let schema = Schema::new(vec![("v", FieldType::Any)]);
+    let rows: Vec<Row> = (0..60i64)
+        .map(|i| if i % 3 == 0 { row!(format!("s{i}")) } else { row!(i) })
+        .collect();
+    let plan = |ds: &Dataset| ds.filter_expr(bin(BinOp::Ne, col(0, "v"), lit_i(7)));
+    let on = EngineCtx::new(cfg(true));
+    let off = EngineCtx::new(cfg(false));
+    let ds = Dataset::from_rows("m", schema, rows, 3);
+    let a = layout(&on.collect(&plan(&ds)).unwrap());
+    let b = layout(&off.collect(&plan(&ds)).unwrap());
+    assert_eq!(a, b);
+    let snap = on.stats.snapshot();
+    assert!(snap.vectorized_fallbacks >= 3, "each partition's mixed column falls back");
+    assert_eq!(snap.vectorized_batches, 0);
+}
+
+#[test]
+fn ragged_rows_fall_back_and_agree() {
+    let schema = Schema::new(vec![("a", FieldType::I64), ("b", FieldType::I64)]);
+    let rows: Vec<Row> = (0..40i64).map(|i| row!(i, i)).collect();
+    let plan = |ds: &Dataset| {
+        // every fourth row loses its second column: the engine never
+        // enforces arity, so the columnar path must decline, not panic
+        let ragged = ds.map(ds.schema.clone(), |r| {
+            let v = r.get(0).as_i64().unwrap();
+            if v % 4 == 0 {
+                Row::new(vec![Field::I64(v)])
+            } else {
+                r.clone()
+            }
+        });
+        ragged.filter_expr(bin(BinOp::Ge, col(0, "a"), lit_i(3)))
+    };
+    let on = EngineCtx::new(cfg(true));
+    let off = EngineCtx::new(cfg(false));
+    let ds = Dataset::from_rows("r", schema, rows, 2);
+    let a = layout(&on.collect(&plan(&ds)).unwrap());
+    let b = layout(&off.collect(&plan(&ds)).unwrap());
+    assert_eq!(a, b);
+    let snap = on.stats.snapshot();
+    assert!(snap.vectorized_fallbacks >= 2, "each partition's ragged segment falls back");
+    assert_eq!(snap.vectorized_batches, 0);
+}
+
+// ---------------------------------------------------------------------
+// degenerate batches
+// ---------------------------------------------------------------------
+
+#[test]
+fn empty_single_row_and_all_null_batches() {
+    let schema = Schema::new(vec![("x", FieldType::I64)]);
+    for rows in [
+        Vec::new(),
+        vec![row!(5i64)],
+        vec![Row::new(vec![Field::Null]); 7],
+    ] {
+        let plan = |ds: &Dataset| {
+            ds.filter_expr(bin(BinOp::Ge, col(0, "x"), lit_i(1))).project(vec![0])
+        };
+        let on = EngineCtx::new(cfg(true));
+        let off = EngineCtx::new(cfg(false));
+        let ds = Dataset::from_rows("e", schema.clone(), rows, 3);
+        let a = layout(&on.collect(&plan(&ds)).unwrap());
+        let b = layout(&off.collect(&plan(&ds)).unwrap());
+        assert_eq!(a, b);
+        let snap = on.stats.snapshot();
+        assert!(snap.vectorized_batches > 0, "degenerate input still takes the columnar path");
+        assert_eq!(snap.vectorized_fallbacks, 0);
+    }
+}
+
+// ---------------------------------------------------------------------
+// exact numeric compare end to end (the coercion bugfix, both modes)
+// ---------------------------------------------------------------------
+
+#[test]
+fn large_i64_compares_exactly_end_to_end() {
+    // before the fix both sides were cast to f64, so 2^53 + 1 = 2^53
+    // held and 2^53 - 1 < x < 2^53 + 1 collapsed
+    let schema = Schema::new(vec![("x", FieldType::I64)]);
+    let rows = vec![row!(P53 - 1), row!(P53), row!(P53 + 1), row!(-(P53 + 1))];
+    for vectorize in [true, false] {
+        let c = EngineCtx::new(cfg(vectorize));
+        let ds = Dataset::from_rows("p", schema.clone(), rows.clone(), 2);
+        // x = 2^53 (as an f64 literal) matches exactly one row
+        let eq = ds.filter_expr(bin(BinOp::Eq, col(0, "x"), Expr::Lit(Field::F64(P53 as f64))));
+        assert_eq!(c.count(&eq).unwrap(), 1, "vectorize={vectorize}");
+        // x > 2^53 keeps only 2^53 + 1
+        let gt = ds.filter_expr(bin(BinOp::Gt, col(0, "x"), Expr::Lit(Field::F64(P53 as f64))));
+        assert_eq!(c.count(&gt).unwrap(), 1, "vectorize={vectorize}");
+        // pure-I64 equality is exact too (the old path coerced both sides)
+        let eqi = ds.filter_expr(bin(BinOp::Eq, col(0, "x"), lit_i(P53 + 1)));
+        assert_eq!(c.count(&eqi).unwrap(), 1, "vectorize={vectorize}");
+        let ne = ds.filter_expr(bin(BinOp::Ne, col(0, "x"), lit_i(P53)));
+        assert_eq!(c.count(&ne).unwrap(), 3, "vectorize={vectorize}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// env toggle
+// ---------------------------------------------------------------------
+
+#[test]
+fn default_config_honors_env_toggle_and_agrees() {
+    // EngineConfig::default() is the only reader of DDP_VECTORIZE — this
+    // is the test the CI vectorize matrix leg actually flips; the
+    // pinned-config tests above are env-independent
+    let schema = Schema::new(vec![("x", FieldType::I64), ("t", FieldType::Str)]);
+    let rows: Vec<Row> = (0..80i64).map(|i| row!(i, format!("t{i}"))).collect();
+    let plan = |ds: &Dataset| {
+        ds.filter_expr(bin(BinOp::Ge, col(0, "x"), lit_i(10))).project(vec![1])
+    };
+    let def = EngineCtx::new(EngineConfig { workers: 2, ..Default::default() });
+    let pinned = EngineCtx::new(cfg(true));
+    let ds = Dataset::from_rows("d", schema, rows, 3);
+    assert_eq!(
+        layout(&def.collect(&plan(&ds)).unwrap()),
+        layout(&pinned.collect(&plan(&ds)).unwrap())
+    );
+}
