@@ -23,7 +23,9 @@ use super::fault::FaultInjector;
 use super::memory::{self, MemoryGovernor};
 use super::optimizer::{self, RewriteCounts};
 use super::row::{ColumnBatch, Field, Row};
-use super::spill::{transpose_segments, BucketSet, SortedRun, SortedRunSet, SpillDir};
+use super::spill::{
+    transpose_segments, BucketSet, SegmentData, SortedRun, SortedRunSet, SpillDir,
+};
 use super::stats::EngineStats;
 use crate::util::error::{DdpError, Result};
 use crate::util::threadpool::ThreadPool;
@@ -235,18 +237,29 @@ impl EngineCtx {
             | Plan::Project { .. }
             | Plan::FlatMap { .. }
             | Plan::MapPartitions { .. } => self.eval_narrow_chain(ds),
-            Plan::ReduceByKey { input, key, reduce, num_parts, .. } => {
+            Plan::ReduceByKey { input, key, reduce, num_parts, key_col } => {
                 let inp = self.eval(input)?;
-                self.exec_reduce_by_key(ds, inp, key.clone(), reduce.clone(), *num_parts)
+                self.exec_reduce_by_key(ds, inp, key.clone(), reduce.clone(), *num_parts, *key_col)
             }
             Plan::Distinct { input, num_parts } => {
                 let inp = self.eval(input)?;
                 self.exec_distinct(ds, inp, *num_parts)
             }
-            Plan::Join { left, right, lkey, rkey, kind, num_parts, schema, .. } => {
+            Plan::Join { left, right, lkey, rkey, kind, num_parts, schema, lkey_col, rkey_col } => {
                 let l = self.eval(left)?;
                 let r = self.eval(right)?;
-                self.exec_join(ds, l, r, lkey.clone(), rkey.clone(), *kind, *num_parts, schema.clone())
+                self.exec_join(
+                    ds,
+                    l,
+                    r,
+                    lkey.clone(),
+                    rkey.clone(),
+                    *kind,
+                    *num_parts,
+                    schema.clone(),
+                    *lkey_col,
+                    *rkey_col,
+                )
             }
             Plan::Union { inputs } => {
                 let mut parts: Vec<PartRef> = Vec::new();
@@ -490,8 +503,7 @@ impl EngineCtx {
                     let mut buckets: Vec<Vec<Row>> = (0..num_parts).map(|_| Vec::new()).collect();
                     for row in part.iter() {
                         let k = key(row);
-                        let b = (field_hash(&k) % num_parts as u64) as usize;
-                        buckets[b].push(row.clone());
+                        buckets[bucket_of(&k, num_parts)].push(row.clone());
                     }
                     BucketSet::build(&gov, &dir, buckets)
                 }
@@ -502,6 +514,74 @@ impl EngineCtx {
         Ok(outs)
     }
 
+    /// Column-keyed variant of [`Self::shuffle_buckets`]: each map
+    /// partition forms a typed [`ColumnBatch`], hashes the key column
+    /// ([`super::row::Column::hash_values`] reproduces [`field_hash`]
+    /// slot for slot), gathers per-bucket row indices in input order and
+    /// splits with a column-level take — no row materialization at the
+    /// shuffle boundary. A partition that cannot form a typed batch
+    /// (ragged arity, mixed-type column, key column out of range) falls
+    /// back to the row path — same buckets, same bytes — and counts a
+    /// `vectorized_shuffle_fallbacks`.
+    fn shuffle_buckets_by_col(
+        &self,
+        stage_id: u64,
+        input: &Partitioned,
+        num_parts: usize,
+        key: super::dataset::KeyFn,
+        key_col: usize,
+    ) -> Result<Vec<BucketSet>> {
+        let gov = self.governor.clone();
+        let dir = self.spill.clone();
+        let tasks: Vec<_> = input
+            .parts
+            .iter()
+            .map(|part| {
+                let part = part.clone();
+                let key = key.clone();
+                let gov = gov.clone();
+                let dir = dir.clone();
+                move || -> Result<ShuffleOut> {
+                    if let Some(batches) = batch_buckets(&part, num_parts, key_col) {
+                        return Ok(ShuffleOut {
+                            set: BucketSet::build_batches(&gov, &dir, batches)?,
+                            batched: true,
+                        });
+                    }
+                    let mut buckets: Vec<Vec<Row>> = (0..num_parts).map(|_| Vec::new()).collect();
+                    for row in part.iter() {
+                        let k = key(row);
+                        buckets[bucket_of(&k, num_parts)].push(row.clone());
+                    }
+                    Ok(ShuffleOut {
+                        set: BucketSet::build(&gov, &dir, buckets)?,
+                        batched: false,
+                    })
+                }
+            })
+            .collect();
+        let outs = collect_results(self.run_tasks(stage_id, tasks, input)?)?;
+        self.charge_shuffle_vectorization(&outs);
+        let sets: Vec<BucketSet> = outs.into_iter().map(|o| o.set).collect();
+        self.charge_shuffle(&sets, true);
+        Ok(sets)
+    }
+
+    /// Charge the batch-native shuffle counters for one column-keyed map
+    /// side: one `vectorized_shuffle_batches` per partition whose buckets
+    /// traveled as column batches, one `vectorized_shuffle_fallbacks` per
+    /// partition that was eligible but fell back to row transport.
+    fn charge_shuffle_vectorization(&self, outs: &[ShuffleOut]) {
+        let batched = outs.iter().filter(|o| o.batched).count() as u64;
+        let fell = outs.len() as u64 - batched;
+        if batched > 0 {
+            self.stats.add(&self.stats.vectorized_shuffle_batches, batched);
+        }
+        if fell > 0 {
+            self.stats.add(&self.stats.vectorized_shuffle_fallbacks, fell);
+        }
+    }
+
     fn exec_reduce_by_key(
         &self,
         ds: &Dataset,
@@ -509,9 +589,14 @@ impl EngineCtx {
         key: super::dataset::KeyFn,
         reduce: super::dataset::ReduceFn,
         num_parts: usize,
+        key_col: Option<usize>,
     ) -> Result<Partitioned> {
         self.stats.add(&self.stats.stages_run, 1);
-        // map-side combine, then bucket (reserve-or-spill per task)
+        // map-side combine, then bucket (reserve-or-spill per task).
+        // When the key is a declared column and vectorization is on, the
+        // partition is hash-split by a column-level gather and combined
+        // per bucket slice, and the buckets travel as column batches.
+        let col_key = key_col.filter(|_| self.cfg.vectorize);
         let combine_key = key.clone();
         let combine_reduce = reduce.clone();
         let gov = self.governor.clone();
@@ -525,7 +610,15 @@ impl EngineCtx {
                 let reduce = combine_reduce.clone();
                 let gov = gov.clone();
                 let dir = dir.clone();
-                move || -> Result<BucketSet> {
+                move || -> Result<ShuffleOut> {
+                    if let Some(kc) = col_key {
+                        if let Some(batches) = reduce_map_batches(&part, num_parts, kc, &reduce) {
+                            return Ok(ShuffleOut {
+                                set: BucketSet::build_batches(&gov, &dir, batches)?,
+                                batched: true,
+                            });
+                        }
+                    }
                     let mut local: HashMap<Field, Row> = HashMap::new();
                     for row in part.iter() {
                         let k = key(row);
@@ -540,14 +633,20 @@ impl EngineCtx {
                     }
                     let mut buckets: Vec<Vec<Row>> = (0..num_parts).map(|_| Vec::new()).collect();
                     for (k, row) in local {
-                        let b = (field_hash(&k) % num_parts as u64) as usize;
-                        buckets[b].push(row);
+                        buckets[bucket_of(&k, num_parts)].push(row);
                     }
-                    BucketSet::build(&gov, &dir, buckets)
+                    Ok(ShuffleOut {
+                        set: BucketSet::build(&gov, &dir, buckets)?,
+                        batched: false,
+                    })
                 }
             })
             .collect();
-        let bucketed = collect_results(self.run_tasks(ds.id, tasks, &input)?)?;
+        let outs = collect_results(self.run_tasks(ds.id, tasks, &input)?)?;
+        if col_key.is_some() {
+            self.charge_shuffle_vectorization(&outs);
+        }
+        let bucketed: Vec<BucketSet> = outs.into_iter().map(|o| o.set).collect();
         self.charge_shuffle(&bucketed, false);
 
         // reduce side: merge-read each bucket's segments in partition
@@ -562,15 +661,37 @@ impl EngineCtx {
                 let key = key2.clone();
                 move || -> Result<Vec<Row>> {
                     let mut agg: HashMap<Field, Row> = HashMap::new();
+                    let fold = |k: Field, row: Row, agg: &mut HashMap<Field, Row>| {
+                        match agg.remove(&k) {
+                            Some(acc) => {
+                                agg.insert(k, reduce(acc, &row));
+                            }
+                            None => {
+                                agg.insert(k, row);
+                            }
+                        }
+                    };
                     for seg in segments {
-                        for row in seg.take_rows()? {
-                            let k = key(&row);
-                            match agg.remove(&k) {
-                                Some(acc) => {
-                                    agg.insert(k, reduce(acc, &row));
+                        match seg.take_data()? {
+                            // batch segments (resident or decoded from
+                            // colbin) fold slot-wise: the key comes off
+                            // the key column, not a materialized row
+                            SegmentData::Batch(batch)
+                                if col_key.is_some_and(|kc| kc < batch.num_cols()) =>
+                            {
+                                let kc = col_key.unwrap();
+                                for i in 0..batch.len() {
+                                    fold(batch.cols[kc].field_at(i), batch.row_at(i), &mut agg);
                                 }
-                                None => {
-                                    agg.insert(k, row);
+                            }
+                            data => {
+                                let rows = match data {
+                                    SegmentData::Rows(rows) => rows,
+                                    SegmentData::Batch(batch) => batch.into_rows(),
+                                };
+                                for row in rows {
+                                    let k = key(&row);
+                                    fold(k, row, &mut agg);
                                 }
                             }
                         }
@@ -645,10 +766,21 @@ impl EngineCtx {
         kind: JoinKind,
         num_parts: usize,
         schema: super::row::SchemaRef,
+        lkey_col: Option<usize>,
+        rkey_col: Option<usize>,
     ) -> Result<Partitioned> {
         self.stats.add(&self.stats.stages_run, 1);
-        let lb = self.shuffle_buckets(ds.id, &left, num_parts, lkey.clone())?;
-        let rb = self.shuffle_buckets(ds.id, &right, num_parts, rkey.clone())?;
+        // each side shuffles batch-native when its key is a declared
+        // column (the build/probe side still materializes rows — join
+        // output is concatenated rows either way)
+        let lb = match lkey_col.filter(|_| self.cfg.vectorize) {
+            Some(kc) => self.shuffle_buckets_by_col(ds.id, &left, num_parts, lkey.clone(), kc)?,
+            None => self.shuffle_buckets(ds.id, &left, num_parts, lkey.clone())?,
+        };
+        let rb = match rkey_col.filter(|_| self.cfg.vectorize) {
+            Some(kc) => self.shuffle_buckets_by_col(ds.id, &right, num_parts, rkey.clone(), kc)?,
+            None => self.shuffle_buckets(ds.id, &right, num_parts, rkey.clone())?,
+        };
         let lex = transpose_segments(lb, num_parts);
         let rex = transpose_segments(rb, num_parts);
         let right_width = right.schema.len();
@@ -1001,6 +1133,90 @@ pub(crate) fn field_hash(f: &Field) -> u64 {
     h.finish()
 }
 
+/// Bucket for a precomputed shuffle-key hash. Single definition shared
+/// by the row path, the batch-native path (whose per-slot hashes come
+/// from [`super::row::Column::hash_values`]) and the streaming runtime —
+/// a drift here would silently split keys across reducers.
+pub(crate) fn hash_bucket(h: u64, num_parts: usize) -> usize {
+    (h % num_parts as u64) as usize
+}
+
+/// Bucket for a shuffle key [`Field`].
+pub(crate) fn bucket_of(key: &Field, num_parts: usize) -> usize {
+    hash_bucket(field_hash(key), num_parts)
+}
+
+/// One map partition's shuffle output plus how it traveled (batch-native
+/// or row transport) — feeds the `vectorized_shuffle_*` counters.
+struct ShuffleOut {
+    set: BucketSet,
+    batched: bool,
+}
+
+/// Batch-native map side of a column-keyed shuffle: transpose the
+/// partition into a typed [`ColumnBatch`], hash the key column, gather
+/// each bucket's row indices in input order, then split with a
+/// column-level take. `None` = fall back to row transport (the partition
+/// cannot form a typed batch, or the key column is out of range — the
+/// row path would panic on the same out-of-range access, so the check
+/// only reroutes, it never changes behavior).
+fn batch_buckets(part: &[Row], num_parts: usize, key_col: usize) -> Option<Vec<ColumnBatch>> {
+    let batch = ColumnBatch::try_from_rows(part)?;
+    if batch.is_empty() {
+        // trivially batch-native: every bucket of nothing is empty
+        return Some((0..num_parts).map(|_| ColumnBatch::new(Vec::new(), 0)).collect());
+    }
+    if key_col >= batch.num_cols() {
+        return None;
+    }
+    let idxs = expr::bucket_indices(&batch.cols[key_col], num_parts);
+    Some(idxs.iter().map(|ix| batch.take(ix)).collect())
+}
+
+/// Batch-native map side of a column-keyed reduce: hash-split the
+/// partition with a column-level gather (as [`batch_buckets`]), then run
+/// the map-side combine over each bucket's batch slice, reading keys off
+/// the key column. Per-key fold order equals input order — exactly the
+/// row path's fold — so combined rows are identical; only the transport
+/// representation changes. `None` = fall back to the row path (untyped
+/// input, key column out of range, or a reducer whose output rows cannot
+/// re-form a typed batch).
+fn reduce_map_batches(
+    part: &[Row],
+    num_parts: usize,
+    key_col: usize,
+    reduce: &super::dataset::ReduceFn,
+) -> Option<Vec<ColumnBatch>> {
+    let batch = ColumnBatch::try_from_rows(part)?;
+    if batch.is_empty() {
+        return Some((0..num_parts).map(|_| ColumnBatch::new(Vec::new(), 0)).collect());
+    }
+    if key_col >= batch.num_cols() {
+        return None;
+    }
+    let idxs = expr::bucket_indices(&batch.cols[key_col], num_parts);
+    let mut out = Vec::with_capacity(num_parts);
+    for ix in &idxs {
+        let slice = batch.take(ix);
+        let kcol = &slice.cols[key_col];
+        let mut local: HashMap<Field, Row> = HashMap::new();
+        for i in 0..slice.len() {
+            let k = kcol.field_at(i);
+            match local.remove(&k) {
+                Some(acc) => {
+                    local.insert(k, reduce(acc, &slice.row_at(i)));
+                }
+                None => {
+                    local.insert(k, slice.row_at(i));
+                }
+            }
+        }
+        let combined: Vec<Row> = local.into_values().collect();
+        out.push(ColumnBatch::try_from_rows(&combined)?);
+    }
+    Some(out)
+}
+
 /// Deterministic whole-row hash (distinct / repartition bucketing).
 pub(crate) fn row_hash(r: &Row) -> u64 {
     let mut h = std::collections::hash_map::DefaultHasher::new();
@@ -1045,6 +1261,14 @@ impl TaskMeasure for BucketSet {
     fn measured(&self) -> (u64, u64) {
         // bucketed map-side output *is* the task's shuffle contribution
         (self.row_bytes(), self.row_bytes())
+    }
+}
+
+impl TaskMeasure for ShuffleOut {
+    fn measured(&self) -> (u64, u64) {
+        // byte accounting is transport-independent (batch sets report
+        // exact row-equivalent bytes), so traces don't see the toggle
+        self.set.measured()
     }
 }
 
@@ -1501,5 +1725,108 @@ mod tests {
         let mut sorted = keys.clone();
         sorted.sort_unstable();
         assert_eq!(keys, sorted, "single-bucket reduce output sorted by key");
+    }
+
+    #[test]
+    fn column_keyed_shuffle_is_batch_native_and_identical() {
+        let run = |vectorize: bool| {
+            let c = EngineCtx::new(EngineConfig { workers: 2, vectorize, ..Default::default() });
+            let schema = Schema::new(vec![("k", FieldType::I64), ("v", FieldType::I64)]);
+            let rows = (0..240i64).map(|i| row!(i % 17, i)).collect();
+            let ds = Dataset::from_rows("kv", schema, rows, 5);
+            let agg = ds.reduce_by_key_col(4, 0, |acc, r| {
+                row!(
+                    acc.get(0).as_i64().unwrap(),
+                    acc.get(1).as_i64().unwrap() + r.get(1).as_i64().unwrap()
+                )
+            });
+            let rs = Schema::new(vec![("k2", FieldType::I64), ("w", FieldType::I64)]);
+            let right =
+                Dataset::from_rows("r", rs, (0..17i64).map(|i| row!(i, i * 100)).collect(), 3);
+            let out = agg.join_on(
+                &right,
+                Schema::of_names(&["k", "v", "k2", "w"]),
+                JoinKind::Inner,
+                3,
+                0,
+                0,
+            );
+            let parts: Vec<Vec<Row>> = c
+                .collect(&out)
+                .unwrap()
+                .parts
+                .iter()
+                .map(|p| (**p).clone())
+                .collect();
+            (parts, c.stats.snapshot())
+        };
+        let (on_parts, on) = run(true);
+        let (off_parts, off) = run(false);
+        assert_eq!(on_parts, off_parts, "batch-native shuffle changed collected output");
+        assert!(on.vectorized_shuffle_batches > 0, "column-keyed wide ops must move batches");
+        assert_eq!(on.vectorized_shuffle_fallbacks, 0, "typed key columns need no fallback");
+        assert_eq!(off.vectorized_shuffle_batches, 0, "row mode must not count batches");
+        assert_eq!(off.vectorized_shuffle_fallbacks, 0, "row mode is never eligible");
+    }
+
+    #[test]
+    fn mixed_key_column_shuffle_falls_back_to_rows() {
+        let c = EngineCtx::new(EngineConfig { workers: 2, vectorize: true, ..Default::default() });
+        let schema = Schema::new(vec![("k", FieldType::Any), ("n", FieldType::I64)]);
+        // key column mixes I64 and Str: no typed batch is possible, so
+        // the transport must fall back — and still reduce correctly
+        let rows = (0..60i64)
+            .map(|i| {
+                if i % 2 == 0 {
+                    row!(i % 6, 1i64)
+                } else {
+                    row!(format!("s{}", i % 5), 1i64)
+                }
+            })
+            .collect();
+        let ds = Dataset::from_rows("kv", schema, rows, 3);
+        let agg = ds.reduce_by_key_col(2, 0, |acc, r| {
+            row!(
+                acc.get(0).clone(),
+                acc.get(1).as_i64().unwrap() + r.get(1).as_i64().unwrap()
+            )
+        });
+        let rows = c.collect_rows(&agg).unwrap();
+        // even rows: keys 0,2,4 (10 each); odd rows: keys s0..s4 (6 each)
+        assert_eq!(rows.len(), 8);
+        let total: i64 = rows.iter().map(|r| r.get(1).as_i64().unwrap()).sum();
+        assert_eq!(total, 60);
+        let snap = c.stats.snapshot();
+        assert!(snap.vectorized_shuffle_fallbacks > 0, "mixed key column must fall back");
+        assert_eq!(snap.vectorized_shuffle_batches, 0);
+    }
+
+    #[test]
+    fn null_key_and_placeholder_key_stay_distinct_through_batch_shuffle() {
+        let c = EngineCtx::new(EngineConfig { workers: 2, vectorize: true, ..Default::default() });
+        let schema = Schema::new(vec![("k", FieldType::I64), ("n", FieldType::I64)]);
+        // typed key column whose null slots store the 0 placeholder:
+        // nulls must group apart from the real 0s (mask is authoritative
+        // in the key hash, never the placeholder value)
+        let rows = (0..40i64)
+            .map(|i| if i % 2 == 0 { row!(0i64, 1i64) } else { row!(Field::Null, 1i64) })
+            .collect();
+        let ds = Dataset::from_rows("kv", schema, rows, 4);
+        let agg = ds.reduce_by_key_col(1, 0, |acc, r| {
+            row!(
+                acc.get(0).clone(),
+                acc.get(1).as_i64().unwrap() + r.get(1).as_i64().unwrap()
+            )
+        });
+        let out = c.collect_rows(&agg).unwrap();
+        assert_eq!(out.len(), 2, "null keys and I64(0) keys are different groups");
+        // canonical key order puts the null group first
+        assert!(out[0].get(0).is_null());
+        assert_eq!(out[0].get(1).as_i64(), Some(20));
+        assert_eq!(out[1].get(0).as_i64(), Some(0));
+        assert_eq!(out[1].get(1).as_i64(), Some(20));
+        let snap = c.stats.snapshot();
+        assert!(snap.vectorized_shuffle_batches > 0, "typed key column must move batches");
+        assert_eq!(snap.vectorized_shuffle_fallbacks, 0);
     }
 }

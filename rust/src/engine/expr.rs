@@ -284,6 +284,21 @@ pub fn eval_batch(e: &Expr, batch: &ColumnBatch) -> Column {
     }
 }
 
+/// Shuffle-partition a key column: per-bucket row-index lists in input
+/// order, computed from the column's per-slot key hashes. The hashes
+/// ([`Column::hash_values`]) match `field_hash(row key)` slot for slot —
+/// a null slot hashes as `Field::Null`, never as the typed placeholder
+/// stored under the mask — so the executor's batch-native shuffle lands
+/// every row in exactly the bucket the row path would pick, and gathers
+/// each bucket with one column-level take over these lists.
+pub(crate) fn bucket_indices(key_col: &Column, num_parts: usize) -> Vec<Vec<usize>> {
+    let mut idxs: Vec<Vec<usize>> = (0..num_parts).map(|_| Vec::new()).collect();
+    for (i, h) in key_col.hash_values().iter().enumerate() {
+        idxs[super::executor::hash_bucket(*h, num_parts)].push(i);
+    }
+    idxs
+}
+
 fn eval_v<'a>(e: &Expr, batch: &'a ColumnBatch) -> VecVal<'a> {
     match e {
         Expr::Lit(f) => VecVal::Const(f.clone()),
@@ -857,6 +872,32 @@ mod tests {
         );
         let used: Vec<usize> = cols_used(&e).into_iter().collect();
         assert_eq!(used, vec![0, 2]);
+    }
+
+    #[test]
+    fn bucket_indices_match_rowwise_bucketing_with_placeholder_collisions() {
+        use crate::engine::executor::bucket_of;
+        // typed column where real zeros sit next to nulls (whose storage
+        // slots hold the 0 placeholder under the mask): the columnar
+        // bucketing must land every slot where the row path would
+        let fields = vec![
+            Field::I64(0),
+            Field::Null,
+            Field::I64(7),
+            Field::Null,
+            Field::I64(0),
+            Field::I64(-1),
+        ];
+        let col = Column::from_fields(fields.clone());
+        assert!(col.nulls.is_some(), "masked typed column is the case under test");
+        for parts in [1usize, 2, 3, 7] {
+            let idxs = bucket_indices(&col, parts);
+            let mut expect: Vec<Vec<usize>> = (0..parts).map(|_| Vec::new()).collect();
+            for (i, f) in fields.iter().enumerate() {
+                expect[bucket_of(f, parts)].push(i);
+            }
+            assert_eq!(idxs, expect, "bucket layout diverged at {parts} parts");
+        }
     }
 
     #[test]

@@ -542,7 +542,124 @@ impl Column {
             ColumnData::Any(v) => ColumnData::Any(sel(v, keep, kept)),
         };
         let nulls = self.nulls.as_ref().map(|m| sel(m, keep, kept));
-        Column { data, nulls }
+        Column { data, nulls }.normalize()
+    }
+
+    /// Gather slots by index (indices may repeat or reorder; every index
+    /// must be in bounds). The result is normalized so representation
+    /// invariants hold even when the gather selects only null slots.
+    pub fn take(&self, idxs: &[usize]) -> Column {
+        fn sel<T: Clone>(v: &[T], idxs: &[usize]) -> Vec<T> {
+            idxs.iter().map(|&i| v[i].clone()).collect()
+        }
+        let data = match &self.data {
+            ColumnData::Bool(v) => ColumnData::Bool(sel(v, idxs)),
+            ColumnData::I64(v) => ColumnData::I64(sel(v, idxs)),
+            ColumnData::F64(v) => ColumnData::F64(sel(v, idxs)),
+            ColumnData::Str(v) => ColumnData::Str(sel(v, idxs)),
+            ColumnData::Bytes(v) => ColumnData::Bytes(sel(v, idxs)),
+            ColumnData::Any(v) => ColumnData::Any(sel(v, idxs)),
+        };
+        let nulls = self.nulls.as_ref().map(|m| sel(m, idxs));
+        Column { data, nulls }.normalize()
+    }
+
+    /// Restore the canonical representation after slot-level surgery
+    /// (`filtered`/`take`, colbin decode): a mask with no set bits is
+    /// dropped, and a typed column whose slots are all null collapses to
+    /// the `Any` form `from_fields` would have produced. Keeping every
+    /// producer on one canonical form makes batch equality and spill
+    /// round-trips representation-stable.
+    pub fn normalize(self) -> Column {
+        let Column { data, nulls } = self;
+        match nulls {
+            None => Column { data, nulls: None },
+            Some(m) => {
+                if !m.iter().any(|&n| n) {
+                    Column { data, nulls: None }
+                } else if m.iter().all(|&n| n) {
+                    Column { data: ColumnData::Any(vec![Field::Null; m.len()]), nulls: None }
+                } else {
+                    Column { data, nulls: Some(m) }
+                }
+            }
+        }
+    }
+
+    /// Per-slot hashes equal to feeding `field_at(i)` through
+    /// `DefaultHasher` (the executor's shuffle hash), without
+    /// materializing a `Field` per slot. Null slots hash exactly as
+    /// `Field::Null` (tag byte only) — the typed placeholder value at a
+    /// null slot is never observed, so a null key can never hash or
+    /// bucket like a real `0`/`0.0`/`""`.
+    pub fn hash_values(&self) -> Vec<u64> {
+        use std::collections::hash_map::DefaultHasher;
+        let n = self.len();
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut h = DefaultHasher::new();
+            if self.is_null(i) {
+                0u8.hash(&mut h);
+            } else {
+                match &self.data {
+                    ColumnData::Bool(v) => {
+                        1u8.hash(&mut h);
+                        v[i].hash(&mut h);
+                    }
+                    ColumnData::I64(v) => {
+                        2u8.hash(&mut h);
+                        v[i].hash(&mut h);
+                    }
+                    ColumnData::F64(v) => {
+                        3u8.hash(&mut h);
+                        v[i].to_bits().hash(&mut h);
+                    }
+                    ColumnData::Str(v) => {
+                        4u8.hash(&mut h);
+                        v[i].hash(&mut h);
+                    }
+                    ColumnData::Bytes(v) => {
+                        5u8.hash(&mut h);
+                        v[i].hash(&mut h);
+                    }
+                    ColumnData::Any(v) => v[i].hash(&mut h),
+                }
+            }
+            out.push(h.finish());
+        }
+        out
+    }
+
+    /// Sum of `Field::approx_size` over the column's slots. Null slots
+    /// count as `Field::Null` (1 byte), not as the typed placeholder, so
+    /// byte accounting is identical to the row representation.
+    pub fn approx_fields_size(&self) -> usize {
+        let null_count =
+            |m: &Option<Vec<bool>>| m.as_ref().map_or(0, |m| m.iter().filter(|&&n| n).count());
+        match &self.data {
+            ColumnData::Bool(v) => v.len(),
+            ColumnData::I64(v) => {
+                let nulls = null_count(&self.nulls);
+                8 * (v.len() - nulls) + nulls
+            }
+            ColumnData::F64(v) => {
+                let nulls = null_count(&self.nulls);
+                8 * (v.len() - nulls) + nulls
+            }
+            ColumnData::Str(v) => match &self.nulls {
+                None => v.iter().map(|s| 24 + s.len()).sum(),
+                Some(m) => {
+                    v.iter().zip(m).map(|(s, &n)| if n { 1 } else { 24 + s.len() }).sum()
+                }
+            },
+            ColumnData::Bytes(v) => match &self.nulls {
+                None => v.iter().map(|b| 24 + b.len()).sum(),
+                Some(m) => {
+                    v.iter().zip(m).map(|(b, &n)| if n { 1 } else { 24 + b.len() }).sum()
+                }
+            },
+            ColumnData::Any(v) => v.iter().map(|f| f.approx_size()).sum(),
+        }
     }
 }
 
@@ -617,6 +734,22 @@ impl ColumnBatch {
         let kept = keep.iter().filter(|k| **k).count();
         let cols = self.cols.iter().map(|c| c.filtered(keep, kept)).collect();
         ColumnBatch { cols, len: kept }
+    }
+
+    /// Gather rows by index (indices may repeat or reorder). Used by the
+    /// batch-native shuffle to split a batch into per-bucket batches
+    /// without materializing rows.
+    pub fn take(&self, idxs: &[usize]) -> ColumnBatch {
+        let cols = self.cols.iter().map(|c| c.take(idxs)).collect();
+        ColumnBatch { cols, len: idxs.len() }
+    }
+
+    /// Exactly `sum(row.approx_size())` over the batch's rows, without
+    /// materializing them (null slots count as `Field::Null`, not the
+    /// typed placeholder), so shuffle-byte accounting is identical in
+    /// batch and row mode.
+    pub fn approx_rows_size(&self) -> usize {
+        16 * self.len + self.cols.iter().map(|c| c.approx_fields_size()).sum::<usize>()
     }
 
     /// Select (and possibly duplicate/reorder) columns by index. Columns
@@ -780,6 +913,108 @@ mod tests {
         let p = f.project(&[1, 0, 1]);
         assert_eq!(p.row_at(0), row!("a", 1i64, "a"));
         assert_eq!(p.into_rows()[1], row!("c", 3i64, "c"));
+    }
+
+    fn ref_hash(f: &Field) -> u64 {
+        use std::collections::hash_map::DefaultHasher;
+        let mut h = DefaultHasher::new();
+        f.hash(&mut h);
+        h.finish()
+    }
+
+    #[test]
+    fn hash_values_matches_field_hash_and_never_reads_placeholders() {
+        // Placeholder collision setups: a real 0 / 0.0 / "" sits next to a
+        // null slot whose typed storage holds the very same placeholder.
+        let cases = vec![
+            vec![Field::I64(0), Field::Null, Field::I64(5), Field::Null],
+            vec![Field::F64(0.0), Field::Null, Field::F64(-0.0)],
+            vec![Field::Str(String::new()), Field::Null, Field::Str("x".into())],
+            vec![Field::Bytes(Vec::new()), Field::Null, Field::Bytes(vec![1])],
+            vec![Field::Bool(false), Field::Null],
+            // mixed column (Any storage) and all-null column
+            vec![Field::I64(1), Field::Str("s".into()), Field::Null],
+            vec![Field::Null, Field::Null],
+        ];
+        for fields in cases {
+            let col = Column::from_fields(fields.clone());
+            let hashes = col.hash_values();
+            assert_eq!(hashes.len(), fields.len());
+            for (i, f) in fields.iter().enumerate() {
+                assert_eq!(hashes[i], ref_hash(f), "slot {i} of {fields:?}");
+                assert_eq!(col.field_at(i).canonical_cmp(f), std::cmp::Ordering::Equal);
+            }
+        }
+        // The null slot must hash as Null, not as the placeholder it sits on.
+        let col = Column::from_fields(vec![Field::I64(0), Field::Null]);
+        let hashes = col.hash_values();
+        assert_eq!(hashes[0], ref_hash(&Field::I64(0)));
+        assert_eq!(hashes[1], ref_hash(&Field::Null));
+        assert_ne!(hashes[0], hashes[1]);
+    }
+
+    #[test]
+    fn take_gathers_and_normalizes() {
+        let c = Column::from_fields(vec![Field::I64(1), Field::Null, Field::I64(3)]);
+        let t = c.take(&[2, 0, 2]);
+        assert_eq!(t.field_at(0), Field::I64(3));
+        assert_eq!(t.field_at(1), Field::I64(1));
+        assert_eq!(t.field_at(2), Field::I64(3));
+        // gathering only non-null slots drops the mask entirely
+        assert!(t.nulls.is_none());
+        // gathering only null slots collapses to the canonical Any form,
+        // exactly what from_fields produces for all-null input
+        let n = c.take(&[1, 1]);
+        assert_eq!(n, Column::from_fields(vec![Field::Null, Field::Null]));
+        assert!(matches!(&n.data, ColumnData::Any(_)));
+        assert!(n.nulls.is_none());
+        // filtered() normalizes the same way
+        let f = c.filtered(&[false, true, false], 1);
+        assert_eq!(f, Column::from_fields(vec![Field::Null]));
+    }
+
+    #[test]
+    fn batch_take_matches_row_gather() {
+        let rows = vec![
+            row!(1i64, "a"),
+            Row::new(vec![Field::Null, Field::Str("b".into())]),
+            row!(3i64, "c"),
+        ];
+        let b = ColumnBatch::try_from_rows(&rows).unwrap();
+        let idxs = [2usize, 0, 1, 1];
+        let t = b.take(&idxs);
+        assert_eq!(t.len(), idxs.len());
+        for (out, &i) in t.clone().into_rows().iter().zip(idxs.iter()) {
+            assert_eq!(out, &rows[i]);
+        }
+        // empty gather keeps the width
+        let e = b.take(&[]);
+        assert_eq!(e.len(), 0);
+        assert_eq!(e.num_cols(), 2);
+    }
+
+    #[test]
+    fn approx_rows_size_is_exactly_the_row_sum() {
+        let rows = vec![
+            row!(1i64, "abc", 1.5, true),
+            Row::new(vec![Field::Null, Field::Null, Field::Null, Field::Null]),
+            Row::new(vec![
+                Field::I64(0),
+                Field::Str(String::new()),
+                Field::F64(0.0),
+                Field::Bool(false),
+            ]),
+        ];
+        let b = ColumnBatch::try_from_rows(&rows).unwrap();
+        let want: usize = rows.iter().map(|r| r.approx_size()).sum();
+        assert_eq!(b.approx_rows_size(), want);
+        // mixed column goes through Any storage — still exact
+        let mixed = vec![row!(1i64), row!("s"), Row::new(vec![Field::Null])];
+        let cols = vec![Column::from_fields(
+            mixed.iter().map(|r| r.fields[0].clone()).collect(),
+        )];
+        let mb = ColumnBatch::new(cols, 3);
+        assert_eq!(mb.approx_rows_size(), mixed.iter().map(|r| r.approx_size()).sum::<usize>());
     }
 
     #[test]

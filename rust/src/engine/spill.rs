@@ -5,11 +5,13 @@
 //!
 //! * **Shuffle buckets** — the map side of every wide operator
 //!   (reduce/distinct/join/repartition) produces per-partition hash
-//!   buckets. A [`BucketSet`] holds them in memory under a reservation,
-//!   or as one [`SpillFile`] whose per-bucket segments are merge-read
-//!   back on the reduce side, one bucket at a time, in the exact input
-//!   partition order the in-memory path uses — so collected output is
-//!   byte-identical with spilling forced on or off.
+//!   buckets. A [`BucketSet`] holds them in memory under a reservation —
+//!   as rows, or as [`ColumnBatch`]es when a column-keyed wide operator
+//!   bucketed batch-native — or as one [`SpillFile`] whose per-bucket
+//!   segments are merge-read back on the reduce side, one bucket at a
+//!   time, in the exact input partition order the in-memory path uses —
+//!   so collected output is byte-identical with spilling forced on or
+//!   off, and with batch transport on or off.
 //! * **Sorted runs** — the external merge sort's map side pre-sorts each
 //!   partition (or micro-batch delta) into a [`SortedRun`]: resident
 //!   under a reservation, or spilled as [`RUN_CHUNK_ROWS`]-row colbin
@@ -34,7 +36,7 @@
 use super::memory::{MemoryGovernor, MemoryReservation};
 use super::row::{ColumnBatch, Field, FieldType, Row, Schema, SchemaRef};
 use crate::io::colbin;
-use crate::util::error::Result;
+use crate::util::error::{DdpError, Result};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -146,30 +148,140 @@ impl SpillFile {
         let mut segments = Vec::with_capacity(buckets.len());
         let mut offset = 0u64;
         for bucket in buckets {
-            let width = bucket.iter().map(|r| r.fields.len()).max().unwrap_or(0);
-            let ragged = bucket.iter().any(|r| r.fields.len() != width);
-            let schema = spill_schema(width);
-            let (enc, widths) = if ragged {
-                // see SegmentMeta::widths: pad to rectangular, remember
-                // the true arities so the read restores rows exactly
-                let padded: Vec<Row> = bucket
-                    .iter()
-                    .map(|r| {
-                        let mut fields = r.fields.clone();
-                        fields.resize(width, Field::Null);
-                        Row::new(fields)
-                    })
-                    .collect();
-                let widths = bucket.iter().map(|r| r.fields.len() as u32).collect();
-                (colbin::encode(&schema, &padded)?, Some(widths))
-            } else {
-                (colbin::encode(&schema, bucket)?, None)
-            };
+            let (enc, width, widths) = Self::encode_row_bucket(bucket)?;
             file.write_all(&enc)?;
             segments.push(SegmentMeta {
                 offset,
                 len: enc.len() as u64,
                 rows: bucket.len() as u64,
+                width,
+                widths,
+            });
+            offset += enc.len() as u64;
+        }
+        Ok(SpillFile {
+            path: path.to_path_buf(),
+            segments,
+            file_bytes: offset,
+            _dir: dir.clone(),
+        })
+    }
+
+    /// Encode one bucket of rows: blob bytes, segment width, and per-row
+    /// true widths when the bucket was ragged.
+    fn encode_row_bucket(bucket: &[Row]) -> Result<(Vec<u8>, usize, Option<Vec<u32>>)> {
+        let width = bucket.iter().map(|r| r.fields.len()).max().unwrap_or(0);
+        let ragged = bucket.iter().any(|r| r.fields.len() != width);
+        let schema = spill_schema(width);
+        if ragged {
+            // see SegmentMeta::widths: pad to rectangular, remember
+            // the true arities so the read restores rows exactly
+            let padded: Vec<Row> = bucket
+                .iter()
+                .map(|r| {
+                    let mut fields = r.fields.clone();
+                    fields.resize(width, Field::Null);
+                    Row::new(fields)
+                })
+                .collect();
+            let widths = bucket.iter().map(|r| r.fields.len() as u32).collect();
+            Ok((colbin::encode(&schema, &padded)?, width, Some(widths)))
+        } else {
+            Ok((colbin::encode(&schema, bucket)?, width, None))
+        }
+    }
+
+    /// Encode batch-native buckets (one blob per bucket) into a fresh
+    /// spill file. Byte-for-byte identical to [`SpillFile::write_buckets`]
+    /// over the same rows: batches are rectangular by construction and
+    /// [`colbin::encode_columns`] writes exactly what the row encoder
+    /// would — so on-disk size (and therefore spill accounting) cannot
+    /// depend on which transport produced the spill.
+    pub fn write_bucket_batches(
+        dir: &Arc<SpillDir>,
+        buckets: &[ColumnBatch],
+    ) -> Result<SpillFile> {
+        let path = dir.next_path()?;
+        let out = Self::write_bucket_batches_to(dir, &path, buckets);
+        if out.is_err() {
+            // don't leave partial files behind on encode/IO failure
+            let _ = std::fs::remove_file(&path);
+        }
+        out
+    }
+
+    fn write_bucket_batches_to(
+        dir: &Arc<SpillDir>,
+        path: &std::path::Path,
+        buckets: &[ColumnBatch],
+    ) -> Result<SpillFile> {
+        let mut file = std::fs::File::create(path)?;
+        let mut segments = Vec::with_capacity(buckets.len());
+        let mut offset = 0u64;
+        let zero_width = ColumnBatch::new(Vec::new(), 0);
+        for bucket in buckets {
+            // an empty bucket encodes at width 0 — exactly like the row
+            // path, whose width is the max arity over zero rows
+            let bucket = if bucket.is_empty() { &zero_width } else { bucket };
+            let width = bucket.num_cols();
+            let enc = colbin::encode_columns(&spill_schema(width), bucket)?;
+            file.write_all(&enc)?;
+            segments.push(SegmentMeta {
+                offset,
+                len: enc.len() as u64,
+                rows: bucket.len() as u64,
+                width,
+                widths: None,
+            });
+            offset += enc.len() as u64;
+        }
+        Ok(SpillFile {
+            path: path.to_path_buf(),
+            segments,
+            file_bytes: offset,
+            _dir: dir.clone(),
+        })
+    }
+
+    /// Encode sorted-run chunks, column-native per chunk: a chunk that
+    /// transposes cleanly (rectangular, no mixed-type column) is written
+    /// through the batch encoder; ragged or mixed chunks keep the exact
+    /// row fallback. Bytes are identical either way, so external sort
+    /// spills columns without its file size or read-back depending on
+    /// which path each chunk took.
+    pub fn write_run_chunks(dir: &Arc<SpillDir>, chunks: &[Vec<Row>]) -> Result<SpillFile> {
+        let path = dir.next_path()?;
+        let out = Self::write_run_chunks_to(dir, &path, chunks);
+        if out.is_err() {
+            // don't leave partial files behind on encode/IO failure
+            let _ = std::fs::remove_file(&path);
+        }
+        out
+    }
+
+    fn write_run_chunks_to(
+        dir: &Arc<SpillDir>,
+        path: &std::path::Path,
+        chunks: &[Vec<Row>],
+    ) -> Result<SpillFile> {
+        let mut file = std::fs::File::create(path)?;
+        let mut segments = Vec::with_capacity(chunks.len());
+        let mut offset = 0u64;
+        for chunk in chunks {
+            // one chunk converts (and drops) at a time, so the transient
+            // columnar copy is bounded by RUN_CHUNK_ROWS
+            let (enc, width, widths) = match ColumnBatch::try_from_rows(chunk) {
+                Some(batch) => {
+                    let width = batch.num_cols();
+                    (colbin::encode_columns(&spill_schema(width), &batch)?, width, None)
+                }
+                None => Self::encode_row_bucket(chunk)?,
+            };
+            file.write_all(&enc)?;
+            segments.push(SegmentMeta {
+                offset,
+                len: enc.len() as u64,
+                rows: chunk.len() as u64,
                 width,
                 widths,
             });
@@ -218,11 +330,43 @@ impl SpillFile {
         if seg.widths.is_some() {
             return Ok(None);
         }
+        let len = self.seg_len_checked(seg)?;
         let mut f = self.open()?;
         f.seek(SeekFrom::Start(seg.offset))?;
-        let mut buf = vec![0u8; seg.len as usize];
+        let mut buf = vec![0u8; len];
         f.read_exact(&mut buf)?;
         Ok(Some(colbin::decode_columns(&spill_schema(seg.width), &buf)?))
+    }
+
+    /// Validate a segment's byte extent before allocating or reading: a
+    /// corrupt or oversized header must fail with a structured error, not
+    /// wrap on a narrow-`usize` cast or read garbage past the file end.
+    fn seg_len_checked(&self, seg: &SegmentMeta) -> Result<usize> {
+        let len = usize::try_from(seg.len).map_err(|_| {
+            DdpError::format(
+                "spill",
+                format!("segment length {} overflows usize (corrupt header?)", seg.len),
+            )
+        })?;
+        let end = seg.offset.checked_add(seg.len).ok_or_else(|| {
+            DdpError::format(
+                "spill",
+                format!(
+                    "segment extent overflows: offset {} + len {} (corrupt header?)",
+                    seg.offset, seg.len
+                ),
+            )
+        })?;
+        if end > self.file_bytes {
+            return Err(DdpError::format(
+                "spill",
+                format!(
+                    "segment [{}..{end}) exceeds spill file size {} (corrupt header?)",
+                    seg.offset, self.file_bytes
+                ),
+            ));
+        }
+        Ok(len)
     }
 
     /// Open a read handle for repeated bucket reads — a chunk-streaming
@@ -235,13 +379,20 @@ impl SpillFile {
     /// Decode one bucket's rows through an already-open handle.
     fn read_bucket_at(&self, f: &mut std::fs::File, b: usize) -> Result<Vec<Row>> {
         let seg = &self.segments[b];
+        let len = self.seg_len_checked(seg)?;
         f.seek(SeekFrom::Start(seg.offset))?;
-        let mut buf = vec![0u8; seg.len as usize];
+        let mut buf = vec![0u8; len];
         f.read_exact(&mut buf)?;
         let mut rows = colbin::decode(&spill_schema(seg.width), &buf)?;
         if let Some(widths) = &seg.widths {
             for (row, w) in rows.iter_mut().zip(widths.iter()) {
-                row.fields.truncate(*w as usize);
+                let w = usize::try_from(*w).map_err(|_| {
+                    DdpError::format(
+                        "spill",
+                        format!("row width {w} overflows usize (corrupt header?)"),
+                    )
+                })?;
+                row.fields.truncate(w);
             }
         }
         Ok(rows)
@@ -259,10 +410,19 @@ impl Drop for SpillFile {
 // ---------------------------------------------------------------------
 
 /// Map-side output of one shuffle task: the task's hash buckets, either
-/// resident under a governor reservation or spilled to one file.
+/// resident (as rows, or as column batches when a column-keyed wide
+/// operator bucketed batch-native) under a governor reservation, or
+/// spilled to one file.
 pub enum BucketSet {
     Mem {
         buckets: Vec<Vec<Row>>,
+        row_bytes: u64,
+        rows: u64,
+        /// released when the last [`Segment`] of this set drops
+        res: Option<MemoryReservation>,
+    },
+    MemBatches {
+        batches: Vec<ColumnBatch>,
         row_bytes: u64,
         rows: u64,
         /// released when the last [`Segment`] of this set drops
@@ -298,42 +458,95 @@ impl BucketSet {
         }
     }
 
+    /// Reserve-or-spill for batch-native shuffle state. Byte accounting
+    /// ([`ColumnBatch::approx_rows_size`]) and spilled file contents
+    /// ([`colbin::encode_columns`]) are exact row-path equivalents, so
+    /// the governor's spill decision — and everything downstream of it —
+    /// cannot depend on the transport representation.
+    pub fn build_batches(
+        gov: &Arc<MemoryGovernor>,
+        dir: &Arc<SpillDir>,
+        batches: Vec<ColumnBatch>,
+    ) -> Result<BucketSet> {
+        let mut row_bytes = 0u64;
+        let mut rows = 0u64;
+        for b in &batches {
+            rows += b.len() as u64;
+            row_bytes += b.approx_rows_size() as u64;
+        }
+        match MemoryGovernor::try_reserve(gov, row_bytes as usize) {
+            Some(res) => Ok(BucketSet::MemBatches { batches, row_bytes, rows, res: Some(res) }),
+            None => {
+                let file = SpillFile::write_bucket_batches(dir, &batches)?;
+                Ok(BucketSet::Spilled { file: Arc::new(file), row_bytes, rows })
+            }
+        }
+    }
+
     /// Uncompressed row bytes this task contributes to the shuffle
     /// (identical whether the set spilled or stayed resident).
     pub fn row_bytes(&self) -> u64 {
         match self {
-            BucketSet::Mem { row_bytes, .. } | BucketSet::Spilled { row_bytes, .. } => *row_bytes,
+            BucketSet::Mem { row_bytes, .. }
+            | BucketSet::MemBatches { row_bytes, .. }
+            | BucketSet::Spilled { row_bytes, .. } => *row_bytes,
         }
     }
 
     pub fn records(&self) -> u64 {
         match self {
-            BucketSet::Mem { rows, .. } | BucketSet::Spilled { rows, .. } => *rows,
+            BucketSet::Mem { rows, .. }
+            | BucketSet::MemBatches { rows, .. }
+            | BucketSet::Spilled { rows, .. } => *rows,
         }
     }
 
     /// On-disk bytes when spilled.
     pub fn spilled_file_bytes(&self) -> Option<u64> {
         match self {
-            BucketSet::Mem { .. } => None,
+            BucketSet::Mem { .. } | BucketSet::MemBatches { .. } => None,
             BucketSet::Spilled { file, .. } => Some(file.file_bytes()),
         }
     }
 }
 
-/// One input partition's slice of one reduce bucket: resident rows
-/// (sharing their set's reservation) or a segment of a spill file.
+/// One input partition's slice of one reduce bucket: resident rows or a
+/// resident column batch (sharing their set's reservation), or a segment
+/// of a spill file.
 pub enum Segment {
     Mem(Vec<Row>, Option<Arc<MemoryReservation>>),
+    MemBatch(ColumnBatch, Option<Arc<MemoryReservation>>),
     Disk(Arc<SpillFile>, usize),
+}
+
+/// A segment's payload in its native representation.
+pub enum SegmentData {
+    Rows(Vec<Row>),
+    Batch(ColumnBatch),
 }
 
 impl Segment {
     /// Materialize this segment's rows (original order).
     pub fn take_rows(self) -> Result<Vec<Row>> {
+        Ok(match self.take_data()? {
+            SegmentData::Rows(rows) => rows,
+            SegmentData::Batch(batch) => batch.into_rows(),
+        })
+    }
+
+    /// Materialize in whichever representation the segment already has:
+    /// resident batches and rectangular spill segments come back as
+    /// column batches ([`SpillFile::read_bucket_batch`] is the primary
+    /// read path — colbin is column-major on disk); only row-resident
+    /// and ragged spilled segments come back as rows.
+    pub fn take_data(self) -> Result<SegmentData> {
         match self {
-            Segment::Mem(rows, _res) => Ok(rows),
-            Segment::Disk(file, b) => file.read_bucket(b),
+            Segment::Mem(rows, _res) => Ok(SegmentData::Rows(rows)),
+            Segment::MemBatch(batch, _res) => Ok(SegmentData::Batch(batch)),
+            Segment::Disk(file, b) => match file.read_bucket_batch(b)? {
+                Some(batch) => Ok(SegmentData::Batch(batch)),
+                None => Ok(SegmentData::Rows(file.read_bucket(b)?)),
+            },
         }
     }
 }
@@ -352,6 +565,16 @@ pub fn transpose_segments(sets: Vec<BucketSet>, num_parts: usize) -> Vec<Vec<Seg
                     // empty slices contribute nothing to the merge
                     if !rows.is_empty() {
                         out[b].push(Segment::Mem(rows, res.clone()));
+                    }
+                }
+            }
+            BucketSet::MemBatches { batches, res, .. } => {
+                let res = res.map(Arc::new);
+                for (b, batch) in batches.into_iter().enumerate() {
+                    // empty batches are skipped exactly like empty row
+                    // slices, so segment order is mode-independent
+                    if !batch.is_empty() {
+                        out[b].push(Segment::MemBatch(batch, res.clone()));
                     }
                 }
             }
@@ -421,7 +644,7 @@ impl SortedRun {
                 while it.peek().is_some() {
                     chunks.push(it.by_ref().take(RUN_CHUNK_ROWS).collect());
                 }
-                let file = SpillFile::write_buckets(dir, &chunks)?;
+                let file = SpillFile::write_run_chunks(dir, &chunks)?;
                 Ok(SortedRun::Spilled { file, row_bytes, rows: n })
             }
         }
@@ -792,6 +1015,118 @@ mod tests {
         let f2 = SpillFile::write_buckets(&d, std::slice::from_ref(&ragged)).unwrap();
         assert!(f2.read_bucket_batch(0).unwrap().is_none());
         assert_eq!(f2.read_bucket(0).unwrap(), ragged);
+    }
+
+    #[test]
+    fn batch_written_spill_file_is_byte_identical_to_row_written() {
+        // the same buckets written batch-native and row-native must be
+        // the same file, byte for byte — including empty buckets (the
+        // row path encodes them at width 0) and all-null columns
+        let d = dir();
+        let mut with_nulls = rows(0, 6);
+        with_nulls.push(Row::new(vec![Field::Null, Field::Null, Field::Null]));
+        let all_null_col: Vec<Row> = (0..4)
+            .map(|i| Row::new(vec![Field::I64(i), Field::Null, Field::F64(i as f64)]))
+            .collect();
+        let buckets = vec![with_nulls, Vec::new(), all_null_col];
+        let from_rows = SpillFile::write_buckets(&d, &buckets).unwrap();
+        let batches: Vec<ColumnBatch> = buckets
+            .iter()
+            .map(|b| ColumnBatch::try_from_rows(b).expect("rectangular typed buckets"))
+            .collect();
+        let from_batches = SpillFile::write_bucket_batches(&d, &batches).unwrap();
+        assert_eq!(
+            std::fs::read(&from_rows.path).unwrap(),
+            std::fs::read(&from_batches.path).unwrap(),
+            "batch and row writers must produce identical files"
+        );
+        assert_eq!(from_rows.file_bytes(), from_batches.file_bytes());
+        for (b, want) in buckets.iter().enumerate() {
+            assert_eq!(&from_batches.read_bucket(b).unwrap(), want);
+        }
+        // the all-null column reads back in canonical representation
+        let rt = from_batches.read_bucket_batch(2).unwrap().unwrap();
+        assert!(rt.cols[1].nulls.is_none(), "all-null column decodes to canonical Any");
+        assert_eq!(rt.cols[1], batches[2].cols[1], "round-trip representation is stable");
+    }
+
+    #[test]
+    fn run_chunk_writer_matches_row_writer_bytes() {
+        let d = dir();
+        // clean chunks go columnar, the ragged chunk falls back to rows —
+        // both byte-identical to the plain row writer
+        let clean = rows(0, 20);
+        let ragged = vec![row!(1i64), Row::new(vec![Field::I64(1), Field::I64(2)])];
+        let chunks = vec![clean, ragged];
+        let a = SpillFile::write_buckets(&d, &chunks).unwrap();
+        let b = SpillFile::write_run_chunks(&d, &chunks).unwrap();
+        assert_eq!(std::fs::read(&a.path).unwrap(), std::fs::read(&b.path).unwrap());
+        for (i, want) in chunks.iter().enumerate() {
+            assert_eq!(&b.read_bucket(i).unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn corrupted_segment_header_fails_loudly() {
+        let d = dir();
+        let mut f = SpillFile::write_buckets(&d, &[rows(0, 5)]).unwrap();
+        // length past the end of the file: must be a structured error,
+        // not a giant allocation or a short read
+        f.segments[0].len = f.file_bytes + 1;
+        let err = f.read_bucket(0).unwrap_err().to_string();
+        assert!(err.contains("spill") && err.contains("corrupt"), "{err}");
+        let err = f.read_bucket_batch(0).unwrap_err().to_string();
+        assert!(err.contains("corrupt"), "{err}");
+        // u64::MAX length: the old `as usize` cast accepted this silently
+        f.segments[0].len = u64::MAX;
+        let err = f.read_bucket(0).unwrap_err().to_string();
+        assert!(err.contains("corrupt"), "{err}");
+        // offset + len overflowing u64 is caught before any allocation
+        f.segments[0].offset = u64::MAX;
+        let err = f.read_bucket(0).unwrap_err().to_string();
+        assert!(err.contains("overflow") || err.contains("corrupt"), "{err}");
+    }
+
+    #[test]
+    fn mem_batch_segments_transpose_in_partition_order() {
+        let d = dir();
+        let g_mem = gov(None);
+        let g_spill = gov(Some(1));
+        let to_batches = |buckets: &[Vec<Row>]| -> Vec<ColumnBatch> {
+            buckets.iter().map(|b| ColumnBatch::try_from_rows(b).unwrap()).collect()
+        };
+        // part 0 resident batch-native, part 1 spilled batch-native:
+        // bucket b must still read p0 then p1, like the row transpose
+        let p0 = BucketSet::build_batches(&g_mem, &d, to_batches(&[rows(0, 3), rows(10, 12)]))
+            .unwrap();
+        assert!(p0.spilled_file_bytes().is_none());
+        assert!(g_mem.reserved_bytes() > 0, "resident batches hold a reservation");
+        let p1 = BucketSet::build_batches(&g_spill, &d, to_batches(&[rows(3, 5), rows(12, 15)]))
+            .unwrap();
+        assert!(p1.spilled_file_bytes().is_some());
+        // row-byte accounting is identical to the row path
+        let row_set = BucketSet::build(&g_mem, &d, vec![rows(0, 3), rows(10, 12)]).unwrap();
+        assert_eq!(p0.row_bytes(), row_set.row_bytes());
+        assert_eq!(p0.records(), row_set.records());
+        drop(row_set);
+
+        let per_bucket = transpose_segments(vec![p0, p1], 2);
+        let mut merged: Vec<Vec<Row>> = Vec::new();
+        for segs in per_bucket {
+            let mut out = Vec::new();
+            for s in segs {
+                match s.take_data().unwrap() {
+                    SegmentData::Batch(b) => out.extend(b.into_rows()),
+                    SegmentData::Rows(r) => panic!("batch-native segments expected, got {r:?}"),
+                }
+            }
+            merged.push(out);
+        }
+        assert_eq!(merged[0], rows(0, 5));
+        let mut want1 = rows(10, 12);
+        want1.extend(rows(12, 15));
+        assert_eq!(merged[1], want1);
+        assert_eq!(g_mem.reserved_bytes(), 0, "reservation released with the segments");
     }
 
     #[test]

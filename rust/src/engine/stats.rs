@@ -37,6 +37,14 @@ pub struct EngineStats {
     /// vectorizable segments that fell back to row-at-a-time execution
     /// (ragged input arity or a mixed-type column)
     pub vectorized_fallbacks: AtomicU64,
+    /// shuffle map partitions transported batch-native through a
+    /// column-keyed wide operator (no row materialization at the
+    /// shuffle boundary)
+    pub vectorized_shuffle_batches: AtomicU64,
+    /// column-keyed shuffle map partitions that fell back to row
+    /// transport (ragged input arity, a mixed-type column, or a key
+    /// column index past the batch width)
+    pub vectorized_shuffle_fallbacks: AtomicU64,
 }
 
 impl EngineStats {
@@ -69,6 +77,10 @@ impl EngineStats {
             sort_spill_bytes: self.sort_spill_bytes.load(Ordering::Relaxed),
             vectorized_batches: self.vectorized_batches.load(Ordering::Relaxed),
             vectorized_fallbacks: self.vectorized_fallbacks.load(Ordering::Relaxed),
+            vectorized_shuffle_batches: self.vectorized_shuffle_batches.load(Ordering::Relaxed),
+            vectorized_shuffle_fallbacks: self
+                .vectorized_shuffle_fallbacks
+                .load(Ordering::Relaxed),
         }
     }
 }
@@ -94,6 +106,8 @@ pub struct StatsSnapshot {
     pub sort_spill_bytes: u64,
     pub vectorized_batches: u64,
     pub vectorized_fallbacks: u64,
+    pub vectorized_shuffle_batches: u64,
+    pub vectorized_shuffle_fallbacks: u64,
 }
 
 impl StatsSnapshot {
@@ -118,6 +132,10 @@ impl StatsSnapshot {
             sort_spill_bytes: self.sort_spill_bytes - earlier.sort_spill_bytes,
             vectorized_batches: self.vectorized_batches - earlier.vectorized_batches,
             vectorized_fallbacks: self.vectorized_fallbacks - earlier.vectorized_fallbacks,
+            vectorized_shuffle_batches: self.vectorized_shuffle_batches
+                - earlier.vectorized_shuffle_batches,
+            vectorized_shuffle_fallbacks: self.vectorized_shuffle_fallbacks
+                - earlier.vectorized_shuffle_fallbacks,
         }
     }
 }

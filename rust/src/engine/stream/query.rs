@@ -59,7 +59,7 @@
 //! batch sizes {1, 100, whole-corpus}, optimizer on and off.
 
 use super::super::dataset::{CmpFn, Dataset, KeyFn, Partitioned, Plan, ReduceFn};
-use super::super::executor::{field_hash, whole_row_key, EngineCtx};
+use super::super::executor::{bucket_of, whole_row_key, EngineCtx};
 use super::super::optimizer;
 use super::super::row::{Field, Row, SchemaRef};
 use super::super::spill::{SortedRun, SortedRunSet, SpilledRows};
@@ -311,8 +311,7 @@ impl StreamQuery {
                     for r in delta {
                         let r = Arc::new(r);
                         if seen.insert(r.clone()) {
-                            let b = (distinct_bucket(&r) % num_parts as u64) as usize;
-                            buckets[b].push(r);
+                            buckets[distinct_bucket(&r, num_parts)].push(r);
                         }
                     }
                 }
@@ -379,7 +378,7 @@ impl StreamQuery {
                     let mut buckets: Vec<Vec<(Field, Row)>> =
                         (0..num_parts).map(|_| Vec::new()).collect();
                     for (k, r) in accs.drain() {
-                        let b = (field_hash(&k) % num_parts as u64) as usize;
+                        let b = bucket_of(&k, num_parts);
                         buckets[b].push((k, r));
                     }
                     let parts = buckets
@@ -434,9 +433,10 @@ impl StreamQuery {
 }
 
 /// Batch-identical bucket for a distinct row: the executor's own
-/// whole-row shuffle key, hashed the way `shuffle_buckets` does.
-fn distinct_bucket(r: &Row) -> u64 {
-    field_hash(&whole_row_key(r))
+/// whole-row shuffle key, routed through the executor's single bucket
+/// definition (`bucket_of`) so stream drains and batch output agree.
+fn distinct_bucket(r: &Row, num_parts: usize) -> usize {
+    bucket_of(&whole_row_key(r), num_parts)
 }
 
 fn classify(ds: &Dataset, source_id: u64, memo: &mut HashMap<u64, Class>) -> Class {

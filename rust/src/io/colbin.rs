@@ -69,19 +69,58 @@ fn tag_type(tag: u8) -> Result<FieldType> {
     })
 }
 
-/// Encode rows column-major and compress.
-pub fn encode(schema: &Schema, rows: &[Row]) -> Result<Vec<u8>> {
+fn header(schema: &Schema, nrows: usize) -> Vec<u8> {
     let mut head = Vec::new();
     head.extend_from_slice(MAGIC);
     head.push(VERSION);
     head.extend_from_slice(&(schema.len() as u16).to_le_bytes());
-    head.extend_from_slice(&(rows.len() as u64).to_le_bytes());
+    head.extend_from_slice(&(nrows as u64).to_le_bytes());
     for i in 0..schema.len() {
         let (name, ty) = schema.field(i);
         head.extend_from_slice(&(name.len() as u16).to_le_bytes());
         head.extend_from_slice(name.as_bytes());
         head.push(type_tag(ty));
     }
+    head
+}
+
+/// Append one present value's payload bytes (no tag, no bitmap).
+fn write_field(payload: &mut Vec<u8>, f: &Field) {
+    match f {
+        Field::Null => {}
+        Field::Bool(b) => payload.push(*b as u8),
+        Field::I64(v) => payload.extend_from_slice(&v.to_le_bytes()),
+        Field::F64(v) => payload.extend_from_slice(&v.to_le_bytes()),
+        Field::Str(s) => {
+            payload.extend_from_slice(&(s.len() as u32).to_le_bytes());
+            payload.extend_from_slice(s.as_bytes());
+        }
+        Field::Bytes(b) => {
+            payload.extend_from_slice(&(b.len() as u32).to_le_bytes());
+            payload.extend_from_slice(b);
+        }
+    }
+}
+
+/// Compress the payload and wrap it with the header + length + crc frame.
+fn frame(head: Vec<u8>, payload: &[u8]) -> Result<Vec<u8>> {
+    let mut enc = ZlibEncoder::new(Vec::new(), Compression::fast());
+    enc.write_all(payload)?;
+    let compressed = enc
+        .finish()
+        .map_err(|e| DdpError::format("colbin", format!("compress: {e}")))?;
+
+    let mut out = head;
+    out.extend_from_slice(&(compressed.len() as u64).to_le_bytes());
+    let crc = crc32(&compressed);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out.extend_from_slice(&compressed);
+    Ok(out)
+}
+
+/// Encode rows column-major and compress.
+pub fn encode(schema: &Schema, rows: &[Row]) -> Result<Vec<u8>> {
+    let head = header(schema, rows.len());
 
     // column-major payload
     let mut payload = Vec::new();
@@ -100,35 +139,94 @@ pub fn encode(schema: &Schema, rows: &[Row]) -> Result<Vec<u8>> {
             if tagged && !f.is_null() {
                 payload.push(field_tag(f));
             }
-            match f {
-                Field::Null => {}
-                Field::Bool(b) => payload.push(*b as u8),
-                Field::I64(v) => payload.extend_from_slice(&v.to_le_bytes()),
-                Field::F64(v) => payload.extend_from_slice(&v.to_le_bytes()),
-                Field::Str(s) => {
-                    payload.extend_from_slice(&(s.len() as u32).to_le_bytes());
-                    payload.extend_from_slice(s.as_bytes());
+            write_field(&mut payload, f);
+        }
+    }
+
+    frame(head, &payload)
+}
+
+/// Encode a [`ColumnBatch`] column-major — byte-for-byte identical to
+/// [`encode`] over the batch's rows, without ever materializing them.
+/// The engine's spill path relies on this equivalence: a shuffle bucket
+/// spilled from batch-native state produces exactly the file a
+/// row-transported run would, so on-disk bytes (and spill accounting)
+/// cannot diverge between the two execution modes.
+pub fn encode_columns(schema: &Schema, batch: &ColumnBatch) -> Result<Vec<u8>> {
+    if batch.num_cols() != schema.len() {
+        return Err(DdpError::format(
+            "colbin",
+            format!("batch has {} cols, schema has {}", batch.num_cols(), schema.len()),
+        ));
+    }
+    let nrows = batch.len();
+    let head = header(schema, nrows);
+
+    let mut payload = Vec::new();
+    for (ci, col) in batch.cols.iter().enumerate() {
+        let mut bitmap = vec![0u8; nrows.div_ceil(8)];
+        for r in 0..nrows {
+            if !col.is_null(r) {
+                bitmap[r / 8] |= 1 << (r % 8);
+            }
+        }
+        payload.extend_from_slice(&bitmap);
+        let tagged = schema.field(ci).1 == FieldType::Any;
+        // write straight from typed storage; null slots contribute no
+        // payload bytes (the placeholder value is never written out)
+        macro_rules! typed {
+            ($v:expr, $ty:expr, $write:expr) => {
+                for (r, x) in $v.iter().enumerate() {
+                    if col.is_null(r) {
+                        continue;
+                    }
+                    if tagged {
+                        payload.push(type_tag($ty));
+                    }
+                    #[allow(clippy::redundant_closure_call)]
+                    ($write)(&mut payload, x);
                 }
-                Field::Bytes(b) => {
-                    payload.extend_from_slice(&(b.len() as u32).to_le_bytes());
-                    payload.extend_from_slice(b);
+            };
+        }
+        match &col.data {
+            ColumnData::Bool(v) => {
+                typed!(v, FieldType::Bool, |p: &mut Vec<u8>, x: &bool| p.push(*x as u8))
+            }
+            ColumnData::I64(v) => {
+                typed!(v, FieldType::I64, |p: &mut Vec<u8>, x: &i64| p
+                    .extend_from_slice(&x.to_le_bytes()))
+            }
+            ColumnData::F64(v) => {
+                typed!(v, FieldType::F64, |p: &mut Vec<u8>, x: &f64| p
+                    .extend_from_slice(&x.to_le_bytes()))
+            }
+            ColumnData::Str(v) => {
+                typed!(v, FieldType::Str, |p: &mut Vec<u8>, x: &String| {
+                    p.extend_from_slice(&(x.len() as u32).to_le_bytes());
+                    p.extend_from_slice(x.as_bytes());
+                })
+            }
+            ColumnData::Bytes(v) => {
+                typed!(v, FieldType::Bytes, |p: &mut Vec<u8>, x: &Vec<u8>| {
+                    p.extend_from_slice(&(x.len() as u32).to_le_bytes());
+                    p.extend_from_slice(x);
+                })
+            }
+            ColumnData::Any(v) => {
+                for f in v {
+                    if f.is_null() {
+                        continue;
+                    }
+                    if tagged {
+                        payload.push(field_tag(f));
+                    }
+                    write_field(&mut payload, f);
                 }
             }
         }
     }
 
-    let mut enc = ZlibEncoder::new(Vec::new(), Compression::fast());
-    enc.write_all(&payload)?;
-    let compressed = enc
-        .finish()
-        .map_err(|e| DdpError::format("colbin", format!("compress: {e}")))?;
-
-    let mut out = head;
-    out.extend_from_slice(&(compressed.len() as u64).to_le_bytes());
-    let crc = crc32(&compressed);
-    out.extend_from_slice(&crc.to_le_bytes());
-    out.extend_from_slice(&compressed);
-    Ok(out)
+    frame(head, &payload)
 }
 
 /// Decode a colbin blob into rows (a transpose over [`decode_columns`]).
@@ -199,6 +297,9 @@ pub fn decode_columns(schema: &SchemaRef, bytes: &[u8]) -> Result<ColumnBatch> {
         let null_at: Vec<bool> =
             (0..nrows).map(|r| bitmap[r / 8] & (1 << (r % 8)) == 0).collect();
         let mask = null_at.contains(&true).then(|| null_at.clone());
+        // typed columns are normalized below so an all-null column decodes
+        // to the same canonical representation `Column::from_fields` (and
+        // `filter`/`take`) produce — spill round-trips must not drift
         cols.push(match ty {
             FieldType::Any => {
                 // self-describing values (v2) or v1 legacy strings;
@@ -221,28 +322,28 @@ pub fn decode_columns(schema: &SchemaRef, bytes: &[u8]) -> Result<ColumnBatch> {
                 for r in 0..nrows {
                     v.push(if null_at[r] { false } else { cur.u8()? != 0 });
                 }
-                Column { data: ColumnData::Bool(v), nulls: mask }
+                Column { data: ColumnData::Bool(v), nulls: mask }.normalize()
             }
             FieldType::I64 => {
                 let mut v = Vec::with_capacity(nrows);
                 for r in 0..nrows {
                     v.push(if null_at[r] { 0 } else { i64::from_le_bytes(cur.arr8()?) });
                 }
-                Column { data: ColumnData::I64(v), nulls: mask }
+                Column { data: ColumnData::I64(v), nulls: mask }.normalize()
             }
             FieldType::F64 => {
                 let mut v = Vec::with_capacity(nrows);
                 for r in 0..nrows {
                     v.push(if null_at[r] { 0.0 } else { f64::from_le_bytes(cur.arr8()?) });
                 }
-                Column { data: ColumnData::F64(v), nulls: mask }
+                Column { data: ColumnData::F64(v), nulls: mask }.normalize()
             }
             FieldType::Str => {
                 let mut v = Vec::with_capacity(nrows);
                 for r in 0..nrows {
                     v.push(if null_at[r] { String::new() } else { read_str(&mut cur)? });
                 }
-                Column { data: ColumnData::Str(v), nulls: mask }
+                Column { data: ColumnData::Str(v), nulls: mask }.normalize()
             }
             FieldType::Bytes => {
                 let mut v = Vec::with_capacity(nrows);
@@ -254,7 +355,7 @@ pub fn decode_columns(schema: &SchemaRef, bytes: &[u8]) -> Result<ColumnBatch> {
                         cur.take(len)?.to_vec()
                     });
                 }
-                Column { data: ColumnData::Bytes(v), nulls: mask }
+                Column { data: ColumnData::Bytes(v), nulls: mask }.normalize()
             }
         });
     }
@@ -456,6 +557,74 @@ mod tests {
         assert_eq!(batch.len(), 0);
         assert_eq!(batch.num_cols(), 5);
         assert!(batch.into_rows().is_empty());
+    }
+
+    #[test]
+    fn encode_columns_bytes_identical_to_row_encode() {
+        // the batch-native spill path writes with encode_columns; files
+        // must be byte-for-byte what the row path would have written
+        let any2 = Schema::new(vec![("c0", FieldType::Any), ("c1", FieldType::Any)]);
+        let neg_nan = f64::from_bits(f64::NAN.to_bits() | (1u64 << 63));
+        let cases: Vec<(SchemaRef, Vec<Row>)> = vec![
+            // typed columns with placeholder/real collisions and nulls
+            (
+                any2.clone(),
+                vec![
+                    Row::new(vec![Field::I64(0), Field::Str(String::new())]),
+                    Row::new(vec![Field::Null, Field::Null]),
+                    Row::new(vec![Field::I64(7), Field::Str("x".into())]),
+                ],
+            ),
+            // NaN payloads must keep their exact bit patterns
+            (
+                any2.clone(),
+                vec![
+                    Row::new(vec![Field::F64(f64::NAN), Field::F64(-0.0)]),
+                    Row::new(vec![Field::F64(neg_nan), Field::Null]),
+                ],
+            ),
+            // genuinely mixed column (Any storage) + all-null column
+            (
+                any2.clone(),
+                vec![
+                    Row::new(vec![Field::I64(1), Field::Null]),
+                    Row::new(vec![Field::Str("s".into()), Field::Null]),
+                    Row::new(vec![Field::Bytes(vec![0, 1]), Field::Null]),
+                ],
+            ),
+            // empty batch
+            (any2.clone(), vec![]),
+            // typed (non-Any) schema: values are written untagged
+            (
+                Schema::new(vec![("id", FieldType::I64), ("t", FieldType::Str)]),
+                vec![row!(1i64, "a"), Row::new(vec![Field::Null, Field::Null])],
+            ),
+        ];
+        for (schema, rows) in cases {
+            let from_rows = encode(&schema, &rows).unwrap();
+            // build column-wise so mixed (Any-storage) columns are covered
+            let cols: Vec<Column> = (0..schema.len())
+                .map(|c| Column::from_fields(rows.iter().map(|r| r.fields[c].clone()).collect()))
+                .collect();
+            let batch = ColumnBatch::new(cols, rows.len());
+            let from_batch = encode_columns(&schema, &batch).unwrap();
+            assert_eq!(from_rows, from_batch, "encode paths diverged for {rows:?}");
+        }
+    }
+
+    #[test]
+    fn decode_columns_normalizes_all_null_typed_column() {
+        // an I64-typed column that is entirely null must decode to the
+        // same canonical representation from_fields produces (Any of
+        // Nulls, no mask) — not a typed vector with an all-true mask
+        let s = Schema::new(vec![("id", FieldType::I64)]);
+        let rows = vec![Row::new(vec![Field::Null]), Row::new(vec![Field::Null])];
+        let blob = encode(&s, &rows).unwrap();
+        let batch = decode_columns(&s, &blob).unwrap();
+        assert_eq!(batch.cols[0], Column::from_fields(vec![Field::Null, Field::Null]));
+        assert!(matches!(batch.cols[0].data, ColumnData::Any(_)));
+        assert!(batch.cols[0].nulls.is_none());
+        assert_eq!(batch.into_rows(), rows);
     }
 
     #[test]

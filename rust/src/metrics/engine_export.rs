@@ -49,6 +49,8 @@ impl EngineMetricsExporter {
         m.counter_add("engine.sort_spill_bytes", d.sort_spill_bytes);
         m.counter_add("engine.vectorized_batches", d.vectorized_batches);
         m.counter_add("engine.vectorized_fallbacks", d.vectorized_fallbacks);
+        m.counter_add("engine.vectorized_shuffle_batches", d.vectorized_shuffle_batches);
+        m.counter_add("engine.vectorized_shuffle_fallbacks", d.vectorized_shuffle_fallbacks);
         m.gauge_set(
             "engine.memory.reserved_bytes",
             engine.governor.reserved_bytes() as f64,
@@ -133,6 +135,14 @@ mod tests {
         ex.publish(&m, &c);
         assert!(m.counter("engine.vectorized_batches") > 0, "columnar batches must surface");
         assert_eq!(m.counter("engine.vectorized_fallbacks"), 0);
+        // a column-keyed wide op surfaces the batch-native shuffle counters
+        c.count(&ds.reduce_by_key_col(2, 0, |acc, _| acc)).unwrap();
+        ex.publish(&m, &c);
+        assert!(
+            m.counter("engine.vectorized_shuffle_batches") > 0,
+            "batch-native shuffle must surface"
+        );
+        assert_eq!(m.counter("engine.vectorized_shuffle_fallbacks"), 0);
     }
 
     #[test]

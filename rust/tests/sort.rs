@@ -51,8 +51,14 @@ fn base_source(g: &mut Gen, name: &str) -> Dataset {
         ("pad", FieldType::Str),
     ]);
     let n = 30 + g.usize(60);
+    // the dup-heavy key is null-salted: null keys must sort, dedup and
+    // (in the column-keyed reduce arm) bucket as SQL nulls, never as the
+    // typed placeholder `0` sharing their column
     let rows = (0..n)
-        .map(|i| row!(g.i64(0, 6), i as i64, g.string(8, 32)))
+        .map(|i| {
+            let k = if g.u64(8) == 0 { Field::Null } else { Field::I64(g.i64(0, 6)) };
+            Row::new(vec![k, Field::I64(i as i64), Field::Str(g.string(8, 32))])
+        })
         .collect();
     Dataset::from_rows(name, schema, rows, 1 + g.usize(4))
 }

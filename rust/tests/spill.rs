@@ -46,8 +46,15 @@ fn base_source(g: &mut Gen, name: &str) -> Dataset {
         ("pad", FieldType::Str),
     ]);
     let n = 20 + g.usize(60);
+    // both key columns (`id` joins, `grp` reduces) carry occasional
+    // nulls: the batch-native shuffle must bucket a null key as Null —
+    // never as the 0 placeholder its typed storage slot holds
     let rows = (0..n)
-        .map(|_| row!(g.i64(0, 25), g.i64(0, 5), g.string(8, 40)))
+        .map(|_| {
+            let id = if g.u64(8) == 0 { Field::Null } else { Field::I64(g.i64(0, 25)) };
+            let grp = if g.u64(6) == 0 { Field::Null } else { Field::I64(g.i64(0, 5)) };
+            Row::new(vec![id, grp, Field::Str(g.string(8, 40))])
+        })
         .collect();
     Dataset::from_rows(name, schema, rows, 1 + g.usize(4))
 }
@@ -141,6 +148,8 @@ fn differential_forced_spill_byte_identical() {
     // {memory, forced-spill} × {vectorize on, off}: all four modes must
     // collect byte-identical output
     let mut spilled_total = 0u64;
+    let mut mem_shuffle_batches = 0u64;
+    let mut spill_shuffle_batches = 0u64;
     property(100, |g| {
         let plan = rand_plan(g);
         let mem = EngineCtx::new(cfg_v(None, true));
@@ -151,6 +160,7 @@ fn differential_forced_spill_byte_identical() {
             0,
             "in-memory run releases every reservation"
         );
+        mem_shuffle_batches += mem.stats.snapshot().vectorized_shuffle_batches;
         let mem_rows = EngineCtx::new(cfg_v(None, false));
         assert_eq!(
             layout(&mem_rows.collect(&plan).unwrap()),
@@ -159,6 +169,9 @@ fn differential_forced_spill_byte_identical() {
             g.case,
             plan.plan_display()
         );
+        let rows_snap = mem_rows.stats.snapshot();
+        assert_eq!(rows_snap.vectorized_shuffle_batches, 0, "row mode must not move batches");
+        assert_eq!(rows_snap.vectorized_shuffle_fallbacks, 0, "row mode is never eligible");
         for vectorize in [true, false] {
             let spill = EngineCtx::new(cfg_v(Some(TINY), vectorize));
             let got = layout(&spill.collect(&plan).unwrap());
@@ -175,11 +188,22 @@ fn differential_forced_spill_byte_identical() {
                 "spill run releases every reservation"
             );
             spilled_total += spill.stats.snapshot().spill_bytes;
+            if vectorize {
+                spill_shuffle_batches += spill.stats.snapshot().vectorized_shuffle_batches;
+            }
         }
     });
     assert!(
         spilled_total > 0,
         "a {TINY}-byte budget across 100 wide-op DAGs must have spilled"
+    );
+    assert!(
+        mem_shuffle_batches > 0,
+        "column-keyed wide ops must engage the batch-native shuffle"
+    );
+    assert!(
+        spill_shuffle_batches > 0,
+        "batches must keep moving when the bucket sets spill to colbin"
     );
 }
 

@@ -227,6 +227,51 @@ fn union_of_stream_and_static_matches_batch() {
 }
 
 #[test]
+fn column_keyed_reduce_above_stream_frontier_is_batch_native() {
+    // a reduce_by_key_col evaluated at drain (above a Union frontier)
+    // must take the batch-native shuffle over the captured stream rows —
+    // null keys included — and still match the one-shot batch run
+    use ddp::engine::row::{Field, FieldType, Schema};
+    use ddp::engine::stream::StreamingCtx;
+    use ddp::engine::EngineCtx;
+
+    let schema = Schema::new(vec![("k", FieldType::Str), ("v", FieldType::I64)]);
+    let mk = |i: i64| {
+        let k = if i % 5 == 0 { Field::Null } else { Field::Str(format!("k{}", i % 7)) };
+        Row::new(vec![k, Field::I64(i)])
+    };
+    let rows: Vec<Row> = (0..90).map(mk).collect();
+    let static_rows: Vec<Row> = (90..100).map(mk).collect();
+    let sum = |acc: Row, r: &Row| {
+        let a = acc.get(1).as_i64().unwrap_or(0);
+        let b = r.get(1).as_i64().unwrap_or(0);
+        Row::new(vec![acc.get(0).clone(), Field::I64(a + b)])
+    };
+    let build = |src: &Dataset, stat: &Dataset| src.union(&[stat.clone()]).reduce_by_key_col(3, 0, sum);
+
+    let engine = EngineCtx::new(engine_cfg_v(true, true));
+    let src = Dataset::from_rows("Records", schema.clone(), Vec::new(), 1);
+    let stat = Dataset::from_rows("Static", schema.clone(), static_rows.clone(), 2);
+    let mut sc = StreamingCtx::new(engine, &build(&src, &stat), &src).unwrap();
+    for chunk in rows.chunks(17) {
+        sc.push_batch(chunk).unwrap();
+    }
+    let got = sc.finish().unwrap();
+    let snap = sc.engine.stats.snapshot();
+    assert!(
+        snap.vectorized_shuffle_batches > 0,
+        "drain-side column-keyed reduce must transport batches"
+    );
+    assert_eq!(snap.vectorized_shuffle_fallbacks, 0);
+
+    let engine = EngineCtx::new(engine_cfg_v(true, true));
+    let bsrc = Dataset::from_rows("Records", schema.clone(), rows, 4);
+    let bstat = Dataset::from_rows("Static", schema, static_rows, 2);
+    let want = engine.collect(&build(&bsrc, &bstat)).unwrap();
+    assert_eq!(layout(&got), layout(&want));
+}
+
+#[test]
 fn append_mode_emissions_match_batch_output() {
     // stateless pipeline: filter + projection only
     let spec_text = r#"{

@@ -18,7 +18,7 @@
 
 use ddp::engine::expr::{BinOp, Expr, Func, UnOp};
 use ddp::engine::row::{Field, FieldType, Row, Schema};
-use ddp::engine::{Dataset, EngineConfig, EngineCtx, Partitioned};
+use ddp::engine::{Dataset, EngineConfig, EngineCtx, JoinKind, Partitioned};
 use ddp::row;
 use ddp::util::testkit::{property, Gen};
 use std::cmp::Ordering;
@@ -183,14 +183,15 @@ fn rand_plan(g: &mut Gen) -> Dataset {
     let mut ds = base_source(g, "v0");
     let ops = 3 + g.usize(6);
     for _ in 0..ops {
-        ds = match g.u64(8) {
+        ds = match g.u64(10) {
             0 | 1 | 2 => ds.filter_expr(rand_pred(g, &ds.schema)),
             3 => rand_project(g, &ds),
             // opaque closure mid-chain: splits columnar segments
             4 => ds.filter(|r| !matches!(r.get(0), Field::Null)),
             5 => {
                 // mixed-type mutation: downstream expression segments on
-                // column 0 must fall back to rows
+                // column 0 must fall back to rows — and so must a later
+                // column-keyed shuffle over the mixed column
                 let schema = ds.schema.clone();
                 ds.map(schema, |r| {
                     let mut f = r.fields.clone();
@@ -203,7 +204,29 @@ fn rand_plan(g: &mut Gen) -> Dataset {
                 })
             }
             6 => ds.repartition(1 + g.usize(4)),
-            _ => ds.distinct(1 + g.usize(3)),
+            7 => ds.distinct(1 + g.usize(3)),
+            // column-keyed wide ops: the batch-native shuffle engages
+            // here (null keys included — base_source salts every column)
+            8 => {
+                let kc = g.usize(ds.schema.len());
+                ds.reduce_by_key_col(1 + g.usize(3), kc, |acc: Row, _r: &Row| acc)
+            }
+            _ => {
+                let right = base_source(g, "vj");
+                if ds.schema.len() + right.schema.len() > 9 {
+                    // cap chained-join width (and null-key fan-out)
+                    ds.distinct(2)
+                } else {
+                    let w = ds.schema.len() + right.schema.len();
+                    let names: Vec<String> = (0..w).map(|i| format!("c{i}")).collect();
+                    let out =
+                        Schema::of_names(&names.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+                    let kind = if g.bool() { JoinKind::Inner } else { JoinKind::Left };
+                    let lkc = g.usize(ds.schema.len());
+                    let rkc = g.usize(right.schema.len());
+                    ds.join_on(&right, out, kind, 1 + g.usize(3), lkc, rkc)
+                }
+            }
         };
     }
     ds
@@ -217,6 +240,8 @@ fn rand_plan(g: &mut Gen) -> Dataset {
 fn differential_vectorize_on_off_byte_identical() {
     let mut batches_total = 0u64;
     let mut fallbacks_total = 0u64;
+    let mut shuffle_batches_total = 0u64;
+    let mut shuffle_fallbacks_total = 0u64;
     property(100, |g| {
         let plan = rand_plan(g);
         let on = EngineCtx::new(cfg(true));
@@ -233,11 +258,23 @@ fn differential_vectorize_on_off_byte_identical() {
         let s_off = off.stats.snapshot();
         batches_total += s_on.vectorized_batches;
         fallbacks_total += s_on.vectorized_fallbacks;
+        shuffle_batches_total += s_on.vectorized_shuffle_batches;
+        shuffle_fallbacks_total += s_on.vectorized_shuffle_fallbacks;
         assert_eq!(s_off.vectorized_batches, 0, "row mode must not touch the columnar path");
         assert_eq!(s_off.vectorized_fallbacks, 0);
+        assert_eq!(s_off.vectorized_shuffle_batches, 0, "row mode must not move batches");
+        assert_eq!(s_off.vectorized_shuffle_fallbacks, 0, "row mode is never eligible");
     });
     assert!(batches_total > 0, "narrow-heavy DAGs must execute columnar batches");
     assert!(fallbacks_total > 0, "mixed-type mutations must force some row fallbacks");
+    assert!(
+        shuffle_batches_total > 0,
+        "column-keyed wide ops must transport batches through the shuffle"
+    );
+    assert!(
+        shuffle_fallbacks_total > 0,
+        "column-keyed shuffles over mixed-type mutations must fall back to rows"
+    );
 }
 
 // ---------------------------------------------------------------------
@@ -377,6 +414,220 @@ fn large_i64_compares_exactly_end_to_end() {
         let ne = ds.filter_expr(bin(BinOp::Ne, col(0, "x"), lit_i(P53)));
         assert_eq!(c.count(&ne).unwrap(), 3, "vectorize={vectorize}");
     }
+}
+
+// ---------------------------------------------------------------------
+// batch-native shuffle (column-keyed wide ops)
+// ---------------------------------------------------------------------
+
+/// Key-preserving sum of column 1 into column 1 (keeps every other
+/// field from the accumulator).
+fn sum_v1(acc: Row, r: &Row) -> Row {
+    let a = match acc.get(1) {
+        Field::I64(v) => *v,
+        _ => 0,
+    };
+    let b = match r.get(1) {
+        Field::I64(v) => *v,
+        _ => 0,
+    };
+    let mut fields = acc.fields.clone();
+    fields[1] = Field::I64(a + b);
+    Row::new(fields)
+}
+
+#[test]
+fn column_keyed_reduce_counts_exactly_one_batch_per_map_partition() {
+    // 120 typed rows in 6 map partitions: the shuffle transports exactly
+    // one batch set per map task, never a row fallback
+    let schema = Schema::new(vec![("k", FieldType::I64), ("v", FieldType::I64)]);
+    let rows: Vec<Row> = (0..120i64).map(|i| row!(i % 11, i)).collect();
+    let c = EngineCtx::new(EngineConfig {
+        workers: 2,
+        vectorize: true,
+        optimize: false,
+        memory_budget_bytes: None,
+        ..Default::default()
+    });
+    let ds = Dataset::from_rows("pin", schema, rows, 6);
+    let out = c.collect(&ds.reduce_by_key_col(3, 0, sum_v1)).unwrap();
+    let all: Vec<Row> = out.parts.iter().flat_map(|p| (**p).clone()).collect();
+    assert_eq!(all.len(), 11);
+    let total: i64 = all
+        .iter()
+        .map(|r| match r.get(1) {
+            Field::I64(v) => *v,
+            _ => 0,
+        })
+        .sum();
+    assert_eq!(total, (0..120i64).sum::<i64>());
+    let snap = c.stats.snapshot();
+    assert_eq!(snap.vectorized_shuffle_batches, 6, "one batch transport per map partition");
+    assert_eq!(snap.vectorized_shuffle_fallbacks, 0);
+}
+
+#[test]
+fn empty_string_and_null_keys_stay_distinct_through_batch_join() {
+    // Str columns store `""` placeholders at null slots with the mask
+    // authoritative. If the shuffle key path ever observed the
+    // placeholder, a null key would bucket *and* compare like a real
+    // `""`: the inner join below would yield 6 matches instead of 3.
+    let lschema = Schema::new(vec![("k", FieldType::Str), ("lv", FieldType::I64)]);
+    let rschema = Schema::new(vec![("k", FieldType::Str), ("rv", FieldType::I64)]);
+    let lrows = vec![
+        row!("", 1i64),
+        row!(Field::Null, 2i64),
+        row!("", 3i64),
+        row!("only-left", 4i64),
+    ];
+    let rrows = vec![row!("", 10i64), row!(Field::Null, 20i64), row!("only-right", 30i64)];
+    let out_schema = Schema::of_names(&["k", "lv", "k2", "rv"]);
+    let mut layouts = Vec::new();
+    for vectorize in [true, false] {
+        let c = EngineCtx::new(cfg(vectorize));
+        let left = Dataset::from_rows("jl", lschema.clone(), lrows.clone(), 2);
+        let right = Dataset::from_rows("jr", rschema.clone(), rrows.clone(), 2);
+        let j = left.join_on(&right, out_schema.clone(), JoinKind::Inner, 3, 0, 0);
+        let got = layout(&c.collect(&j).unwrap());
+        let all: Vec<&Row> = got.iter().flatten().collect();
+        assert_eq!(
+            all.len(),
+            3,
+            "\"\" matches \"\" twice, null matches null once (vectorize={vectorize})"
+        );
+        for r in &all {
+            assert_eq!(
+                r.get(0).canonical_cmp(r.get(2)),
+                Ordering::Equal,
+                "joined rows must agree on the key"
+            );
+        }
+        let snap = c.stats.snapshot();
+        if vectorize {
+            assert!(
+                snap.vectorized_shuffle_batches > 0,
+                "Str-with-nulls key columns stay batch-native"
+            );
+            assert_eq!(snap.vectorized_shuffle_fallbacks, 0);
+        } else {
+            assert_eq!(snap.vectorized_shuffle_batches, 0);
+            assert_eq!(snap.vectorized_shuffle_fallbacks, 0);
+        }
+        layouts.push(got);
+    }
+    assert!(layouts_identical(&layouts[0], &layouts[1]));
+}
+
+#[test]
+fn all_null_key_column_round_trips_the_spilled_shuffle() {
+    // an all-null column canonicalizes to `Any([Null; n])` with no mask;
+    // it must survive bucketing, colbin spill and read-back as the same
+    // single group in every transport
+    let schema = Schema::new(vec![
+        ("n", FieldType::Str),
+        ("v", FieldType::I64),
+        ("pad", FieldType::Str),
+    ]);
+    let pad = "x".repeat(300);
+    let rows: Vec<Row> = (0..100i64)
+        .map(|i| Row::new(vec![Field::Null, Field::I64(i), Field::Str(pad.clone())]))
+        .collect();
+    let mut layouts = Vec::new();
+    for (vectorize, budget) in [(true, None), (true, Some(512)), (false, Some(512))] {
+        let c = EngineCtx::new(EngineConfig {
+            workers: 2,
+            vectorize,
+            optimize: false,
+            memory_budget_bytes: budget,
+            ..Default::default()
+        });
+        let ds = Dataset::from_rows("an", schema.clone(), rows.clone(), 4);
+        let out = c.collect(&ds.reduce_by_key_col(3, 0, sum_v1)).unwrap();
+        let all: Vec<Row> = out.parts.iter().flat_map(|p| (**p).clone()).collect();
+        assert_eq!(all.len(), 1, "every key is the same null (vectorize={vectorize})");
+        assert!(all[0].get(0).is_null());
+        assert_eq!(all[0].get(1), &Field::I64((0..100i64).sum()));
+        let snap = c.stats.snapshot();
+        if vectorize {
+            assert_eq!(
+                snap.vectorized_shuffle_batches, 4,
+                "the all-null key column is still batch-eligible"
+            );
+            assert_eq!(snap.vectorized_shuffle_fallbacks, 0);
+        } else {
+            assert_eq!(snap.vectorized_shuffle_batches, 0);
+        }
+        if budget.is_some() {
+            assert!(snap.spill_bytes > 0, "a 512-byte budget must spill the bucket sets");
+        }
+        assert_eq!(c.governor.reserved_bytes(), 0);
+        layouts.push(layout(&out));
+    }
+    assert!(layouts_identical(&layouts[0], &layouts[1]));
+    assert!(layouts_identical(&layouts[0], &layouts[2]));
+}
+
+#[test]
+fn batch_native_shuffle_survives_a_4m_budget_spill() {
+    // the ISSUE acceptance case: a shuffle-heavy join whose bucket state
+    // (~8m of padded rows) overflows a 4m budget, so batches must
+    // survive both the shuffle *and* the colbin spill, byte-identical to
+    // the row transport. workers: 1 keeps the reservation order (and so
+    // the set of partitions that spill) identical across the four cells.
+    let lschema = Schema::new(vec![("k", FieldType::I64), ("pad", FieldType::Str)]);
+    let rschema = Schema::new(vec![("k", FieldType::I64), ("v", FieldType::I64)]);
+    let lrows: Vec<Row> = (0..12_000i64).map(|i| row!(i % 101, format!("{i:0>640}"))).collect();
+    let rrows: Vec<Row> = (0..101i64).map(|k| row!(k, k * 7)).collect();
+    let out_schema = Schema::of_names(&["k", "pad", "k2", "v"]);
+    let mut layouts = Vec::new();
+    let mut snaps = Vec::new();
+    for (vectorize, budget) in
+        [(true, None), (false, None), (true, Some(4 << 20)), (false, Some(4 << 20))]
+    {
+        let c = EngineCtx::new(EngineConfig {
+            workers: 1,
+            vectorize,
+            optimize: false,
+            memory_budget_bytes: budget,
+            ..Default::default()
+        });
+        let left = Dataset::from_rows("bl", lschema.clone(), lrows.clone(), 5);
+        let right = Dataset::from_rows("br", rschema.clone(), rrows.clone(), 2);
+        let j = left.join_on(&right, out_schema.clone(), JoinKind::Inner, 4, 0, 0);
+        let out = c.collect(&j).unwrap();
+        assert_eq!(
+            out.parts.iter().map(|p| p.len()).sum::<usize>(),
+            12_000,
+            "every left row matches exactly one right key"
+        );
+        assert_eq!(c.governor.reserved_bytes(), 0, "shuffle state fully released");
+        layouts.push(layout(&out));
+        snaps.push(c.stats.snapshot());
+    }
+    for l in &layouts[1..] {
+        assert!(
+            layouts_identical(&layouts[0], l),
+            "all four {{vectorize}} x {{budget}} cells are byte-identical"
+        );
+    }
+    let (on_mem, off_mem, on_sp, off_sp) = (&snaps[0], &snaps[1], &snaps[2], &snaps[3]);
+    // 5 left + 2 right map partitions, each transported batch-native
+    for s in [on_mem, on_sp] {
+        assert_eq!(s.vectorized_shuffle_batches, 7);
+        assert_eq!(s.vectorized_shuffle_fallbacks, 0);
+    }
+    for s in [off_mem, off_sp] {
+        assert_eq!(s.vectorized_shuffle_batches, 0);
+        assert_eq!(s.vectorized_shuffle_fallbacks, 0);
+    }
+    assert_eq!(on_mem.spill_bytes, 0, "unbounded runs never spill");
+    assert!(on_sp.spill_bytes > 0, "a 4m budget must push bucket sets to disk");
+    assert_eq!(
+        on_sp.spill_bytes, off_sp.spill_bytes,
+        "colbin makes spill files transport-identical"
+    );
+    assert_eq!(on_sp.shuffle_bytes, off_sp.shuffle_bytes);
+    assert_eq!(on_mem.shuffle_bytes, on_sp.shuffle_bytes);
 }
 
 // ---------------------------------------------------------------------
