@@ -10,7 +10,7 @@
 //! `cargo bench --bench fig5_scalability`
 
 use ddp::baselines::{raysim, singlethread};
-use ddp::bench::{ratio, Table};
+use ddp::bench::{ratio, JsonRecorder, Table};
 use ddp::config::PipelineSpec;
 use ddp::corpus::web::{CorpusGen, LangProfiles};
 use ddp::ddp::{DriverConfig, Pipe, PipeContext, PipeRegistry, PipelineDriver};
@@ -103,7 +103,7 @@ fn run_fanout(branches: usize, width: usize, rows: i64, spins: u64) -> f64 {
     driver.run(provided).unwrap().total_secs
 }
 
-fn bench_scheduler_fanout(args: &Args) {
+fn bench_scheduler_fanout(args: &Args, rec: &mut JsonRecorder) {
     let smoke = args.has_flag("smoke");
     let branches = args.opt_usize("branches", if smoke { 4 } else { 8 });
     let rows = args.opt_usize("rows", if smoke { 300 } else { 2_000 }) as i64;
@@ -114,9 +114,15 @@ fn bench_scheduler_fanout(args: &Args) {
     );
     let serial = run_fanout(branches, 1, rows, spins);
     t.row(&["1 (serial)".into(), fmt_duration(serial), "1.00x".into()]);
+    rec.case("sched_fanout/width=1", serial, &[("branches", branches as f64)]);
     for width in [2usize, 4, 8] {
         let secs = run_fanout(branches, width, rows, spins);
         t.row(&[width.to_string(), fmt_duration(secs), ratio(serial, secs)]);
+        rec.case(
+            &format!("sched_fanout/width={width}"),
+            secs,
+            &[("branches", branches as f64)],
+        );
     }
     t.save("sched_fanout");
 }
@@ -125,7 +131,7 @@ fn bench_scheduler_fanout(args: &Args) {
 /// shuffle (the declarative style — the optimizer, not the author, is
 /// responsible for placement). Reports shuffle bytes and wall clock with
 /// the optimizer off vs on. Real execution, no artifacts needed.
-fn bench_optimizer_pushdown(args: &Args) {
+fn bench_optimizer_pushdown(args: &Args, rec: &mut JsonRecorder) {
     let smoke = args.has_flag("smoke");
     let rows = args.opt_usize("opt-rows", if smoke { 3_000 } else { 20_000 }) as i64;
     let keys = 200i64;
@@ -165,13 +171,19 @@ fn bench_optimizer_pushdown(args: &Args) {
         format!("{:.1}%", 100.0 * (1.0 - on_bytes as f64 / off_bytes.max(1) as f64)),
     ]);
     t.save("fig5_optimizer");
+    rec.case("optimizer/off", off_secs, &[("shuffle_bytes", off_bytes as f64)]);
+    rec.case(
+        "optimizer/on",
+        on_secs,
+        &[("shuffle_bytes", on_bytes as f64), ("rewrites", rewrites as f64)],
+    );
 }
 
 /// Out-of-core probe: the same wide pipeline (distinct → group-by) over
 /// an incompressible corpus at memory budgets {∞, 64 MB, 8 MB} — spill
 /// bytes/files vs wall clock, with byte-identical output asserted across
 /// budgets. Real execution, no artifacts needed.
-fn bench_spill_budgets(args: &Args) {
+fn bench_spill_budgets(args: &Args, rec: &mut JsonRecorder) {
     let smoke = args.has_flag("smoke");
     let rows_n = args.opt_usize("spill-rows", if smoke { 4_000 } else { 40_000 }) as i64;
     let schema = Schema::new(vec![("k", FieldType::I64), ("pad", FieldType::Str)]);
@@ -223,6 +235,11 @@ fn bench_spill_budgets(args: &Args) {
             files.to_string(),
             fmt_duration(secs),
         ]);
+        rec.case(
+            &format!("spill/budget={}", fmt_budget(budget)),
+            secs,
+            &[("spill_bytes", bytes as f64), ("spill_files", files as f64)],
+        );
     }
     t.save("fig5_spill");
 }
@@ -231,7 +248,7 @@ fn bench_spill_budgets(args: &Args) {
 /// shrinking memory budgets — sorted runs, sort spill bytes and wall
 /// clock, with byte-identical output asserted across budgets. Real
 /// execution, no artifacts needed.
-fn bench_external_sort(args: &Args) {
+fn bench_external_sort(args: &Args, rec: &mut JsonRecorder) {
     let smoke = args.has_flag("smoke");
     let rows_n = args.opt_usize("sort-rows", if smoke { 4_000 } else { 40_000 }) as i64;
     let schema = Schema::new(vec![("k", FieldType::I64), ("pad", FieldType::Str)]);
@@ -281,6 +298,11 @@ fn bench_external_sort(args: &Args) {
             spill.to_string(),
             fmt_duration(secs),
         ]);
+        rec.case(
+            &format!("external_sort/budget={}", fmt_budget(budget)),
+            secs,
+            &[("sort_runs", runs as f64), ("sort_spill_bytes", spill as f64)],
+        );
     }
     t.save("fig5_external_sort");
 }
@@ -292,7 +314,7 @@ fn bench_external_sort(args: &Args) {
 /// the batch/fallback counters, with byte-identical output asserted
 /// between the two execution modes on every run (smoke included).
 /// Real execution, no artifacts needed.
-fn bench_vectorize(args: &Args) {
+fn bench_vectorize(args: &Args, rec: &mut JsonRecorder) {
     let smoke = args.has_flag("smoke");
     let rows_n = args.opt_usize("vec-rows", if smoke { 20_000 } else { 400_000 }) as i64;
     let schema = Schema::new(vec![
@@ -351,6 +373,12 @@ fn bench_vectorize(args: &Args) {
         ratio(row_secs, vec_secs),
     ]);
     t.save("fig5_vectorize");
+    rec.case("vectorize/rows", row_secs, &[]);
+    rec.case(
+        "vectorize/batches",
+        vec_secs,
+        &[("batches", batches as f64), ("fallbacks", fallbacks as f64)],
+    );
 
     // --- shuffle-heavy case: column-keyed reduce + join ---------------
     // per-tag score sums (`reduce_by_key_col` on the Str tag column)
@@ -421,36 +449,104 @@ fn bench_vectorize(args: &Args) {
         ratio(row_sh_secs, vec_sh_secs),
     ]);
     t.save("fig5_vectorize_shuffle");
+    rec.case(
+        "vectorize_shuffle/rows",
+        row_sh_secs,
+        &[("spill_bytes", row_spill as f64)],
+    );
+    rec.case(
+        "vectorize_shuffle/batches",
+        vec_sh_secs,
+        &[
+            ("batches", sb as f64),
+            ("fallbacks", sf as f64),
+            ("spill_bytes", vec_spill as f64),
+        ],
+    );
+}
+
+/// Tracing-overhead pin: the same narrow→wide workload with span tracing
+/// off vs on. The issue budget is ≤5% wall-clock; the assert adds a
+/// small absolute floor so millisecond-scale smoke runs don't fail on
+/// scheduler jitter. Best-of-3 per mode for the same reason.
+fn bench_trace_overhead(args: &Args, rec: &mut JsonRecorder) {
+    let smoke = args.has_flag("smoke");
+    let rows_n = args.opt_usize("trace-rows", if smoke { 5_000 } else { 50_000 }) as i64;
+    let schema = Schema::new(vec![("k", FieldType::I64), ("v", FieldType::I64)]);
+    let data: Vec<ddp::engine::Row> = (0..rows_n).map(|i| row!(i % 97, i)).collect();
+    let run = |trace: bool| -> (f64, u64) {
+        let mut best = f64::INFINITY;
+        let mut spans = 0u64;
+        for _ in 0..3 {
+            let c = EngineCtx::new(EngineConfig { workers: 4, trace, ..Default::default() });
+            let ds = Dataset::from_rows("t", schema.clone(), data.clone(), 8);
+            let out = ds
+                .filter(|r| r.get(1).as_i64().unwrap_or(0) % 3 != 0)
+                .reduce_by_key_col(8, 0, |acc, _| acc);
+            let t0 = std::time::Instant::now();
+            c.count(&out).unwrap();
+            best = best.min(t0.elapsed().as_secs_f64());
+            spans = c.tracer.spans().len() as u64;
+        }
+        (best, spans)
+    };
+    let (off, _) = run(false);
+    let (on, spans) = run(true);
+    assert!(
+        on <= off * 1.05 + 0.05,
+        "tracing overhead above the 5% budget: off={off:.4}s on={on:.4}s"
+    );
+    let mut t = Table::new(
+        "Span tracing — instrumented vs uninstrumented wall clock (best of 3)",
+        &["mode", "wall clock", "spans", "overhead"],
+    );
+    t.row(&["trace=off".into(), fmt_duration(off), "0".into(), "—".into()]);
+    t.row(&[
+        "trace=on".into(),
+        fmt_duration(on),
+        spans.to_string(),
+        format!("{:+.1}%", 100.0 * (on / off.max(1e-9) - 1.0)),
+    ]);
+    t.save("fig5_trace_overhead");
+    rec.case("trace/off", off, &[]);
+    rec.case("trace/on", on, &[("spans", spans as f64)]);
 }
 
 fn main() {
     ddp::util::logger::init();
     let args = Args::from_env();
+    // machine-readable mirror of the tables: bench_results/BENCH_fig5.json
+    let mut rec = JsonRecorder::new("fig5", args.has_flag("smoke"));
 
     // scheduler fan-out case: real execution, runs without AOT artifacts
-    bench_scheduler_fanout(&args);
+    bench_scheduler_fanout(&args, &mut rec);
 
     // plan-optimizer shuffle savings: real execution, no artifacts needed
-    bench_optimizer_pushdown(&args);
+    bench_optimizer_pushdown(&args, &mut rec);
 
     // out-of-core spill probe: real execution, no artifacts needed
-    bench_spill_budgets(&args);
+    bench_spill_budgets(&args, &mut rec);
 
     // external merge sort probe: real execution, no artifacts needed
-    bench_external_sort(&args);
+    bench_external_sort(&args, &mut rec);
 
     // columnar vs row-wise execution probe: real execution, no artifacts
     // needed; asserts vectorized/row byte-identity on every run
-    bench_vectorize(&args);
+    bench_vectorize(&args, &mut rec);
+
+    // span-tracing overhead pin (≤5% wall clock): real execution
+    bench_trace_overhead(&args, &mut rec);
 
     if args.has_flag("smoke") {
         // CI smoke: the spill/sort probes above asserted byte-identity
         // across budgets and the vectorize probe across execution modes;
         // the model-backed Fig 5 section needs AOT artifacts and
         // full-size corpora, so stop here
+        rec.save();
         println!(
             "smoke OK: spill + external-sort outputs byte-identical across memory budgets; \
-             vectorized output byte-identical to row-wise, shuffle transports included"
+             vectorized output byte-identical to row-wise, shuffle transports included; \
+             tracing overhead within the 5% budget"
         );
         return;
     }
@@ -500,12 +596,14 @@ fn main() {
                 ],
                 &ClusterConfig::glue_like(cpus),
             );
+            rec.case(&format!("fig5/ddp_cpus={cpus}"), sim.makespan_secs, &[]);
             fmt_duration(sim.makespan_secs)
         } else {
             "—".into() // smallest Glue worker is 4 vCPU (paper note)
         };
         let ray_makespan =
             ray_parallel / cpus as f64 + ray_serial + ray_dispatch_total / cpus as f64;
+        rec.case(&format!("fig5/ray_cpus={cpus}"), ray_makespan, &[]);
         let py = fmt_duration(PAPER_DOCS * py_per_doc);
         t.row(&[
             cpus.to_string(),
@@ -515,6 +613,7 @@ fn main() {
         ]);
     }
     t.save("fig5_scalability");
+    rec.save();
 
     // paper anchors: DDP(48)=13min, Ray(48)=75min, Python=2360min
     println!("paper anchors: DDP@48 = 13 min | Ray@48 = 75 min | Python = 2360 min");

@@ -97,6 +97,56 @@ impl Table {
     }
 }
 
+/// Machine-readable companion to [`Table`]: collects one record per
+/// bench case and writes `bench_results/BENCH_<name>.json` so CI and
+/// regression tooling can diff runs without scraping Markdown. The
+/// output carries no timestamps — identical runs produce identical
+/// bytes.
+pub struct JsonRecorder {
+    name: String,
+    smoke: bool,
+    cases: Vec<crate::json::Value>,
+}
+
+impl JsonRecorder {
+    pub fn new(name: &str, smoke: bool) -> JsonRecorder {
+        JsonRecorder { name: name.to_string(), smoke, cases: Vec::new() }
+    }
+
+    /// Record one case: its wall clock plus any counters worth diffing.
+    pub fn case(&mut self, case: &str, wall_secs: f64, counters: &[(&str, f64)]) {
+        use crate::json::Value;
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("case".to_string(), Value::Str(case.to_string()));
+        obj.insert("wall_secs".to_string(), Value::Num(wall_secs));
+        let mut cs = std::collections::BTreeMap::new();
+        for (k, v) in counters {
+            cs.insert(k.to_string(), Value::Num(*v));
+        }
+        obj.insert("counters".to_string(), Value::Obj(cs));
+        self.cases.push(Value::Obj(obj));
+    }
+
+    /// Render the collected cases as one JSON document.
+    pub fn to_json(&self) -> crate::json::Value {
+        use crate::json::Value;
+        Value::obj(vec![
+            ("bench", Value::Str(self.name.clone())),
+            ("smoke", Value::Bool(self.smoke)),
+            ("cases", Value::Arr(self.cases.clone())),
+        ])
+    }
+
+    /// Write `bench_results/BENCH_<name>.json` (best effort, like
+    /// [`Table::save`]).
+    pub fn save(&self) {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+        let _ = std::fs::create_dir_all(&dir);
+        let text = crate::json::to_string_pretty(&self.to_json());
+        let _ = std::fs::write(dir.join(format!("BENCH_{}.json", self.name)), text);
+    }
+}
+
 /// `1.23x` style ratio formatting.
 pub fn ratio(a: f64, b: f64) -> String {
     if b <= 0.0 {
@@ -133,5 +183,27 @@ mod tests {
     fn ratio_formats() {
         assert_eq!(ratio(10.0, 2.0), "5.0x");
         assert_eq!(ratio(1.0, 0.0), "n/a");
+    }
+
+    #[test]
+    fn json_recorder_shape_is_deterministic() {
+        let mut r = JsonRecorder::new("demo", true);
+        r.case("warm", 1.5, &[("rows", 10.0)]);
+        r.case("cold", 2.0, &[]);
+        let j = r.to_json();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("demo"));
+        assert_eq!(j.get("smoke").unwrap().as_bool(), Some(true));
+        let cases = j.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 2);
+        assert_eq!(cases[0].get("case").unwrap().as_str(), Some("warm"));
+        assert_eq!(cases[0].get("counters").unwrap().get("rows").unwrap().as_f64(), Some(10.0));
+        // identical recordings render to identical bytes (no timestamps)
+        let mut r2 = JsonRecorder::new("demo", true);
+        r2.case("warm", 1.5, &[("rows", 10.0)]);
+        r2.case("cold", 2.0, &[]);
+        assert_eq!(
+            crate::json::to_string_pretty(&r.to_json()),
+            crate::json::to_string_pretty(&r2.to_json())
+        );
     }
 }

@@ -3,4 +3,4 @@
 
 pub mod harness;
 
-pub use harness::{measure, measure_once, ratio, BenchStats, Table};
+pub use harness::{measure, measure_once, ratio, BenchStats, JsonRecorder, Table};

@@ -148,6 +148,9 @@ struct RunState {
     eager: bool,
     anchors: Mutex<BTreeMap<String, Dataset>>,
     refcounts: AnchorRefCounts,
+    /// the run's root span — pipe spans executed on scheduler worker
+    /// threads parent to it explicitly
+    run_span: u64,
 }
 
 impl PipelineDriver {
@@ -241,6 +244,12 @@ impl PipelineDriver {
     pub fn run(&self, provided: BTreeMap<String, Dataset>) -> Result<RunReport> {
         let start = std::time::Instant::now();
         let stats0 = self.ctx.engine.stats.snapshot();
+        // root span for this run; pipe spans parent to it explicitly
+        // (pipes execute on scheduler worker threads, not this one)
+        let tracer = self.ctx.engine.tracer.clone();
+        let run_span =
+            tracer.begin(crate::engine::SpanKind::Run, || format!("run:{}", self.spec.name), None);
+        let _run_scope = tracer.scope(run_span);
 
         // metrics publisher for the run (cadence from settings)
         let cadence = Duration::from_secs_f64(self.spec.settings.metrics_cadence_secs.max(0.005));
@@ -333,6 +342,7 @@ impl PipelineDriver {
             eager: self.cfg_eager,
             anchors: Mutex::new(anchors),
             refcounts: AnchorRefCounts::from_consumers(&self.dag.consumers),
+            run_span: self.ctx.engine.tracer.current(),
         });
 
         let pool = ThreadPool::new(width);
@@ -455,6 +465,16 @@ impl RunState {
     /// makes releasing its input anchors safe.
     fn exec_pipe(&self, i: usize) -> Result<(PipeReport, bool)> {
         let decl = &self.spec.pipes[i];
+        // pipe span on this scheduler worker thread: engine stage spans
+        // opened during transform nest under it, and driver-side charges
+        // (plan rewrites, cache hits) attribute to this pipe
+        let tracer = self.ctx.engine.tracer.clone();
+        let span = tracer.begin(
+            crate::engine::SpanKind::Pipe,
+            || format!("pipe:{}", decl.name),
+            Some(self.run_span),
+        );
+        let _pipe_scope = tracer.scope(span);
         let pipe = self.registry.create(&decl.transformer_type, &decl.params)?;
 
         // contract validation (§3.8): arity, then declared-schema

@@ -26,7 +26,8 @@ use super::row::{ColumnBatch, Field, Row};
 use super::spill::{
     transpose_segments, BucketSet, SegmentData, SortedRun, SortedRunSet, SpillDir,
 };
-use super::stats::EngineStats;
+use super::stats::{EngineStats, Stat};
+use super::trace::{SpanKind, Tracer};
 use crate::util::error::{DdpError, Result};
 use crate::util::threadpool::ThreadPool;
 use std::collections::HashMap;
@@ -70,6 +71,12 @@ pub struct EngineConfig {
     /// base directory for spill files (a unique per-context subdirectory
     /// is created under it). Default: system temp dir, or `DDP_SPILL_DIR`.
     pub spill_dir: Option<std::path::PathBuf>,
+    /// record structured execution spans (run → pipe → stage → task /
+    /// micro-batch) with per-span counter attribution
+    /// ([`super::trace`]). Off by default — the hot path then takes a
+    /// single branch per site; the default honours the `DDP_TRACE` env
+    /// var (`1`/`true` enables).
+    pub trace: bool,
 }
 
 impl Default for EngineConfig {
@@ -91,6 +98,9 @@ impl Default for EngineConfig {
             spill_dir: std::env::var("DDP_SPILL_DIR")
                 .ok()
                 .map(std::path::PathBuf::from),
+            trace: std::env::var("DDP_TRACE")
+                .map(|v| v != "0" && !v.eq_ignore_ascii_case("false"))
+                .unwrap_or(false),
         }
     }
 }
@@ -121,6 +131,8 @@ pub struct EngineCtx {
     pub governor: Arc<MemoryGovernor>,
     /// per-context spill directory (lazy; removed when the context drops)
     pub spill: Arc<SpillDir>,
+    /// span recorder ([`super::trace`]; inert unless `cfg.trace`)
+    pub tracer: Arc<Tracer>,
     trace: Mutex<TaskTrace>,
     rewrites: Mutex<RewriteCounts>,
 }
@@ -137,6 +149,12 @@ impl EngineCtx {
     fn build(cfg: EngineConfig, fault: Option<Arc<FaultInjector>>) -> Arc<EngineCtx> {
         let governor = Arc::new(MemoryGovernor::new(cfg.memory_budget_bytes));
         let spill = Arc::new(SpillDir::new(cfg.spill_dir.clone()));
+        let tracer = Tracer::new(cfg.trace);
+        if cfg.trace {
+            // attribute governor admission decisions to the span running
+            // on the deciding thread (only pay the hook when tracing)
+            governor.set_observer(tracer.clone());
+        }
         Arc::new(EngineCtx {
             pool: ThreadPool::new(cfg.workers),
             cache: CacheManager::with_governor(cfg.cache_budget_bytes, governor.clone()),
@@ -144,10 +162,42 @@ impl EngineCtx {
             fault,
             governor,
             spill,
+            tracer,
             trace: Mutex::new(Vec::new()),
             rewrites: Mutex::new(RewriteCounts::default()),
             cfg,
         })
+    }
+
+    /// Charge one counter globally *and* to the thread's current span —
+    /// the single path every stat increment takes, which is what makes
+    /// the global snapshot provably the sum of span-local counters.
+    #[inline]
+    pub(crate) fn charge(&self, s: Stat, v: u64) {
+        self.stats.add_stat(s, v);
+        self.tracer.charge_current(s, v);
+    }
+
+    /// [`Self::charge`] with explicit span attribution (task results are
+    /// charged from the driver-side collection loop, after the worker
+    /// thread's scope has exited).
+    #[inline]
+    fn charge_span(&self, span: u64, s: Stat, v: u64) {
+        self.stats.add_stat(s, v);
+        self.tracer.charge(span, s, v);
+    }
+
+    /// Export recorded spans as Chrome trace-event JSON (openable in
+    /// `chrome://tracing` / Perfetto). Empty trace when `cfg.trace` is
+    /// off.
+    pub fn write_chrome_trace(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        self.tracer.write_chrome_trace(path).map_err(DdpError::Io)
+    }
+
+    /// Deterministic text profile over recorded spans (top-`top_n`
+    /// stages by time, spill/fallback hotspots, critical path).
+    pub fn profile_report(&self, top_n: usize) -> String {
+        self.tracer.profile_report(top_n)
     }
 
     /// Mark a dataset for caching (Spark `persist`).
@@ -193,7 +243,7 @@ impl EngineCtx {
         let out = optimizer::optimize(ds, &|id| self.cache.is_registered(id));
         let total = out.counts.total();
         if total > 0 {
-            self.stats.add(&self.stats.plan_rewrites, total);
+            self.charge(Stat::PlanRewrites, total);
             self.rewrites.lock().unwrap().merge(&out.counts);
         }
         out.plan
@@ -216,10 +266,10 @@ impl EngineCtx {
     fn eval(&self, ds: &Dataset) -> Result<Partitioned> {
         if self.cache.is_registered(ds.id) {
             if let Some(hit) = self.cache.get(ds.id) {
-                self.stats.add(&self.stats.cache_hits, 1);
+                self.charge(Stat::CacheHits, 1);
                 return Ok(hit);
             }
-            self.stats.add(&self.stats.cache_misses, 1);
+            self.charge(Stat::CacheMisses, 1);
         }
         let out = self.eval_uncached(ds)?;
         if self.cache.is_registered(ds.id) {
@@ -333,7 +383,9 @@ impl EngineCtx {
         schema: super::row::SchemaRef,
         steps: Vec<Step>,
     ) -> Result<Partitioned> {
-        self.stats.add(&self.stats.stages_run, 1);
+        let span = self.tracer.begin(SpanKind::Stage, || format!("narrow#{stage_id}"), None);
+        let _scope = self.tracer.scope(span);
+        self.charge(Stat::StagesRun, 1);
         let steps = Arc::new(steps);
         let fusion = self.cfg.fusion;
         let vectorize = self.cfg.vectorize;
@@ -366,10 +418,10 @@ impl EngineCtx {
             })
             .collect();
         if batches > 0 {
-            self.stats.add(&self.stats.vectorized_batches, batches);
+            self.charge(Stat::VectorizedBatches, batches);
         }
         if fallbacks > 0 {
-            self.stats.add(&self.stats.vectorized_fallbacks, fallbacks);
+            self.charge(Stat::VectorizedFallbacks, fallbacks);
         }
         Ok(Partitioned { schema, parts })
     }
@@ -383,11 +435,17 @@ impl EngineCtx {
         let fault = self.fault.clone();
         let max_attempts = self.cfg.max_task_attempts;
         let input_rows: Vec<u64> = input.parts.iter().map(|p| p.len() as u64).collect();
+        // the caller's stage span (current on this thread) parents the
+        // per-task spans the pool workers open; each task scope-enters
+        // its span so in-task charges (governor admissions) land on it
+        let stage_span = self.tracer.current();
         let wrapped: Vec<_> = tasks
             .into_iter()
-            .map(|t| {
+            .enumerate()
+            .map(|(i, t)| {
                 let fault = fault.clone();
-                move || -> (T, f64, u32) {
+                let tracer = self.tracer.clone();
+                move || -> (T, f64, u32, u64) {
                     // injected faults strike before the body runs, so the
                     // task body itself executes exactly once (FnOnce —
                     // spill-consuming tasks move their segments)
@@ -402,9 +460,15 @@ impl EngineCtx {
                             panic!("task failed after {attempt} attempts (injected)");
                         }
                     }
+                    let span = tracer.begin(
+                        SpanKind::Task,
+                        || format!("task#{stage_id}.{i}"),
+                        Some(stage_span),
+                    );
+                    let _scope = tracer.scope(span);
                     let start = Instant::now();
                     let out = t();
-                    (out, start.elapsed().as_secs_f64(), attempt)
+                    (out, start.elapsed().as_secs_f64(), attempt, span)
                 }
             })
             .collect();
@@ -414,12 +478,12 @@ impl EngineCtx {
         let mut trace_rows = Vec::new();
         for (i, r) in results.into_iter().enumerate() {
             match r {
-                Some((v, dur, retries)) => {
-                    self.stats.add(&self.stats.tasks_launched, 1 + retries as u64);
-                    self.stats.add(&self.stats.tasks_retried, retries as u64);
-                    self.stats.add(&self.stats.task_nanos, (dur * 1e9) as u64);
-                    self.stats
-                        .add(&self.stats.rows_read, input_rows.get(i).copied().unwrap_or(0));
+                Some((v, dur, retries, span)) => {
+                    self.charge_span(span, Stat::TasksLaunched, 1 + retries as u64);
+                    self.charge_span(span, Stat::TasksRetried, retries as u64);
+                    self.charge_span(span, Stat::TaskNanos, (dur * 1e9) as u64);
+                    self.charge_span(span, Stat::RowsRead, input_rows.get(i).copied().unwrap_or(0));
+                    self.charge_span(span, Stat::RowsWritten, v.out_rows());
                     if self.cfg.record_trace {
                         // real measured bytes, so trace replay through the
                         // cluster simulator sees per-task costs and skew
@@ -468,13 +532,13 @@ impl EngineCtx {
                 spill_files += 1;
             }
         }
-        self.stats.add(&self.stats.shuffle_bytes, moved);
+        self.charge(Stat::ShuffleBytes, moved);
         if with_records {
-            self.stats.add(&self.stats.shuffle_records, recs);
+            self.charge(Stat::ShuffleRecords, recs);
         }
         if spill_files > 0 {
-            self.stats.add(&self.stats.spill_bytes, spill_bytes);
-            self.stats.add(&self.stats.spill_files, spill_files);
+            self.charge(Stat::SpillBytes, spill_bytes);
+            self.charge(Stat::SpillFiles, spill_files);
         }
     }
 
@@ -575,10 +639,10 @@ impl EngineCtx {
         let batched = outs.iter().filter(|o| o.batched).count() as u64;
         let fell = outs.len() as u64 - batched;
         if batched > 0 {
-            self.stats.add(&self.stats.vectorized_shuffle_batches, batched);
+            self.charge(Stat::VectorizedShuffleBatches, batched);
         }
         if fell > 0 {
-            self.stats.add(&self.stats.vectorized_shuffle_fallbacks, fell);
+            self.charge(Stat::VectorizedShuffleFallbacks, fell);
         }
     }
 
@@ -591,7 +655,9 @@ impl EngineCtx {
         num_parts: usize,
         key_col: Option<usize>,
     ) -> Result<Partitioned> {
-        self.stats.add(&self.stats.stages_run, 1);
+        let span = self.tracer.begin(SpanKind::Stage, || format!("reduce#{}", ds.id), None);
+        let _scope = self.tracer.scope(span);
+        self.charge(Stat::StagesRun, 1);
         // map-side combine, then bucket (reserve-or-spill per task).
         // When the key is a declared column and vectorization is on, the
         // partition is hash-split by a column-level gather and combined
@@ -714,7 +780,9 @@ impl EngineCtx {
     }
 
     fn exec_distinct(&self, ds: &Dataset, input: Partitioned, num_parts: usize) -> Result<Partitioned> {
-        self.stats.add(&self.stats.stages_run, 1);
+        let span = self.tracer.begin(SpanKind::Stage, || format!("distinct#{}", ds.id), None);
+        let _scope = self.tracer.scope(span);
+        self.charge(Stat::StagesRun, 1);
         let key: super::dataset::KeyFn = Arc::new(whole_row_key);
         let bucketed = self.shuffle_buckets(ds.id, &input, num_parts, key)?;
         let exchanged = transpose_segments(bucketed, num_parts);
@@ -769,7 +837,9 @@ impl EngineCtx {
         lkey_col: Option<usize>,
         rkey_col: Option<usize>,
     ) -> Result<Partitioned> {
-        self.stats.add(&self.stats.stages_run, 1);
+        let span = self.tracer.begin(SpanKind::Stage, || format!("join#{}", ds.id), None);
+        let _scope = self.tracer.scope(span);
+        self.charge(Stat::StagesRun, 1);
         // each side shuffles batch-native when its key is a declared
         // column (the build/probe side still materializes rows — join
         // output is concatenated rows either way)
@@ -850,7 +920,9 @@ impl EngineCtx {
         cmp: super::dataset::CmpFn,
     ) -> Result<Partitioned> {
         // map stage: per-partition sorted runs
-        self.stats.add(&self.stats.stages_run, 1);
+        let map_span = self.tracer.begin(SpanKind::Stage, || format!("sort#{}", ds.id), None);
+        let map_scope = self.tracer.scope(map_span);
+        self.charge(Stat::StagesRun, 1);
         let gov = self.governor.clone();
         let dir = self.spill.clone();
         let sort_cmp = cmp.clone();
@@ -875,17 +947,21 @@ impl EngineCtx {
         // them to shuffle_bytes so the global counter reconciles with the
         // per-task TaskRecord shuffle bytes (mode-independent — row bytes
         // are identical whether a run spilled or stayed resident)
-        self.stats.add(&self.stats.shuffle_bytes, runs.row_bytes());
-        self.stats.add(&self.stats.sort_runs, runs.num_runs() as u64);
+        self.charge(Stat::ShuffleBytes, runs.row_bytes());
+        self.charge(Stat::SortRuns, runs.num_runs() as u64);
         let (spill_bytes, spill_files) = (runs.spilled_bytes(), runs.spilled_files());
         if spill_files > 0 {
-            self.stats.add(&self.stats.sort_spill_bytes, spill_bytes);
-            self.stats.add(&self.stats.spill_bytes, spill_bytes);
-            self.stats.add(&self.stats.spill_files, spill_files);
+            self.charge(Stat::SortSpillBytes, spill_bytes);
+            self.charge(Stat::SpillBytes, spill_bytes);
+            self.charge(Stat::SpillFiles, spill_files);
         }
+        drop(map_scope);
 
         // merge stage: one reduce task streams the k-way merge
-        self.stats.add(&self.stats.stages_run, 1);
+        let merge_span =
+            self.tracer.begin(SpanKind::Stage, || format!("sort_merge#{}", ds.id), None);
+        let _merge_scope = self.tracer.scope(merge_span);
+        self.charge(Stat::StagesRun, 1);
         let merge_tasks = vec![move || -> Result<Vec<Row>> { runs.merge(&gov, &*cmp) }];
         let empty = Partitioned { schema: ds.schema.clone(), parts: vec![] };
         let outs = collect_results(self.run_tasks(ds.id, merge_tasks, &empty)?)?;
@@ -896,7 +972,9 @@ impl EngineCtx {
     }
 
     fn exec_repartition(&self, ds: &Dataset, input: Partitioned, num_parts: usize) -> Result<Partitioned> {
-        self.stats.add(&self.stats.stages_run, 1);
+        let span = self.tracer.begin(SpanKind::Stage, || format!("repartition#{}", ds.id), None);
+        let _scope = self.tracer.scope(span);
+        self.charge(Stat::StagesRun, 1);
         // round-robin by row hash for determinism
         let key: super::dataset::KeyFn = Arc::new(whole_row_key);
         let bucketed = self.shuffle_buckets(ds.id, &input, num_parts, key)?;
@@ -1242,6 +1320,12 @@ pub(crate) fn whole_row_key(r: &Row) -> Field {
 pub(crate) trait TaskMeasure {
     /// `(output_bytes, shuffle_bytes)` for this task's output.
     fn measured(&self) -> (u64, u64);
+
+    /// Rows this task produced (feeds the `rows_written` counter; `0`
+    /// where the output is not row-shaped, e.g. a sorted-run handle).
+    fn out_rows(&self) -> u64 {
+        0
+    }
 }
 
 impl TaskMeasure for Vec<Row> {
@@ -1249,11 +1333,19 @@ impl TaskMeasure for Vec<Row> {
         let bytes = self.iter().map(|r| r.approx_size() as u64).sum();
         (bytes, 0)
     }
+
+    fn out_rows(&self) -> u64 {
+        self.len() as u64
+    }
 }
 
 impl TaskMeasure for ChainOut {
     fn measured(&self) -> (u64, u64) {
         self.rows.measured()
+    }
+
+    fn out_rows(&self) -> u64 {
+        self.rows.len() as u64
     }
 }
 
@@ -1262,6 +1354,10 @@ impl TaskMeasure for BucketSet {
         // bucketed map-side output *is* the task's shuffle contribution
         (self.row_bytes(), self.row_bytes())
     }
+
+    fn out_rows(&self) -> u64 {
+        self.records()
+    }
 }
 
 impl TaskMeasure for ShuffleOut {
@@ -1269,6 +1365,10 @@ impl TaskMeasure for ShuffleOut {
         // byte accounting is transport-independent (batch sets report
         // exact row-equivalent bytes), so traces don't see the toggle
         self.set.measured()
+    }
+
+    fn out_rows(&self) -> u64 {
+        self.set.out_rows()
     }
 }
 
@@ -1286,6 +1386,13 @@ impl<T: TaskMeasure> TaskMeasure for Result<T> {
         match self {
             Ok(v) => v.measured(),
             Err(_) => (0, 0),
+        }
+    }
+
+    fn out_rows(&self) -> u64 {
+        match self {
+            Ok(v) => v.out_rows(),
+            Err(_) => 0,
         }
     }
 }

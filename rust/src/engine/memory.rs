@@ -21,16 +21,38 @@
 //! pre-governor engine.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
+
+/// Observer of governor admission decisions. The tracer implements this
+/// to attribute reservations/refusals to the span running on the
+/// deciding thread; when no observer is installed (tracing off) the
+/// hook is one `OnceLock::get` — an atomic load — per decision.
+pub trait GovernorObserver: Send + Sync {
+    /// A reservation of `bytes` was granted.
+    fn reservation_granted(&self, bytes: u64);
+    /// A reservation of `bytes` was refused (the holder will spill).
+    fn reservation_refused(&self, bytes: u64);
+}
 
 /// Byte-budget arbiter. Cheap (two atomics), shared via `Arc`.
-#[derive(Debug)]
 pub struct MemoryGovernor {
     /// `None` = unbounded (every reservation succeeds).
     budget: Option<u64>,
     reserved: AtomicU64,
     /// lifetime count of refused reservations (spill decisions)
     refused: AtomicU64,
+    /// admission-decision observer (set once, by the tracing layer)
+    observer: OnceLock<Arc<dyn GovernorObserver>>,
+}
+
+impl std::fmt::Debug for MemoryGovernor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MemoryGovernor")
+            .field("budget", &self.budget)
+            .field("reserved", &self.reserved)
+            .field("refused", &self.refused)
+            .finish()
+    }
 }
 
 impl MemoryGovernor {
@@ -39,7 +61,14 @@ impl MemoryGovernor {
             budget: budget_bytes.map(|b| b as u64),
             reserved: AtomicU64::new(0),
             refused: AtomicU64::new(0),
+            observer: OnceLock::new(),
         }
+    }
+
+    /// Install the admission observer. First caller wins; later calls
+    /// are ignored (the tracer installs itself once at context build).
+    pub fn set_observer(&self, obs: Arc<dyn GovernorObserver>) {
+        let _ = self.observer.set(obs);
     }
 
     pub fn unbounded() -> MemoryGovernor {
@@ -79,6 +108,18 @@ impl MemoryGovernor {
     }
 
     fn admit(&self, bytes: u64) -> bool {
+        let admitted = self.admit_inner(bytes);
+        if let Some(obs) = self.observer.get() {
+            if admitted {
+                obs.reservation_granted(bytes);
+            } else {
+                obs.reservation_refused(bytes);
+            }
+        }
+        admitted
+    }
+
+    fn admit_inner(&self, bytes: u64) -> bool {
         match self.budget {
             None => {
                 self.reserved.fetch_add(bytes, Ordering::Relaxed);

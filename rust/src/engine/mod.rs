@@ -18,6 +18,9 @@
 //! * [`stats`] — execution counters.
 //! * [`stream`] — micro-batch streaming runtime over the same Plan DAG
 //!   (stateful operators, watermarks, backpressure).
+//! * [`trace`] — structured span tracing (run → pipe → stage → task /
+//!   micro-batch) with per-span counter attribution, Chrome-trace
+//!   export and a text profile report.
 
 pub mod row;
 pub mod dataset;
@@ -31,9 +34,12 @@ pub mod fault;
 pub mod cluster;
 pub mod stats;
 pub mod stream;
+pub mod trace;
 
 pub use dataset::{Dataset, JoinKind, Partitioned};
 pub use executor::{EngineConfig, EngineCtx, TaskRecord, TaskTrace};
 pub use memory::MemoryGovernor;
 pub use optimizer::RewriteCounts;
 pub use row::{Column, ColumnBatch, ColumnData, Field, FieldType, Row, Schema, SchemaRef};
+pub use stats::{Stat, StatsSnapshot};
+pub use trace::{SpanKind, SpanRecord, Tracer};

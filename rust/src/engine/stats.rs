@@ -4,6 +4,87 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+/// Names one [`EngineStats`] counter. A single charge site can address
+/// both the global atomics and a per-span counter set in the tracer
+/// ([`super::trace`]) through the same key, which is what keeps the
+/// "global = sum of spans" invariant checkable: every charge goes
+/// through one `Stat`, to exactly one span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stat {
+    TasksLaunched,
+    TasksRetried,
+    RowsRead,
+    RowsWritten,
+    ShuffleBytes,
+    ShuffleRecords,
+    CacheHits,
+    CacheMisses,
+    CacheEvictions,
+    TaskNanos,
+    StagesRun,
+    PlanRewrites,
+    SpillBytes,
+    SpillFiles,
+    SortRuns,
+    SortSpillBytes,
+    VectorizedBatches,
+    VectorizedFallbacks,
+    VectorizedShuffleBatches,
+    VectorizedShuffleFallbacks,
+}
+
+impl Stat {
+    /// Every counter, in [`StatsSnapshot`] field order.
+    pub const ALL: [Stat; 20] = [
+        Stat::TasksLaunched,
+        Stat::TasksRetried,
+        Stat::RowsRead,
+        Stat::RowsWritten,
+        Stat::ShuffleBytes,
+        Stat::ShuffleRecords,
+        Stat::CacheHits,
+        Stat::CacheMisses,
+        Stat::CacheEvictions,
+        Stat::TaskNanos,
+        Stat::StagesRun,
+        Stat::PlanRewrites,
+        Stat::SpillBytes,
+        Stat::SpillFiles,
+        Stat::SortRuns,
+        Stat::SortSpillBytes,
+        Stat::VectorizedBatches,
+        Stat::VectorizedFallbacks,
+        Stat::VectorizedShuffleBatches,
+        Stat::VectorizedShuffleFallbacks,
+    ];
+
+    /// Snake-case counter name (matches the exporter's metric suffixes).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stat::TasksLaunched => "tasks_launched",
+            Stat::TasksRetried => "tasks_retried",
+            Stat::RowsRead => "rows_read",
+            Stat::RowsWritten => "rows_written",
+            Stat::ShuffleBytes => "shuffle_bytes",
+            Stat::ShuffleRecords => "shuffle_records",
+            Stat::CacheHits => "cache_hits",
+            Stat::CacheMisses => "cache_misses",
+            Stat::CacheEvictions => "cache_evictions",
+            Stat::TaskNanos => "task_nanos",
+            Stat::StagesRun => "stages_run",
+            Stat::PlanRewrites => "plan_rewrites",
+            Stat::SpillBytes => "spill_bytes",
+            Stat::SpillFiles => "spill_files",
+            Stat::SortRuns => "sort_runs",
+            Stat::SortSpillBytes => "sort_spill_bytes",
+            Stat::VectorizedBatches => "vectorized_batches",
+            Stat::VectorizedFallbacks => "vectorized_fallbacks",
+            Stat::VectorizedShuffleBatches => "vectorized_shuffle_batches",
+            Stat::VectorizedShuffleFallbacks => "vectorized_shuffle_fallbacks",
+        }
+    }
+}
+
 /// Counters for one engine context (one "application").
 #[derive(Debug, Default)]
 pub struct EngineStats {
@@ -55,6 +136,38 @@ impl EngineStats {
     #[inline]
     pub fn add(&self, counter: &AtomicU64, v: u64) {
         counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Charge a counter addressed by [`Stat`] key (the form the tracer's
+    /// span-attribution path shares with the global atomics).
+    #[inline]
+    pub fn add_stat(&self, s: Stat, v: u64) {
+        self.cell(s).fetch_add(v, Ordering::Relaxed);
+    }
+
+    fn cell(&self, s: Stat) -> &AtomicU64 {
+        match s {
+            Stat::TasksLaunched => &self.tasks_launched,
+            Stat::TasksRetried => &self.tasks_retried,
+            Stat::RowsRead => &self.rows_read,
+            Stat::RowsWritten => &self.rows_written,
+            Stat::ShuffleBytes => &self.shuffle_bytes,
+            Stat::ShuffleRecords => &self.shuffle_records,
+            Stat::CacheHits => &self.cache_hits,
+            Stat::CacheMisses => &self.cache_misses,
+            Stat::CacheEvictions => &self.cache_evictions,
+            Stat::TaskNanos => &self.task_nanos,
+            Stat::StagesRun => &self.stages_run,
+            Stat::PlanRewrites => &self.plan_rewrites,
+            Stat::SpillBytes => &self.spill_bytes,
+            Stat::SpillFiles => &self.spill_files,
+            Stat::SortRuns => &self.sort_runs,
+            Stat::SortSpillBytes => &self.sort_spill_bytes,
+            Stat::VectorizedBatches => &self.vectorized_batches,
+            Stat::VectorizedFallbacks => &self.vectorized_fallbacks,
+            Stat::VectorizedShuffleBatches => &self.vectorized_shuffle_batches,
+            Stat::VectorizedShuffleFallbacks => &self.vectorized_shuffle_fallbacks,
+        }
     }
 
     pub fn snapshot(&self) -> StatsSnapshot {
@@ -111,31 +224,80 @@ pub struct StatsSnapshot {
 }
 
 impl StatsSnapshot {
-    /// Difference since an earlier snapshot.
+    /// Difference since an earlier snapshot. Saturating on every field:
+    /// `earlier` may come from a context that was since replaced by a
+    /// fresh one (counters restart at zero), and a publisher thread
+    /// computing a delta across that boundary must clamp to zero, not
+    /// panic on u64 underflow.
     pub fn delta(&self, earlier: &StatsSnapshot) -> StatsSnapshot {
-        StatsSnapshot {
-            tasks_launched: self.tasks_launched - earlier.tasks_launched,
-            tasks_retried: self.tasks_retried - earlier.tasks_retried,
-            rows_read: self.rows_read - earlier.rows_read,
-            rows_written: self.rows_written - earlier.rows_written,
-            shuffle_bytes: self.shuffle_bytes - earlier.shuffle_bytes,
-            shuffle_records: self.shuffle_records - earlier.shuffle_records,
-            cache_hits: self.cache_hits - earlier.cache_hits,
-            cache_misses: self.cache_misses - earlier.cache_misses,
-            cache_evictions: self.cache_evictions - earlier.cache_evictions,
-            task_nanos: self.task_nanos - earlier.task_nanos,
-            stages_run: self.stages_run - earlier.stages_run,
-            plan_rewrites: self.plan_rewrites - earlier.plan_rewrites,
-            spill_bytes: self.spill_bytes - earlier.spill_bytes,
-            spill_files: self.spill_files - earlier.spill_files,
-            sort_runs: self.sort_runs - earlier.sort_runs,
-            sort_spill_bytes: self.sort_spill_bytes - earlier.sort_spill_bytes,
-            vectorized_batches: self.vectorized_batches - earlier.vectorized_batches,
-            vectorized_fallbacks: self.vectorized_fallbacks - earlier.vectorized_fallbacks,
-            vectorized_shuffle_batches: self.vectorized_shuffle_batches
-                - earlier.vectorized_shuffle_batches,
-            vectorized_shuffle_fallbacks: self.vectorized_shuffle_fallbacks
-                - earlier.vectorized_shuffle_fallbacks,
+        let mut out = StatsSnapshot::default();
+        for s in Stat::ALL {
+            *out.cell_mut(s) = self.get(s).saturating_sub(earlier.get(s));
+        }
+        out
+    }
+
+    /// Read one counter by [`Stat`] key.
+    pub fn get(&self, s: Stat) -> u64 {
+        match s {
+            Stat::TasksLaunched => self.tasks_launched,
+            Stat::TasksRetried => self.tasks_retried,
+            Stat::RowsRead => self.rows_read,
+            Stat::RowsWritten => self.rows_written,
+            Stat::ShuffleBytes => self.shuffle_bytes,
+            Stat::ShuffleRecords => self.shuffle_records,
+            Stat::CacheHits => self.cache_hits,
+            Stat::CacheMisses => self.cache_misses,
+            Stat::CacheEvictions => self.cache_evictions,
+            Stat::TaskNanos => self.task_nanos,
+            Stat::StagesRun => self.stages_run,
+            Stat::PlanRewrites => self.plan_rewrites,
+            Stat::SpillBytes => self.spill_bytes,
+            Stat::SpillFiles => self.spill_files,
+            Stat::SortRuns => self.sort_runs,
+            Stat::SortSpillBytes => self.sort_spill_bytes,
+            Stat::VectorizedBatches => self.vectorized_batches,
+            Stat::VectorizedFallbacks => self.vectorized_fallbacks,
+            Stat::VectorizedShuffleBatches => self.vectorized_shuffle_batches,
+            Stat::VectorizedShuffleFallbacks => self.vectorized_shuffle_fallbacks,
+        }
+    }
+
+    fn cell_mut(&mut self, s: Stat) -> &mut u64 {
+        match s {
+            Stat::TasksLaunched => &mut self.tasks_launched,
+            Stat::TasksRetried => &mut self.tasks_retried,
+            Stat::RowsRead => &mut self.rows_read,
+            Stat::RowsWritten => &mut self.rows_written,
+            Stat::ShuffleBytes => &mut self.shuffle_bytes,
+            Stat::ShuffleRecords => &mut self.shuffle_records,
+            Stat::CacheHits => &mut self.cache_hits,
+            Stat::CacheMisses => &mut self.cache_misses,
+            Stat::CacheEvictions => &mut self.cache_evictions,
+            Stat::TaskNanos => &mut self.task_nanos,
+            Stat::StagesRun => &mut self.stages_run,
+            Stat::PlanRewrites => &mut self.plan_rewrites,
+            Stat::SpillBytes => &mut self.spill_bytes,
+            Stat::SpillFiles => &mut self.spill_files,
+            Stat::SortRuns => &mut self.sort_runs,
+            Stat::SortSpillBytes => &mut self.sort_spill_bytes,
+            Stat::VectorizedBatches => &mut self.vectorized_batches,
+            Stat::VectorizedFallbacks => &mut self.vectorized_fallbacks,
+            Stat::VectorizedShuffleBatches => &mut self.vectorized_shuffle_batches,
+            Stat::VectorizedShuffleFallbacks => &mut self.vectorized_shuffle_fallbacks,
+        }
+    }
+
+    /// Add `v` to one counter (span-local accumulation in the tracer).
+    pub fn bump(&mut self, s: Stat, v: u64) {
+        *self.cell_mut(s) += v;
+    }
+
+    /// Field-wise `self += other` (summing span-local counters back up
+    /// to a total the trace tests compare against the global snapshot).
+    pub fn accumulate(&mut self, other: &StatsSnapshot) {
+        for s in Stat::ALL {
+            *self.cell_mut(s) += other.get(s);
         }
     }
 }
@@ -156,5 +318,44 @@ mod tests {
         assert_eq!(d.rows_read, 50);
         assert_eq!(d.tasks_launched, 0);
         assert_eq!(b.rows_read, 150);
+    }
+
+    #[test]
+    fn delta_saturates_across_a_counter_reset() {
+        // "earlier" came from a context that was torn down and replaced;
+        // the fresh context's counters restart below it on every field
+        let old = EngineStats::new();
+        old.add(&old.rows_read, 1000);
+        old.add(&old.spill_bytes, 1 << 20);
+        old.add(&old.tasks_launched, 64);
+        let earlier = old.snapshot();
+
+        let fresh = EngineStats::new();
+        fresh.add(&fresh.rows_read, 10);
+        let d = fresh.snapshot().delta(&earlier);
+        for s in Stat::ALL {
+            assert_eq!(d.get(s), 0, "field {} must clamp, not underflow", s.name());
+        }
+    }
+
+    #[test]
+    fn add_stat_reaches_every_field_and_accumulate_sums() {
+        let s = EngineStats::new();
+        for (i, st) in Stat::ALL.into_iter().enumerate() {
+            s.add_stat(st, (i + 1) as u64);
+        }
+        let snap = s.snapshot();
+        for (i, st) in Stat::ALL.into_iter().enumerate() {
+            assert_eq!(snap.get(st), (i + 1) as u64, "field {}", st.name());
+        }
+        let mut total = StatsSnapshot::default();
+        total.accumulate(&snap);
+        total.accumulate(&snap);
+        for st in Stat::ALL {
+            assert_eq!(total.get(st), 2 * snap.get(st));
+        }
+        let mut bumped = StatsSnapshot::default();
+        bumped.bump(Stat::SortRuns, 7);
+        assert_eq!(bumped.sort_runs, 7);
     }
 }

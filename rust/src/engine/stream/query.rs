@@ -63,6 +63,8 @@ use super::super::executor::{bucket_of, whole_row_key, EngineCtx};
 use super::super::optimizer;
 use super::super::row::{Field, Row, SchemaRef};
 use super::super::spill::{SortedRun, SortedRunSet, SpilledRows};
+use super::super::stats::Stat;
+use super::super::trace::SpanKind;
 use crate::util::error::{DdpError, Result};
 use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
@@ -270,6 +272,13 @@ impl StreamQuery {
         }
         self.rows_in += rows.len() as u64;
         self.batches += 1;
+        // one micro-batch span scopes this push: the stage/task spans the
+        // engine opens below nest under it, and the streaming state
+        // charges (spilled buffers, sort runs) attribute to it
+        let batch_no = self.batches;
+        let span =
+            ctx.tracer.begin(SpanKind::MicroBatch, || format!("micro_batch#{batch_no}"), None);
+        let _scope = ctx.tracer.scope(span);
         let batch = Partitioned {
             schema: self.source_schema.clone(),
             parts: vec![Arc::new(rows.to_vec())],
@@ -287,8 +296,8 @@ impl StreamQuery {
                     let (spill_bytes, spill_files) =
                         buf.push(&ctx.governor, &ctx.spill, delta)?;
                     if spill_files > 0 {
-                        ctx.stats.add(&ctx.stats.spill_bytes, spill_bytes);
-                        ctx.stats.add(&ctx.stats.spill_files, spill_files);
+                        ctx.charge(Stat::SpillBytes, spill_bytes);
+                        ctx.charge(Stat::SpillFiles, spill_files);
                     }
                 }
                 CapState::Reduce { key, reduce, accs, .. } => {
@@ -321,11 +330,11 @@ impl StreamQuery {
                         let mut run_rows = delta;
                         run_rows.sort_by(|a, b| cmp(a, b));
                         let run = SortedRun::build(&ctx.governor, &ctx.spill, run_rows)?;
-                        ctx.stats.add(&ctx.stats.sort_runs, 1);
+                        ctx.charge(Stat::SortRuns, 1);
                         if let Some(fb) = run.spilled_file_bytes() {
-                            ctx.stats.add(&ctx.stats.sort_spill_bytes, fb);
-                            ctx.stats.add(&ctx.stats.spill_bytes, fb);
-                            ctx.stats.add(&ctx.stats.spill_files, 1);
+                            ctx.charge(Stat::SortSpillBytes, fb);
+                            ctx.charge(Stat::SpillBytes, fb);
+                            ctx.charge(Stat::SpillFiles, 1);
                         }
                         runs.push(run);
                     }
@@ -353,6 +362,10 @@ impl StreamQuery {
             return Err(DdpError::engine("stream query already finished"));
         }
         self.finished = true;
+        // the drain's merge/suffix work (run merges, capture
+        // re-evaluation through the engine) traces as one final span
+        let span = ctx.tracer.begin(SpanKind::MicroBatch, || "drain".to_string(), None);
+        let _scope = ctx.tracer.scope(span);
         if self.emit_root {
             let rows = std::mem::take(&mut self.emitted);
             return Ok(Partitioned {

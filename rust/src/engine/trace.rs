@@ -1,0 +1,884 @@
+//! Structured span tracing with per-span counter attribution.
+//!
+//! The engine's [`EngineStats`] counters are process-global: they say the
+//! pipeline spilled 40 MiB, not *which stage* spilled it. This module adds
+//! the missing dimension — a tree of spans (pipeline run → pipe → plan
+//! stage → task / streaming micro-batch) with deterministic ids,
+//! start/duration read from [`crate::util::clock`], and a span-local
+//! [`StatsSnapshot`] that every charge site fills *in addition to* the
+//! global atomics. Each charge is attributed to exactly one span (no
+//! parent roll-up at charge time), so the global counters are provably
+//! the sum of the span-local ones plus an explicit orphan bucket for
+//! charges made outside any span — the invariant `rust/tests/trace.rs`
+//! asserts.
+//!
+//! Two consumers sit on top of the span tree:
+//! - [`Tracer::chrome_trace_json`] / [`Tracer::write_chrome_trace`]: a
+//!   Chrome trace-event (Perfetto-compatible) JSON export with one lane
+//!   per executing thread and cumulative counter tracks;
+//! - [`Tracer::profile_report`]: a deterministic text report — top
+//!   stages by time, spill / vectorization-fallback hotspots, and the
+//!   critical-path length through the span tree.
+//!
+//! Cost model: a disabled tracer ([`EngineConfig::trace`] false /
+//! `DDP_TRACE` unset) takes a single branch per call — span names are
+//! passed as closures so no formatting happens, and no lock is touched.
+//! Enabled, spans append to one preallocated vector under a mutex and
+//! charges are index addressing into it.
+//!
+//! [`EngineConfig::trace`]: super::executor::EngineConfig
+//! [`EngineStats`]: super::stats::EngineStats
+
+use super::memory::GovernorObserver;
+use super::stats::{Stat, StatsSnapshot};
+use crate::json::Value;
+use crate::util::clock::{self, ClockRef};
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Sentinel span id: "no span" (disabled tracer, or no scope entered).
+pub const NO_SPAN: u64 = 0;
+
+/// Level of a span in the run → pipe → stage → task hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// one `PipelineDriver::run`
+    Run,
+    /// one pipe execution inside a run
+    Pipe,
+    /// one executor plan stage (narrow chain or one side of a wide op)
+    Stage,
+    /// one task within a stage, on a pool worker thread
+    Task,
+    /// one streaming micro-batch push (or the final drain)
+    MicroBatch,
+}
+
+impl SpanKind {
+    /// Lowercase category name (Chrome trace `cat`, report labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Run => "run",
+            SpanKind::Pipe => "pipe",
+            SpanKind::Stage => "stage",
+            SpanKind::Task => "task",
+            SpanKind::MicroBatch => "micro_batch",
+        }
+    }
+}
+
+/// Counters attributed to one span: the engine-stat set plus the
+/// memory-governor admission outcomes observed while the span was the
+/// thread's current scope (governor decisions are not [`Stat`]s — they
+/// live on the governor, not [`super::stats::EngineStats`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpanCounters {
+    /// span-local share of the global engine counters
+    pub stats: StatsSnapshot,
+    /// governor reservations granted while this span was current
+    pub mem_reservations: u64,
+    /// bytes those granted reservations admitted
+    pub mem_reserved_bytes: u64,
+    /// governor refusals (spill decisions) while this span was current
+    pub mem_refusals: u64,
+}
+
+impl SpanCounters {
+    fn accumulate(&mut self, other: &SpanCounters) {
+        self.stats.accumulate(&other.stats);
+        self.mem_reservations += other.mem_reservations;
+        self.mem_reserved_bytes += other.mem_reserved_bytes;
+        self.mem_refusals += other.mem_refusals;
+    }
+}
+
+/// One recorded span.
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    /// deterministic id: 1-based creation order within the tracer
+    pub id: u64,
+    /// parent span id, [`NO_SPAN`] for roots
+    pub parent: u64,
+    pub kind: SpanKind,
+    pub name: String,
+    /// start time (seconds on the tracer's clock)
+    pub start_secs: f64,
+    /// end time; meaningful once `open` is false
+    pub end_secs: f64,
+    /// still running (export treats open spans as ending "now")
+    pub open: bool,
+    /// display lane (one per executing thread, first-use order)
+    pub lane: u64,
+    pub counters: SpanCounters,
+}
+
+impl SpanRecord {
+    pub fn duration_secs(&self) -> f64 {
+        (self.end_secs - self.start_secs).max(0.0)
+    }
+}
+
+// Tracer instances get a process-unique token; the thread-local current
+// scope stores (token, span) so a scope entered for one engine context
+// can never soak up charges from another context sharing the thread.
+static NEXT_TOKEN: AtomicU64 = AtomicU64::new(1);
+// Display lanes are per-thread, assigned on first traced use.
+static NEXT_LANE: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static CURRENT: Cell<(u64, u64)> = const { Cell::new((0, NO_SPAN)) };
+    static LANE: Cell<u64> = const { Cell::new(u64::MAX) };
+}
+
+fn this_lane() -> u64 {
+    LANE.with(|l| {
+        let v = l.get();
+        if v != u64::MAX {
+            return v;
+        }
+        let v = NEXT_LANE.fetch_add(1, Ordering::Relaxed);
+        l.set(v);
+        v
+    })
+}
+
+/// Span recorder for one engine context. Shared via `Arc`; all methods
+/// take `&self`.
+pub struct Tracer {
+    enabled: bool,
+    token: u64,
+    clock: ClockRef,
+    spans: Mutex<Vec<SpanRecord>>,
+    /// charges made while no span of this tracer was current
+    orphan: Mutex<SpanCounters>,
+}
+
+/// RAII scope: makes a span the thread's current charge target and ends
+/// the span when dropped (restoring the previous scope).
+pub struct SpanScope {
+    tracer: Option<Arc<Tracer>>,
+    span: u64,
+    prev: (u64, u64),
+}
+
+impl Drop for SpanScope {
+    fn drop(&mut self) {
+        if let Some(t) = self.tracer.take() {
+            CURRENT.with(|c| c.set(self.prev));
+            t.end(self.span);
+        }
+    }
+}
+
+impl Tracer {
+    /// A tracer on the shared wall clock.
+    pub fn new(enabled: bool) -> Arc<Tracer> {
+        Tracer::with_clock(enabled, clock::wall())
+    }
+
+    /// A tracer on an explicit clock (tests inject a
+    /// [`crate::util::clock::VirtualClock`] for deterministic times).
+    pub fn with_clock(enabled: bool, clock: ClockRef) -> Arc<Tracer> {
+        Arc::new(Tracer {
+            enabled,
+            token: NEXT_TOKEN.fetch_add(1, Ordering::Relaxed),
+            clock,
+            spans: Mutex::new(Vec::with_capacity(if enabled { 256 } else { 0 })),
+            orphan: Mutex::new(SpanCounters::default()),
+        })
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Open a span. `name` is only invoked when tracing is enabled (no
+    /// formatting cost on the disabled path). `parent: None` inherits
+    /// the thread's current span of this tracer. Returns [`NO_SPAN`]
+    /// when disabled.
+    pub fn begin(&self, kind: SpanKind, name: impl FnOnce() -> String, parent: Option<u64>) -> u64 {
+        if !self.enabled {
+            return NO_SPAN;
+        }
+        let parent = parent.unwrap_or_else(|| self.current());
+        let now = self.clock.now();
+        let lane = this_lane();
+        let mut spans = self.spans.lock().unwrap();
+        let id = spans.len() as u64 + 1;
+        spans.push(SpanRecord {
+            id,
+            parent,
+            kind,
+            name: name(),
+            start_secs: now,
+            end_secs: now,
+            open: true,
+            lane,
+            counters: SpanCounters::default(),
+        });
+        id
+    }
+
+    /// Close a span (idempotent; the first close wins the end time).
+    pub fn end(&self, span: u64) {
+        if !self.enabled || span == NO_SPAN {
+            return;
+        }
+        let now = self.clock.now();
+        let mut spans = self.spans.lock().unwrap();
+        if let Some(s) = spans.get_mut(span as usize - 1) {
+            if s.open {
+                s.end_secs = now;
+                s.open = false;
+            }
+        }
+    }
+
+    /// Make `span` the thread's current charge target until the guard
+    /// drops; the drop also ends the span. Call on the thread that
+    /// executes the span's work.
+    pub fn scope(self: &Arc<Self>, span: u64) -> SpanScope {
+        if !self.enabled || span == NO_SPAN {
+            return SpanScope { tracer: None, span: NO_SPAN, prev: (0, NO_SPAN) };
+        }
+        let prev = CURRENT.with(|c| c.replace((self.token, span)));
+        SpanScope { tracer: Some(self.clone()), span, prev }
+    }
+
+    /// The thread's current span of *this* tracer ([`NO_SPAN`] if the
+    /// thread is inside no scope, or inside another tracer's scope).
+    pub fn current(&self) -> u64 {
+        if !self.enabled {
+            return NO_SPAN;
+        }
+        CURRENT.with(|c| {
+            let (token, span) = c.get();
+            if token == self.token {
+                span
+            } else {
+                NO_SPAN
+            }
+        })
+    }
+
+    /// Attribute `v` of counter `s` to `span` ([`NO_SPAN`] → the orphan
+    /// bucket, so the span-sum invariant still holds for charges made
+    /// outside any scope).
+    pub fn charge(&self, span: u64, s: Stat, v: u64) {
+        if !self.enabled || v == 0 {
+            return;
+        }
+        if span == NO_SPAN {
+            self.orphan.lock().unwrap().stats.bump(s, v);
+            return;
+        }
+        let mut spans = self.spans.lock().unwrap();
+        if let Some(rec) = spans.get_mut(span as usize - 1) {
+            rec.counters.stats.bump(s, v);
+        }
+    }
+
+    /// Attribute to the thread's current span (or the orphan bucket).
+    pub fn charge_current(&self, s: Stat, v: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.charge(self.current(), s, v);
+    }
+
+    fn charge_mem(&self, granted: bool, bytes: u64) {
+        if !self.enabled {
+            return;
+        }
+        let span = self.current();
+        let apply = |c: &mut SpanCounters| {
+            if granted {
+                c.mem_reservations += 1;
+                c.mem_reserved_bytes += bytes;
+            } else {
+                c.mem_refusals += 1;
+            }
+        };
+        if span == NO_SPAN {
+            apply(&mut self.orphan.lock().unwrap());
+            return;
+        }
+        let mut spans = self.spans.lock().unwrap();
+        if let Some(rec) = spans.get_mut(span as usize - 1) {
+            apply(&mut rec.counters);
+        }
+    }
+
+    /// Snapshot of every recorded span (ids are 1..=len, in order).
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        self.spans.lock().unwrap().clone()
+    }
+
+    /// Charges that landed outside any span.
+    pub fn orphan_counters(&self) -> SpanCounters {
+        *self.orphan.lock().unwrap()
+    }
+
+    /// Sum of all span-local counters plus the orphan bucket. With
+    /// tracing on this equals the global [`EngineStats`] snapshot delta
+    /// over the same window — the invariant the trace suite asserts.
+    ///
+    /// [`EngineStats`]: super::stats::EngineStats
+    pub fn totals(&self) -> SpanCounters {
+        let mut total = self.orphan_counters();
+        for s in self.spans.lock().unwrap().iter() {
+            total.accumulate(&s.counters);
+        }
+        total
+    }
+
+    // ------------------------------------------------------------------
+    // consumer 1: Chrome trace-event / Perfetto JSON
+    // ------------------------------------------------------------------
+
+    /// Chrome trace-event JSON (open in `chrome://tracing` or
+    /// <https://ui.perfetto.dev>): one complete (`"X"`) event per span on
+    /// its thread's lane, plus cumulative counter (`"C"`) tracks for
+    /// shuffle, spill and governed memory at each stage end.
+    pub fn chrome_trace_json(&self) -> Value {
+        let spans = self.spans();
+        // an open span (export mid-run) renders up to "now"
+        let now = if self.enabled { self.clock.now() } else { 0.0 };
+        let mut events: Vec<Value> = Vec::with_capacity(spans.len() + 16);
+        let mut lanes: Vec<u64> = spans.iter().map(|s| s.lane).collect();
+        lanes.sort_unstable();
+        lanes.dedup();
+        events.push(Value::obj(vec![
+            ("ph", Value::from("M")),
+            ("name", Value::from("process_name")),
+            ("pid", Value::Num(1.0)),
+            ("args", Value::obj(vec![("name", Value::from("sparklet"))])),
+        ]));
+        for lane in &lanes {
+            events.push(Value::obj(vec![
+                ("ph", Value::from("M")),
+                ("name", Value::from("thread_name")),
+                ("pid", Value::Num(1.0)),
+                ("tid", Value::Num(*lane as f64)),
+                ("args", Value::obj(vec![("name", Value::from(format!("lane-{lane}")))])),
+            ]));
+        }
+        for s in &spans {
+            let end = if s.open { now.max(s.start_secs) } else { s.end_secs };
+            let mut args: Vec<(&str, Value)> = vec![
+                ("span_id", Value::Num(s.id as f64)),
+                ("parent", Value::Num(s.parent as f64)),
+            ];
+            for stat in Stat::ALL {
+                let v = s.counters.stats.get(stat);
+                if v > 0 {
+                    args.push((stat.name(), Value::Num(v as f64)));
+                }
+            }
+            if s.counters.mem_reservations > 0 {
+                args.push(("mem_reservations", Value::Num(s.counters.mem_reservations as f64)));
+                args.push((
+                    "mem_reserved_bytes",
+                    Value::Num(s.counters.mem_reserved_bytes as f64),
+                ));
+            }
+            if s.counters.mem_refusals > 0 {
+                args.push(("mem_refusals", Value::Num(s.counters.mem_refusals as f64)));
+            }
+            events.push(Value::obj(vec![
+                ("ph", Value::from("X")),
+                ("name", Value::from(s.name.as_str())),
+                ("cat", Value::from(s.kind.name())),
+                ("ts", Value::Num(s.start_secs * 1e6)),
+                ("dur", Value::Num((end - s.start_secs).max(0.0) * 1e6)),
+                ("pid", Value::Num(1.0)),
+                ("tid", Value::Num(s.lane as f64)),
+                ("args", Value::obj(args)),
+            ]));
+        }
+        // cumulative counter tracks, sampled at each stage-span end
+        let mut stages: Vec<&SpanRecord> =
+            spans.iter().filter(|s| s.kind == SpanKind::Stage && !s.open).collect();
+        stages.sort_by(|a, b| {
+            a.end_secs.total_cmp(&b.end_secs).then_with(|| a.id.cmp(&b.id))
+        });
+        let (mut shuffle, mut spill, mut reserved) = (0u64, 0u64, 0u64);
+        for s in stages {
+            shuffle += s.counters.stats.shuffle_bytes;
+            spill += s.counters.stats.spill_bytes;
+            reserved += s.counters.mem_reserved_bytes;
+            events.push(Value::obj(vec![
+                ("ph", Value::from("C")),
+                ("name", Value::from("engine bytes")),
+                ("pid", Value::Num(1.0)),
+                ("ts", Value::Num(s.end_secs * 1e6)),
+                (
+                    "args",
+                    Value::obj(vec![
+                        ("shuffle_bytes", Value::Num(shuffle as f64)),
+                        ("spill_bytes", Value::Num(spill as f64)),
+                        ("mem_reserved_bytes", Value::Num(reserved as f64)),
+                    ]),
+                ),
+            ]));
+        }
+        Value::obj(vec![
+            ("traceEvents", Value::Arr(events)),
+            ("displayTimeUnit", Value::from("ms")),
+        ])
+    }
+
+    /// Write [`Self::chrome_trace_json`] to `path`.
+    pub fn write_chrome_trace(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, crate::json::to_string_pretty(&self.chrome_trace_json()))
+    }
+
+    // ------------------------------------------------------------------
+    // consumer 2: deterministic text profile report
+    // ------------------------------------------------------------------
+
+    /// Aggregate stage spans by name (deterministic: name-sorted). The
+    /// metrics exporter publishes these as per-stage gauges.
+    pub fn stage_rollup(&self) -> Vec<StageAgg> {
+        let mut by_name: BTreeMap<String, StageAgg> = BTreeMap::new();
+        for s in self.spans.lock().unwrap().iter() {
+            if s.kind != SpanKind::Stage {
+                continue;
+            }
+            let agg = by_name.entry(s.name.clone()).or_insert_with(|| StageAgg {
+                name: s.name.clone(),
+                ..StageAgg::default()
+            });
+            agg.spans += 1;
+            agg.wall_secs += s.duration_secs();
+            agg.counters.accumulate(&s.counters);
+        }
+        by_name.into_values().collect()
+    }
+
+    /// Deterministic text profile: top-`top_n` stages by total time
+    /// (ties broken by name), spill and vectorization-fallback hotspots,
+    /// governor pressure, and the critical-path length through the span
+    /// tree (longest chain of non-overlapping spans, descending through
+    /// children).
+    pub fn profile_report(&self, top_n: usize) -> String {
+        use std::fmt::Write as _;
+        let spans = self.spans();
+        let mut out = String::new();
+        let _ = writeln!(out, "== sparklet trace profile ==");
+        let mut kind_counts: BTreeMap<&'static str, usize> = BTreeMap::new();
+        for s in &spans {
+            *kind_counts.entry(s.kind.name()).or_default() += 1;
+        }
+        let kinds: Vec<String> =
+            kind_counts.iter().map(|(k, n)| format!("{n} {k}")).collect();
+        let _ = writeln!(out, "spans: {} ({})", spans.len(), kinds.join(", "));
+        let (cp_secs, cp_spans) = critical_path(&spans);
+        let _ = writeln!(out, "critical path: {cp_secs:.6}s across {cp_spans} span(s)");
+
+        let mut stages = self.stage_rollup();
+        stages.sort_by(|a, b| {
+            b.wall_secs.total_cmp(&a.wall_secs).then_with(|| a.name.cmp(&b.name))
+        });
+        if !stages.is_empty() {
+            let _ = writeln!(out, "top stages by total time:");
+            for (i, a) in stages.iter().take(top_n).enumerate() {
+                let _ = writeln!(
+                    out,
+                    "  {:>2}. {:<24} {:.6}s  spans={} tasks={} rows_in={} shuffle={}",
+                    i + 1,
+                    a.name,
+                    a.wall_secs,
+                    a.spans,
+                    a.counters.stats.tasks_launched,
+                    a.counters.stats.rows_read,
+                    fmt_bytes(a.counters.stats.shuffle_bytes),
+                );
+            }
+        }
+        let spillers: Vec<&StageAgg> =
+            stages.iter().filter(|a| a.counters.stats.spill_bytes > 0).collect();
+        if !spillers.is_empty() {
+            let _ = writeln!(out, "spill hotspots:");
+            for a in spillers {
+                let _ = writeln!(
+                    out,
+                    "  {:<24} spill={} files={} sort_runs={}",
+                    a.name,
+                    fmt_bytes(a.counters.stats.spill_bytes),
+                    a.counters.stats.spill_files,
+                    a.counters.stats.sort_runs,
+                );
+            }
+        }
+        let fallers: Vec<&StageAgg> = stages
+            .iter()
+            .filter(|a| {
+                a.counters.stats.vectorized_fallbacks
+                    + a.counters.stats.vectorized_shuffle_fallbacks
+                    > 0
+            })
+            .collect();
+        if !fallers.is_empty() {
+            let _ = writeln!(out, "vectorization fallbacks:");
+            for a in fallers {
+                let _ = writeln!(
+                    out,
+                    "  {:<24} batches={} fallbacks={} shuffle_batches={} shuffle_fallbacks={}",
+                    a.name,
+                    a.counters.stats.vectorized_batches,
+                    a.counters.stats.vectorized_fallbacks,
+                    a.counters.stats.vectorized_shuffle_batches,
+                    a.counters.stats.vectorized_shuffle_fallbacks,
+                );
+            }
+        }
+        let t = self.totals();
+        let _ = writeln!(
+            out,
+            "memory governor: {} reservation(s) granted ({}), {} refused",
+            t.mem_reservations,
+            fmt_bytes(t.mem_reserved_bytes),
+            t.mem_refusals,
+        );
+        let orphan = self.orphan_counters();
+        let named: Vec<String> = Stat::ALL
+            .into_iter()
+            .filter(|s| orphan.stats.get(*s) > 0)
+            .map(|s| format!("{}={}", s.name(), orphan.stats.get(s)))
+            .collect();
+        if !named.is_empty() {
+            let _ = writeln!(out, "unattributed charges: {}", named.join(" "));
+        }
+        out
+    }
+}
+
+// The tracer observes governor admission decisions so reservations and
+// refusals land on the span whose work triggered them (task spans are
+// scope-entered on the worker thread running the reserving code).
+impl GovernorObserver for Tracer {
+    fn reservation_granted(&self, bytes: u64) {
+        self.charge_mem(true, bytes);
+    }
+
+    fn reservation_refused(&self, bytes: u64) {
+        self.charge_mem(false, bytes);
+    }
+}
+
+/// Per-stage aggregate (one per distinct stage-span name).
+#[derive(Debug, Clone, Default)]
+pub struct StageAgg {
+    pub name: String,
+    /// number of stage spans aggregated under this name
+    pub spans: usize,
+    /// summed wall-clock duration of those spans
+    pub wall_secs: f64,
+    pub counters: SpanCounters,
+}
+
+/// Longest chain of non-overlapping spans through the tree, descending
+/// into children: `cp(span) = max(duration, best sequential chain of
+/// children cps)`, and the overall path chains root spans the same way.
+/// Returns `(seconds, spans on the path)`.
+pub fn critical_path(spans: &[SpanRecord]) -> (f64, usize) {
+    if spans.is_empty() {
+        return (0.0, 0);
+    }
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); spans.len()];
+    let mut roots: Vec<usize> = Vec::new();
+    for (i, s) in spans.iter().enumerate() {
+        let p = s.parent as usize;
+        if p >= 1 && p <= spans.len() && s.parent != s.id {
+            children[p - 1].push(i);
+        } else {
+            roots.push(i);
+        }
+    }
+    let mut memo: Vec<Option<(f64, usize)>> = vec![None; spans.len()];
+    // post-order without recursion (span trees can be deep in theory)
+    let mut stack: Vec<(usize, bool)> = roots.iter().map(|&r| (r, false)).collect();
+    while let Some((i, expanded)) = stack.pop() {
+        if memo[i].is_some() {
+            continue;
+        }
+        if !expanded {
+            stack.push((i, true));
+            for &c in &children[i] {
+                stack.push((c, false));
+            }
+            continue;
+        }
+        let kids: Vec<(f64, f64, f64, usize)> = children[i]
+            .iter()
+            .map(|&c| {
+                let (w, n) = memo[c].expect("children resolved before parent");
+                (spans[c].start_secs, spans[c].end_secs, w, n)
+            })
+            .collect();
+        let (chain_w, chain_n) = best_chain(kids);
+        let own = spans[i].duration_secs();
+        memo[i] = Some(if chain_w > own { (chain_w, chain_n) } else { (own, 1) });
+    }
+    let root_items: Vec<(f64, f64, f64, usize)> = roots
+        .iter()
+        .map(|&r| {
+            let (w, n) = memo[r].expect("roots resolved");
+            (spans[r].start_secs, spans[r].end_secs, w, n)
+        })
+        .collect();
+    best_chain(root_items)
+}
+
+/// Best-weight chain of non-overlapping `(start, end, weight, count)`
+/// intervals (weighted interval scheduling, O(n log n)).
+fn best_chain(mut items: Vec<(f64, f64, f64, usize)>) -> (f64, usize) {
+    if items.is_empty() {
+        return (0.0, 0);
+    }
+    const EPS: f64 = 1e-9;
+    items.sort_by(|a, b| a.1.total_cmp(&b.1).then_with(|| a.0.total_cmp(&b.0)));
+    let ends: Vec<f64> = items.iter().map(|it| it.1).collect();
+    // best[i] = best chain among items[0..=i]
+    let mut best: Vec<(f64, usize)> = Vec::with_capacity(items.len());
+    for (i, it) in items.iter().enumerate() {
+        let cut = ends.partition_point(|&e| e <= it.0 + EPS).min(i);
+        let prev = if cut > 0 { best[cut - 1] } else { (0.0, 0) };
+        let mine = (prev.0 + it.2, prev.1 + it.3);
+        let carried = if i > 0 { best[i - 1] } else { (0.0, 0) };
+        best.push(if mine.0 > carried.0 { mine } else { carried });
+    }
+    *best.last().unwrap()
+}
+
+/// Deterministic human byte formatting (fixed two decimals above KiB).
+fn fmt_bytes(b: u64) -> String {
+    if b >= 1 << 30 {
+        format!("{:.2}GiB", b as f64 / (1u64 << 30) as f64)
+    } else if b >= 1 << 20 {
+        format!("{:.2}MiB", b as f64 / (1u64 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.2}KiB", b as f64 / (1u64 << 10) as f64)
+    } else {
+        format!("{b}B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::{virt, Clock};
+
+    fn traced() -> (Arc<Tracer>, Arc<crate::util::clock::VirtualClock>) {
+        let clock = virt();
+        let tracer = Tracer::with_clock(true, clock.clone());
+        (tracer, clock)
+    }
+
+    #[test]
+    fn spans_nest_and_time_from_the_clock() {
+        let (t, clock) = traced();
+        clock.set(10.0);
+        let run = t.begin(SpanKind::Run, || "run".into(), None);
+        let _rs = t.scope(run);
+        clock.advance(1.0);
+        let stage = t.begin(SpanKind::Stage, || "narrow#1".into(), None);
+        {
+            let _ss = t.scope(stage);
+            assert_eq!(t.current(), stage);
+            clock.advance(2.0);
+        }
+        assert_eq!(t.current(), run);
+        let spans = t.spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].id, 1);
+        assert_eq!(spans[1].parent, run, "stage inherits the scoped parent");
+        assert_eq!(spans[1].start_secs, 11.0);
+        assert!(!spans[1].open);
+        assert_eq!(spans[1].duration_secs(), 2.0);
+        assert!(spans[0].open, "run scope still held");
+    }
+
+    #[test]
+    fn charges_attribute_to_current_span_or_orphan() {
+        let (t, _clock) = traced();
+        t.charge_current(Stat::PlanRewrites, 3);
+        let span = t.begin(SpanKind::Stage, || "s".into(), None);
+        {
+            let _s = t.scope(span);
+            t.charge_current(Stat::RowsRead, 10);
+            t.charge(span, Stat::ShuffleBytes, 100);
+        }
+        t.charge_current(Stat::RowsRead, 5);
+        let spans = t.spans();
+        assert_eq!(spans[0].counters.stats.rows_read, 10);
+        assert_eq!(spans[0].counters.stats.shuffle_bytes, 100);
+        let orphan = t.orphan_counters();
+        assert_eq!(orphan.stats.plan_rewrites, 3);
+        assert_eq!(orphan.stats.rows_read, 5);
+        let total = t.totals();
+        assert_eq!(total.stats.rows_read, 15);
+        assert_eq!(total.stats.shuffle_bytes, 100);
+    }
+
+    #[test]
+    fn scopes_are_tracer_scoped_not_thread_global() {
+        let (a, _ca) = traced();
+        let (b, _cb) = traced();
+        let sa = a.begin(SpanKind::Stage, || "a".into(), None);
+        let _ga = a.scope(sa);
+        // b's charge on this thread must not land in a's span
+        b.charge_current(Stat::RowsRead, 7);
+        assert_eq!(a.spans()[0].counters.stats.rows_read, 0);
+        assert_eq!(b.orphan_counters().stats.rows_read, 7);
+        assert_eq!(b.current(), NO_SPAN);
+    }
+
+    #[test]
+    fn disabled_tracer_is_inert_and_lazy() {
+        let t = Tracer::new(false);
+        let mut named = false;
+        let span = t.begin(
+            SpanKind::Run,
+            || {
+                named = true;
+                "x".into()
+            },
+            None,
+        );
+        assert_eq!(span, NO_SPAN);
+        assert!(!named, "name closure must not run when disabled");
+        let _s = t.scope(span);
+        t.charge_current(Stat::RowsRead, 9);
+        t.charge(span, Stat::RowsRead, 9);
+        assert!(t.spans().is_empty());
+        assert_eq!(t.totals().stats.rows_read, 0);
+    }
+
+    #[test]
+    fn governor_observer_attributes_to_current_span() {
+        let (t, _clock) = traced();
+        let span = t.begin(SpanKind::Task, || "task".into(), None);
+        {
+            let _s = t.scope(span);
+            t.reservation_granted(4096);
+            t.reservation_refused(1 << 20);
+        }
+        t.reservation_granted(16);
+        let c = t.spans()[0].counters;
+        assert_eq!(c.mem_reservations, 1);
+        assert_eq!(c.mem_reserved_bytes, 4096);
+        assert_eq!(c.mem_refusals, 1);
+        assert_eq!(t.orphan_counters().mem_reservations, 1);
+        let total = t.totals();
+        assert_eq!(total.mem_reservations, 2);
+        assert_eq!(total.mem_reserved_bytes, 4112);
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_and_scales_to_micros() {
+        let (t, clock) = traced();
+        clock.set(1.0);
+        let run = t.begin(SpanKind::Run, || "run".into(), None);
+        {
+            let _rs = t.scope(run);
+            let stage = t.begin(SpanKind::Stage, || "sort#3".into(), None);
+            let _ss = t.scope(stage);
+            t.charge(stage, Stat::ShuffleBytes, 2048);
+            clock.advance(0.5);
+        }
+        let text = crate::json::to_string_pretty(&t.chrome_trace_json());
+        let parsed = crate::json::parse(&text).expect("export must be valid JSON");
+        let events = parsed.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        let stage_ev = events
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("sort#3"))
+            .expect("stage event present");
+        assert_eq!(stage_ev.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(stage_ev.get("ts").unwrap().as_f64(), Some(1e6));
+        assert_eq!(stage_ev.get("dur").unwrap().as_f64(), Some(0.5e6));
+        let args = stage_ev.get("args").unwrap();
+        assert_eq!(args.get("shuffle_bytes").unwrap().as_u64(), Some(2048));
+        // cumulative counter track sampled at the stage end
+        assert!(events.iter().any(|e| {
+            e.get("ph").and_then(|p| p.as_str()) == Some("C")
+                && e.get("args")
+                    .and_then(|a| a.get("shuffle_bytes"))
+                    .and_then(|v| v.as_u64())
+                    == Some(2048)
+        }));
+    }
+
+    #[test]
+    fn critical_path_chains_non_overlapping_children() {
+        let (t, clock) = traced();
+        clock.set(0.0);
+        let run = t.begin(SpanKind::Run, || "run".into(), None);
+        // two sequential stages (1s + 2s) and one overlapping both (2.5s):
+        // the chain 1s+2s = 3s beats the single 2.5s span
+        let a = t.begin(SpanKind::Stage, || "a".into(), Some(run));
+        clock.advance(1.0);
+        t.end(a);
+        let b = t.begin(SpanKind::Stage, || "b".into(), Some(run));
+        clock.advance(2.0);
+        t.end(b);
+        let c = t.begin(SpanKind::Stage, || "c".into(), Some(run));
+        clock.set(0.25); // overlaps a and b
+        t.end(run); // ends at 0.25 on the rewound clock — irrelevant, run duration < chain
+        let spans = {
+            let mut s = t.spans();
+            // give c a real interval overlapping a and b
+            s[3].start_secs = 0.5;
+            s[3].end_secs = 3.0;
+            s[3].open = false;
+            let _ = c;
+            s
+        };
+        let (secs, count) = critical_path(&spans);
+        assert!((secs - 3.0).abs() < 1e-9, "got {secs}");
+        assert_eq!(count, 2);
+    }
+
+    #[test]
+    fn profile_report_is_deterministic_and_names_hotspots() {
+        let (t, clock) = traced();
+        let stage = t.begin(SpanKind::Stage, || "reduce#9".into(), None);
+        {
+            let _s = t.scope(stage);
+            t.charge(stage, Stat::SpillBytes, 9000);
+            t.charge(stage, Stat::SpillFiles, 2);
+            t.charge(stage, Stat::VectorizedFallbacks, 1);
+            clock.advance(0.125);
+        }
+        let r1 = t.profile_report(5);
+        let r2 = t.profile_report(5);
+        assert_eq!(r1, r2, "report must be deterministic");
+        assert!(r1.contains("reduce#9"));
+        assert!(r1.contains("spill hotspots:"));
+        assert!(r1.contains("vectorization fallbacks:"));
+        assert!(r1.contains("critical path: 0.125000s"));
+    }
+
+    #[test]
+    fn stage_rollup_groups_by_name() {
+        let (t, clock) = traced();
+        for _ in 0..2 {
+            let s = t.begin(SpanKind::Stage, || "narrow#4".into(), None);
+            let _g = t.scope(s);
+            t.charge(s, Stat::RowsRead, 50);
+            clock.advance(0.25);
+        }
+        let other = t.begin(SpanKind::Task, || "task".into(), None);
+        t.end(other);
+        let rollup = t.stage_rollup();
+        assert_eq!(rollup.len(), 1, "task spans excluded");
+        assert_eq!(rollup[0].name, "narrow#4");
+        assert_eq!(rollup[0].spans, 2);
+        assert_eq!(rollup[0].counters.stats.rows_read, 100);
+        assert!((rollup[0].wall_secs - 0.5).abs() < 1e-9);
+    }
+}

@@ -3,6 +3,8 @@
 //! ```text
 //! ddp run        --config pipeline.json [--input id=loc:format ...] [--workers N]
 //!                [--max-concurrent N]   # stage-parallel scheduler width (1 = serial)
+//!                [--trace-out trace.json]  # span tracing → Chrome trace + profile
+//!                                          # (implies DDP_TRACE=1 for this run)
 //! ddp validate   --config pipeline.json
 //! ddp visualize  --config pipeline.json [--out graph.dot]
 //! ddp pipes                             # list the pipe repository (§3.8)
@@ -164,11 +166,14 @@ fn cmd_run(args: &Args) -> i32 {
         }
     }
 
+    // --trace-out turns tracing on even without DDP_TRACE=1 in the env
+    let mut engine_cfg = EngineConfig { workers, ..Default::default() };
+    engine_cfg.trace |= args.opt("trace-out").is_some();
     let driver = match PipelineDriver::new(
         spec,
         registry::GLOBAL.clone(),
         io,
-        DriverConfig { engine: EngineConfig { workers, ..Default::default() }, ..Default::default() },
+        DriverConfig { engine: engine_cfg, ..Default::default() },
     ) {
         Ok(d) => d,
         Err(e) => {
@@ -185,6 +190,19 @@ fn cmd_run(args: &Args) -> i32 {
             if let Some(out) = args.opt("dot") {
                 let _ = std::fs::write(out, &report.dot);
                 println!("workflow DOT: {out}");
+            }
+            let engine = &driver.ctx.engine;
+            if engine.tracer.enabled() {
+                if let Some(path) = args.opt("trace-out") {
+                    match engine.write_chrome_trace(path) {
+                        Ok(()) => println!("chrome trace: {path}"),
+                        Err(e) => {
+                            eprintln!("trace export {path}: {e}");
+                            return 1;
+                        }
+                    }
+                }
+                println!("{}", engine.profile_report(10));
             }
             0
         }

@@ -38,6 +38,7 @@ impl EngineMetricsExporter {
         m.counter_add("engine.tasks_retried", d.tasks_retried);
         m.counter_add("engine.stages_run", d.stages_run);
         m.counter_add("engine.rows_read", d.rows_read);
+        m.counter_add("engine.rows_written", d.rows_written);
         m.counter_add("engine.shuffle_bytes", d.shuffle_bytes);
         m.counter_add("engine.shuffle_records", d.shuffle_records);
         m.counter_add("engine.cache_hits", d.cache_hits);
@@ -55,6 +56,24 @@ impl EngineMetricsExporter {
             "engine.memory.reserved_bytes",
             engine.governor.reserved_bytes() as f64,
         );
+
+        // per-stage attribution gauges from the tracer; the rollup is
+        // empty when tracing is disabled, so this is a no-op by default
+        for st in engine.tracer.stage_rollup() {
+            m.gauge_set(&format!("engine.stage.{}.seconds", st.name), st.wall_secs);
+            m.gauge_set(
+                &format!("engine.stage.{}.task_seconds", st.name),
+                st.counters.stats.task_nanos as f64 / 1e9,
+            );
+            m.gauge_set(
+                &format!("engine.stage.{}.rows_read", st.name),
+                st.counters.stats.rows_read as f64,
+            );
+            m.gauge_set(
+                &format!("engine.stage.{}.spill_bytes", st.name),
+                st.counters.stats.spill_bytes as f64,
+            );
+        }
 
         // cache-manager counters (entry-level hits + byte-budget
         // evictions) and residency gauges

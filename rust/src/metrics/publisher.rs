@@ -108,6 +108,19 @@ impl MetricsPublisher {
         let handle = thread::Builder::new()
             .name("ddp-metrics-publisher".into())
             .spawn(move || {
+                // a sink panic (broken pipe, poisoned lock, bad
+                // serializer) must not kill the cadence loop or skip the
+                // final flush — drop that one snapshot and keep going
+                let safe_publish = || {
+                    let snap = registry.snapshot();
+                    let ts = clock.now();
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        sink.publish(&snap, ts)
+                    }));
+                    if r.is_err() {
+                        log::warn!("metrics sink panicked; snapshot at {ts:.1}s dropped");
+                    }
+                };
                 // poll in small slices so stop() is responsive even with a
                 // 30 s cadence
                 let slice = Duration::from_millis(5).min(cfg.cadence);
@@ -120,11 +133,11 @@ impl MetricsPublisher {
                     elapsed += slice;
                     if elapsed >= cfg.cadence {
                         elapsed = Duration::ZERO;
-                        sink.publish(&registry.snapshot(), clock.now());
+                        safe_publish();
                     }
                 }
                 // final flush so short-lived runs still publish
-                sink.publish(&registry.snapshot(), clock.now());
+                safe_publish();
             })
             .expect("spawn metrics publisher");
         MetricsPublisher { stop, handle: Some(handle) }
@@ -186,6 +199,73 @@ mod tests {
         let text = String::from_utf8(blob).unwrap();
         assert_eq!(text.lines().count(), 2);
         assert!(text.contains("\"a\":2"));
+    }
+
+    #[test]
+    fn timestamps_come_from_the_injected_clock() {
+        let vclock = clock::virt();
+        vclock.set(123.5);
+        let reg = MetricsRegistry::new();
+        let sink = MemorySink::new();
+        let cref: ClockRef = vclock.clone();
+        let pubr = MetricsPublisher::start(
+            reg,
+            sink.clone(),
+            cref,
+            PublisherConfig { cadence: Duration::from_secs(3600) },
+        );
+        pubr.stop();
+        let published = sink.published.lock().unwrap();
+        assert_eq!(published.len(), 1, "huge cadence → only the final flush");
+        assert_eq!(published[0].0, 123.5, "timestamp read from the virtual clock");
+    }
+
+    #[test]
+    fn drop_flushes_exactly_once_with_huge_cadence() {
+        let reg = MetricsRegistry::new();
+        let sink = MemorySink::new();
+        reg.counter_add("x", 7);
+        {
+            let _p = MetricsPublisher::start(
+                reg,
+                sink.clone(),
+                clock::wall(),
+                PublisherConfig { cadence: Duration::from_secs(3600) },
+            );
+        } // drop → shutdown → final flush
+        let published = sink.published.lock().unwrap();
+        assert_eq!(published.len(), 1, "one final snapshot, no duplicates");
+        assert_eq!(*published[0].1.counters.get("x").unwrap(), 7);
+    }
+
+    #[test]
+    fn panicking_sink_does_not_kill_the_publisher() {
+        use std::sync::atomic::AtomicU64;
+
+        struct PanicSink {
+            attempts: AtomicU64,
+        }
+        impl Sink for PanicSink {
+            fn publish(&self, _s: &MetricsSnapshot, _ts: f64) {
+                self.attempts.fetch_add(1, Ordering::SeqCst);
+                panic!("sink unavailable");
+            }
+        }
+
+        let sink = Arc::new(PanicSink { attempts: AtomicU64::new(0) });
+        let reg = MetricsRegistry::new();
+        let pubr = MetricsPublisher::start(
+            reg,
+            sink.clone(),
+            clock::wall(),
+            PublisherConfig { cadence: Duration::from_millis(10) },
+        );
+        thread::sleep(Duration::from_millis(40));
+        // stop() joins the thread: it must still be alive despite every
+        // publish having panicked, and the final flush is still attempted
+        pubr.stop();
+        let n = sink.attempts.load(Ordering::SeqCst);
+        assert!(n >= 2, "cadence publishes plus the final flush, got {n}");
     }
 
     #[test]

@@ -92,8 +92,10 @@ impl Histogram {
             min: if s.count > 0 { s.min } else { 0.0 },
             max: if s.count > 0 { s.max } else { 0.0 },
             p50: q(0.50),
+            p90: q(0.90),
             p95: q(0.95),
             p99: q(0.99),
+            p999: q(0.999),
         }
     }
 }
@@ -108,8 +110,26 @@ pub struct HistogramSummary {
     pub min: f64,
     pub max: f64,
     pub p50: f64,
+    pub p90: f64,
     pub p95: f64,
     pub p99: f64,
+    pub p999: f64,
+}
+
+impl HistogramSummary {
+    /// Count-weighted mean across several summaries — the mean of the
+    /// union stream, not the mean of the means. A plain average would let
+    /// a 2-sample histogram pull as hard as a 2-million-sample one when
+    /// rolling per-pipe latencies up to a service-level figure. Summaries
+    /// with `count == 0` contribute nothing; returns 0.0 when every part
+    /// is empty.
+    pub fn weighted_mean(parts: &[HistogramSummary]) -> f64 {
+        let total: u64 = parts.iter().map(|h| h.count).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        parts.iter().map(|h| h.mean * h.count as f64).sum::<f64>() / total as f64
+    }
 }
 
 /// The registry pipes write into. Cloneable handle (`Arc` inside).
@@ -277,8 +297,10 @@ impl MetricsSnapshot {
                         ("min", Value::Num(h.min)),
                         ("max", Value::Num(h.max)),
                         ("p50", Value::Num(h.p50)),
+                        ("p90", Value::Num(h.p90)),
                         ("p95", Value::Num(h.p95)),
                         ("p99", Value::Num(h.p99)),
+                        ("p999", Value::Num(h.p999)),
                     ]),
                 )
             })
@@ -316,6 +338,50 @@ mod tests {
         assert!((h.p95 - 95.0).abs() <= 1.0);
         assert_eq!(h.min, 1.0);
         assert_eq!(h.max, 100.0);
+    }
+
+    #[test]
+    fn tail_quantiles_exact_below_reservoir_capacity() {
+        // 1000 samples fit in the 4096-slot reservoir, so every quantile
+        // is exact: idx = round((len-1) * p) over the sorted values
+        // 1.0..=1000.0 gives round(999*0.9)=899 → 900.0 and
+        // round(999*0.999)=998 → 999.0.
+        let m = MetricsRegistry::new();
+        for i in 1..=1000 {
+            m.observe("lat", i as f64);
+        }
+        let h = m.histogram("lat").unwrap();
+        assert_eq!(h.p90, 900.0);
+        assert_eq!(h.p99, 990.0);
+        assert_eq!(h.p999, 999.0);
+        assert_eq!(h.max, 1000.0);
+    }
+
+    #[test]
+    fn weighted_mean_weighs_by_count() {
+        let m = MetricsRegistry::new();
+        m.observe("a", 10.0);
+        for _ in 0..3 {
+            m.observe("b", 20.0);
+        }
+        let a = m.histogram("a").unwrap();
+        let b = m.histogram("b").unwrap();
+        // union stream is {10, 20, 20, 20} → 17.5, not mean-of-means 15
+        assert!((HistogramSummary::weighted_mean(&[a, b]) - 17.5).abs() < 1e-9);
+        assert_eq!(HistogramSummary::weighted_mean(&[]), 0.0);
+        let empty = HistogramSummary {
+            count: 0,
+            nonfinite: 0,
+            mean: 0.0,
+            min: 0.0,
+            max: 0.0,
+            p50: 0.0,
+            p90: 0.0,
+            p95: 0.0,
+            p99: 0.0,
+            p999: 0.0,
+        };
+        assert!((HistogramSummary::weighted_mean(&[a, empty]) - 10.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! Span-tracing integration suite — the observability acceptance gates:
+//!
+//! * **span-sum invariant** — with tracing on, every global
+//!   [`ddp::engine::StatsSnapshot`] counter equals the sum of the
+//!   span-local counters plus the orphan bucket, across narrow chains,
+//!   column-keyed reduce, distinct, join, external sort, repartition,
+//!   a spilling memory budget, streaming micro-batches, and a full
+//!   `PipelineDriver` run;
+//! * **attribution** — spill bytes land on stage spans, governor
+//!   refusals land on the task spans whose work was refused, and the
+//!   tracer's refusal total reconciles with the governor's own count;
+//! * **Chrome export** — the trace-event JSON parses back through
+//!   `ddp::json`, with one complete event per span and cumulative
+//!   counter tracks;
+//! * **zero observer effect** — tracing on vs off produces byte-identical
+//!   results and identical deterministic counters;
+//! * **inert when disabled** — no spans, no totals, empty export.
+
+use ddp::config::PipelineSpec;
+use ddp::ddp::{registry, DriverConfig, PipelineDriver};
+use ddp::engine::row::{Field, FieldType, Row, Schema};
+use ddp::engine::{Dataset, EngineConfig, EngineCtx, JoinKind, Partitioned, SpanKind, Stat};
+use ddp::io::IoRegistry;
+use ddp::row;
+use std::cmp::Ordering;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+fn cfg(trace: bool) -> EngineConfig {
+    EngineConfig { workers: 2, trace, ..Default::default() }
+}
+
+fn layout(p: &Partitioned) -> Vec<Vec<Row>> {
+    p.parts.iter().map(|part| (**part).clone()).collect()
+}
+
+fn kv_schema() -> ddp::engine::SchemaRef {
+    Schema::new(vec![("k", FieldType::I64), ("v", FieldType::I64)])
+}
+
+fn kv_source(name: &str, n: i64, parts: usize) -> Dataset {
+    let rows: Vec<Row> = (0..n).map(|i| row!(i % 13, i)).collect();
+    Dataset::from_rows(name, kv_schema(), rows, parts)
+}
+
+/// Key-preserving sum of column 1 (keeps the key in column 0).
+fn sum_v(acc: Row, r: &Row) -> Row {
+    let a = acc.get(1).as_i64().unwrap_or(0);
+    let b = r.get(1).as_i64().unwrap_or(0);
+    Row::new(vec![acc.get(0).clone(), Field::I64(a + b)])
+}
+
+fn by_kv(a: &Row, b: &Row) -> Ordering {
+    let ka = a.get(0).as_i64().unwrap_or(0);
+    let kb = b.get(0).as_i64().unwrap_or(0);
+    ka.cmp(&kb)
+        .then(a.get(1).as_i64().unwrap_or(0).cmp(&b.get(1).as_i64().unwrap_or(0)))
+}
+
+/// Drive every operator family (narrow chain, column-keyed reduce,
+/// distinct, join, external sort, repartition) through one context and
+/// return the collected layouts for identity comparison.
+fn run_workload(c: &EngineCtx) -> Vec<Vec<Vec<Row>>> {
+    let ds = kv_source("t", 300, 4);
+    let dim = kv_source("dim", 13, 2);
+    let plans = [
+        ds.filter(|r| r.get(1).as_i64().unwrap_or(0) % 7 != 0).reduce_by_key_col(3, 0, sum_v),
+        ds.project(vec![0]).distinct(3),
+        ds.join_on(&dim, Schema::of_names(&["k", "v", "k2", "w"]), JoinKind::Inner, 3, 0, 0),
+        ds.sort_by(by_kv),
+        ds.repartition(5),
+    ];
+    plans.iter().map(|p| layout(&c.collect(p).unwrap())).collect()
+}
+
+/// The tentpole invariant: global counters = sum of span-local counters
+/// plus the orphan bucket, field for field.
+fn assert_span_sum_invariant(c: &EngineCtx) {
+    let totals = c.tracer.totals();
+    let snap = c.stats.snapshot();
+    for s in Stat::ALL {
+        assert_eq!(
+            totals.stats.get(s),
+            snap.get(s),
+            "span-local {} must sum to the global counter",
+            s.name()
+        );
+    }
+}
+
+#[test]
+fn per_span_counters_sum_to_the_global_snapshot() {
+    let c = EngineCtx::new(cfg(true));
+    run_workload(&c);
+    assert_span_sum_invariant(&c);
+
+    let spans = c.tracer.spans();
+    assert!(spans.iter().any(|s| s.kind == SpanKind::Stage), "stage spans recorded");
+    assert!(spans.iter().any(|s| s.kind == SpanKind::Task), "task spans recorded");
+    assert!(spans.iter().all(|s| !s.open), "every scope closed when collect returned");
+    for (i, s) in spans.iter().enumerate() {
+        assert_eq!(s.id, i as u64 + 1, "ids are 1-based creation order");
+        assert!((s.parent as usize) <= spans.len(), "parents resolve");
+    }
+    // tasks nest under the stage that launched them
+    for s in spans.iter().filter(|s| s.kind == SpanKind::Task) {
+        assert_ne!(s.parent, 0, "task spans are never roots");
+        assert_eq!(spans[s.parent as usize - 1].kind, SpanKind::Stage);
+    }
+    // the work itself is attributed, not orphaned: stages carry the
+    // stage charges, tasks carry the per-task charges
+    let orphan = c.tracer.orphan_counters();
+    assert_eq!(orphan.stats.stages_run, 0, "stages_run charged under stage scopes");
+    assert_eq!(orphan.stats.tasks_launched, 0, "task results charged to task spans");
+    assert!(
+        spans
+            .iter()
+            .filter(|s| s.kind == SpanKind::Task)
+            .all(|s| s.counters.stats.tasks_launched == 1),
+        "exactly one launch per task span without fault injection"
+    );
+}
+
+#[test]
+fn spilling_budget_attributes_to_spans_and_reconciles_with_the_governor() {
+    let c = EngineCtx::new(EngineConfig { memory_budget_bytes: Some(512), ..cfg(true) });
+    let pad = "x".repeat(300);
+    let schema = Schema::new(vec![
+        ("k", FieldType::I64),
+        ("v", FieldType::I64),
+        ("pad", FieldType::Str),
+    ]);
+    let rows: Vec<Row> = (0..200i64).map(|i| row!(i % 13, i, pad.clone())).collect();
+    let ds = Dataset::from_rows("sp", schema, rows, 4);
+    c.collect(&ds.repartition(3)).unwrap();
+    c.collect(&ds.sort_by(by_kv)).unwrap();
+
+    let snap = c.stats.snapshot();
+    assert!(snap.spill_bytes > 0, "a 512-byte budget must spill");
+    assert!(snap.sort_spill_bytes > 0, "sort runs must spill too");
+    assert_span_sum_invariant(&c);
+
+    let totals = c.tracer.totals();
+    assert_eq!(
+        totals.mem_refusals,
+        c.governor.refusals(),
+        "every governor refusal is observed by exactly one span (or the orphan bucket)"
+    );
+    assert!(totals.mem_refusals > 0);
+    // refusals strike inside task bodies (bucket/run builds on worker
+    // threads), so they land on task spans; the stage-side shuffle
+    // accounting keeps spill bytes on stage spans, never orphaned
+    let spans = c.tracer.spans();
+    assert!(
+        spans.iter().any(|s| s.kind == SpanKind::Task && s.counters.mem_refusals > 0),
+        "refusals attribute to the refused task's span"
+    );
+    assert_eq!(c.tracer.orphan_counters().stats.spill_bytes, 0);
+    assert!(
+        c.tracer.stage_rollup().iter().any(|a| a.counters.stats.spill_bytes > 0),
+        "spill bytes roll up under a named stage"
+    );
+}
+
+#[test]
+fn chrome_trace_export_round_trips_through_json() {
+    let c = EngineCtx::new(cfg(true));
+    run_workload(&c);
+    let path = std::env::temp_dir().join(format!("ddp_trace_chrome_{}.json", std::process::id()));
+    c.write_chrome_trace(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    let doc = ddp::json::parse(&text).expect("chrome export must be valid JSON");
+    assert_eq!(doc.get("displayTimeUnit").and_then(|v| v.as_str()), Some("ms"));
+    let events = doc.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+    let spans = c.tracer.spans();
+    let complete = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+        .count();
+    assert_eq!(complete, spans.len(), "one complete event per span");
+    for s in &spans {
+        assert!(
+            events
+                .iter()
+                .any(|e| e.get("name").and_then(|n| n.as_str()) == Some(s.name.as_str())),
+            "span '{}' exported",
+            s.name
+        );
+    }
+    assert!(
+        events.iter().any(|e| e.get("ph").and_then(|p| p.as_str()) == Some("C")),
+        "cumulative counter track emitted at stage ends"
+    );
+}
+
+#[test]
+fn tracing_changes_no_results_and_no_deterministic_counters() {
+    let on = EngineCtx::new(cfg(true));
+    let off = EngineCtx::new(cfg(false));
+    let a = run_workload(&on);
+    let b = run_workload(&off);
+    assert_eq!(a, b, "tracing must not change any collected layout");
+    let (sa, sb) = (on.stats.snapshot(), off.stats.snapshot());
+    for s in Stat::ALL {
+        if matches!(s, Stat::TaskNanos) {
+            continue; // wall-clock, legitimately differs between runs
+        }
+        assert_eq!(sa.get(s), sb.get(s), "counter {} must not depend on tracing", s.name());
+    }
+}
+
+#[test]
+fn streaming_micro_batches_trace_and_keep_the_invariant() {
+    use ddp::engine::stream::StreamingCtx;
+    let engine = EngineCtx::new(cfg(true));
+    let src = Dataset::from_rows("src", kv_schema(), Vec::new(), 1);
+    let plan = src
+        .filter(|r| r.get(1).as_i64().unwrap_or(0) % 5 != 0)
+        .reduce_by_key_col(2, 0, sum_v);
+    let mut sc = StreamingCtx::new(engine, &plan, &src).unwrap();
+    let rows: Vec<Row> = (0..120i64).map(|i| row!(i % 7, i)).collect();
+    for chunk in rows.chunks(30) {
+        sc.push_batch(chunk).unwrap();
+    }
+    sc.finish().unwrap();
+
+    let spans = sc.engine.tracer.spans();
+    let micro: Vec<_> = spans.iter().filter(|s| s.kind == SpanKind::MicroBatch).collect();
+    assert_eq!(micro.len(), 5, "four pushes plus the drain");
+    assert!(micro.iter().any(|s| s.name == "micro_batch#1"));
+    assert!(micro.iter().any(|s| s.name == "drain"));
+    // the engine stages each push runs nest under that push's span
+    assert!(
+        spans.iter().any(|s| {
+            s.kind == SpanKind::Stage
+                && s.parent != 0
+                && spans[s.parent as usize - 1].kind == SpanKind::MicroBatch
+        }),
+        "per-batch prefix stages parent to their micro-batch span"
+    );
+    assert_span_sum_invariant(&sc.engine);
+}
+
+#[test]
+fn pipeline_driver_opens_run_and_pipe_spans() {
+    const PIPELINE: &str = r#"{
+      "name": "trace_pipe",
+      "settings": {"workers": 2},
+      "data": [
+        {"id": "Records", "schema": [
+          {"name": "name", "type": "str"},
+          {"name": "value", "type": "f64"}]}
+      ],
+      "pipes": [
+        {"inputDataId": "Records", "transformerType": "SqlFilterTransformer",
+         "outputDataId": "Valid", "params": {"filter": "length(name) >= 3"}}
+      ]
+    }"#;
+    let spec = PipelineSpec::parse(PIPELINE).unwrap();
+    let driver = PipelineDriver::new(
+        spec,
+        registry::GLOBAL.clone(),
+        Arc::new(IoRegistry::with_sim_cloud()),
+        DriverConfig { engine: cfg(true), ..Default::default() },
+    )
+    .unwrap();
+    let schema = Schema::new(vec![("name", FieldType::Str), ("value", FieldType::F64)]);
+    let rows: Vec<Row> = (0..40i64).map(|i| row!(format!("user{i}"), i as f64)).collect();
+    let mut provided = BTreeMap::new();
+    provided.insert("Records".to_string(), Dataset::from_rows("Records", schema, rows, 3));
+    driver.run(provided).unwrap();
+
+    let engine = &driver.ctx.engine;
+    let spans = engine.tracer.spans();
+    let run = spans
+        .iter()
+        .find(|s| s.kind == SpanKind::Run)
+        .expect("PipelineDriver::run opens a run span");
+    assert_eq!(run.name, "run:trace_pipe");
+    assert!(!run.open, "run scope closed when run() returned");
+    let pipes: Vec<_> = spans.iter().filter(|s| s.kind == SpanKind::Pipe).collect();
+    assert!(!pipes.is_empty(), "each pipe execution opens a span");
+    for p in &pipes {
+        assert_eq!(p.parent, run.id, "pipes nest under the run");
+        assert!(p.name.starts_with("pipe:"), "got '{}'", p.name);
+        assert!(!p.open);
+    }
+    assert_span_sum_invariant(engine);
+    // the profile report names the hierarchy and stays deterministic
+    let r1 = engine.profile_report(10);
+    assert_eq!(r1, engine.profile_report(10));
+    assert!(r1.contains("1 run"), "report counts span kinds:\n{r1}");
+    assert!(r1.contains("critical path:"));
+}
+
+#[test]
+fn disabled_tracer_is_inert() {
+    let c = EngineCtx::new(cfg(false));
+    run_workload(&c);
+    assert!(!c.tracer.enabled());
+    assert!(c.tracer.spans().is_empty(), "no spans recorded when disabled");
+    let totals = c.tracer.totals();
+    for s in Stat::ALL {
+        assert_eq!(totals.stats.get(s), 0, "no span-local charges when disabled");
+    }
+    assert_eq!(totals.mem_refusals, 0);
+    // consumers still work, reporting emptiness rather than failing
+    assert!(c.profile_report(5).contains("spans: 0"));
+    let doc = c.tracer.chrome_trace_json();
+    let events = doc.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(events.len(), 1, "only the process-name metadata event remains");
+}
