@@ -15,7 +15,8 @@ use ddp::config::PipelineSpec;
 use ddp::corpus::web::{CorpusGen, LangProfiles};
 use ddp::ddp::{DriverConfig, Pipe, PipeContext, PipeRegistry, PipelineDriver};
 use ddp::engine::cluster::{simulate, ClusterConfig, StageSpec};
-use ddp::engine::row::{FieldType, Schema};
+use ddp::engine::expr::{BinOp, Expr};
+use ddp::engine::row::{Field, FieldType, Schema};
 use ddp::engine::{Dataset, EngineConfig, EngineCtx};
 use ddp::io::IoRegistry;
 use ddp::ml::embedded::LangDetector;
@@ -512,6 +513,68 @@ fn bench_trace_overhead(args: &Args, rec: &mut JsonRecorder) {
     rec.case("trace/on", on, &[("spans", spans as f64)]);
 }
 
+/// Static-analysis cost pin: `analyze()` walks the plan DAG, never the
+/// data, so its cost must track plan size and stay flat as the source
+/// row count grows 100x. Best-of-20 timings with a generous absolute
+/// ceiling so the assert pins "analysis stays off the hot path" without
+/// becoming a flaky microbenchmark.
+fn bench_analyze_cost(args: &Args, rec: &mut JsonRecorder) {
+    let smoke = args.has_flag("smoke");
+    let depth = args.opt_usize("analyze-depth", 64);
+    let schema = Schema::new(vec![("k", FieldType::I64), ("v", FieldType::I64)]);
+    let build = |rows_n: i64| -> Dataset {
+        let data: Vec<ddp::engine::Row> = (0..rows_n).map(|i| row!(i % 97, i)).collect();
+        let mut ds = Dataset::from_rows("a", schema.clone(), data, 4);
+        for d in 0..depth {
+            ds = ds.filter_expr(Expr::Binary(
+                BinOp::Ge,
+                Box::new(Expr::Col(1, "v".into())),
+                Box::new(Expr::Lit(Field::I64(d as i64 - 1_000))),
+            ));
+        }
+        ds
+    };
+    let time_analyze = |ds: &Dataset| -> (f64, usize) {
+        let mut best = f64::INFINITY;
+        let mut nodes = 0;
+        for _ in 0..20 {
+            let t0 = std::time::Instant::now();
+            let a = ddp::engine::analyze::analyze(ds);
+            best = best.min(t0.elapsed().as_secs_f64());
+            assert!(a.is_clean(), "generated chain must analyze clean");
+            nodes = a.node_count;
+        }
+        (best, nodes)
+    };
+    let small_rows: i64 = if smoke { 1_000 } else { 10_000 };
+    let large_rows: i64 = small_rows * 100;
+    let small = build(small_rows);
+    let large = build(large_rows);
+    let (t_small, nodes) = time_analyze(&small);
+    let (t_large, _) = time_analyze(&large);
+    // plan traversal is microseconds; 50 ms is orders of magnitude of
+    // headroom for a loaded CI runner
+    assert!(
+        t_large < 0.05,
+        "analyzing a {nodes}-node plan took {t_large:.4}s — analysis is on the hot path"
+    );
+    // 100x more rows, same plan: cost must not scale with data volume
+    assert!(
+        t_large <= t_small * 5.0 + 0.01,
+        "analyze cost grew with row count: {t_small:.5}s @ {small_rows} rows vs \
+         {t_large:.5}s @ {large_rows} rows"
+    );
+    let mut t = Table::new(
+        "Static plan analysis — cost vs plan size, invariant to data size (best of 20)",
+        &["source rows", "plan nodes", "analyze wall clock"],
+    );
+    t.row(&[small_rows.to_string(), nodes.to_string(), fmt_duration(t_small)]);
+    t.row(&[large_rows.to_string(), nodes.to_string(), fmt_duration(t_large)]);
+    t.save("fig5_analyze_cost");
+    rec.case("analyze/small", t_small, &[("nodes", nodes as f64)]);
+    rec.case("analyze/large", t_large, &[("nodes", nodes as f64)]);
+}
+
 fn main() {
     ddp::util::logger::init();
     let args = Args::from_env();
@@ -536,6 +599,9 @@ fn main() {
 
     // span-tracing overhead pin (≤5% wall clock): real execution
     bench_trace_overhead(&args, &mut rec);
+
+    // static-analysis cost pin: plan-size-proportional, data-size-flat
+    bench_analyze_cost(&args, &mut rec);
 
     if args.has_flag("smoke") {
         // CI smoke: the spill/sort probes above asserted byte-identity

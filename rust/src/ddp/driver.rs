@@ -40,8 +40,10 @@ use super::lifecycle::AnchorRefCounts;
 use super::registry::PipeRegistry;
 use super::viz::{self, VizOptions};
 use crate::config::{DataLocation, PipelineSpec};
+use crate::engine::analyze;
 use crate::engine::dataset::Dataset;
 use crate::engine::executor::{EngineConfig, EngineCtx};
+use crate::engine::stats::Stat;
 use crate::io::IoRegistry;
 use crate::metrics::{
     EngineMetricsExporter, MetricsPublisher, MetricsRegistry, PublisherConfig, Sink,
@@ -478,7 +480,10 @@ impl RunState {
         let pipe = self.registry.create(&decl.transformer_type, &decl.params)?;
 
         // contract validation (§3.8): arity, then declared-schema
-        // compatibility between the anchor and the pipe's contract
+        // compatibility between the anchor and the pipe's contract — the
+        // column checks are analyzer diagnostics (E008 missing column,
+        // E009 type conflict) whose messages are the long-standing error
+        // contract, pinned under test
         let contract = pipe.contract();
         if let Some(arity) = contract.arity {
             if arity != decl.input_data_ids.len() {
@@ -497,29 +502,10 @@ impl RunState {
             if !have.schema_declared {
                 continue; // undeclared anchors are schema-agnostic
             }
-            for wi in 0..want.len() {
-                let (wname, wty) = want.field(wi);
-                match have.schema.idx(wname) {
-                    None => {
-                        return Err(DdpError::validation(format!(
-                            "pipe '{}' requires column '{wname}' on input '{input_id}', which declares only [{}]",
-                            decl.name,
-                            have.schema.names().join(", ")
-                        )));
-                    }
-                    Some(hi) => {
-                        let hty = have.schema.field_type(hi);
-                        use crate::engine::row::FieldType;
-                        if wty != FieldType::Any && hty != FieldType::Any && wty != hty {
-                            return Err(DdpError::validation(format!(
-                                "pipe '{}' needs '{wname}: {}' on '{input_id}', declared as {}",
-                                decl.name,
-                                wty.name(),
-                                hty.name()
-                            )));
-                        }
-                    }
-                }
+            let diags = analyze::check_contract(&decl.name, want, input_id, &have.schema);
+            if let Some(first) = diags.first() {
+                self.ctx.engine.charge(Stat::AnalyzerErrors, diags.len() as u64);
+                return Err(DdpError::validation(first.message.clone()));
             }
         }
 
@@ -552,6 +538,39 @@ impl RunState {
                     decl.output_data_ids.len()
                 ),
             ));
+        }
+
+        // validate-then-execute: statically analyze every output plan
+        // before any task runs. Transforms only build lazy lineage, so
+        // rejecting here guarantees a broken plan never launches a task.
+        // Cost is proportional to plan size (memoized node walk), never
+        // to data size; `analyze: false` skips the walk entirely.
+        if self.ctx.engine.cfg.analyze {
+            let cache = &self.ctx.engine.cache;
+            for ds in &outputs {
+                let analysis = analyze::analyze_with_lints(ds, &|id| cache.is_registered(id));
+                let (errs, warns, notes) = (
+                    analysis.count(analyze::Severity::Error) as u64,
+                    analysis.count(analyze::Severity::Warning) as u64,
+                    analysis.count(analyze::Severity::Note) as u64,
+                );
+                if errs > 0 {
+                    self.ctx.engine.charge(Stat::AnalyzerErrors, errs);
+                }
+                if warns > 0 {
+                    self.ctx.engine.charge(Stat::AnalyzerWarnings, warns);
+                }
+                if notes > 0 {
+                    self.ctx.engine.charge(Stat::AnalyzerNotes, notes);
+                }
+                if errs > 0 {
+                    return Err(DdpError::validation(format!(
+                        "pipe '{}' produced an invalid plan:\n  {}",
+                        decl.name,
+                        analysis.error_summary()
+                    )));
+                }
+            }
         }
 
         // bind outputs to anchors; apply declared state management

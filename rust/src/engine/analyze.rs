@@ -1,0 +1,1014 @@
+//! Static plan analyzer: schema/type inference, expression checking and
+//! an optimizer invariant guard — the *validate-then-execute* layer.
+//!
+//! [`analyze`] walks a [`Plan`] DAG once (memoized over shared subtrees,
+//! so cost is proportional to plan size, never data size) and:
+//!
+//! 1. infers a per-column [`ColType`] (the Bool/I64/F64/Str/Bytes/Any
+//!    lattice plus nullability) for every node — trusting the declared
+//!    [`SchemaRef`](super::row::SchemaRef) at opaque closures
+//!    (`Map`/`FlatMap`/`MapPartitions`)
+//!    and computing exactly through the structured operators;
+//! 2. type-checks every [`Expr`] against its inferred input schema —
+//!    column indices in range, operand type compatibility, function
+//!    arity — producing structured [`Diagnostic`]s instead of runtime
+//!    panics;
+//! 3. optionally runs the rule-based [`lint`] framework over the
+//!    analyzed DAG (dead columns, single-consumer persists, pushdown
+//!    blockers, vectorization-fallback predictions).
+//!
+//! The same inference doubles as the **optimizer invariant guard**
+//! ([`assert_rewrite_preserves_schema`]): after every rewrite rule fires
+//! the optimizer re-infers the pre/post plan and panics on any schema
+//! drift, turning every differential suite into a machine-checked proof
+//! that rewrites are schema-preserving. The guard is on in debug builds
+//! and whenever `DDP_ANALYZE=1` (see [`guard_enabled`]).
+//!
+//! ## Diagnostic codes
+//!
+//! | code | severity | meaning |
+//! |------|----------|---------|
+//! | E001 | error    | column index out of range (expr / project / key) |
+//! | E002 | error    | function arity mismatch |
+//! | E003 | error    | comparison between incompatible types (always false) |
+//! | E004 | error    | arithmetic / negation on a non-numeric type (always null) |
+//! | E005 | error    | join key columns have mismatched types (never hash-match) |
+//! | E006 | error    | union inputs disagree on column count |
+//! | E007 | error    | join declares a schema narrower/wider than left+right |
+//! | E008 | error    | pipe contract: required column missing on an input (§3.8) |
+//! | E009 | error    | pipe contract: column declared with a conflicting type |
+//! | W101 | warning  | duplicate column names in a schema |
+//! | W102 | warning  | ordered comparison with a null literal (always false) |
+//! | W103 | warning  | persisted dataset with a single consumer |
+//! | W104 | warning  | columns never referenced downstream (suggest projection) |
+//! | W105 | warning  | union column mixes concrete types (degrades to `any`) |
+//! | W106 | warning  | non-string argument to a string function (always null) |
+//! | N201 | note     | opaque closure blocks predicate pushdown |
+//! | N202 | note     | vectorized segment may fall back row-wise (`any` columns) |
+
+pub mod lint;
+
+use super::dataset::{Dataset, JoinKind, Plan};
+use super::expr::{BinOp, Expr, Func, UnOp};
+use super::row::{Field, FieldType, Schema};
+use crate::json::Value;
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::Arc;
+use std::sync::OnceLock;
+
+// ----------------------------- diagnostics ---------------------------
+
+/// Diagnostic severity; only `Error` aborts execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Error,
+    Warning,
+    Note,
+}
+
+impl Severity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+            Severity::Note => "note",
+        }
+    }
+}
+
+/// One analyzer finding: a stable code, a severity, the plan-node path
+/// it anchors to (`join/left/filter_expr`) and a human message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub code: &'static str,
+    pub severity: Severity,
+    pub path: String,
+    pub message: String,
+}
+
+impl Diagnostic {
+    fn new(code: &'static str, severity: Severity, path: &str, message: String) -> Diagnostic {
+        Diagnostic { code, severity, path: path.to_string(), message }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("code", Value::from(self.code)),
+            ("severity", Value::from(self.severity.name())),
+            ("path", Value::from(self.path.as_str())),
+            ("message", Value::from(self.message.as_str())),
+        ])
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}[{}] at {}: {}",
+            self.severity.name(),
+            self.code,
+            self.path,
+            self.message
+        )
+    }
+}
+
+// ------------------------------ lattice ------------------------------
+
+/// A column's inferred type: the base [`FieldType`] lattice point plus
+/// nullability. `Any` is the lattice top (unknown / mixed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ColType {
+    pub base: FieldType,
+    pub nullable: bool,
+}
+
+impl ColType {
+    pub fn new(base: FieldType, nullable: bool) -> ColType {
+        ColType { base, nullable }
+    }
+
+    /// Lattice top: anything, possibly null.
+    pub fn any() -> ColType {
+        ColType { base: FieldType::Any, nullable: true }
+    }
+
+    /// From a declared schema column. Declared types admit `Null`
+    /// (`Schema::validate_row` lets nulls pass), so declared columns are
+    /// conservatively nullable.
+    pub fn declared(base: FieldType) -> ColType {
+        ColType { base, nullable: true }
+    }
+
+    /// The type of a literal value.
+    pub fn of_field(f: &Field) -> ColType {
+        match f {
+            Field::Null => ColType::any(),
+            Field::Bool(_) => ColType::new(FieldType::Bool, false),
+            Field::I64(_) => ColType::new(FieldType::I64, false),
+            Field::F64(_) => ColType::new(FieldType::F64, false),
+            Field::Str(_) => ColType::new(FieldType::Str, false),
+            Field::Bytes(_) => ColType::new(FieldType::Bytes, false),
+        }
+    }
+
+    /// Least upper bound: equal bases keep the base, anything else
+    /// degrades to `Any`; nullability unions.
+    pub fn lub(&self, other: &ColType) -> ColType {
+        let base = if self.base == other.base { self.base } else { FieldType::Any };
+        ColType { base, nullable: self.nullable || other.nullable }
+    }
+
+    /// Whether a runtime value is admissible under this type. `Null` is
+    /// always admissible (matching `FieldType::matches`).
+    pub fn admits(&self, f: &Field) -> bool {
+        self.base.matches(f)
+    }
+
+    fn is_numeric(&self) -> bool {
+        matches!(self.base, FieldType::I64 | FieldType::F64 | FieldType::Any)
+    }
+}
+
+impl fmt::Display for ColType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}{}", self.base.name(), if self.nullable { "?" } else { "" })
+    }
+}
+
+/// One inferred column: name plus [`ColType`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ColInfo {
+    pub name: String,
+    pub ty: ColType,
+}
+
+/// An inferred node schema.
+pub type ColSchema = Arc<Vec<ColInfo>>;
+
+fn schema_cols(schema: &Schema) -> Vec<ColInfo> {
+    (0..schema.len())
+        .map(|i| {
+            let (name, ty) = schema.field(i);
+            ColInfo { name: name.to_string(), ty: ColType::declared(ty) }
+        })
+        .collect()
+}
+
+/// Render an inferred schema as `name: type, ...` (diagnostics, guard
+/// failure messages, `ddp lint` output).
+pub fn render_cols(cols: &[ColInfo]) -> String {
+    cols.iter()
+        .map(|c| format!("{}: {}", c.name, c.ty))
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+// ------------------------------ analysis -----------------------------
+
+/// One analyzed plan node, collected for the lint pass.
+pub struct NodeMeta {
+    pub id: u64,
+    pub ds: Dataset,
+    /// path from the analysis root, `/`-joined node names
+    pub path: String,
+    /// inferred output columns of this node
+    pub cols: ColSchema,
+    /// number of consumers *within the analyzed DAG*
+    pub consumers: usize,
+}
+
+/// The result of analyzing one plan.
+pub struct Analysis {
+    /// inferred output columns of the analysis root
+    pub output: ColSchema,
+    pub diagnostics: Vec<Diagnostic>,
+    /// distinct plan nodes visited (shared subtrees count once)
+    pub node_count: usize,
+}
+
+impl Analysis {
+    pub fn errors(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error)
+    }
+
+    pub fn count(&self, sev: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == sev).count()
+    }
+
+    /// No error-severity diagnostics.
+    pub fn is_clean(&self) -> bool {
+        self.count(Severity::Error) == 0
+    }
+
+    /// All error messages, one per line (feeds `DdpError::validation`).
+    pub fn error_summary(&self) -> String {
+        self.errors().map(|d| d.to_string()).collect::<Vec<_>>().join("\n  ")
+    }
+
+    /// Machine-readable form (stable key order via the in-tree JSON
+    /// module's BTreeMap objects).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            (
+                "schema",
+                Value::Arr(
+                    self.output
+                        .iter()
+                        .map(|c| {
+                            Value::obj(vec![
+                                ("name", Value::from(c.name.as_str())),
+                                ("type", Value::from(c.ty.base.name())),
+                                ("nullable", Value::from(c.ty.nullable)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "diagnostics",
+                Value::Arr(self.diagnostics.iter().map(|d| d.to_json()).collect()),
+            ),
+            ("errors", Value::from(self.count(Severity::Error))),
+            ("warnings", Value::from(self.count(Severity::Warning))),
+            ("notes", Value::from(self.count(Severity::Note))),
+            ("nodes", Value::from(self.node_count)),
+        ])
+    }
+
+    /// Human-readable report: the plan, its inferred schema and every
+    /// diagnostic.
+    pub fn render(&self, ds: &Dataset) -> String {
+        let mut out = String::new();
+        out.push_str(&ds.plan_display());
+        out.push_str(&format!("inferred schema: [{}]\n", render_cols(&self.output)));
+        if self.diagnostics.is_empty() {
+            out.push_str("no diagnostics\n");
+        } else {
+            for d in &self.diagnostics {
+                out.push_str(&format!("{d}\n"));
+            }
+        }
+        out
+    }
+}
+
+/// Analyze a plan: schema/type inference plus expression checking.
+/// Cost is proportional to plan size (nodes × expression size), never to
+/// data size — sources are never scanned.
+pub fn analyze(ds: &Dataset) -> Analysis {
+    let mut cx = Infer::new(true);
+    let output = cx.infer(ds, "");
+    cx.finish(output)
+}
+
+/// [`analyze`] plus the rule-based lint pass. `is_persisted` reports
+/// cache registration (the driver passes the engine cache; pass
+/// `&|_| false` when no cache context exists).
+pub fn analyze_with_lints(ds: &Dataset, is_persisted: &dyn Fn(u64) -> bool) -> Analysis {
+    let mut cx = Infer::new(true);
+    let output = cx.infer(ds, "");
+    let mut diags = Vec::new();
+    lint::run(&cx.nodes, is_persisted, &mut diags);
+    cx.diags.extend(diags);
+    cx.finish(output)
+}
+
+/// Quiet inference: output column types only, no diagnostics collected.
+/// This is the guard's fast path.
+pub fn infer(ds: &Dataset) -> ColSchema {
+    let mut cx = Infer::new(false);
+    cx.infer(ds, "")
+}
+
+// --------------------------- invariant guard --------------------------
+
+/// True when the optimizer invariant guard should run: debug builds and
+/// test runs by default, any build under `DDP_ANALYZE=1` (and explicitly
+/// off under `DDP_ANALYZE=0`).
+pub fn guard_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| match std::env::var("DDP_ANALYZE") {
+        Ok(v) => v != "0" && !v.eq_ignore_ascii_case("false"),
+        Err(_) => cfg!(debug_assertions),
+    })
+}
+
+/// Compare the inferred output schemas of a pre/post rewrite pair.
+/// `Err` describes the drift; `Ok` means the rewrite is schema-preserving.
+pub fn rewrite_schema_delta(pre: &Dataset, post: &Dataset) -> std::result::Result<(), String> {
+    if pre.schema.names() != post.schema.names() {
+        return Err(format!(
+            "declared output columns changed: [{}] -> [{}]\npre plan:\n{}post plan:\n{}",
+            pre.schema.names().join(", "),
+            post.schema.names().join(", "),
+            pre.plan_display(),
+            post.plan_display()
+        ));
+    }
+    let a = infer(pre);
+    let b = infer(post);
+    if a != b {
+        return Err(format!(
+            "inferred output schema changed: [{}] -> [{}]\npre plan:\n{}post plan:\n{}",
+            render_cols(&a),
+            render_cols(&b),
+            pre.plan_display(),
+            post.plan_display()
+        ));
+    }
+    Ok(())
+}
+
+/// The optimizer's invariant guard: a rewrite that changes the inferred
+/// output schema is an engine bug, so it panics (differential suites run
+/// with the guard live — see [`guard_enabled`]).
+pub fn assert_rewrite_preserves_schema(pre: &Dataset, post: &Dataset) {
+    if let Err(msg) = rewrite_schema_delta(pre, post) {
+        panic!("optimizer invariant violated: {msg}");
+    }
+}
+
+// ------------------------- §3.8 contract checks ------------------------
+
+/// The driver's §3.8 pipe-contract check as analyzer diagnostics: every
+/// column a pipe's contract wants must exist on the declared input anchor
+/// schema (E008) with a compatible declared type (E009). Message text is
+/// the driver's long-standing error contract.
+pub fn check_contract(
+    pipe_name: &str,
+    want: &Schema,
+    input_id: &str,
+    have: &Schema,
+) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let path = format!("pipe:{pipe_name}/input:{input_id}");
+    for wi in 0..want.len() {
+        let (wname, wty) = want.field(wi);
+        match have.idx(wname) {
+            None => out.push(Diagnostic::new(
+                "E008",
+                Severity::Error,
+                &path,
+                format!(
+                    "pipe '{pipe_name}' requires column '{wname}' on input '{input_id}', which declares only [{}]",
+                    have.names().join(", ")
+                ),
+            )),
+            Some(hi) => {
+                let hty = have.field_type(hi);
+                if wty != FieldType::Any && hty != FieldType::Any && wty != hty {
+                    out.push(Diagnostic::new(
+                        "E009",
+                        Severity::Error,
+                        &path,
+                        format!(
+                            "pipe '{pipe_name}' needs '{wname}: {}' on '{input_id}', declared as {}",
+                            wty.name(),
+                            hty.name()
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+// ----------------------------- inference ------------------------------
+
+struct Infer {
+    memo: HashMap<u64, ColSchema>,
+    diags: Vec<Diagnostic>,
+    /// analyzed nodes in first-visit (DFS preorder) order
+    nodes: Vec<NodeMeta>,
+    /// index into `nodes` by node id
+    by_id: HashMap<u64, usize>,
+    collect: bool,
+}
+
+impl Infer {
+    fn new(collect: bool) -> Infer {
+        Infer {
+            memo: HashMap::new(),
+            diags: Vec::new(),
+            nodes: Vec::new(),
+            by_id: HashMap::new(),
+            collect,
+        }
+    }
+
+    fn finish(self, output: ColSchema) -> Analysis {
+        Analysis { output, diagnostics: self.diags, node_count: self.memo.len() }
+    }
+
+    fn error(&mut self, code: &'static str, path: &str, msg: String) {
+        self.push(code, Severity::Error, path, msg);
+    }
+
+    fn push(&mut self, code: &'static str, sev: Severity, path: &str, msg: String) {
+        if self.collect {
+            self.diags.push(Diagnostic::new(code, sev, path, msg));
+        }
+    }
+
+    fn infer(&mut self, ds: &Dataset, parent_path: &str) -> ColSchema {
+        if let Some(done) = self.memo.get(&ds.id).cloned() {
+            // a shared subtree: count the extra consumer, reuse the types
+            if self.collect {
+                if let Some(&ix) = self.by_id.get(&ds.id) {
+                    self.nodes[ix].consumers += 1;
+                }
+            }
+            return done;
+        }
+        let path = if parent_path.is_empty() {
+            ds.name()
+        } else {
+            format!("{parent_path}/{}", ds.name())
+        };
+        let cols = self.infer_node(ds, &path);
+        self.memo.insert(ds.id, cols.clone());
+        if self.collect {
+            self.by_id.insert(ds.id, self.nodes.len());
+            self.nodes.push(NodeMeta {
+                id: ds.id,
+                ds: ds.clone(),
+                path,
+                cols: cols.clone(),
+                consumers: 1,
+            });
+        }
+        cols
+    }
+
+    fn infer_node(&mut self, ds: &Dataset, path: &str) -> ColSchema {
+        match &*ds.node {
+            Plan::Source { .. } => Arc::new(schema_cols(&ds.schema)),
+            // opaque closures: trust the declared output schema
+            Plan::Map { input, .. }
+            | Plan::FlatMap { input, .. }
+            | Plan::MapPartitions { input, .. } => {
+                self.infer(input, path);
+                Arc::new(schema_cols(&ds.schema))
+            }
+            Plan::Filter { input, .. }
+            | Plan::Distinct { input, .. }
+            | Plan::Sort { input, .. }
+            | Plan::Repartition { input, .. } => self.infer(input, path),
+            Plan::FilterExpr { input, expr } => {
+                let t_in = self.infer(input, path);
+                self.check_expr(expr, &t_in, path);
+                t_in
+            }
+            Plan::Project { input, cols, schema } => {
+                let t_in = self.infer(input, path);
+                let out: Vec<ColInfo> = cols
+                    .iter()
+                    .enumerate()
+                    .map(|(pos, &c)| {
+                        let name = if pos < schema.len() {
+                            schema.field(pos).0.to_string()
+                        } else {
+                            format!("c{pos}")
+                        };
+                        match t_in.get(c) {
+                            Some(info) => ColInfo { name, ty: info.ty },
+                            None => {
+                                self.error(
+                                    "E001",
+                                    path,
+                                    format!(
+                                        "projection references column {c}, but the input has only {} column(s)",
+                                        t_in.len()
+                                    ),
+                                );
+                                ColInfo { name, ty: ColType::any() }
+                            }
+                        }
+                    })
+                    .collect();
+                Arc::new(out)
+            }
+            Plan::ReduceByKey { input, key_col, .. } => {
+                // the reduce contract preserves row shape: output columns
+                // are the input columns
+                let t_in = self.infer(input, path);
+                if let Some(kc) = key_col {
+                    if *kc >= t_in.len() {
+                        self.error(
+                            "E001",
+                            path,
+                            format!(
+                                "reduce key column {kc} is out of range (input has {} column(s))",
+                                t_in.len()
+                            ),
+                        );
+                    }
+                }
+                t_in
+            }
+            Plan::Join { left, right, kind, schema, lkey_col, rkey_col, .. } => {
+                let tl = self.infer(left, &format!("{path}/left"));
+                let tr = self.infer(right, &format!("{path}/right"));
+                self.check_join_keys(&tl, &tr, *lkey_col, *rkey_col, path);
+                // output rows are left fields ++ right fields; a Left join
+                // null-extends the right side
+                let mut types: Vec<ColType> = tl.iter().map(|c| c.ty).collect();
+                types.extend(tr.iter().map(|c| ColType {
+                    base: c.ty.base,
+                    nullable: c.ty.nullable || *kind == JoinKind::Left,
+                }));
+                if schema.len() != types.len() {
+                    self.error(
+                        "E007",
+                        path,
+                        format!(
+                            "join declares {} output column(s) but left+right provide {}",
+                            schema.len(),
+                            types.len()
+                        ),
+                    );
+                }
+                let out: Vec<ColInfo> = (0..schema.len())
+                    .map(|i| ColInfo {
+                        name: schema.field(i).0.to_string(),
+                        ty: types
+                            .get(i)
+                            .copied()
+                            .unwrap_or_else(|| ColType::declared(schema.field(i).1)),
+                    })
+                    .collect();
+                Arc::new(out)
+            }
+            Plan::Union { inputs } => {
+                let mut iter = inputs.iter();
+                let first = match iter.next() {
+                    Some(i) => self.infer(i, path),
+                    None => return Arc::new(schema_cols(&ds.schema)),
+                };
+                let mut out: Vec<ColInfo> = first.as_ref().clone();
+                for input in iter {
+                    let t = self.infer(input, path);
+                    if t.len() != out.len() {
+                        self.error(
+                            "E006",
+                            path,
+                            format!(
+                                "union inputs disagree on column count: {} vs {}",
+                                out.len(),
+                                t.len()
+                            ),
+                        );
+                        continue;
+                    }
+                    for (i, (a, b)) in out.iter_mut().zip(t.iter()).enumerate() {
+                        let lub = a.ty.lub(&b.ty);
+                        if lub.base == FieldType::Any
+                            && a.ty.base != FieldType::Any
+                            && b.ty.base != FieldType::Any
+                        {
+                            self.push(
+                                "W105",
+                                Severity::Warning,
+                                path,
+                                format!(
+                                    "union column {i} ('{}') mixes {} and {}; the column degrades to any",
+                                    a.name,
+                                    a.ty.base.name(),
+                                    b.ty.base.name()
+                                ),
+                            );
+                        }
+                        a.ty = lub;
+                    }
+                }
+                Arc::new(out)
+            }
+        }
+    }
+
+    fn check_join_keys(
+        &mut self,
+        tl: &[ColInfo],
+        tr: &[ColInfo],
+        lkey_col: Option<usize>,
+        rkey_col: Option<usize>,
+        path: &str,
+    ) {
+        for (side, cols, key) in [("left", tl, lkey_col), ("right", tr, rkey_col)] {
+            if let Some(k) = key {
+                if k >= cols.len() {
+                    self.error(
+                        "E001",
+                        path,
+                        format!(
+                            "{side} join key column {k} is out of range ({side} input has {} column(s))",
+                            cols.len()
+                        ),
+                    );
+                }
+            }
+        }
+        if let (Some(lk), Some(rk)) = (lkey_col, rkey_col) {
+            if let (Some(l), Some(r)) = (tl.get(lk), tr.get(rk)) {
+                let (lb, rb) = (l.ty.base, r.ty.base);
+                if lb != FieldType::Any && rb != FieldType::Any && lb != rb {
+                    self.error(
+                        "E005",
+                        path,
+                        format!(
+                            "join keys have incompatible types: left column {lk} ('{}': {}) vs right column {rk} ('{}': {}) — cross-type keys never hash-match",
+                            l.name,
+                            lb.name(),
+                            r.name,
+                            rb.name()
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    // ------------------------ expression checks -----------------------
+
+    fn check_expr(&mut self, e: &Expr, input: &[ColInfo], path: &str) -> ColType {
+        match e {
+            Expr::Lit(f) => ColType::of_field(f),
+            Expr::Col(i, name) => match input.get(*i) {
+                Some(c) => c.ty,
+                None => {
+                    self.error(
+                        "E001",
+                        path,
+                        format!(
+                            "expression references column {i} ('{name}'), but the input has only {} column(s)",
+                            input.len()
+                        ),
+                    );
+                    ColType::any()
+                }
+            },
+            Expr::Unary(UnOp::Not, x) => {
+                self.check_expr(x, input, path);
+                ColType::new(FieldType::Bool, false)
+            }
+            Expr::Unary(UnOp::Neg, x) => {
+                let t = self.check_expr(x, input, path);
+                if !t.is_numeric() {
+                    self.error(
+                        "E004",
+                        path,
+                        format!("negating a {} value always yields null", t.base.name()),
+                    );
+                }
+                ColType { base: t.base, nullable: true }
+            }
+            Expr::Binary(op, a, b) => {
+                let ta = self.check_expr(a, input, path);
+                let tb = self.check_expr(b, input, path);
+                self.check_binary(*op, &ta, &tb, a, b, path)
+            }
+            Expr::Call(f, args) => {
+                let ts: Vec<ColType> =
+                    args.iter().map(|a| self.check_expr(a, input, path)).collect();
+                self.check_call(*f, &ts, path)
+            }
+        }
+    }
+
+    fn check_binary(
+        &mut self,
+        op: BinOp,
+        ta: &ColType,
+        tb: &ColType,
+        a: &Expr,
+        b: &Expr,
+        path: &str,
+    ) -> ColType {
+        let bool_t = ColType::new(FieldType::Bool, false);
+        match op {
+            BinOp::Or | BinOp::And => bool_t,
+            BinOp::Eq | BinOp::Ne | BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge => {
+                let ordered = !matches!(op, BinOp::Eq | BinOp::Ne);
+                if ordered
+                    && (matches!(a, Expr::Lit(Field::Null)) || matches!(b, Expr::Lit(Field::Null)))
+                {
+                    self.push(
+                        "W102",
+                        Severity::Warning,
+                        path,
+                        format!("ordered comparison '{op}' with a null literal is always false"),
+                    );
+                } else if !compare_compatible(ta.base, tb.base, ordered) {
+                    self.error(
+                        "E003",
+                        path,
+                        format!(
+                            "comparison '{op}' between {} and {} is always false",
+                            ta.base.name(),
+                            tb.base.name()
+                        ),
+                    );
+                }
+                bool_t
+            }
+            BinOp::Add | BinOp::Sub | BinOp::Mul | BinOp::Div => {
+                for t in [ta, tb] {
+                    if !t.is_numeric() {
+                        self.error(
+                            "E004",
+                            path,
+                            format!(
+                                "arithmetic '{op}' on a {} value always yields null",
+                                t.base.name()
+                            ),
+                        );
+                    }
+                }
+                // the scalar core coerces both operands through f64
+                ColType::new(FieldType::F64, true)
+            }
+        }
+    }
+
+    fn check_call(&mut self, f: Func, args: &[ColType], path: &str) -> ColType {
+        let (name, arity) = match f {
+            Func::Length => ("length", 1),
+            Func::Lower => ("lower", 1),
+            Func::Upper => ("upper", 1),
+            Func::Contains => ("contains", 2),
+            Func::StartsWith => ("starts_with", 2),
+        };
+        if args.len() != arity {
+            self.error(
+                "E002",
+                path,
+                format!("{name}() expects {arity} argument(s), got {}", args.len()),
+            );
+        }
+        for t in args.iter().take(arity) {
+            if !matches!(t.base, FieldType::Str | FieldType::Any) {
+                self.push(
+                    "W106",
+                    Severity::Warning,
+                    path,
+                    format!(
+                        "{name}() applied to a {} value always yields {}",
+                        t.base.name(),
+                        if matches!(f, Func::Contains | Func::StartsWith) {
+                            "false"
+                        } else {
+                            "null"
+                        }
+                    ),
+                );
+            }
+        }
+        match f {
+            Func::Length => ColType::new(FieldType::I64, true),
+            Func::Lower | Func::Upper => ColType::new(FieldType::Str, true),
+            Func::Contains | Func::StartsWith => ColType::new(FieldType::Bool, false),
+        }
+    }
+}
+
+/// Whether two base types can meaningfully compare. `Any` is always
+/// compatible (unknown); numeric pairs coerce exactly; ordered
+/// comparison additionally requires an ordered type (`field_cmp` returns
+/// `None` for bool/bytes).
+fn compare_compatible(a: FieldType, b: FieldType, ordered: bool) -> bool {
+    use FieldType::*;
+    if a == Any || b == Any {
+        return true;
+    }
+    let numeric = |t: FieldType| matches!(t, I64 | F64);
+    if numeric(a) && numeric(b) {
+        return true;
+    }
+    if a != b {
+        return false;
+    }
+    // same concrete type; ordered comparison needs an ordered domain
+    !ordered || matches!(a, I64 | F64 | Str)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::row;
+
+    fn src() -> Dataset {
+        let schema = Schema::new(vec![
+            ("id", FieldType::I64),
+            ("name", FieldType::Str),
+            ("score", FieldType::F64),
+        ]);
+        Dataset::from_rows("t", schema, vec![row!(1i64, "a", 0.5f64)], 2)
+    }
+
+    fn col(i: usize, n: &str) -> Expr {
+        Expr::Col(i, n.into())
+    }
+
+    #[test]
+    fn source_types_flow_through_narrow_ops() {
+        let ds = src().filter(|_| true).repartition(2);
+        let a = analyze(&ds);
+        assert!(a.is_clean(), "{}", a.error_summary());
+        assert_eq!(render_cols(&a.output), "id: i64?, name: str?, score: f64?");
+    }
+
+    #[test]
+    fn project_selects_types() {
+        let ds = src().project(vec![2, 0]);
+        let a = analyze(&ds);
+        assert!(a.is_clean());
+        assert_eq!(render_cols(&a.output), "score: f64?, id: i64?");
+    }
+
+    #[test]
+    fn oob_column_is_e001() {
+        let ds = src().filter_expr(col(7, "ghost"));
+        let a = analyze(&ds);
+        assert_eq!(a.count(Severity::Error), 1);
+        let d = a.errors().next().unwrap();
+        assert_eq!(d.code, "E001");
+        assert!(d.message.contains("column 7"), "{d}");
+    }
+
+    #[test]
+    fn str_vs_int_comparison_is_e003() {
+        let ds = src().filter_expr(Expr::Binary(
+            BinOp::Gt,
+            Box::new(col(1, "name")),
+            Box::new(Expr::Lit(Field::I64(3))),
+        ));
+        let a = analyze(&ds);
+        assert!(a.errors().any(|d| d.code == "E003"), "{}", a.error_summary());
+    }
+
+    #[test]
+    fn numeric_cross_type_comparison_is_fine() {
+        let ds = src().filter_expr(Expr::Binary(
+            BinOp::Lt,
+            Box::new(col(0, "id")),
+            Box::new(Expr::Lit(Field::F64(3.5))),
+        ));
+        assert!(analyze(&ds).is_clean());
+    }
+
+    #[test]
+    fn arity_mismatch_is_e002() {
+        let ds = src().filter_expr(Expr::Call(Func::Contains, vec![col(1, "name")]));
+        let a = analyze(&ds);
+        assert!(a.errors().any(|d| d.code == "E002"), "{}", a.error_summary());
+    }
+
+    #[test]
+    fn arithmetic_on_string_is_e004() {
+        let ds = src().filter_expr(Expr::Binary(
+            BinOp::Add,
+            Box::new(col(1, "name")),
+            Box::new(Expr::Lit(Field::I64(1))),
+        ));
+        let a = analyze(&ds);
+        assert!(a.errors().any(|d| d.code == "E004"), "{}", a.error_summary());
+    }
+
+    #[test]
+    fn join_key_type_mismatch_is_e005() {
+        let l = src();
+        let r = src();
+        // join id (i64) against name (str)
+        let schema = Schema::of_names(&["a", "b", "c", "d", "e", "f"]);
+        let ds = l.join_on(&r, schema, JoinKind::Inner, 2, 0, 1);
+        let a = analyze(&ds);
+        assert!(a.errors().any(|d| d.code == "E005"), "{}", a.error_summary());
+    }
+
+    #[test]
+    fn left_join_nullifies_right_side() {
+        let l = src();
+        let r = src();
+        let schema = Schema::of_names(&["a", "b", "c", "d", "e", "f"]);
+        let ds = l.join_on(&r, schema, JoinKind::Left, 2, 0, 0);
+        let a = analyze(&ds);
+        assert!(a.is_clean(), "{}", a.error_summary());
+        assert!(a.output[3..].iter().all(|c| c.ty.nullable));
+        assert_eq!(a.output[3].ty.base, FieldType::I64);
+    }
+
+    #[test]
+    fn union_type_divergence_degrades_to_any() {
+        let a_ds = src();
+        let other_schema = Schema::new(vec![
+            ("id", FieldType::Str),
+            ("name", FieldType::Str),
+            ("score", FieldType::F64),
+        ]);
+        let b_ds = Dataset::from_rows("u", other_schema, vec![row!("x", "b", 1.0f64)], 2);
+        let u = a_ds.union(&[b_ds]);
+        let a = analyze(&u);
+        assert!(a.is_clean());
+        assert!(a.diagnostics.iter().any(|d| d.code == "W105"));
+        assert_eq!(a.output[0].ty.base, FieldType::Any);
+        assert_eq!(a.output[1].ty.base, FieldType::Str);
+    }
+
+    #[test]
+    fn shared_subtree_analyzed_once() {
+        let base = src().filter_expr(Expr::Binary(
+            BinOp::Gt,
+            Box::new(col(0, "id")),
+            Box::new(Expr::Lit(Field::I64(0))),
+        ));
+        let u = base.union(&[base.clone()]);
+        let a = analyze(&u);
+        // the shared filter contributes no duplicate diagnostics and is
+        // counted once
+        assert!(a.is_clean());
+        assert_eq!(a.node_count, 3, "source + filter + union");
+    }
+
+    #[test]
+    fn guard_accepts_identity_and_rejects_drift() {
+        let ds = src().project(vec![0, 1]);
+        assert!(rewrite_schema_delta(&ds, &ds.clone()).is_ok());
+        let other = src().project(vec![0, 2]);
+        let err = rewrite_schema_delta(&ds, &other).unwrap_err();
+        assert!(err.contains("changed"), "{err}");
+    }
+
+    #[test]
+    fn contract_messages_match_driver_contract() {
+        let want = Schema::new(vec![("text", FieldType::Str)]);
+        let have = Schema::new(vec![("id", FieldType::I64)]);
+        let diags = check_contract("clean", &want, "In", &have);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].code, "E008");
+        assert_eq!(
+            diags[0].message,
+            "pipe 'clean' requires column 'text' on input 'In', which declares only [id]"
+        );
+        let have2 = Schema::new(vec![("text", FieldType::I64)]);
+        let diags2 = check_contract("clean", &want, "In", &have2);
+        assert_eq!(diags2[0].code, "E009");
+        assert_eq!(
+            diags2[0].message,
+            "pipe 'clean' needs 'text: str' on 'In', declared as i64"
+        );
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let ds = src().filter_expr(col(9, "nope"));
+        let a = analyze(&ds);
+        let j = a.to_json();
+        assert_eq!(j.get("errors").and_then(|v| v.as_i64()), Some(1));
+        let text = crate::json::to_string(&j);
+        assert!(text.contains("\"code\":\"E001\""), "{text}");
+    }
+}

@@ -1,0 +1,469 @@
+//! Rule-based lint framework over an analyzed plan DAG.
+//!
+//! Rules run after type inference and see the whole DAG at once via
+//! [`LintCx`]: every analyzed node (post-order, children before
+//! parents), its inferred columns, its consumer count, and a per-node
+//! column [`Demand`] computed by walking requirements from the analysis
+//! root down to the sources. Each rule appends [`Diagnostic`]s; rules
+//! are pure observers and never mutate the plan.
+//!
+//! Standard rules (see the module docs on [`super`] for the code table):
+//! duplicate column names (W101), persisted-with-single-consumer (W103),
+//! dead columns (W104), opaque-closure-blocks-pushdown (N201) and
+//! vectorization-fallback prediction (N202). Key-type mismatch checks
+//! (E005) live in the inference pass itself because they are
+//! type-driven, not shape-driven.
+
+use super::super::dataset::Plan;
+use super::super::row::FieldType;
+use super::{Diagnostic, NodeMeta, Severity};
+use std::collections::{BTreeSet, HashMap};
+
+/// Which columns of a node's output are referenced downstream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Demand {
+    /// every column may be read (closure-based consumers, analysis root)
+    All,
+    /// only these column positions are read
+    Cols(BTreeSet<usize>),
+}
+
+impl Demand {
+    fn union(&mut self, other: Demand) {
+        if matches!(self, Demand::All) {
+            return;
+        }
+        match other {
+            Demand::All => *self = Demand::All,
+            Demand::Cols(b) => {
+                if let Demand::Cols(a) = self {
+                    a.extend(b);
+                }
+            }
+        }
+    }
+}
+
+/// Everything a lint rule can see.
+pub struct LintCx<'a> {
+    /// analyzed nodes in post-order (children before parents; the
+    /// analysis root is last)
+    pub nodes: &'a [NodeMeta],
+    /// downstream column demand per node id
+    pub demand: HashMap<u64, Demand>,
+    /// whether a node id is registered in the engine cache
+    pub persisted: &'a dyn Fn(u64) -> bool,
+}
+
+/// A lint rule: a stable name and a pass over the analyzed DAG.
+pub trait LintRule {
+    fn name(&self) -> &'static str;
+    fn run(&self, cx: &LintCx<'_>, out: &mut Vec<Diagnostic>);
+}
+
+/// The standard rule set, in emission order.
+pub fn standard_rules() -> Vec<Box<dyn LintRule>> {
+    vec![
+        Box::new(DuplicateColumnNames),
+        Box::new(SingleConsumerPersist),
+        Box::new(DeadColumns),
+        Box::new(OpaqueBlocksPushdown),
+        Box::new(VectorizeFallback),
+    ]
+}
+
+/// Run the standard rules over an analyzed node list.
+pub fn run(nodes: &[NodeMeta], persisted: &dyn Fn(u64) -> bool, out: &mut Vec<Diagnostic>) {
+    let cx = LintCx { demand: compute_demand(nodes), nodes, persisted };
+    for rule in standard_rules() {
+        rule.run(&cx, out);
+    }
+}
+
+/// Propagate column demand from the analysis root (demands everything)
+/// down to the sources. Nodes arrive in post-order, so iterating in
+/// reverse visits every consumer before its inputs.
+fn compute_demand(nodes: &[NodeMeta]) -> HashMap<u64, Demand> {
+    let mut demand: HashMap<u64, Demand> = HashMap::new();
+    if let Some(root) = nodes.last() {
+        demand.insert(root.id, Demand::All);
+    }
+    let mut add = |demand: &mut HashMap<u64, Demand>, id: u64, d: Demand| {
+        demand.entry(id).or_insert_with(|| Demand::Cols(BTreeSet::new())).union(d);
+    };
+    for meta in nodes.iter().rev() {
+        let d = demand.get(&meta.id).cloned().unwrap_or(Demand::All);
+        match &*meta.ds.node {
+            Plan::Source { .. } => {}
+            // closure-based operators may read any input column
+            Plan::Map { input, .. }
+            | Plan::Filter { input, .. }
+            | Plan::FlatMap { input, .. }
+            | Plan::MapPartitions { input, .. }
+            | Plan::Sort { input, .. } => add(&mut demand, input.id, Demand::All),
+            // whole-row hashing / closure reducers read everything
+            Plan::Distinct { input, .. } | Plan::ReduceByKey { input, .. } => {
+                add(&mut demand, input.id, Demand::All)
+            }
+            Plan::FilterExpr { input, expr } => {
+                let mut want = d.clone();
+                want.union(Demand::Cols(super::super::expr::cols_used(expr)));
+                add(&mut demand, input.id, want);
+            }
+            Plan::Project { input, cols, .. } => {
+                let want = match &d {
+                    Demand::All => Demand::Cols(cols.iter().copied().collect()),
+                    Demand::Cols(ps) => {
+                        Demand::Cols(ps.iter().filter_map(|&p| cols.get(p).copied()).collect())
+                    }
+                };
+                add(&mut demand, input.id, want);
+            }
+            Plan::Repartition { input, .. } => add(&mut demand, input.id, d.clone()),
+            Plan::Union { inputs } => {
+                for input in inputs {
+                    add(&mut demand, input.id, d.clone());
+                }
+            }
+            Plan::Join { left, right, lkey_col, rkey_col, .. } => {
+                let lw = left.schema.len();
+                let (mut dl, mut dr) = match &d {
+                    Demand::All => (Demand::All, Demand::All),
+                    Demand::Cols(ps) => (
+                        Demand::Cols(ps.iter().copied().filter(|&p| p < lw).collect()),
+                        Demand::Cols(
+                            ps.iter().copied().filter(|&p| p >= lw).map(|p| p - lw).collect(),
+                        ),
+                    ),
+                };
+                // closure keys read the whole row; column keys just theirs
+                match lkey_col {
+                    Some(k) => dl.union(Demand::Cols(BTreeSet::from([*k]))),
+                    None => dl = Demand::All,
+                }
+                match rkey_col {
+                    Some(k) => dr.union(Demand::Cols(BTreeSet::from([*k]))),
+                    None => dr = Demand::All,
+                }
+                add(&mut demand, left.id, dl);
+                add(&mut demand, right.id, dr);
+            }
+        }
+    }
+    demand
+}
+
+// ------------------------------- rules --------------------------------
+
+/// W101: a schema-introducing node declares the same column name twice;
+/// `Schema::idx` resolves to only one of them, so by-name access is
+/// ambiguous.
+struct DuplicateColumnNames;
+
+impl LintRule for DuplicateColumnNames {
+    fn name(&self) -> &'static str {
+        "duplicate-column-names"
+    }
+
+    fn run(&self, cx: &LintCx<'_>, out: &mut Vec<Diagnostic>) {
+        for meta in cx.nodes {
+            let introduces = matches!(
+                &*meta.ds.node,
+                Plan::Source { .. }
+                    | Plan::Map { .. }
+                    | Plan::FlatMap { .. }
+                    | Plan::MapPartitions { .. }
+                    | Plan::Project { .. }
+                    | Plan::Join { .. }
+            );
+            if !introduces {
+                continue;
+            }
+            let mut seen: BTreeSet<&str> = BTreeSet::new();
+            let mut dups: Vec<&str> = Vec::new();
+            for c in meta.cols.iter() {
+                if !seen.insert(&c.name) && !dups.contains(&c.name.as_str()) {
+                    dups.push(&c.name);
+                }
+            }
+            if !dups.is_empty() {
+                out.push(Diagnostic {
+                    code: "W101",
+                    severity: Severity::Warning,
+                    path: meta.path.clone(),
+                    message: format!(
+                        "duplicate column name(s) [{}]; by-name access resolves to only one of them",
+                        dups.join(", ")
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// W103: a dataset is registered in the cache but only one plan node
+/// consumes it — persisting buys nothing and costs memory.
+struct SingleConsumerPersist;
+
+impl LintRule for SingleConsumerPersist {
+    fn name(&self) -> &'static str {
+        "single-consumer-persist"
+    }
+
+    fn run(&self, cx: &LintCx<'_>, out: &mut Vec<Diagnostic>) {
+        for meta in cx.nodes {
+            // the analysis root legitimately has one consumer (the caller)
+            let is_root = cx.nodes.last().map(|r| r.id) == Some(meta.id);
+            if !is_root && (cx.persisted)(meta.id) && meta.consumers <= 1 {
+                out.push(Diagnostic {
+                    code: "W103",
+                    severity: Severity::Warning,
+                    path: meta.path.clone(),
+                    message: format!(
+                        "dataset is persisted but has a single consumer in this plan; \
+                         caching pays only when lineage is re-executed ({} column(s) held)",
+                        meta.cols.len()
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// W104: columns produced at a materialization point (source or wide
+/// operator) that no downstream node ever reads — a projection before
+/// the shuffle/scan would shrink every row.
+struct DeadColumns;
+
+impl LintRule for DeadColumns {
+    fn name(&self) -> &'static str {
+        "dead-columns"
+    }
+
+    fn run(&self, cx: &LintCx<'_>, out: &mut Vec<Diagnostic>) {
+        for meta in cx.nodes {
+            let materializes =
+                matches!(&*meta.ds.node, Plan::Source { .. }) || meta.ds.is_wide();
+            if !materializes {
+                continue;
+            }
+            let Some(Demand::Cols(used)) = cx.demand.get(&meta.id) else { continue };
+            let dead: Vec<&str> = meta
+                .cols
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !used.contains(i))
+                .map(|(_, c)| c.name.as_str())
+                .collect();
+            if !dead.is_empty() {
+                out.push(Diagnostic {
+                    code: "W104",
+                    severity: Severity::Warning,
+                    path: meta.path.clone(),
+                    message: format!(
+                        "column(s) [{}] are never referenced downstream; \
+                         project them away to shrink rows",
+                        dead.join(", ")
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// N201: a `FilterExpr` sits directly above an opaque closure node, so
+/// the optimizer cannot push the predicate any further down.
+struct OpaqueBlocksPushdown;
+
+impl LintRule for OpaqueBlocksPushdown {
+    fn name(&self) -> &'static str {
+        "opaque-blocks-pushdown"
+    }
+
+    fn run(&self, cx: &LintCx<'_>, out: &mut Vec<Diagnostic>) {
+        for meta in cx.nodes {
+            let Plan::FilterExpr { input, .. } = &*meta.ds.node else { continue };
+            let blocker = match &*input.node {
+                Plan::Map { .. } => Some("map"),
+                Plan::FlatMap { .. } => Some("flat_map"),
+                Plan::MapPartitions { .. } => Some("map_partitions"),
+                Plan::Filter { .. } => Some("filter"),
+                _ => None,
+            };
+            if let Some(kind) = blocker {
+                out.push(Diagnostic {
+                    code: "N201",
+                    severity: Severity::Note,
+                    path: meta.path.clone(),
+                    message: format!(
+                        "predicate sits above an opaque '{kind}' closure; \
+                         pushdown stops here (express the closure as \
+                         FilterExpr/Project to unlock it)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// N202: a vectorizable node (`FilterExpr`/`Project`) whose input has
+/// `any`-typed columns — `ColumnBatch::try_from_rows` needs a concrete
+/// uniform type per column, so mixed batches fall back to row-at-a-time
+/// execution.
+struct VectorizeFallback;
+
+impl LintRule for VectorizeFallback {
+    fn name(&self) -> &'static str {
+        "vectorize-fallback"
+    }
+
+    fn run(&self, cx: &LintCx<'_>, out: &mut Vec<Diagnostic>) {
+        for meta in cx.nodes {
+            let input = match &*meta.ds.node {
+                Plan::FilterExpr { input, .. } => input,
+                Plan::Project { input, .. } => input,
+                _ => continue,
+            };
+            let Some(ix) = cx.nodes.iter().position(|n| n.id == input.id) else { continue };
+            let any_cols: Vec<&str> = cx.nodes[ix]
+                .cols
+                .iter()
+                .filter(|c| c.ty.base == FieldType::Any)
+                .map(|c| c.name.as_str())
+                .collect();
+            if !any_cols.is_empty() {
+                out.push(Diagnostic {
+                    code: "N202",
+                    severity: Severity::Note,
+                    path: meta.path.clone(),
+                    message: format!(
+                        "input column(s) [{}] have no concrete type; batches mixing \
+                         types here fall back to row-wise execution \
+                         (declare concrete column types to keep this vectorized)",
+                        any_cols.join(", ")
+                    ),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::analyze_with_lints;
+    use super::*;
+    use crate::engine::dataset::Dataset;
+    use crate::engine::expr::{BinOp, Expr, Func};
+    use crate::engine::row::{Field, FieldType, Schema};
+    use crate::row;
+
+    fn src() -> Dataset {
+        let schema = Schema::new(vec![
+            ("id", FieldType::I64),
+            ("name", FieldType::Str),
+            ("score", FieldType::F64),
+        ]);
+        Dataset::from_rows("t", schema, vec![row!(1i64, "a", 0.5f64)], 2)
+    }
+
+    fn gt_zero(col: usize, name: &str) -> Expr {
+        Expr::Binary(
+            BinOp::Gt,
+            Box::new(Expr::Col(col, name.into())),
+            Box::new(Expr::Lit(Field::I64(0))),
+        )
+    }
+
+    fn lints(ds: &Dataset) -> Vec<Diagnostic> {
+        analyze_with_lints(ds, &|_| false).diagnostics
+    }
+
+    #[test]
+    fn dead_columns_at_source() {
+        // only 'id' is demanded: filter on id, then project to id
+        let ds = src().filter_expr(gt_zero(0, "id")).project(vec![0]);
+        let diags = lints(&ds);
+        let w104 = diags.iter().find(|d| d.code == "W104").expect("dead columns");
+        assert!(w104.message.contains("name"), "{}", w104.message);
+        assert!(w104.message.contains("score"), "{}", w104.message);
+        assert!(!w104.message.contains("[id"), "{}", w104.message);
+    }
+
+    #[test]
+    fn closure_consumer_demands_everything() {
+        let ds = src().filter(|_| true).project(vec![0]);
+        // the closure filter may read any column: no dead-column warning
+        assert!(lints(&ds).iter().all(|d| d.code != "W104"));
+    }
+
+    #[test]
+    fn duplicate_names_warn() {
+        let schema = Schema::new(vec![("x", FieldType::I64), ("x", FieldType::I64)]);
+        let ds = Dataset::from_rows("dup", schema, vec![row!(1i64, 2i64)], 1);
+        let diags = lints(&ds);
+        assert!(diags.iter().any(|d| d.code == "W101"), "{diags:?}");
+    }
+
+    #[test]
+    fn single_consumer_persist_warns_only_when_persisted() {
+        let base = src().filter_expr(gt_zero(0, "id"));
+        let root = base.project(vec![0]);
+        assert!(lints(&root).iter().all(|d| d.code != "W103"));
+        let persisted = base.id;
+        let diags =
+            analyze_with_lints(&root, &move |id| id == persisted).diagnostics;
+        assert!(diags.iter().any(|d| d.code == "W103"), "{diags:?}");
+    }
+
+    #[test]
+    fn opaque_closure_blocks_pushdown_note() {
+        let mapped = src().map(src().schema.clone(), |r| r.clone());
+        let ds = mapped.filter_expr(gt_zero(0, "id"));
+        let diags = lints(&ds);
+        assert!(diags.iter().any(|d| d.code == "N201"), "{diags:?}");
+    }
+
+    #[test]
+    fn any_typed_input_predicts_fallback() {
+        let schema = Schema::of_names(&["a", "b"]);
+        let ds = Dataset::from_rows("u", schema, vec![row!(1i64, 2i64)], 1)
+            .filter_expr(gt_zero(0, "a"));
+        let diags = lints(&ds);
+        assert!(diags.iter().any(|d| d.code == "N202"), "{diags:?}");
+        // fully-typed inputs predict no fallback
+        assert!(lints(&src().filter_expr(gt_zero(0, "id")))
+            .iter()
+            .all(|d| d.code != "N202"));
+    }
+
+    #[test]
+    fn join_demand_splits_sides() {
+        let l = src();
+        let r = src();
+        let schema = Schema::of_names(&["a", "b", "c", "d", "e", "f"]);
+        // demand only left column 1 + join keys; right non-key columns die
+        let ds = l
+            .join_on(&r, schema, crate::engine::dataset::JoinKind::Inner, 2, 0, 0)
+            .project(vec![1]);
+        let diags = lints(&ds);
+        let dead: Vec<&str> = diags
+            .iter()
+            .filter(|d| d.code == "W104")
+            .map(|d| d.message.as_str())
+            .collect();
+        assert!(!dead.is_empty(), "{diags:?}");
+        // 'score' is dead on both source sides
+        assert!(dead.iter().any(|m| m.contains("score")), "{dead:?}");
+    }
+
+    #[test]
+    fn string_function_lint_flows_through_call() {
+        // contains(name, "x") over typed input: clean
+        let e = Expr::Call(
+            Func::Contains,
+            vec![Expr::Col(1, "name".into()), Expr::Lit(Field::Str("x".into()))],
+        );
+        let a = analyze_with_lints(&src().filter_expr(e), &|_| false);
+        assert!(a.is_clean(), "{}", a.error_summary());
+    }
+}

@@ -77,6 +77,13 @@ pub struct EngineConfig {
     /// single branch per site; the default honours the `DDP_TRACE` env
     /// var (`1`/`true` enables).
     pub trace: bool,
+    /// statically analyze plans before executing them
+    /// ([`super::analyze`]): the driver rejects plans with
+    /// error-severity diagnostics before any task runs. Plan-walk cost
+    /// only (proportional to plan size, never data size); disabling adds
+    /// no per-row/per-batch work either way. Default honours the
+    /// `DDP_ANALYZE` env var — `0`/`false` disables.
+    pub analyze: bool,
 }
 
 impl Default for EngineConfig {
@@ -101,6 +108,9 @@ impl Default for EngineConfig {
             trace: std::env::var("DDP_TRACE")
                 .map(|v| v != "0" && !v.eq_ignore_ascii_case("false"))
                 .unwrap_or(false),
+            analyze: std::env::var("DDP_ANALYZE")
+                .map(|v| v != "0" && !v.eq_ignore_ascii_case("false"))
+                .unwrap_or(true),
         }
     }
 }
@@ -351,13 +361,29 @@ impl EngineCtx {
                 }
                 // expression-backed steps stay structured so the stage can
                 // run them column-at-a-time (closure steps are opaque and
-                // always execute row-wise)
+                // always execute row-wise); each carries its highest
+                // referenced column so out-of-range references fail as
+                // structured errors instead of index panics
                 Plan::FilterExpr { input, expr } => {
-                    steps.push(Step::FilterExpr(expr.clone()));
+                    let bound = expr::max_col(expr).map(|(idx, name)| ColBound {
+                        idx,
+                        name: name.to_string(),
+                        op: "filter predicate",
+                    });
+                    steps.push(Step::FilterExpr(expr.clone(), bound));
                     cur = input.clone();
                 }
                 Plan::Project { input, cols, .. } => {
-                    steps.push(Step::Project(cols.clone()));
+                    let bound = cols.iter().copied().max().map(|idx| ColBound {
+                        idx,
+                        name: if idx < input.schema.len() {
+                            input.schema.field(idx).0.to_string()
+                        } else {
+                            "?".to_string()
+                        },
+                        op: "projection",
+                    });
+                    steps.push(Step::Project(cols.clone(), bound));
                     cur = input.clone();
                 }
                 Plan::FlatMap { input, f, .. } => {
@@ -395,19 +421,19 @@ impl EngineCtx {
             .map(|part| {
                 let part = part.clone();
                 let steps = steps.clone();
-                move || -> ChainOut {
+                move || -> Result<ChainOut> {
                     if fusion && vectorize {
                         apply_chain_vectorized(&part, &steps)
                     } else if fusion {
-                        ChainOut::rows_only(apply_chain_fused(&part, &steps))
+                        Ok(ChainOut::rows_only(apply_chain_fused(&part, &steps)?))
                     } else {
                         // materialize-per-step ablation stays row-wise
-                        ChainOut::rows_only(apply_chain_materialized(&part, &steps))
+                        Ok(ChainOut::rows_only(apply_chain_materialized(&part, &steps)?))
                     }
                 }
             })
             .collect();
-        let outs = self.run_tasks(stage_id, tasks, &input)?;
+        let outs = collect_results(self.run_tasks(stage_id, tasks, &input)?)?;
         let (mut batches, mut fallbacks) = (0u64, 0u64);
         let parts = outs
             .into_iter()
@@ -995,20 +1021,46 @@ impl EngineCtx {
 // narrow-chain machinery
 // ---------------------------------------------------------------------
 
+/// The highest column index a structured step references, with that
+/// column's display name — checked against each input row / batch width
+/// so an out-of-range reference surfaces as a structured engine error
+/// on every execution path (vectorized, fused, materialized) instead of
+/// an index panic. `None` bound (column-free expression) skips the
+/// check entirely.
+struct ColBound {
+    idx: usize,
+    name: String,
+    op: &'static str,
+}
+
+impl ColBound {
+    #[inline]
+    fn check(&self, width: usize) -> Result<()> {
+        if self.idx < width {
+            Ok(())
+        } else {
+            Err(DdpError::engine(format!(
+                "{} references column {} ('{}'), but the input has only {} column(s)",
+                self.op, self.idx, self.name, width
+            )))
+        }
+    }
+}
+
 enum Step {
     Map(super::dataset::MapFn),
     Filter(super::dataset::PredFn),
     /// structured predicate — vectorizable
-    FilterExpr(Arc<expr::Expr>),
+    FilterExpr(Arc<expr::Expr>, Option<ColBound>),
     /// structured column selection — vectorizable
-    Project(Vec<usize>),
+    Project(Vec<usize>, Option<ColBound>),
     FlatMap(super::dataset::FlatMapFn),
     PartWise(super::dataset::PartFn),
 }
 
 /// True for steps the columnar evaluator can run over a whole batch.
 fn is_vectorizable(s: &Step) -> bool {
-    matches!(s, Step::FilterExpr(_) | Step::Project(_))
+    matches!(s, Step::FilterExpr(..) | Step::Project(..))
 }
 
 /// A narrow stage task's output: the rows plus vectorization counters
@@ -1034,9 +1086,9 @@ impl ChainOut {
 /// segment and counts a `vec_fallbacks`. Byte-identical to
 /// [`apply_chain_fused`] by construction: the kernels share the scalar
 /// core with `expr::eval` (pinned by the vectorize differential suite).
-fn apply_chain_vectorized(part: &[Row], steps: &[Step]) -> ChainOut {
+fn apply_chain_vectorized(part: &[Row], steps: &[Step]) -> Result<ChainOut> {
     if steps.is_empty() {
-        return ChainOut::rows_only(part.to_vec());
+        return Ok(ChainOut::rows_only(part.to_vec()));
     }
     let mut batches = 0u64;
     let mut fallbacks = 0u64;
@@ -1061,11 +1113,19 @@ fn apply_chain_vectorized(part: &[Row], steps: &[Step]) -> ChainOut {
                     batches += 1;
                     for step in run {
                         batch = match step {
-                            Step::FilterExpr(e) => {
+                            Step::FilterExpr(e, bound) => {
+                                if let Some(b) = bound {
+                                    b.check(batch.num_cols())?;
+                                }
                                 let keep = expr::eval_mask(e, &batch);
                                 batch.filter(&keep)
                             }
-                            Step::Project(cols) => batch.project(cols),
+                            Step::Project(cols, bound) => {
+                                if let Some(b) = bound {
+                                    b.check(batch.num_cols())?;
+                                }
+                                batch.project(cols)
+                            }
                             _ => unreachable!("segment holds only vectorizable steps"),
                         };
                     }
@@ -1075,7 +1135,7 @@ fn apply_chain_vectorized(part: &[Row], steps: &[Step]) -> ChainOut {
                     fallbacks += 1;
                     let mut out = Vec::with_capacity(input.len());
                     for row in input {
-                        push_rowwise(row.clone(), run, &mut out);
+                        push_rowwise(row.clone(), run, &mut out)?;
                     }
                     cur = Some(out);
                 }
@@ -1097,24 +1157,24 @@ fn apply_chain_vectorized(part: &[Row], steps: &[Step]) -> ChainOut {
             let input: &[Row] = cur.as_deref().unwrap_or(part);
             let mut out = Vec::with_capacity(input.len());
             for row in input {
-                push_rowwise(row.clone(), run, &mut out);
+                push_rowwise(row.clone(), run, &mut out)?;
             }
             cur = Some(out);
         }
     }
-    ChainOut {
+    Ok(ChainOut {
         rows: cur.unwrap_or_else(|| part.to_vec()),
         vec_batches: batches,
         vec_fallbacks: fallbacks,
-    }
+    })
 }
 
 /// Fused execution: rows stream through consecutive row-wise steps without
 /// intermediate vectors; `PartWise` steps materialize (they need the whole
 /// partition).
-fn apply_chain_fused(part: &[Row], steps: &[Step]) -> Vec<Row> {
+fn apply_chain_fused(part: &[Row], steps: &[Step]) -> Result<Vec<Row>> {
     if steps.is_empty() {
-        return part.to_vec();
+        return Ok(part.to_vec());
     }
     // `None` means we are still reading straight from the input partition.
     let mut cur: Option<Vec<Row>> = None;
@@ -1130,7 +1190,7 @@ fn apply_chain_fused(part: &[Row], steps: &[Step]) -> Vec<Row> {
             let input: &[Row] = cur.as_deref().unwrap_or(part);
             let mut out = Vec::with_capacity(input.len());
             for row in input {
-                push_rowwise(row.clone(), run, &mut out);
+                push_rowwise(row.clone(), run, &mut out)?;
             }
             cur = Some(out);
         }
@@ -1142,60 +1202,83 @@ fn apply_chain_fused(part: &[Row], steps: &[Step]) -> Vec<Row> {
             i += 1;
         }
     }
-    cur.unwrap_or_else(|| part.to_vec())
+    Ok(cur.unwrap_or_else(|| part.to_vec()))
 }
 
 #[inline]
-fn push_rowwise(row: Row, ops: &[Step], out: &mut Vec<Row>) {
+fn push_rowwise(row: Row, ops: &[Step], out: &mut Vec<Row>) -> Result<()> {
     match ops.split_first() {
         None => out.push(row),
         Some((op, rest)) => match op {
-            Step::Map(f) => push_rowwise(f(&row), rest, out),
+            Step::Map(f) => push_rowwise(f(&row), rest, out)?,
             Step::Filter(f) => {
                 if f(&row) {
-                    push_rowwise(row, rest, out);
+                    push_rowwise(row, rest, out)?;
                 }
             }
-            Step::FilterExpr(e) => {
+            Step::FilterExpr(e, bound) => {
+                if let Some(b) = bound {
+                    b.check(row.len())?;
+                }
                 if expr::truthy(&expr::eval(e, &row)) {
-                    push_rowwise(row, rest, out);
+                    push_rowwise(row, rest, out)?;
                 }
             }
-            Step::Project(cols) => push_rowwise(
-                Row::new(cols.iter().map(|&i| row.get(i).clone()).collect()),
-                rest,
-                out,
-            ),
+            Step::Project(cols, bound) => {
+                if let Some(b) = bound {
+                    b.check(row.len())?;
+                }
+                push_rowwise(
+                    Row::new(cols.iter().map(|&i| row.get(i).clone()).collect()),
+                    rest,
+                    out,
+                )?;
+            }
             Step::FlatMap(f) => {
                 for r in f(&row) {
-                    push_rowwise(r, rest, out);
+                    push_rowwise(r, rest, out)?;
                 }
             }
             Step::PartWise(_) => unreachable!("PartWise handled at run level"),
         },
     }
+    Ok(())
 }
 
 /// Ablation mode: materialize the full partition after every step.
-fn apply_chain_materialized(part: &[Row], steps: &[Step]) -> Vec<Row> {
+fn apply_chain_materialized(part: &[Row], steps: &[Step]) -> Result<Vec<Row>> {
     let mut cur: Vec<Row> = part.to_vec();
     for step in steps {
         cur = match step {
             Step::Map(f) => cur.iter().map(|r| f(r)).collect(),
             Step::Filter(f) => cur.into_iter().filter(|r| f(r)).collect(),
-            Step::FilterExpr(e) => cur
-                .into_iter()
-                .filter(|r| expr::truthy(&expr::eval(e, r)))
-                .collect(),
-            Step::Project(cols) => cur
-                .iter()
-                .map(|r| Row::new(cols.iter().map(|&i| r.get(i).clone()).collect()))
-                .collect(),
+            Step::FilterExpr(e, bound) => {
+                let mut out = Vec::with_capacity(cur.len());
+                for r in cur {
+                    if let Some(b) = bound {
+                        b.check(r.len())?;
+                    }
+                    if expr::truthy(&expr::eval(e, &r)) {
+                        out.push(r);
+                    }
+                }
+                out
+            }
+            Step::Project(cols, bound) => {
+                let mut out = Vec::with_capacity(cur.len());
+                for r in &cur {
+                    if let Some(b) = bound {
+                        b.check(r.len())?;
+                    }
+                    out.push(Row::new(cols.iter().map(|&i| r.get(i).clone()).collect()));
+                }
+                out
+            }
             Step::FlatMap(f) => cur.iter().flat_map(|r| f(r)).collect(),
             Step::PartWise(f) => f(cur),
         };
     }
-    cur
+    Ok(cur)
 }
 
 // ---------------------------------------------------------------------

@@ -680,6 +680,27 @@ fn collect_cols(e: &Expr, out: &mut BTreeSet<usize>) {
     }
 }
 
+/// The highest column index the expression references, with that
+/// column's display name. `None` for column-free expressions. The
+/// executor checks this bound against each input row/batch so an
+/// out-of-range reference surfaces as a structured engine error on both
+/// the row and vectorized paths (instead of an index panic).
+pub fn max_col(e: &Expr) -> Option<(usize, &str)> {
+    match e {
+        Expr::Lit(_) => None,
+        Expr::Col(i, n) => Some((*i, n.as_str())),
+        Expr::Unary(_, x) => max_col(x),
+        Expr::Binary(_, a, b) => match (max_col(a), max_col(b)) {
+            (Some(l), Some(r)) => Some(if r.0 > l.0 { r } else { l }),
+            (l, r) => l.or(r),
+        },
+        Expr::Call(_, args) => args
+            .iter()
+            .filter_map(max_col)
+            .max_by_key(|(i, _)| *i),
+    }
+}
+
 /// Rebuild the expression with every column reference mapped through `f`
 /// (index + display name). Used when pushing predicates below projections
 /// or into join sides.
@@ -988,6 +1009,25 @@ mod tests {
         let m = map_cols(&e, &|i, _| (i + 10, format!("c{}", i + 10)));
         assert_eq!(cols_used(&m).into_iter().collect::<Vec<_>>(), vec![11]);
         assert_eq!(m.to_string(), "(c11 > 0)");
+    }
+
+    #[test]
+    fn max_col_picks_highest_index() {
+        assert_eq!(max_col(&lit(Field::I64(1))), None);
+        assert_eq!(max_col(&col(3, "c")), Some((3, "c")));
+        // highest index wins across both binary arms and call args
+        let e = Expr::Binary(
+            BinOp::And,
+            Box::new(Expr::Binary(BinOp::Gt, Box::new(col(1, "a")), Box::new(col(7, "g")))),
+            Box::new(Expr::Call(Func::Contains, vec![col(4, "d"), lit(Field::Str("x".into()))])),
+        );
+        assert_eq!(max_col(&e), Some((7, "g")));
+        // literal-only arms don't mask the column-bearing one
+        let u = Expr::Unary(
+            UnOp::Not,
+            Box::new(Expr::Binary(BinOp::Eq, Box::new(lit(Field::I64(0))), Box::new(col(2, "b")))),
+        );
+        assert_eq!(max_col(&u), Some((2, "b")));
     }
 
     #[test]

@@ -25,6 +25,7 @@
 pub mod row;
 pub mod dataset;
 pub mod expr;
+pub mod analyze;
 pub mod optimizer;
 pub mod executor;
 pub mod cache;
@@ -36,6 +37,7 @@ pub mod stats;
 pub mod stream;
 pub mod trace;
 
+pub use analyze::{Analysis, ColInfo, ColType, Diagnostic, Severity};
 pub use dataset::{Dataset, JoinKind, Partitioned};
 pub use executor::{EngineConfig, EngineCtx, TaskRecord, TaskTrace};
 pub use memory::MemoryGovernor;

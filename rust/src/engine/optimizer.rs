@@ -294,10 +294,23 @@ fn rebuild(
 /// Apply node-local rules until none fire (bounded — every rule strictly
 /// shrinks the plan or moves a filter/projection downward, so the bound is
 /// a safety net, not a correctness requirement).
+///
+/// When the analyzer guard is live ([`super::analyze::guard_enabled`]:
+/// debug builds and `DDP_ANALYZE=1`), every rule firing is followed by a
+/// schema-equivalence re-inference of the pre/post plan — a rewrite that
+/// changes the inferred output schema is an engine bug and panics, so
+/// every differential suite doubles as a machine-checked proof that
+/// rewrites are schema-preserving.
 fn fixpoint(mut cur: Dataset, barrier: &dyn Fn(u64) -> bool, counts: &mut RewriteCounts) -> Dataset {
+    let guard = super::analyze::guard_enabled();
     for _ in 0..64 {
         match apply_once(&cur, barrier, counts) {
-            Some(next) => cur = next,
+            Some(next) => {
+                if guard {
+                    super::analyze::assert_rewrite_preserves_schema(&cur, &next);
+                }
+                cur = next;
+            }
             None => break,
         }
     }

@@ -31,11 +31,14 @@ pub enum Stat {
     VectorizedFallbacks,
     VectorizedShuffleBatches,
     VectorizedShuffleFallbacks,
+    AnalyzerErrors,
+    AnalyzerWarnings,
+    AnalyzerNotes,
 }
 
 impl Stat {
     /// Every counter, in [`StatsSnapshot`] field order.
-    pub const ALL: [Stat; 20] = [
+    pub const ALL: [Stat; 23] = [
         Stat::TasksLaunched,
         Stat::TasksRetried,
         Stat::RowsRead,
@@ -56,6 +59,9 @@ impl Stat {
         Stat::VectorizedFallbacks,
         Stat::VectorizedShuffleBatches,
         Stat::VectorizedShuffleFallbacks,
+        Stat::AnalyzerErrors,
+        Stat::AnalyzerWarnings,
+        Stat::AnalyzerNotes,
     ];
 
     /// Snake-case counter name (matches the exporter's metric suffixes).
@@ -81,6 +87,9 @@ impl Stat {
             Stat::VectorizedFallbacks => "vectorized_fallbacks",
             Stat::VectorizedShuffleBatches => "vectorized_shuffle_batches",
             Stat::VectorizedShuffleFallbacks => "vectorized_shuffle_fallbacks",
+            Stat::AnalyzerErrors => "analyzer_errors",
+            Stat::AnalyzerWarnings => "analyzer_warnings",
+            Stat::AnalyzerNotes => "analyzer_notes",
         }
     }
 }
@@ -126,6 +135,13 @@ pub struct EngineStats {
     /// transport (ragged input arity, a mixed-type column, or a key
     /// column index past the batch width)
     pub vectorized_shuffle_fallbacks: AtomicU64,
+    /// error-severity diagnostics from the static plan analyzer
+    /// ([`super::analyze`]; each one aborted a pipe before any task ran)
+    pub analyzer_errors: AtomicU64,
+    /// warning-severity analyzer diagnostics (executed anyway)
+    pub analyzer_warnings: AtomicU64,
+    /// note-severity analyzer diagnostics (advisory only)
+    pub analyzer_notes: AtomicU64,
 }
 
 impl EngineStats {
@@ -167,6 +183,9 @@ impl EngineStats {
             Stat::VectorizedFallbacks => &self.vectorized_fallbacks,
             Stat::VectorizedShuffleBatches => &self.vectorized_shuffle_batches,
             Stat::VectorizedShuffleFallbacks => &self.vectorized_shuffle_fallbacks,
+            Stat::AnalyzerErrors => &self.analyzer_errors,
+            Stat::AnalyzerWarnings => &self.analyzer_warnings,
+            Stat::AnalyzerNotes => &self.analyzer_notes,
         }
     }
 
@@ -194,6 +213,9 @@ impl EngineStats {
             vectorized_shuffle_fallbacks: self
                 .vectorized_shuffle_fallbacks
                 .load(Ordering::Relaxed),
+            analyzer_errors: self.analyzer_errors.load(Ordering::Relaxed),
+            analyzer_warnings: self.analyzer_warnings.load(Ordering::Relaxed),
+            analyzer_notes: self.analyzer_notes.load(Ordering::Relaxed),
         }
     }
 }
@@ -221,6 +243,9 @@ pub struct StatsSnapshot {
     pub vectorized_fallbacks: u64,
     pub vectorized_shuffle_batches: u64,
     pub vectorized_shuffle_fallbacks: u64,
+    pub analyzer_errors: u64,
+    pub analyzer_warnings: u64,
+    pub analyzer_notes: u64,
 }
 
 impl StatsSnapshot {
@@ -260,6 +285,9 @@ impl StatsSnapshot {
             Stat::VectorizedFallbacks => self.vectorized_fallbacks,
             Stat::VectorizedShuffleBatches => self.vectorized_shuffle_batches,
             Stat::VectorizedShuffleFallbacks => self.vectorized_shuffle_fallbacks,
+            Stat::AnalyzerErrors => self.analyzer_errors,
+            Stat::AnalyzerWarnings => self.analyzer_warnings,
+            Stat::AnalyzerNotes => self.analyzer_notes,
         }
     }
 
@@ -285,6 +313,9 @@ impl StatsSnapshot {
             Stat::VectorizedFallbacks => &mut self.vectorized_fallbacks,
             Stat::VectorizedShuffleBatches => &mut self.vectorized_shuffle_batches,
             Stat::VectorizedShuffleFallbacks => &mut self.vectorized_shuffle_fallbacks,
+            Stat::AnalyzerErrors => &mut self.analyzer_errors,
+            Stat::AnalyzerWarnings => &mut self.analyzer_warnings,
+            Stat::AnalyzerNotes => &mut self.analyzer_notes,
         }
     }
 

@@ -5,7 +5,12 @@
 //!                [--max-concurrent N]   # stage-parallel scheduler width (1 = serial)
 //!                [--trace-out trace.json]  # span tracing → Chrome trace + profile
 //!                                          # (implies DDP_TRACE=1 for this run)
+//!                [--explain]            # print static analysis of each sink plan
 //! ddp validate   --config pipeline.json
+//! ddp lint       --config pipeline.json [--json]
+//!                # build every pipe's plan over empty source anchors and run
+//!                # the static analyzer: schema inference, Expr type checks,
+//!                # lint rules — without reading any data
 //! ddp visualize  --config pipeline.json [--out graph.dot]
 //! ddp pipes                             # list the pipe repository (§3.8)
 //! ddp corpus     --docs N --out /tmp/docs.jsonl [--dup-rate R]
@@ -25,12 +30,13 @@ fn main() {
     let code = match args.positional.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&args),
         Some("validate") => cmd_validate(&args),
+        Some("lint") => cmd_lint(&args),
         Some("visualize") => cmd_visualize(&args),
         Some("pipes") => cmd_pipes(),
         Some("corpus") => cmd_corpus(&args),
         _ => {
             eprintln!(
-                "usage: ddp <run|validate|visualize|pipes|corpus> [--config FILE] [options]\n\
+                "usage: ddp <run|validate|lint|visualize|pipes|corpus> [--config FILE] [options]\n\
                  see README.md for details"
             );
             2
@@ -73,6 +79,196 @@ fn cmd_validate(args: &Args) -> i32 {
             eprintln!("INVALID: {e}");
             1
         }
+    }
+}
+
+/// `ddp lint`: run every pipe's plan-building logic over *empty* source
+/// anchors, then statically analyze the resulting lineage — schema/type
+/// inference, Expr checking and lint rules — without reading any data.
+/// Exit code 1 when any error-severity diagnostic (or pipe-level
+/// problem) is found, 0 otherwise.
+fn cmd_lint(args: &Args) -> i32 {
+    use ddp::engine::analyze;
+    use ddp::json::Value;
+
+    let spec = match load_spec(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let dag = match DataDag::build(&spec) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("INVALID: {e}");
+            return 1;
+        }
+    };
+    let json_out = args.has_flag("json") || args.opt("json").is_some();
+
+    // schema-only sandbox: transforms only build lazy lineage, so over
+    // empty anchors nothing is scanned and no real work is launched
+    let ctx = ddp::ddp::PipeContext::new(
+        ddp::engine::EngineCtx::new(EngineConfig { workers: 2, ..Default::default() }),
+        ddp::metrics::MetricsRegistry::new(),
+        Arc::new(IoRegistry::with_sim_cloud()),
+        ddp::util::clock::wall(),
+    );
+    let mut anchors: BTreeMap<String, ddp::engine::Dataset> = BTreeMap::new();
+    for id in &dag.sources {
+        let decl = &spec.data[id];
+        anchors.insert(
+            id.clone(),
+            ddp::engine::Dataset::from_rows(
+                id,
+                decl.schema.clone(),
+                vec![],
+                decl.partitions.max(1),
+            ),
+        );
+    }
+
+    let (mut errors, mut warnings, mut notes) = (0usize, 0usize, 0usize);
+    let mut pipe_reports: Vec<Value> = Vec::new();
+    for &i in &dag.order {
+        let decl = &spec.pipes[i];
+        // pipe-level problems that have no analyzer diagnostic form
+        // (unknown type, arity, transform failure)
+        let mut problems: Vec<String> = Vec::new();
+        let mut contract_diags: Vec<analyze::Diagnostic> = Vec::new();
+        let mut analyses: Vec<(String, analyze::Analysis, ddp::engine::Dataset)> = Vec::new();
+
+        let inputs: Option<Vec<ddp::engine::Dataset>> =
+            decl.input_data_ids.iter().map(|id| anchors.get(id).cloned()).collect();
+        match registry::GLOBAL.create(&decl.transformer_type, &decl.params) {
+            Err(e) => problems.push(e.to_string()),
+            Ok(pipe) => {
+                let contract = pipe.contract();
+                if let Some(arity) = contract.arity {
+                    if arity != decl.input_data_ids.len() {
+                        problems.push(format!(
+                            "pipe '{}' expects {arity} inputs, config wires {}",
+                            decl.name,
+                            decl.input_data_ids.len()
+                        ));
+                    }
+                }
+                for (pos, want) in contract.input_schemas.iter().enumerate() {
+                    let (Some(want), Some(input_id)) = (want, decl.input_data_ids.get(pos)) else {
+                        continue;
+                    };
+                    let have = &spec.data[input_id];
+                    if have.schema_declared {
+                        contract_diags.extend(analyze::check_contract(
+                            &decl.name,
+                            want,
+                            input_id,
+                            &have.schema,
+                        ));
+                    }
+                }
+                if problems.is_empty() && contract_diags.is_empty() {
+                    match inputs {
+                        None => problems.push(
+                            "input anchor unavailable (an upstream pipe failed to lint)"
+                                .to_string(),
+                        ),
+                        Some(inputs) => match pipe.transform(&ctx, &inputs) {
+                            Err(e) => problems.push(format!("transform failed: {e}")),
+                            Ok(outs) => {
+                                if outs.len() != decl.output_data_ids.len() {
+                                    problems.push(format!(
+                                        "produced {} outputs, config declares {}",
+                                        outs.len(),
+                                        decl.output_data_ids.len()
+                                    ));
+                                }
+                                for (out_id, ds) in decl.output_data_ids.iter().zip(outs) {
+                                    if spec.data[out_id].cache {
+                                        ctx.persist(&ds);
+                                    }
+                                    let a = analyze::analyze_with_lints(&ds, &|id| {
+                                        ctx.engine.cache.is_registered(id)
+                                    });
+                                    anchors.insert(out_id.clone(), ds.clone());
+                                    analyses.push((out_id.clone(), a, ds));
+                                }
+                            }
+                        },
+                    }
+                }
+            }
+        }
+
+        errors += problems.len()
+            + contract_diags.iter().filter(|d| d.severity == analyze::Severity::Error).count();
+        for (_, a, _) in &analyses {
+            errors += a.count(analyze::Severity::Error);
+            warnings += a.count(analyze::Severity::Warning);
+            notes += a.count(analyze::Severity::Note);
+        }
+
+        if json_out {
+            pipe_reports.push(Value::obj(vec![
+                ("pipe", Value::from(decl.name.as_str())),
+                ("transformerType", Value::from(decl.transformer_type.as_str())),
+                (
+                    "problems",
+                    Value::Arr(problems.iter().map(|p| Value::from(p.as_str())).collect()),
+                ),
+                (
+                    "contract",
+                    Value::Arr(contract_diags.iter().map(|d| d.to_json()).collect()),
+                ),
+                (
+                    "outputs",
+                    Value::Arr(
+                        analyses
+                            .iter()
+                            .map(|(id, a, _)| {
+                                Value::obj(vec![
+                                    ("id", Value::from(id.as_str())),
+                                    ("analysis", a.to_json()),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]));
+        } else {
+            println!("== pipe '{}' ({})", decl.name, decl.transformer_type);
+            for p in &problems {
+                println!("  problem: {p}");
+            }
+            for d in &contract_diags {
+                println!("  {d}");
+            }
+            for (id, a, ds) in &analyses {
+                println!("  -- output '{id}'");
+                for line in a.render(ds).lines() {
+                    println!("  {line}");
+                }
+            }
+        }
+    }
+
+    if json_out {
+        let report = Value::obj(vec![
+            ("pipeline", Value::from(spec.name.as_str())),
+            ("pipes", Value::Arr(pipe_reports)),
+            ("errors", Value::from(errors)),
+            ("warnings", Value::from(warnings)),
+            ("notes", Value::from(notes)),
+        ]);
+        println!("{}", ddp::json::to_string_pretty(&report));
+    } else {
+        println!("lint: {errors} error(s), {warnings} warning(s), {notes} note(s)");
+    }
+    if errors > 0 {
+        1
+    } else {
+        0
     }
 }
 
@@ -121,6 +317,8 @@ fn cmd_run(args: &Args) -> i32 {
             return 1;
         }
     };
+    let explain = args.has_flag("explain") || args.opt("explain").is_some();
+    let sink_ids = spec.sink_ids();
     let workers = args.opt_usize("workers", spec.settings.workers);
     // write the CLI worker count back so the auto (0) scheduler width
     // resolves against it, not the spec default
@@ -203,6 +401,17 @@ fn cmd_run(args: &Args) -> i32 {
                     }
                 }
                 println!("{}", engine.profile_report(10));
+            }
+            if explain {
+                for id in &sink_ids {
+                    if let Some(ds) = report.anchors.get(id) {
+                        let a = ddp::engine::analyze::analyze_with_lints(ds, &|aid| {
+                            engine.cache.is_registered(aid)
+                        });
+                        println!("-- static analysis: sink '{id}'");
+                        print!("{}", a.render(ds));
+                    }
+                }
             }
             0
         }

@@ -52,6 +52,9 @@ impl EngineMetricsExporter {
         m.counter_add("engine.vectorized_fallbacks", d.vectorized_fallbacks);
         m.counter_add("engine.vectorized_shuffle_batches", d.vectorized_shuffle_batches);
         m.counter_add("engine.vectorized_shuffle_fallbacks", d.vectorized_shuffle_fallbacks);
+        m.counter_add("engine.analyzer_errors", d.analyzer_errors);
+        m.counter_add("engine.analyzer_warnings", d.analyzer_warnings);
+        m.counter_add("engine.analyzer_notes", d.analyzer_notes);
         m.gauge_set(
             "engine.memory.reserved_bytes",
             engine.governor.reserved_bytes() as f64,

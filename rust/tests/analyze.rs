@@ -1,0 +1,488 @@
+//! Static plan analyzer integration suite:
+//!
+//! * differential property test — across ~100 randomly generated
+//!   *type-clean* DAGs, the inferred output schema matches execution
+//!   (row width equals inferred width, every field is admissible under
+//!   its inferred column type) for every {optimize} × {vectorize} cell,
+//!   and the analyzer emits zero error diagnostics;
+//! * broken-plan tests — out-of-range `Expr::Col`, join-key type
+//!   mismatches and string-vs-number comparisons produce structured
+//!   diagnostics (E001 / E005 / E003), and the engine surfaces
+//!   out-of-range columns as structured errors (never panics) on both
+//!   the row-wise and vectorized paths;
+//! * driver validate-then-execute — a pipe returning a broken plan is
+//!   rejected before any task launches; with `analyze: false` the same
+//!   plan reaches the engine and fails there with a structured error.
+
+use ddp::config::PipelineSpec;
+use ddp::ddp::{DriverConfig, Pipe, PipeContext, PipeRegistry, PipelineDriver};
+use ddp::engine::analyze::{self, Severity};
+use ddp::engine::expr::{BinOp, Expr};
+use ddp::engine::{
+    Dataset, EngineConfig, EngineCtx, Field, FieldType, JoinKind, Row, Schema,
+};
+use ddp::io::IoRegistry;
+use ddp::row;
+use ddp::util::error::Result;
+use ddp::util::testkit::{property, Gen};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------
+// type-clean random DAG generator
+// ---------------------------------------------------------------------
+//
+// Unlike the optimizer suite's generator (which deliberately includes
+// type-mismatched comparisons to exercise the `field_cmp → None` path),
+// every predicate here is well-typed so the analyzer must stay silent.
+
+fn base_source(g: &mut Gen, name: &str) -> Dataset {
+    let schema = Schema::new(vec![
+        ("id", FieldType::I64),
+        ("grp", FieldType::I64),
+        ("name", FieldType::Str),
+        ("score", FieldType::F64),
+    ]);
+    let n = 5 + g.usize(30);
+    let rows = (0..n)
+        .map(|_| {
+            row!(
+                g.i64(0, 30),
+                g.i64(0, 6),
+                g.ident(1, 6),
+                (g.i64(0, 100) as f64) / 10.0
+            )
+        })
+        .collect();
+    Dataset::from_rows(name, schema, rows, 1 + g.usize(4))
+}
+
+/// One comparison whose literal matches the column's declared type.
+fn clean_cmp(g: &mut Gen, schema: &Schema) -> Expr {
+    let i = g.usize(schema.len());
+    let (name, ty) = schema.field(i);
+    let col = Expr::Col(i, name.to_string());
+    let lit = match ty {
+        FieldType::Str => Expr::Lit(Field::Str(g.ident(1, 3))),
+        FieldType::I64 => Expr::Lit(Field::I64(g.i64(0, 30))),
+        _ => Expr::Lit(Field::F64((g.i64(0, 100) as f64) / 10.0)),
+    };
+    let op = match g.u64(6) {
+        0 => BinOp::Eq,
+        1 => BinOp::Ne,
+        2 => BinOp::Lt,
+        3 => BinOp::Le,
+        4 => BinOp::Gt,
+        _ => BinOp::Ge,
+    };
+    Expr::Binary(op, Box::new(col), Box::new(lit))
+}
+
+/// Arithmetic over a numeric column compared to a numeric literal, when
+/// the schema has one; falls back to a plain comparison.
+fn clean_arith_cmp(g: &mut Gen, schema: &Schema) -> Expr {
+    let nums: Vec<usize> = (0..schema.len())
+        .filter(|&i| matches!(schema.field_type(i), FieldType::I64 | FieldType::F64))
+        .collect();
+    if nums.is_empty() {
+        return clean_cmp(g, schema);
+    }
+    let i = nums[g.usize(nums.len())];
+    let col = Expr::Col(i, schema.field(i).0.to_string());
+    let sum = Expr::Binary(
+        BinOp::Add,
+        Box::new(col),
+        Box::new(Expr::Lit(Field::I64(g.i64(0, 5)))),
+    );
+    Expr::Binary(
+        BinOp::Ge,
+        Box::new(sum),
+        Box::new(Expr::Lit(Field::F64((g.i64(0, 40) as f64) / 4.0))),
+    )
+}
+
+fn clean_pred(g: &mut Gen, schema: &Schema) -> Expr {
+    let mut e = if g.u64(4) == 0 { clean_arith_cmp(g, schema) } else { clean_cmp(g, schema) };
+    for _ in 0..g.usize(3) {
+        let rhs = clean_cmp(g, schema);
+        let op = if g.bool() { BinOp::And } else { BinOp::Or };
+        e = Expr::Binary(op, Box::new(e), Box::new(rhs));
+    }
+    e
+}
+
+fn rand_project(g: &mut Gen, ds: &Dataset) -> Dataset {
+    let width = ds.schema.len();
+    let k = 1 + g.usize(width);
+    let mut remaining: Vec<usize> = (0..width).collect();
+    let mut picked = Vec::with_capacity(k);
+    for _ in 0..k {
+        picked.push(remaining.remove(g.usize(remaining.len())));
+    }
+    ds.project(picked)
+}
+
+fn rand_reduce(g: &mut Gen, ds: &Dataset) -> Dataset {
+    let width = ds.schema.len();
+    let kc = g.usize(width);
+    let f64_cols: Vec<usize> = (0..width)
+        .filter(|&i| i != kc && ds.schema.field_type(i) == FieldType::F64)
+        .collect();
+    let parts = 1 + g.usize(3);
+    if !f64_cols.is_empty() && g.bool() {
+        // type-preserving fold: sums an F64 column into itself
+        let vc = f64_cols[g.usize(f64_cols.len())];
+        ds.reduce_by_key_col(parts, kc, move |acc: Row, r: &Row| {
+            let mut fields = acc.fields;
+            let a = fields[vc].as_f64().unwrap_or(0.0);
+            let b = r.get(vc).as_f64().unwrap_or(0.0);
+            fields[vc] = Field::F64(a + b);
+            Row::new(fields)
+        })
+    } else {
+        ds.reduce_by_key_col(parts, kc, |acc: Row, _r: &Row| acc)
+    }
+}
+
+fn rand_join(g: &mut Gen, pool: &[Dataset]) -> Option<Dataset> {
+    let a = pool[g.usize(pool.len())].clone();
+    let b = pool[g.usize(pool.len())].clone();
+    if a.schema.len() + b.schema.len() > 12 {
+        return None;
+    }
+    let lcands: Vec<usize> = (0..a.schema.len())
+        .filter(|&i| a.schema.field_type(i) == FieldType::I64)
+        .collect();
+    let rcands: Vec<usize> = (0..b.schema.len())
+        .filter(|&i| b.schema.field_type(i) == FieldType::I64)
+        .collect();
+    if lcands.is_empty() || rcands.is_empty() {
+        return None;
+    }
+    let lk = lcands[g.usize(lcands.len())];
+    let rk = rcands[g.usize(rcands.len())];
+    let mut fields: Vec<(String, FieldType)> = Vec::new();
+    for (i, n) in a.schema.names().iter().enumerate() {
+        fields.push((format!("l{i}_{n}"), a.schema.field_type(i)));
+    }
+    for (i, n) in b.schema.names().iter().enumerate() {
+        fields.push((format!("r{i}_{n}"), b.schema.field_type(i)));
+    }
+    let out = Schema::new(fields.iter().map(|(n, t)| (n.as_str(), *t)).collect::<Vec<_>>());
+    let kind = if g.bool() { JoinKind::Inner } else { JoinKind::Left };
+    Some(a.join_on(&b, out, kind, 1 + g.usize(3), lk, rk))
+}
+
+fn rand_plan(g: &mut Gen) -> Dataset {
+    let mut pool: Vec<Dataset> = (0..1 + g.usize(2))
+        .map(|i| base_source(g, &format!("s{i}")))
+        .collect();
+    let ops = 3 + g.usize(6);
+    for _ in 0..ops {
+        let ds = pool[g.usize(pool.len())].clone();
+        let next = match g.u64(9) {
+            0 | 1 => ds.filter_expr(clean_pred(g, &ds.schema)),
+            2 => rand_project(g, &ds),
+            3 => ds.repartition(1 + g.usize(4)),
+            4 => ds.distinct(1 + g.usize(3)),
+            5 => rand_reduce(g, &ds),
+            6 => match rand_join(g, &pool) {
+                Some(j) => j,
+                None => ds.filter_expr(clean_pred(g, &ds.schema)),
+            },
+            7 => {
+                // identity map: an opaque node whose declared schema the
+                // analyzer must trust
+                ds.map(ds.schema.clone(), |r| r.clone())
+            }
+            _ => {
+                let partner = pool
+                    .iter()
+                    .find(|d| *d.schema == *ds.schema)
+                    .cloned()
+                    .unwrap_or_else(|| ds.clone());
+                ds.union(&[partner])
+            }
+        };
+        pool.push(next);
+    }
+    pool.last().unwrap().clone()
+}
+
+// ---------------------------------------------------------------------
+// differential property: inference vs execution
+// ---------------------------------------------------------------------
+
+#[test]
+fn differential_inferred_schema_matches_execution() {
+    property(100, |g| {
+        let plan = rand_plan(g);
+        let analysis = analyze::analyze(&plan);
+        assert!(
+            analysis.errors().next().is_none(),
+            "type-clean plan produced error diagnostics (case {}):\n{}\n  {}",
+            g.case,
+            plan.plan_display(),
+            analysis.error_summary()
+        );
+        let inferred = analysis.output.clone();
+        for (optimize, vectorize) in [(false, false), (false, true), (true, false), (true, true)] {
+            let c = EngineCtx::new(EngineConfig {
+                workers: 2,
+                optimize,
+                vectorize,
+                ..Default::default()
+            });
+            let rows = c.collect_rows(&plan).unwrap();
+            for r in &rows {
+                assert_eq!(
+                    r.len(),
+                    inferred.len(),
+                    "row width diverged from inferred width \
+                     (optimize={optimize} vectorize={vectorize}, case {})\nplan:\n{}",
+                    g.case,
+                    plan.plan_display()
+                );
+                for (i, ci) in inferred.iter().enumerate() {
+                    assert!(
+                        ci.ty.admits(r.get(i)),
+                        "col {i} ('{}': {}) does not admit {:?} \
+                         (optimize={optimize} vectorize={vectorize}, case {})\nplan:\n{}",
+                        ci.name,
+                        ci.ty,
+                        r.get(i),
+                        g.case,
+                        plan.plan_display()
+                    );
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// broken plans → structured diagnostics
+// ---------------------------------------------------------------------
+
+fn two_col_source() -> Dataset {
+    let schema = Schema::new(vec![("id", FieldType::I64), ("name", FieldType::Str)]);
+    let rows = (0..20).map(|i| row!(i as i64, format!("n{i}"))).collect();
+    Dataset::from_rows("src", schema, rows, 3)
+}
+
+fn oob_filter(ds: &Dataset, idx: usize) -> Dataset {
+    ds.filter_expr(Expr::Binary(
+        BinOp::Gt,
+        Box::new(Expr::Col(idx, "ghost".to_string())),
+        Box::new(Expr::Lit(Field::I64(0))),
+    ))
+}
+
+#[test]
+fn oob_col_index_is_e001() {
+    let plan = oob_filter(&two_col_source(), 7);
+    let a = analyze::analyze(&plan);
+    assert!(!a.is_clean());
+    let d = a.errors().next().unwrap();
+    assert_eq!(d.code, "E001");
+    assert_eq!(d.severity, Severity::Error);
+    assert!(d.message.contains("7"), "{}", d.message);
+}
+
+#[test]
+fn join_key_type_mismatch_is_e005() {
+    let l = two_col_source();
+    let r = Dataset::from_rows(
+        "r",
+        Schema::new(vec![("tag", FieldType::Str)]),
+        vec![row!("x")],
+        2,
+    );
+    let out = Schema::new(vec![
+        ("id", FieldType::I64),
+        ("name", FieldType::Str),
+        ("tag", FieldType::Str),
+    ]);
+    // I64 left key joined against a Str right key
+    let j = l.join_on(&r, out, JoinKind::Inner, 2, 0, 0);
+    let a = analyze::analyze(&j);
+    assert!(a.errors().any(|d| d.code == "E005"), "{:#?}", a.diagnostics);
+}
+
+#[test]
+fn string_vs_number_comparison_is_e003() {
+    let ds = two_col_source();
+    let plan = ds.filter_expr(Expr::Binary(
+        BinOp::Lt,
+        Box::new(Expr::Col(1, "name".to_string())),
+        Box::new(Expr::Lit(Field::I64(3))),
+    ));
+    let a = analyze::analyze(&plan);
+    assert!(a.errors().any(|d| d.code == "E003"), "{:#?}", a.diagnostics);
+}
+
+#[test]
+fn rewrite_delta_detects_schema_change() {
+    let ds = two_col_source();
+    assert!(analyze::rewrite_schema_delta(&ds, &ds).is_ok());
+    let narrower = ds.project(vec![0]);
+    assert!(analyze::rewrite_schema_delta(&ds, &narrower).is_err());
+}
+
+// ---------------------------------------------------------------------
+// engine-level guard: OOB columns error, never panic — both paths
+// ---------------------------------------------------------------------
+
+#[test]
+fn engine_oob_col_errors_on_row_and_batch_paths() {
+    let plan = oob_filter(&two_col_source(), 7);
+    for vectorize in [false, true] {
+        let c = EngineCtx::new(EngineConfig { workers: 2, vectorize, ..Default::default() });
+        let err = c.collect(&plan).err().unwrap().to_string();
+        assert!(err.contains("references column 7"), "vectorize={vectorize}: {err}");
+        assert!(err.contains("2 column(s)"), "vectorize={vectorize}: {err}");
+    }
+}
+
+#[test]
+fn engine_ragged_row_errors_not_panics() {
+    // from_rows does not validate row arity: the second row is one field
+    // short, so evaluating Col(1) on it used to index out of bounds
+    let schema = Schema::new(vec![("a", FieldType::I64), ("b", FieldType::I64)]);
+    let rows = vec![row!(1i64, 2i64), Row::new(vec![Field::I64(3)])];
+    let ds = Dataset::from_rows("ragged", schema, rows, 1);
+    let plan = ds.filter_expr(Expr::Binary(
+        BinOp::Gt,
+        Box::new(Expr::Col(1, "b".to_string())),
+        Box::new(Expr::Lit(Field::I64(0))),
+    ));
+    for vectorize in [false, true] {
+        let c = EngineCtx::new(EngineConfig { workers: 2, vectorize, ..Default::default() });
+        let err = c.collect(&plan).err().unwrap().to_string();
+        assert!(err.contains("references column 1"), "vectorize={vectorize}: {err}");
+        assert!(err.contains("1 column(s)"), "vectorize={vectorize}: {err}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// driver: validate-then-execute
+// ---------------------------------------------------------------------
+
+struct BrokenPlanPipe;
+
+impl Pipe for BrokenPlanPipe {
+    fn type_name(&self) -> &str {
+        "BrokenPlanPipe"
+    }
+    fn transform(&self, _: &PipeContext, inputs: &[Dataset]) -> Result<Vec<Dataset>> {
+        Ok(vec![oob_filter(&inputs[0], 9)])
+    }
+}
+
+struct NotedPlanPipe;
+
+impl Pipe for NotedPlanPipe {
+    fn type_name(&self) -> &str {
+        "NotedPlanPipe"
+    }
+    fn transform(&self, _: &PipeContext, inputs: &[Dataset]) -> Result<Vec<Dataset>> {
+        let ds = &inputs[0];
+        // FilterExpr over an opaque Map → N201 note, but no errors
+        let mapped = ds.map(ds.schema.clone(), |r| r.clone());
+        Ok(vec![mapped.filter_expr(Expr::Binary(
+            BinOp::Ge,
+            Box::new(Expr::Col(0, "id".to_string())),
+            Box::new(Expr::Lit(Field::I64(0))),
+        ))])
+    }
+}
+
+fn test_registry() -> PipeRegistry {
+    let reg = PipeRegistry::new();
+    reg.register("BrokenPlanPipe", |_| Ok(Box::new(BrokenPlanPipe)));
+    reg.register("NotedPlanPipe", |_| Ok(Box::new(NotedPlanPipe)));
+    reg
+}
+
+fn one_pipe_spec(ty: &str) -> PipelineSpec {
+    let text = format!(
+        r#"[{{"inputDataId": "In", "transformerType": "{ty}", "outputDataId": "Out"}}]"#
+    );
+    let mut spec = PipelineSpec::parse(&text).unwrap();
+    spec.settings.metrics_cadence_secs = 0.01;
+    spec
+}
+
+fn provided_input() -> BTreeMap<String, Dataset> {
+    let mut m = BTreeMap::new();
+    m.insert("In".to_string(), two_col_source());
+    m
+}
+
+#[test]
+fn driver_rejects_broken_plan_before_any_task() {
+    let driver = PipelineDriver::new(
+        one_pipe_spec("BrokenPlanPipe"),
+        test_registry(),
+        Arc::new(IoRegistry::with_sim_cloud()),
+        DriverConfig {
+            engine: EngineConfig { workers: 2, analyze: true, ..Default::default() },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let err = driver.run(provided_input()).err().unwrap().to_string();
+    assert!(err.contains("produced an invalid plan"), "{err}");
+    assert!(err.contains("E001"), "{err}");
+    let s = driver.ctx.engine.stats.snapshot();
+    assert_eq!(s.tasks_launched, 0, "no task may launch for a rejected plan");
+    assert!(s.analyzer_errors >= 1);
+}
+
+#[test]
+fn driver_analyze_off_defers_to_engine_guard() {
+    // with static analysis disabled the broken plan reaches the engine,
+    // which must fail with the structured out-of-range error (the Out
+    // anchor is stored, forcing materialization)
+    let text = r#"{
+      "data": [
+        {"id": "Out", "location": "s3://bucket/analyze_off_out.jsonl", "format": "jsonl"}
+      ],
+      "pipes": [
+        {"inputDataId": "In", "transformerType": "BrokenPlanPipe", "outputDataId": "Out"}
+      ]
+    }"#;
+    let mut spec = PipelineSpec::parse(text).unwrap();
+    spec.settings.metrics_cadence_secs = 0.01;
+    let driver = PipelineDriver::new(
+        spec,
+        test_registry(),
+        Arc::new(IoRegistry::with_sim_cloud()),
+        DriverConfig {
+            engine: EngineConfig { workers: 2, analyze: false, ..Default::default() },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let err = driver.run(provided_input()).err().unwrap().to_string();
+    assert!(err.contains("references column 9"), "{err}");
+}
+
+#[test]
+fn driver_runs_noted_plan_and_charges_counters() {
+    let driver = PipelineDriver::new(
+        one_pipe_spec("NotedPlanPipe"),
+        test_registry(),
+        Arc::new(IoRegistry::with_sim_cloud()),
+        DriverConfig {
+            engine: EngineConfig { workers: 2, analyze: true, ..Default::default() },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let report = driver.run(provided_input()).unwrap();
+    assert_eq!(report.pipes.len(), 1);
+    let s = driver.ctx.engine.stats.snapshot();
+    assert_eq!(s.analyzer_errors, 0);
+    assert!(s.analyzer_notes >= 1, "N201 should be charged");
+}
