@@ -1,0 +1,783 @@
+//! Real driver/worker distributed execution.
+//!
+//! Promotes the trace-fed [`super::cluster`] *simulator* into an actual
+//! multi-process mode: `ddp worker --listen <addr>` processes execute
+//! data-plane tasks the driver ships over TCP ([`super::net`] frames,
+//! colbin v2 row payloads — the spill wire format), and the driver
+//! partitions each eligible stage's tasks across the worker fleet.
+//!
+//! ## What ships, what stays local
+//!
+//! Plan nodes carry opaque Rust closures (`map`/`filter`/`flat_map`/
+//! `map_partitions`, reduce and comparator functions), which cannot
+//! cross a process boundary. The split is therefore *declarative data
+//! plane remote, control plane and closures local*:
+//!
+//! * **narrow stages** whose fused chain is entirely structured
+//!   ([`FilterExpr`](super::dataset::Plan::FilterExpr) /
+//!   [`Project`](super::dataset::Plan::Project)) ship as SQL text — the
+//!   pinned `Expr` display ↔ [`crate::pipes::sql::compile`] round-trip
+//!   is the serialization format, verified per stage before dispatch;
+//! * **shuffle map sides** keyed by whole-row hash (`distinct` /
+//!   `repartition`) or by a declared key column (`join_on`) ship rows
+//!   and receive hash buckets back — [`super::executor`]'s
+//!   deterministic `DefaultHasher`-based bucketing produces identical
+//!   bucket layouts in any process running this code;
+//! * everything else (reduce map-side combine, sort, opaque chains)
+//!   runs local and counts a `dist_fallbacks`.
+//!
+//! Output is **byte-identical** to single-process execution at any
+//! worker count because workers execute the same kernels over the same
+//! partitions and the driver preserves partition order end-to-end
+//! (proven differentially by `rust/tests/distributed.rs`).
+//!
+//! ## Worker loss
+//!
+//! The driver holds every shipped input partition, so a dead worker
+//! (connection error mid-call) costs nothing but a retry: the worker is
+//! marked dead, the task fails over to the next live worker — or to
+//! local execution when none remain — and the retry is charged to
+//! `tasks_retried` / `dist_workers_lost`. A *compute* error reported by
+//! a worker (an `ERR` frame) is deterministic and is NOT failed over:
+//! the task re-runs locally so the error surfaces exactly as a
+//! single-process run would surface it.
+
+use super::executor::{ColBound, Step};
+use super::expr::Expr;
+use super::net::{self, op};
+use super::row::{Row, Schema};
+use super::trace::{SpanKind, Tracer};
+use crate::json::Value;
+use crate::util::error::{DdpError, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+// ---------------------------------------------------------------------
+// worker side
+// ---------------------------------------------------------------------
+
+/// Worker behavior knobs (CLI-facing).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerOptions {
+    /// exit the process (simulating a crash) after serving this many
+    /// data-plane requests — the worker-loss test hook
+    pub fail_after: Option<u64>,
+}
+
+/// Serve data-plane requests on `listener` until the process exits.
+/// Each connection is handled on its own thread; a connection ends at
+/// EOF or an explicit [`op::SHUTDOWN`].
+pub fn serve(listener: TcpListener, opts: WorkerOptions) -> Result<()> {
+    let served = Arc::new(AtomicU64::new(0));
+    for conn in listener.incoming() {
+        let conn = conn?;
+        let served = served.clone();
+        std::thread::spawn(move || {
+            let _ = serve_conn(conn, &served, opts.fail_after);
+        });
+    }
+    Ok(())
+}
+
+fn serve_conn(mut conn: TcpStream, served: &AtomicU64, fail_after: Option<u64>) -> Result<()> {
+    conn.set_nodelay(true).ok();
+    loop {
+        let frame = match net::read_frame(&mut conn) {
+            Ok(f) => f,
+            Err(_) => return Ok(()), // peer hung up
+        };
+        match frame.op {
+            op::PING => net::write_frame(&mut conn, op::OK, &Value::obj(vec![]), &[])?,
+            op::SHUTDOWN => return Ok(()),
+            op::NARROW | op::BUCKET => {
+                if let Some(n) = fail_after {
+                    if served.fetch_add(1, Ordering::SeqCst) >= n {
+                        // simulate a worker crash mid-request: die without
+                        // responding, so the driver sees a dead connection
+                        eprintln!("ddp worker: injected failure (fail-after reached)");
+                        std::process::exit(3);
+                    }
+                }
+                let out = if frame.op == op::NARROW {
+                    handle_narrow(&frame.header, &frame.payload)
+                } else {
+                    handle_bucket(&frame.header, &frame.payload)
+                };
+                match out {
+                    Ok((header, payload)) => {
+                        net::write_frame(&mut conn, op::OK, &header, &payload)?
+                    }
+                    Err(e) => net::write_frame(
+                        &mut conn,
+                        op::ERR,
+                        &Value::obj(vec![("msg", Value::str(e.to_string()))]),
+                        &[],
+                    )?,
+                }
+            }
+            other => net::write_frame(
+                &mut conn,
+                op::ERR,
+                &Value::obj(vec![("msg", Value::str(format!("unknown opcode {other}")))]),
+                &[],
+            )?,
+        }
+    }
+}
+
+/// Execute a shipped structured narrow chain over the payload rows.
+fn handle_narrow(header: &Value, payload: &[u8]) -> Result<(Value, Vec<u8>)> {
+    let data = header
+        .get("data")
+        .ok_or_else(|| DdpError::format("net", "narrow request missing 'data'"))?;
+    let rows = net::blob_to_rows(data, payload)?;
+    let steps = parse_steps(header)?;
+    let out = if header.bool_or("vectorize", true) {
+        super::executor::apply_chain_vectorized(&rows, &steps)?
+    } else {
+        super::executor::ChainOut::rows_only(super::executor::apply_chain_fused(&rows, &steps)?)
+    };
+    let blob = net::rows_to_blob(&out.rows)?;
+    let header = Value::obj(vec![
+        ("data", blob.meta),
+        ("vec_batches", Value::num(out.vec_batches as f64)),
+        ("vec_fallbacks", Value::num(out.vec_fallbacks as f64)),
+    ]);
+    Ok((header, blob.bytes))
+}
+
+/// Hash-bucket the payload rows: whole-row key when `key_col` is null,
+/// the declared key column otherwise. Bucket layout is identical to the
+/// driver's local map side — both run [`super::executor::bucket_of`]
+/// over the same deterministic hash.
+fn handle_bucket(header: &Value, payload: &[u8]) -> Result<(Value, Vec<u8>)> {
+    let data = header
+        .get("data")
+        .ok_or_else(|| DdpError::format("net", "bucket request missing 'data'"))?;
+    let rows = net::blob_to_rows(data, payload)?;
+    let num_parts = header.u64_or("num_parts", 0) as usize;
+    if num_parts == 0 {
+        return Err(DdpError::format("net", "bucket request with num_parts=0"));
+    }
+    let key_col = header.get("key_col").and_then(|v| v.as_u64()).map(|v| v as usize);
+    let mut buckets: Vec<Vec<Row>> = (0..num_parts).map(|_| Vec::new()).collect();
+    for row in rows {
+        let b = match key_col {
+            Some(kc) => {
+                if kc >= row.len() {
+                    // the local row path would panic on this access; fail
+                    // structured so the driver reproduces the error locally
+                    return Err(DdpError::format(
+                        "net",
+                        format!("key column {kc} out of range for row of width {}", row.len()),
+                    ));
+                }
+                super::executor::bucket_of(row.get(kc), num_parts)
+            }
+            None => super::executor::bucket_of(&super::executor::whole_row_key(&row), num_parts),
+        };
+        buckets[b].push(row);
+    }
+    let (metas, payload) = net::buckets_to_payload(&buckets)?;
+    Ok((Value::obj(vec![("buckets", Value::Arr(metas))]), payload))
+}
+
+/// Rebuild the executor's step list from a shipped description. The
+/// per-step [`ColBound`] travels with the step so an out-of-range
+/// column reference raises the *same* structured error text on a
+/// worker as it would locally.
+fn parse_steps(header: &Value) -> Result<Vec<Step>> {
+    let steps = header
+        .get("steps")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| DdpError::format("net", "narrow request missing 'steps'"))?;
+    let mut out = Vec::with_capacity(steps.len());
+    for s in steps {
+        let bound = parse_bound(s);
+        match s.str_or("t", "").as_str() {
+            "filter" => {
+                let src = s
+                    .get("expr")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| DdpError::format("net", "filter step missing 'expr'"))?
+                    .to_string();
+                let names = s.get_string_list("names");
+                let refs: Vec<&str> = names.iter().map(|n| n.as_str()).collect();
+                let schema = Schema::of_names(&refs);
+                let expr = crate::pipes::sql::compile(&src, &schema)?;
+                out.push(Step::FilterExpr(Arc::new(expr), bound));
+            }
+            "project" => {
+                let cols: Vec<usize> = s
+                    .get("cols")
+                    .and_then(|v| v.as_arr())
+                    .map(|a| a.iter().filter_map(|v| v.as_u64()).map(|v| v as usize).collect())
+                    .unwrap_or_default();
+                out.push(Step::Project(cols, bound));
+            }
+            other => {
+                return Err(DdpError::format("net", format!("unknown step type '{other}'")))
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn parse_bound(s: &Value) -> Option<ColBound> {
+    let b = s.get("bound")?;
+    Some(ColBound {
+        idx: b.u64_or("idx", 0) as usize,
+        name: b.str_or("name", "?"),
+        // `op` is a &'static str in the bound error message — map the
+        // wire string back onto the two statics the driver can send
+        op: if b.str_or("op", "") == "projection" { "projection" } else { "filter predicate" },
+    })
+}
+
+fn bound_to_json(bound: &ColBound) -> Value {
+    Value::obj(vec![
+        ("idx", Value::num(bound.idx as f64)),
+        ("name", Value::str(bound.name.clone())),
+        ("op", Value::str(bound.op)),
+    ])
+}
+
+// ---------------------------------------------------------------------
+// shipping eligibility (driver side)
+// ---------------------------------------------------------------------
+
+/// A narrow stage's wire description — built once per stage, reused by
+/// every task. `try_build` returns `None` when the chain cannot ship
+/// (opaque closures, or an expression whose SQL round-trip is not
+/// verified exact), in which case the stage runs local.
+pub(crate) struct NarrowDesc {
+    steps: Vec<Value>,
+    vectorize: bool,
+}
+
+impl NarrowDesc {
+    pub(crate) fn try_build(steps: &[Step], vectorize: bool) -> Option<NarrowDesc> {
+        if steps.is_empty() {
+            return None;
+        }
+        let mut shipped = Vec::with_capacity(steps.len());
+        for step in steps {
+            match step {
+                Step::FilterExpr(e, bound) => {
+                    let names = reference_schema(e)?;
+                    // the shipping format IS the pinned display ↔ compile
+                    // round-trip; verify it reproduces this exact AST
+                    // before trusting it with the stage
+                    let printed = e.to_string();
+                    let schema =
+                        Schema::of_names(&names.iter().map(|n| n.as_str()).collect::<Vec<_>>());
+                    match crate::pipes::sql::compile(&printed, &schema) {
+                        Ok(back) if back == **e => {}
+                        _ => return None,
+                    }
+                    let mut pairs = vec![
+                        ("t", Value::str("filter")),
+                        ("expr", Value::str(printed)),
+                        ("names", Value::Arr(names.into_iter().map(Value::str).collect())),
+                    ];
+                    if let Some(b) = bound {
+                        pairs.push(("bound", bound_to_json(b)));
+                    }
+                    shipped.push(Value::obj(pairs));
+                }
+                Step::Project(cols, bound) => {
+                    let mut pairs = vec![
+                        ("t", Value::str("project")),
+                        (
+                            "cols",
+                            Value::Arr(cols.iter().map(|&c| Value::num(c as f64)).collect()),
+                        ),
+                    ];
+                    if let Some(b) = bound {
+                        pairs.push(("bound", bound_to_json(b)));
+                    }
+                    shipped.push(Value::obj(pairs));
+                }
+                _ => return None, // opaque closure — cannot ship
+            }
+        }
+        Some(NarrowDesc { steps: shipped, vectorize })
+    }
+
+    fn request_header(&self, data_meta: Value) -> Value {
+        Value::obj(vec![
+            ("data", data_meta),
+            ("steps", Value::Arr(self.steps.clone())),
+            ("vectorize", Value::Bool(self.vectorize)),
+        ])
+    }
+}
+
+/// Build a synthetic schema under which `compile(e.to_string())`
+/// resolves every column reference back to its original index: each
+/// referenced name is placed at its index, gaps are padded with names
+/// that cannot collide. `None` when the expression's references are
+/// ambiguous (one name at two indices, or two names at one index —
+/// possible under duplicate-column schemas, W101).
+fn reference_schema(e: &Expr) -> Option<Vec<String>> {
+    let mut refs: Vec<(usize, String)> = Vec::new();
+    collect_cols(e, &mut refs);
+    let width = refs.iter().map(|(i, _)| i + 1).max().unwrap_or(0);
+    let mut names: Vec<Option<String>> = vec![None; width];
+    for (i, n) in refs {
+        match &names[i] {
+            None => names[i] = Some(n),
+            Some(existing) if *existing == n => {}
+            Some(_) => return None, // two names claim one index
+        }
+    }
+    let used: std::collections::BTreeSet<&String> =
+        names.iter().flatten().collect::<std::collections::BTreeSet<_>>();
+    if used.len() != names.iter().flatten().count() {
+        return None; // one name claims two indices
+    }
+    let mut out = Vec::with_capacity(width);
+    for (i, slot) in names.iter().enumerate() {
+        match slot {
+            Some(n) => out.push(n.clone()),
+            None => {
+                let mut pad = format!("__ddp_pad_{i}");
+                while used.contains(&pad) {
+                    pad.push('_');
+                }
+                out.push(pad);
+            }
+        }
+    }
+    Some(out)
+}
+
+fn collect_cols(e: &Expr, out: &mut Vec<(usize, String)>) {
+    match e {
+        Expr::Lit(_) => {}
+        Expr::Col(i, n) => out.push((*i, n.clone())),
+        Expr::Unary(_, x) => collect_cols(x, out),
+        Expr::Binary(_, a, b) => {
+            collect_cols(a, out);
+            collect_cols(b, out);
+        }
+        Expr::Call(_, args) => {
+            for a in args {
+                collect_cols(a, out);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// driver side
+// ---------------------------------------------------------------------
+
+/// Per-task distribution counters, merged driver-side into
+/// [`super::stats::EngineStats`] after task collection (the same
+/// aggregate-then-charge pattern the vectorization counters use).
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct DistCounters {
+    /// 1 when the task's work executed on a remote worker
+    pub remote: u64,
+    /// request bytes shipped to workers (frames included)
+    pub tx: u64,
+    /// response bytes received from workers
+    pub rx: u64,
+    /// failovers after a worker connection died mid-task
+    pub retried: u64,
+    /// workers newly declared dead by this task
+    pub lost: u64,
+}
+
+impl DistCounters {
+    pub(crate) fn merge(&mut self, other: &DistCounters) {
+        self.remote += other.remote;
+        self.tx += other.tx;
+        self.rx += other.rx;
+        self.retried += other.retried;
+        self.lost += other.lost;
+    }
+}
+
+struct WorkerConn {
+    addr: String,
+    stream: Mutex<Option<TcpStream>>,
+    dead: AtomicBool,
+}
+
+/// A fleet of connected worker processes. Tasks are assigned round-robin
+/// by task index; a worker whose connection dies is marked dead and its
+/// tasks fail over to survivors (or to local execution). Spawned-local
+/// children are killed when the pool drops; they also watch their stdin
+/// and exit on EOF, so an abnormal driver exit cannot leak workers.
+pub struct WorkerPool {
+    workers: Vec<WorkerConn>,
+    children: Mutex<Vec<Child>>,
+}
+
+impl WorkerPool {
+    /// Connect to already-running workers at `addrs`.
+    pub fn connect(addrs: &[String]) -> Result<WorkerPool> {
+        let mut workers = Vec::with_capacity(addrs.len());
+        for addr in addrs {
+            let stream = TcpStream::connect(addr)
+                .map_err(|e| DdpError::format("net", format!("connect {addr}: {e}")))?;
+            stream.set_nodelay(true).ok();
+            workers.push(WorkerConn {
+                addr: addr.clone(),
+                stream: Mutex::new(Some(stream)),
+                dead: AtomicBool::new(false),
+            });
+        }
+        Ok(WorkerPool { workers, children: Mutex::new(Vec::new()) })
+    }
+
+    /// Spawn `n` local worker processes from the `ddp` binary at `bin`
+    /// and connect to them. `fail_first_after`: pass `--fail-after N` to
+    /// worker 0 only (the worker-loss test hook).
+    pub fn spawn_local(bin: &Path, n: usize, fail_first_after: Option<u64>) -> Result<WorkerPool> {
+        let mut children = Vec::with_capacity(n);
+        let mut addrs = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut cmd = Command::new(bin);
+            cmd.arg("worker").arg("--listen").arg("127.0.0.1:0");
+            if i == 0 {
+                if let Some(k) = fail_first_after {
+                    cmd.arg("--fail-after").arg(k.to_string());
+                }
+            }
+            cmd.stdin(Stdio::piped()).stdout(Stdio::piped()).stderr(Stdio::inherit());
+            let mut child = cmd.spawn().map_err(|e| {
+                DdpError::format("net", format!("spawn worker {}: {e}", bin.display()))
+            })?;
+            let stdout = child.stdout.take().expect("stdout piped");
+            let mut line = String::new();
+            BufReader::new(stdout).read_line(&mut line)?;
+            let addr = line
+                .trim()
+                .strip_prefix("LISTENING ")
+                .ok_or_else(|| {
+                    DdpError::format("net", format!("worker did not announce address: {line:?}"))
+                })?
+                .to_string();
+            children.push(child);
+            addrs.push(addr);
+        }
+        let mut pool = WorkerPool::connect(&addrs)?;
+        pool.children = Mutex::new(children);
+        Ok(pool)
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn live_workers(&self) -> usize {
+        self.workers.iter().filter(|w| !w.dead.load(Ordering::SeqCst)).count()
+    }
+
+    pub fn addrs(&self) -> Vec<String> {
+        self.workers.iter().map(|w| w.addr.clone()).collect()
+    }
+
+    /// One request/response on worker `w`'s connection. Any IO failure
+    /// poisons the connection (a half-written frame cannot be resumed).
+    fn call_once(
+        &self,
+        w: usize,
+        opcode: u8,
+        header: &Value,
+        payload: &[u8],
+    ) -> Result<net::Frame> {
+        let mut guard = self.workers[w].stream.lock().unwrap();
+        let stream = guard
+            .as_mut()
+            .ok_or_else(|| DdpError::format("net", "connection previously failed"))?;
+        let out = net::write_frame(stream, opcode, header, payload)
+            .and_then(|()| net::read_frame(stream));
+        if out.is_err() {
+            *guard = None;
+        }
+        out
+    }
+
+    /// Dispatch with failover: try the task's round-robin worker, then
+    /// every other live worker. `Ok(None)` = no live workers (caller
+    /// computes locally). `Err` = a worker *reported* a compute error —
+    /// deterministic, so the caller re-runs locally to surface it
+    /// exactly as a single-process run would.
+    fn call_failover(
+        &self,
+        tracer: &Arc<Tracer>,
+        task_idx: usize,
+        opcode: u8,
+        header: &Value,
+        payload: &[u8],
+        d: &mut DistCounters,
+    ) -> Result<Option<net::Frame>> {
+        let n = self.workers.len();
+        let req_bytes = payload.len() as u64 + 64; // frame + header overhead, approx
+        for k in 0..n {
+            let w = (task_idx + k) % n;
+            if self.workers[w].dead.load(Ordering::SeqCst) {
+                continue;
+            }
+            // one span per attempt, named by worker — `stage_rollup()`
+            // then attributes wall-clock to real workers, not simulated
+            // lanes
+            let span = tracer.begin(SpanKind::Stage, || format!("worker#{w}"), None);
+            let _scope = tracer.scope(span);
+            match self.call_once(w, opcode, header, payload) {
+                Ok(frame) if frame.op == op::OK => {
+                    d.remote += 1;
+                    d.tx += req_bytes;
+                    d.rx += frame.payload.len() as u64 + 64;
+                    return Ok(Some(frame));
+                }
+                Ok(frame) => {
+                    let msg = frame.header.str_or("msg", "unknown worker error");
+                    return Err(DdpError::format("net", format!("worker {w}: {msg}")));
+                }
+                Err(_) => {
+                    // connection died — declare the worker lost and fail
+                    // the task over (lineage: the driver still holds the
+                    // input partition)
+                    if !self.workers[w].dead.swap(true, Ordering::SeqCst) {
+                        d.lost += 1;
+                        log::warn!("worker {} ({}) lost; failing over", w, self.workers[w].addr);
+                    }
+                    d.retried += 1;
+                }
+            }
+        }
+        Ok(None)
+    }
+
+    /// Remote narrow-chain execution. `Ok(None)` = run locally.
+    pub(crate) fn narrow(
+        &self,
+        tracer: &Arc<Tracer>,
+        task_idx: usize,
+        rows: &[Row],
+        desc: &NarrowDesc,
+        d: &mut DistCounters,
+    ) -> Result<Option<(Vec<Row>, u64, u64)>> {
+        let blob = net::rows_to_blob(rows)?;
+        let header = desc.request_header(blob.meta);
+        match self.call_failover(tracer, task_idx, op::NARROW, &header, &blob.bytes, d)? {
+            None => Ok(None),
+            Some(frame) => {
+                let data = frame
+                    .header
+                    .get("data")
+                    .ok_or_else(|| DdpError::format("net", "narrow response missing 'data'"))?;
+                let rows = net::blob_to_rows(data, &frame.payload)?;
+                Ok(Some((
+                    rows,
+                    frame.header.u64_or("vec_batches", 0),
+                    frame.header.u64_or("vec_fallbacks", 0),
+                )))
+            }
+        }
+    }
+
+    /// Remote shuffle map side: hash-bucket `rows` into `num_parts`
+    /// buckets by whole-row hash (`key_col: None`) or by a declared key
+    /// column. `Ok(None)` = run locally.
+    pub(crate) fn bucket(
+        &self,
+        tracer: &Arc<Tracer>,
+        task_idx: usize,
+        rows: &[Row],
+        num_parts: usize,
+        key_col: Option<usize>,
+        d: &mut DistCounters,
+    ) -> Result<Option<Vec<Vec<Row>>>> {
+        let blob = net::rows_to_blob(rows)?;
+        let mut pairs = vec![
+            ("data", blob.meta),
+            ("num_parts", Value::num(num_parts as f64)),
+        ];
+        if let Some(kc) = key_col {
+            pairs.push(("key_col", Value::num(kc as f64)));
+        }
+        let header = Value::obj(pairs);
+        match self.call_failover(tracer, task_idx, op::BUCKET, &header, &blob.bytes, d)? {
+            None => Ok(None),
+            Some(frame) => {
+                let metas = frame
+                    .header
+                    .get("buckets")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| DdpError::format("net", "bucket response missing 'buckets'"))?;
+                let buckets = net::payload_to_buckets(metas, &frame.payload)?;
+                if buckets.len() != num_parts {
+                    return Err(DdpError::format(
+                        "net",
+                        format!("worker returned {} buckets, expected {num_parts}", buckets.len()),
+                    ));
+                }
+                Ok(Some(buckets))
+            }
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            // best-effort orderly goodbye before the kill
+            if let Some(mut s) = w.stream.lock().unwrap().take() {
+                let _ = net::write_frame(&mut s, op::SHUTDOWN, &Value::obj(vec![]), &[]);
+                let _ = s.flush();
+            }
+        }
+        for child in self.children.lock().unwrap().iter_mut() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// configuration plumbing
+// ---------------------------------------------------------------------
+
+/// Locate the `ddp` binary for spawn-local workers: explicit config,
+/// `DDP_WORKER_BIN`, the current executable when it *is* `ddp`, or a
+/// `ddp` sibling of the current executable (covers `target/<profile>/
+/// examples/<name>` via the parent directory).
+pub fn resolve_worker_binary(explicit: Option<&Path>) -> Option<PathBuf> {
+    if let Some(p) = explicit {
+        return Some(p.to_path_buf());
+    }
+    if let Ok(p) = std::env::var("DDP_WORKER_BIN") {
+        return Some(PathBuf::from(p));
+    }
+    let exe = std::env::current_exe().ok()?;
+    if exe.file_stem().is_some_and(|s| s == "ddp") {
+        return Some(exe);
+    }
+    let candidates = [
+        exe.parent()?.join("ddp"),
+        exe.parent()?.parent()?.join("ddp"),
+    ];
+    candidates.into_iter().find(|c| c.is_file())
+}
+
+/// Build (or fetch) the worker pool a config asks for. Spawned-from-env
+/// pools are shared process-wide — the env is constant for the process,
+/// and workers are stateless per-request, so every context in a test
+/// run reuses one fleet instead of forking per context.
+pub(crate) fn pool_from_config(cfg: &super::executor::EngineConfig) -> Option<Arc<WorkerPool>> {
+    if !cfg.remote_workers.is_empty() {
+        match WorkerPool::connect(&cfg.remote_workers) {
+            Ok(p) => return Some(Arc::new(p)),
+            Err(e) => {
+                log::warn!("remote workers unavailable ({e}); running single-process");
+                return None;
+            }
+        }
+    }
+    if cfg.spawn_workers > 0 {
+        static SHARED: OnceLock<Option<Arc<WorkerPool>>> = OnceLock::new();
+        return SHARED
+            .get_or_init(|| {
+                let bin = resolve_worker_binary(cfg.worker_binary.as_deref())?;
+                match WorkerPool::spawn_local(&bin, cfg.spawn_workers, None) {
+                    Ok(p) => Some(Arc::new(p)),
+                    Err(e) => {
+                        log::warn!("could not spawn workers ({e}); running single-process");
+                        None
+                    }
+                }
+            })
+            .clone();
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::executor::Step;
+    use crate::engine::expr::{BinOp, Expr};
+    use crate::engine::row::Field;
+    use crate::row;
+    use std::sync::Arc;
+
+    fn col(i: usize, n: &str) -> Expr {
+        Expr::Col(i, n.to_string())
+    }
+
+    #[test]
+    fn narrow_desc_ships_structured_chains_only() {
+        let e = Expr::Binary(
+            BinOp::Gt,
+            Box::new(col(1, "score")),
+            Box::new(Expr::Lit(Field::F64(0.5))),
+        );
+        let steps =
+            vec![Step::FilterExpr(Arc::new(e), None), Step::Project(vec![1, 0], None)];
+        assert!(NarrowDesc::try_build(&steps, true).is_some());
+
+        let opaque = vec![Step::Map(Arc::new(|r: &crate::engine::row::Row| r.clone()))];
+        assert!(NarrowDesc::try_build(&opaque, true).is_none());
+        assert!(NarrowDesc::try_build(&[], true).is_none());
+    }
+
+    #[test]
+    fn reference_schema_rejects_ambiguous_names() {
+        // same name at two indices: compile() could not tell them apart
+        let e = Expr::Binary(BinOp::And, Box::new(col(0, "x")), Box::new(col(2, "x")));
+        assert!(reference_schema(&e).is_none());
+        // distinct names at distinct indices: fine, gaps padded
+        let e = Expr::Binary(BinOp::And, Box::new(col(0, "a")), Box::new(col(2, "b")));
+        let names = reference_schema(&e).unwrap();
+        assert_eq!(names.len(), 3);
+        assert_eq!(names[0], "a");
+        assert_eq!(names[2], "b");
+    }
+
+    #[test]
+    fn in_process_worker_round_trip() {
+        // a real TCP worker on a thread: narrow + bucket round trips
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            let _ = serve(listener, WorkerOptions::default());
+        });
+        let pool = WorkerPool::connect(&[addr]).unwrap();
+        let tracer = Tracer::new(false);
+        let mut d = DistCounters::default();
+
+        let e = Expr::Binary(
+            BinOp::Gt,
+            Box::new(col(0, "x")),
+            Box::new(Expr::Lit(Field::I64(2))),
+        );
+        let steps = vec![Step::FilterExpr(Arc::new(e), None)];
+        let desc = NarrowDesc::try_build(&steps, true).unwrap();
+        let rows = vec![row!(1i64), row!(3i64), row!(5i64)];
+        let (out, _, _) =
+            pool.narrow(&tracer, 0, &rows, &desc, &mut d).unwrap().expect("worker alive");
+        assert_eq!(out, vec![row!(3i64), row!(5i64)]);
+        assert_eq!(d.remote, 1);
+
+        let buckets = pool
+            .bucket(&tracer, 1, &rows, 4, Some(0), &mut d)
+            .unwrap()
+            .expect("worker alive");
+        assert_eq!(buckets.len(), 4);
+        let mut local: Vec<Vec<crate::engine::row::Row>> = vec![Vec::new(); 4];
+        for r in &rows {
+            local[super::super::executor::bucket_of(r.get(0), 4)].push(r.clone());
+        }
+        assert_eq!(buckets, local);
+    }
+}

@@ -18,6 +18,7 @@
 
 use super::cache::CacheManager;
 use super::dataset::{Dataset, JoinKind, PartRef, Partitioned, Plan};
+use super::distributed::{DistCounters, NarrowDesc, WorkerPool};
 use super::expr;
 use super::fault::FaultInjector;
 use super::memory::{self, MemoryGovernor};
@@ -84,6 +85,19 @@ pub struct EngineConfig {
     /// no per-row/per-batch work either way. Default honours the
     /// `DDP_ANALYZE` env var — `0`/`false` disables.
     pub analyze: bool,
+    /// addresses of already-running `ddp worker` processes to dispatch
+    /// eligible tasks to ([`super::distributed`]). Empty = no remote
+    /// dispatch. Default honours `DDP_WORKERS_REMOTE` (comma-separated
+    /// `host:port` list).
+    pub remote_workers: Vec<String>,
+    /// spawn this many local `ddp worker` processes and dispatch to
+    /// them (ignored when `remote_workers` is non-empty). Default
+    /// honours `DDP_SPAWN_WORKERS`.
+    pub spawn_workers: usize,
+    /// path to the `ddp` binary used for spawned workers; default
+    /// honours `DDP_WORKER_BIN`, then falls back to the current
+    /// executable (see [`super::distributed::resolve_worker_binary`]).
+    pub worker_binary: Option<std::path::PathBuf>,
 }
 
 impl Default for EngineConfig {
@@ -111,6 +125,21 @@ impl Default for EngineConfig {
             analyze: std::env::var("DDP_ANALYZE")
                 .map(|v| v != "0" && !v.eq_ignore_ascii_case("false"))
                 .unwrap_or(true),
+            remote_workers: std::env::var("DDP_WORKERS_REMOTE")
+                .map(|v| {
+                    v.split(',')
+                        .map(|s| s.trim().to_string())
+                        .filter(|s| !s.is_empty())
+                        .collect()
+                })
+                .unwrap_or_default(),
+            spawn_workers: std::env::var("DDP_SPAWN_WORKERS")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(0),
+            worker_binary: std::env::var("DDP_WORKER_BIN")
+                .ok()
+                .map(std::path::PathBuf::from),
         }
     }
 }
@@ -143,6 +172,9 @@ pub struct EngineCtx {
     pub spill: Arc<SpillDir>,
     /// span recorder ([`super::trace`]; inert unless `cfg.trace`)
     pub tracer: Arc<Tracer>,
+    /// worker fleet for real multi-process dispatch
+    /// ([`super::distributed`]); `None` = single-process
+    pub(crate) dist: Option<Arc<WorkerPool>>,
     trace: Mutex<TaskTrace>,
     rewrites: Mutex<RewriteCounts>,
 }
@@ -156,7 +188,22 @@ impl EngineCtx {
         EngineCtx::build(cfg, Some(Arc::new(fault)))
     }
 
+    /// Context with an explicit worker fleet (tests and examples; the
+    /// env-driven path is `cfg.remote_workers` / `cfg.spawn_workers`).
+    pub fn with_workers(cfg: EngineConfig, pool: Arc<WorkerPool>) -> Arc<EngineCtx> {
+        EngineCtx::build_with(cfg, None, Some(pool))
+    }
+
     fn build(cfg: EngineConfig, fault: Option<Arc<FaultInjector>>) -> Arc<EngineCtx> {
+        let dist = super::distributed::pool_from_config(&cfg);
+        EngineCtx::build_with(cfg, fault, dist)
+    }
+
+    fn build_with(
+        cfg: EngineConfig,
+        fault: Option<Arc<FaultInjector>>,
+        dist: Option<Arc<WorkerPool>>,
+    ) -> Arc<EngineCtx> {
         let governor = Arc::new(MemoryGovernor::new(cfg.memory_budget_bytes));
         let spill = Arc::new(SpillDir::new(cfg.spill_dir.clone()));
         let tracer = Tracer::new(cfg.trace);
@@ -173,10 +220,16 @@ impl EngineCtx {
             governor,
             spill,
             tracer,
+            dist,
             trace: Mutex::new(Vec::new()),
             rewrites: Mutex::new(RewriteCounts::default()),
             cfg,
         })
+    }
+
+    /// The worker fleet this context dispatches to, if any.
+    pub fn worker_pool(&self) -> Option<Arc<WorkerPool>> {
+        self.dist.clone()
     }
 
     /// Charge one counter globally *and* to the thread's current span —
@@ -415,31 +468,61 @@ impl EngineCtx {
         let steps = Arc::new(steps);
         let fusion = self.cfg.fusion;
         let vectorize = self.cfg.vectorize;
+        // a structured chain (all FilterExpr/Project) can execute on a
+        // remote worker; opaque closures cannot cross the process
+        // boundary, so those stages stay local and count a fallback
+        let desc = match &self.dist {
+            Some(_) if fusion => NarrowDesc::try_build(&steps, vectorize).map(Arc::new),
+            _ => None,
+        };
+        if self.dist.is_some() && desc.is_none() {
+            self.charge(Stat::DistFallbacks, 1);
+        }
         let tasks: Vec<_> = input
             .parts
             .iter()
-            .map(|part| {
+            .enumerate()
+            .map(|(ti, part)| {
                 let part = part.clone();
                 let steps = steps.clone();
+                let pool = desc.as_ref().and_then(|_| self.dist.clone());
+                let desc = desc.clone();
+                let tracer = self.tracer.clone();
                 move || -> Result<ChainOut> {
-                    if fusion && vectorize {
-                        apply_chain_vectorized(&part, &steps)
+                    let mut d = DistCounters::default();
+                    if let (Some(pool), Some(desc)) = (pool.as_ref(), desc.as_ref()) {
+                        // an Err here is a worker-*reported* compute error
+                        // — deterministic, so re-running locally below
+                        // surfaces the identical error; Ok(None) means no
+                        // live workers remain
+                        if let Ok(Some((rows, vec_batches, vec_fallbacks))) =
+                            pool.narrow(&tracer, ti, &part, desc, &mut d)
+                        {
+                            return Ok(ChainOut { rows, vec_batches, vec_fallbacks, dist: d });
+                        }
+                    }
+                    let mut out = if fusion && vectorize {
+                        apply_chain_vectorized(&part, &steps)?
                     } else if fusion {
-                        Ok(ChainOut::rows_only(apply_chain_fused(&part, &steps)?))
+                        ChainOut::rows_only(apply_chain_fused(&part, &steps)?)
                     } else {
                         // materialize-per-step ablation stays row-wise
-                        Ok(ChainOut::rows_only(apply_chain_materialized(&part, &steps)?))
-                    }
+                        ChainOut::rows_only(apply_chain_materialized(&part, &steps)?)
+                    };
+                    out.dist = d;
+                    Ok(out)
                 }
             })
             .collect();
         let outs = collect_results(self.run_tasks(stage_id, tasks, &input)?)?;
         let (mut batches, mut fallbacks) = (0u64, 0u64);
+        let mut dc = DistCounters::default();
         let parts = outs
             .into_iter()
             .map(|o| {
                 batches += o.vec_batches;
                 fallbacks += o.vec_fallbacks;
+                dc.merge(&o.dist);
                 Arc::new(o.rows)
             })
             .collect();
@@ -449,7 +532,31 @@ impl EngineCtx {
         if fallbacks > 0 {
             self.charge(Stat::VectorizedFallbacks, fallbacks);
         }
+        self.charge_dist(&dc);
         Ok(Partitioned { schema, parts })
+    }
+
+    /// Charge one stage's aggregated distribution counters — driver-side,
+    /// inside the stage span's scope, so the global-equals-sum-of-spans
+    /// trace invariant holds for the dist stats too. Worker failovers are
+    /// real task retries (the lineage machinery re-running a task's work
+    /// elsewhere), so they charge [`Stat::TasksRetried`].
+    fn charge_dist(&self, d: &DistCounters) {
+        if d.remote > 0 {
+            self.charge(Stat::DistTasksRemote, d.remote);
+        }
+        if d.tx > 0 {
+            self.charge(Stat::DistBytesTx, d.tx);
+        }
+        if d.rx > 0 {
+            self.charge(Stat::DistBytesRx, d.rx);
+        }
+        if d.lost > 0 {
+            self.charge(Stat::DistWorkersLost, d.lost);
+        }
+        if d.retried > 0 {
+            self.charge(Stat::TasksRetried, d.retried);
+        }
     }
 
     /// Run tasks with retry + fault injection + stats + tracing.
@@ -578,30 +685,66 @@ impl EngineCtx {
         input: &Partitioned,
         num_parts: usize,
         key: super::dataset::KeyFn,
+        ship: ShipKey,
     ) -> Result<Vec<BucketSet>> {
         let gov = self.governor.clone();
         let dir = self.spill.clone();
+        // whole-row-keyed map sides can run on a worker (the hash is a
+        // function of the row bytes, identical in any process); opaque
+        // key closures pin the map side local
+        let dist = match ship {
+            ShipKey::WholeRow => self.dist.clone(),
+            ShipKey::Opaque => None,
+        };
+        if self.dist.is_some() && dist.is_none() {
+            self.charge(Stat::DistFallbacks, 1);
+        }
         let tasks: Vec<_> = input
             .parts
             .iter()
-            .map(|part| {
+            .enumerate()
+            .map(|(ti, part)| {
                 let part = part.clone();
                 let key = key.clone();
                 let gov = gov.clone();
                 let dir = dir.clone();
-                move || -> Result<BucketSet> {
+                let dist = dist.clone();
+                let tracer = self.tracer.clone();
+                move || -> Result<ShuffleOut> {
+                    let mut d = DistCounters::default();
+                    if let Some(pool) = dist.as_ref() {
+                        if let Ok(Some(buckets)) =
+                            pool.bucket(&tracer, ti, &part, num_parts, None, &mut d)
+                        {
+                            return Ok(ShuffleOut {
+                                set: BucketSet::build(&gov, &dir, buckets)?,
+                                batched: false,
+                                dist: d,
+                            });
+                        }
+                    }
                     let mut buckets: Vec<Vec<Row>> = (0..num_parts).map(|_| Vec::new()).collect();
                     for row in part.iter() {
                         let k = key(row);
                         buckets[bucket_of(&k, num_parts)].push(row.clone());
                     }
-                    BucketSet::build(&gov, &dir, buckets)
+                    Ok(ShuffleOut {
+                        set: BucketSet::build(&gov, &dir, buckets)?,
+                        batched: false,
+                        dist: d,
+                    })
                 }
             })
             .collect();
         let outs = collect_results(self.run_tasks(stage_id, tasks, input)?)?;
-        self.charge_shuffle(&outs, true);
-        Ok(outs)
+        let mut dc = DistCounters::default();
+        for o in &outs {
+            dc.merge(&o.dist);
+        }
+        self.charge_dist(&dc);
+        let sets: Vec<BucketSet> = outs.into_iter().map(|o| o.set).collect();
+        self.charge_shuffle(&sets, true);
+        Ok(sets)
     }
 
     /// Column-keyed variant of [`Self::shuffle_buckets`]: each map
@@ -626,16 +769,35 @@ impl EngineCtx {
         let tasks: Vec<_> = input
             .parts
             .iter()
-            .map(|part| {
+            .enumerate()
+            .map(|(ti, part)| {
                 let part = part.clone();
                 let key = key.clone();
                 let gov = gov.clone();
                 let dir = dir.clone();
+                let dist = self.dist.clone();
+                let tracer = self.tracer.clone();
                 move || -> Result<ShuffleOut> {
+                    // remote map side ships rows and receives the same
+                    // buckets the local paths would build (row transport;
+                    // the governor/spill decision stays driver-side)
+                    let mut d = DistCounters::default();
+                    if let Some(pool) = dist.as_ref() {
+                        if let Ok(Some(buckets)) =
+                            pool.bucket(&tracer, ti, &part, num_parts, Some(key_col), &mut d)
+                        {
+                            return Ok(ShuffleOut {
+                                set: BucketSet::build(&gov, &dir, buckets)?,
+                                batched: false,
+                                dist: d,
+                            });
+                        }
+                    }
                     if let Some(batches) = batch_buckets(&part, num_parts, key_col) {
                         return Ok(ShuffleOut {
                             set: BucketSet::build_batches(&gov, &dir, batches)?,
                             batched: true,
+                            dist: d,
                         });
                     }
                     let mut buckets: Vec<Vec<Row>> = (0..num_parts).map(|_| Vec::new()).collect();
@@ -646,12 +808,18 @@ impl EngineCtx {
                     Ok(ShuffleOut {
                         set: BucketSet::build(&gov, &dir, buckets)?,
                         batched: false,
+                        dist: d,
                     })
                 }
             })
             .collect();
         let outs = collect_results(self.run_tasks(stage_id, tasks, input)?)?;
         self.charge_shuffle_vectorization(&outs);
+        let mut dc = DistCounters::default();
+        for o in &outs {
+            dc.merge(&o.dist);
+        }
+        self.charge_dist(&dc);
         let sets: Vec<BucketSet> = outs.into_iter().map(|o| o.set).collect();
         self.charge_shuffle(&sets, true);
         Ok(sets)
@@ -663,7 +831,10 @@ impl EngineCtx {
     /// partition that was eligible but fell back to row transport.
     fn charge_shuffle_vectorization(&self, outs: &[ShuffleOut]) {
         let batched = outs.iter().filter(|o| o.batched).count() as u64;
-        let fell = outs.len() as u64 - batched;
+        // a map side that executed remotely used row transport by design
+        // — that is remote dispatch, not a vectorization fallback
+        let remote = outs.iter().filter(|o| !o.batched && o.dist.remote > 0).count() as u64;
+        let fell = outs.len() as u64 - batched - remote;
         if batched > 0 {
             self.charge(Stat::VectorizedShuffleBatches, batched);
         }
@@ -688,6 +859,12 @@ impl EngineCtx {
         // When the key is a declared column and vectorization is on, the
         // partition is hash-split by a column-level gather and combined
         // per bucket slice, and the buckets travel as column batches.
+        // The combine folds the user's reduce closure — unserializable,
+        // so this map side never ships (skipping the combine would change
+        // the fold's association and with it the bytes).
+        if self.dist.is_some() {
+            self.charge(Stat::DistFallbacks, 1);
+        }
         let col_key = key_col.filter(|_| self.cfg.vectorize);
         let combine_key = key.clone();
         let combine_reduce = reduce.clone();
@@ -708,6 +885,7 @@ impl EngineCtx {
                             return Ok(ShuffleOut {
                                 set: BucketSet::build_batches(&gov, &dir, batches)?,
                                 batched: true,
+                                dist: DistCounters::default(),
                             });
                         }
                     }
@@ -730,6 +908,7 @@ impl EngineCtx {
                     Ok(ShuffleOut {
                         set: BucketSet::build(&gov, &dir, buckets)?,
                         batched: false,
+                        dist: DistCounters::default(),
                     })
                 }
             })
@@ -810,7 +989,7 @@ impl EngineCtx {
         let _scope = self.tracer.scope(span);
         self.charge(Stat::StagesRun, 1);
         let key: super::dataset::KeyFn = Arc::new(whole_row_key);
-        let bucketed = self.shuffle_buckets(ds.id, &input, num_parts, key)?;
+        let bucketed = self.shuffle_buckets(ds.id, &input, num_parts, key, ShipKey::WholeRow)?;
         let exchanged = transpose_segments(bucketed, num_parts);
         let tasks: Vec<_> = exchanged
             .into_iter()
@@ -871,11 +1050,15 @@ impl EngineCtx {
         // output is concatenated rows either way)
         let lb = match lkey_col.filter(|_| self.cfg.vectorize) {
             Some(kc) => self.shuffle_buckets_by_col(ds.id, &left, num_parts, lkey.clone(), kc)?,
-            None => self.shuffle_buckets(ds.id, &left, num_parts, lkey.clone())?,
+            None => {
+                self.shuffle_buckets(ds.id, &left, num_parts, lkey.clone(), ShipKey::Opaque)?
+            }
         };
         let rb = match rkey_col.filter(|_| self.cfg.vectorize) {
             Some(kc) => self.shuffle_buckets_by_col(ds.id, &right, num_parts, rkey.clone(), kc)?,
-            None => self.shuffle_buckets(ds.id, &right, num_parts, rkey.clone())?,
+            None => {
+                self.shuffle_buckets(ds.id, &right, num_parts, rkey.clone(), ShipKey::Opaque)?
+            }
         };
         let lex = transpose_segments(lb, num_parts);
         let rex = transpose_segments(rb, num_parts);
@@ -949,6 +1132,10 @@ impl EngineCtx {
         let map_span = self.tracer.begin(SpanKind::Stage, || format!("sort#{}", ds.id), None);
         let map_scope = self.tracer.scope(map_span);
         self.charge(Stat::StagesRun, 1);
+        // the user comparator is an opaque closure — sort never ships
+        if self.dist.is_some() {
+            self.charge(Stat::DistFallbacks, 1);
+        }
         let gov = self.governor.clone();
         let dir = self.spill.clone();
         let sort_cmp = cmp.clone();
@@ -1003,7 +1190,7 @@ impl EngineCtx {
         self.charge(Stat::StagesRun, 1);
         // round-robin by row hash for determinism
         let key: super::dataset::KeyFn = Arc::new(whole_row_key);
-        let bucketed = self.shuffle_buckets(ds.id, &input, num_parts, key)?;
+        let bucketed = self.shuffle_buckets(ds.id, &input, num_parts, key, ShipKey::WholeRow)?;
         let exchanged = transpose_segments(bucketed, num_parts);
         let mut parts: Vec<PartRef> = Vec::with_capacity(num_parts);
         for segments in exchanged {
@@ -1027,10 +1214,10 @@ impl EngineCtx {
 /// on every execution path (vectorized, fused, materialized) instead of
 /// an index panic. `None` bound (column-free expression) skips the
 /// check entirely.
-struct ColBound {
-    idx: usize,
-    name: String,
-    op: &'static str,
+pub(crate) struct ColBound {
+    pub(crate) idx: usize,
+    pub(crate) name: String,
+    pub(crate) op: &'static str,
 }
 
 impl ColBound {
@@ -1047,7 +1234,7 @@ impl ColBound {
     }
 }
 
-enum Step {
+pub(crate) enum Step {
     Map(super::dataset::MapFn),
     Filter(super::dataset::PredFn),
     /// structured predicate — vectorizable
@@ -1064,16 +1251,18 @@ fn is_vectorizable(s: &Step) -> bool {
 }
 
 /// A narrow stage task's output: the rows plus vectorization counters
-/// (how many column batches ran, how many segments fell back to rows).
-struct ChainOut {
-    rows: Vec<Row>,
-    vec_batches: u64,
-    vec_fallbacks: u64,
+/// (how many column batches ran, how many segments fell back to rows)
+/// and the task's distribution counters (zero when it ran in-process).
+pub(crate) struct ChainOut {
+    pub(crate) rows: Vec<Row>,
+    pub(crate) vec_batches: u64,
+    pub(crate) vec_fallbacks: u64,
+    pub(crate) dist: DistCounters,
 }
 
 impl ChainOut {
-    fn rows_only(rows: Vec<Row>) -> ChainOut {
-        ChainOut { rows, vec_batches: 0, vec_fallbacks: 0 }
+    pub(crate) fn rows_only(rows: Vec<Row>) -> ChainOut {
+        ChainOut { rows, vec_batches: 0, vec_fallbacks: 0, dist: DistCounters::default() }
     }
 }
 
@@ -1086,7 +1275,7 @@ impl ChainOut {
 /// segment and counts a `vec_fallbacks`. Byte-identical to
 /// [`apply_chain_fused`] by construction: the kernels share the scalar
 /// core with `expr::eval` (pinned by the vectorize differential suite).
-fn apply_chain_vectorized(part: &[Row], steps: &[Step]) -> Result<ChainOut> {
+pub(crate) fn apply_chain_vectorized(part: &[Row], steps: &[Step]) -> Result<ChainOut> {
     if steps.is_empty() {
         return Ok(ChainOut::rows_only(part.to_vec()));
     }
@@ -1166,13 +1355,14 @@ fn apply_chain_vectorized(part: &[Row], steps: &[Step]) -> Result<ChainOut> {
         rows: cur.unwrap_or_else(|| part.to_vec()),
         vec_batches: batches,
         vec_fallbacks: fallbacks,
+        dist: DistCounters::default(),
     })
 }
 
 /// Fused execution: rows stream through consecutive row-wise steps without
 /// intermediate vectors; `PartWise` steps materialize (they need the whole
 /// partition).
-fn apply_chain_fused(part: &[Row], steps: &[Step]) -> Result<Vec<Row>> {
+pub(crate) fn apply_chain_fused(part: &[Row], steps: &[Step]) -> Result<Vec<Row>> {
     if steps.is_empty() {
         return Ok(part.to_vec());
     }
@@ -1312,6 +1502,15 @@ pub(crate) fn bucket_of(key: &Field, num_parts: usize) -> usize {
 struct ShuffleOut {
     set: BucketSet,
     batched: bool,
+    dist: DistCounters,
+}
+
+/// How a shuffle map side's key travels for remote dispatch: a
+/// whole-row hash and a declared key column are reproducible in any
+/// process; an opaque key closure pins the map side to this one.
+enum ShipKey {
+    WholeRow,
+    Opaque,
 }
 
 /// Batch-native map side of a column-keyed shuffle: transpose the

@@ -15,6 +15,11 @@
 //!   buffers move to disk when a governor reservation fails.
 //! * [`fault`] — failure injection for recovery tests.
 //! * [`cluster`] — virtual-time cluster simulator for scale-out studies.
+//! * [`net`] — driver ↔ worker wire protocol (frames over TCP; row
+//!   payloads are colbin v2 blobs shared with the spill path — see
+//!   `docs/colbin-format.md`).
+//! * [`distributed`] — real multi-process execution: worker serve loop,
+//!   driver-side worker pool with failover, shipping eligibility.
 //! * [`stats`] — execution counters.
 //! * [`stream`] — micro-batch streaming runtime over the same Plan DAG
 //!   (stateful operators, watermarks, backpressure).
@@ -33,12 +38,15 @@ pub mod memory;
 pub mod spill;
 pub mod fault;
 pub mod cluster;
+pub mod net;
+pub mod distributed;
 pub mod stats;
 pub mod stream;
 pub mod trace;
 
 pub use analyze::{Analysis, ColInfo, ColType, Diagnostic, Severity};
 pub use dataset::{Dataset, JoinKind, Partitioned};
+pub use distributed::{WorkerOptions, WorkerPool};
 pub use executor::{EngineConfig, EngineCtx, TaskRecord, TaskTrace};
 pub use memory::MemoryGovernor;
 pub use optimizer::RewriteCounts;

@@ -1,0 +1,237 @@
+//! Driver ↔ worker wire protocol for distributed execution.
+//!
+//! One TCP connection per worker carries length-prefixed frames; row
+//! payloads travel as **colbin v2 blobs encoded by the exact spill
+//! code path** ([`super::spill::encode_rows_blob`]), so ship-to-peer
+//! and spill-to-disk share one encoder/decoder and the network format
+//! is covered by the same conformance suite as the on-disk format
+//! (`docs/colbin-format.md`).
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! magic   4 bytes  "DDPW"
+//! op      1 byte   (see [`op`])
+//! hlen    4 bytes  u32 — length of the JSON header
+//! header  hlen bytes — UTF-8 JSON ([`crate::json::Value`] object)
+//! plen    8 bytes  u64 — length of the payload
+//! payload plen bytes — zero or more concatenated colbin blobs
+//! ```
+//!
+//! The header describes how to slice the payload: row blobs carry
+//! `{rows, width, widths?, len}` metadata mirroring the spill file's
+//! per-segment metadata (`width` rebuilds the all-`Any` spill schema,
+//! `widths` restores ragged row arities after the rectangular pad).
+//! Requests and responses use the same frame shape; errors travel as
+//! [`op::ERR`] frames with a `msg` header field.
+
+use super::row::Row;
+use super::spill::{decode_rows_blob, encode_rows_blob};
+use crate::json::{self, Value};
+use crate::util::error::{DdpError, Result};
+use std::io::{Read, Write};
+
+/// Frame magic — distinct from colbin's `DDPC` so a stray colbin blob
+/// (or a v1 peer) fails loudly at the frame layer, not mid-payload.
+pub const MAGIC: [u8; 4] = *b"DDPW";
+
+/// Frame opcodes.
+pub mod op {
+    /// liveness probe; responds [`OK`] with an empty payload
+    pub const PING: u8 = 0;
+    /// execute a structured narrow chain over the payload rows
+    pub const NARROW: u8 = 1;
+    /// hash-bucket the payload rows (shuffle map side)
+    pub const BUCKET: u8 = 2;
+    /// orderly worker shutdown (no response)
+    pub const SHUTDOWN: u8 = 3;
+    /// successful response
+    pub const OK: u8 = 4;
+    /// failed response; header `msg` carries the error
+    pub const ERR: u8 = 5;
+}
+
+/// Frame size guard: a corrupt length prefix must fail as a structured
+/// error, not an allocation of attacker-controlled size. Generous —
+/// shuffle payloads are per-partition, not per-corpus.
+const MAX_FRAME_BYTES: u64 = 1 << 34; // 16 GiB
+
+/// One wire frame: opcode, JSON header, raw payload.
+#[derive(Debug)]
+pub struct Frame {
+    pub op: u8,
+    pub header: Value,
+    pub payload: Vec<u8>,
+}
+
+/// Write one frame (single `write_all` per section; the caller flushes).
+pub fn write_frame(w: &mut impl Write, op: u8, header: &Value, payload: &[u8]) -> Result<()> {
+    let htext = json::to_string(header);
+    let hbytes = htext.as_bytes();
+    w.write_all(&MAGIC)?;
+    w.write_all(&[op])?;
+    w.write_all(&(hbytes.len() as u32).to_le_bytes())?;
+    w.write_all(hbytes)?;
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame; errors on bad magic, oversized sections, or EOF.
+pub fn read_frame(r: &mut impl Read) -> Result<Frame> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if magic != MAGIC {
+        return Err(DdpError::format(
+            "net",
+            format!("bad frame magic {magic:02x?} (expected {MAGIC:02x?})"),
+        ));
+    }
+    let mut opb = [0u8; 1];
+    r.read_exact(&mut opb)?;
+    let mut hlen = [0u8; 4];
+    r.read_exact(&mut hlen)?;
+    let hlen = u32::from_le_bytes(hlen) as u64;
+    if hlen > MAX_FRAME_BYTES {
+        return Err(DdpError::format("net", format!("header length {hlen} exceeds frame cap")));
+    }
+    let mut hbytes = vec![0u8; hlen as usize];
+    r.read_exact(&mut hbytes)?;
+    let htext = String::from_utf8(hbytes)
+        .map_err(|e| DdpError::format("net", format!("header is not UTF-8: {e}")))?;
+    let header = json::parse(&htext)?;
+    let mut plen = [0u8; 8];
+    r.read_exact(&mut plen)?;
+    let plen = u64::from_le_bytes(plen);
+    if plen > MAX_FRAME_BYTES {
+        return Err(DdpError::format("net", format!("payload length {plen} exceeds frame cap")));
+    }
+    let mut payload = vec![0u8; plen as usize];
+    r.read_exact(&mut payload)?;
+    Ok(Frame { op: opb[0], header, payload })
+}
+
+/// A rows payload plus the JSON metadata needed to decode it — the
+/// network twin of the spill file's `SegmentMeta`.
+pub struct RowsBlob {
+    pub bytes: Vec<u8>,
+    pub meta: Value,
+}
+
+/// Encode rows through the spill encoder (rectangular pad + recorded
+/// widths for ragged buckets — identical bytes to a spilled bucket).
+pub fn rows_to_blob(rows: &[Row]) -> Result<RowsBlob> {
+    let (bytes, width, widths) = encode_rows_blob(rows)?;
+    let mut pairs = vec![
+        ("rows", Value::num(rows.len() as f64)),
+        ("width", Value::num(width as f64)),
+        ("len", Value::num(bytes.len() as f64)),
+    ];
+    if let Some(ws) = &widths {
+        pairs.push(("widths", Value::Arr(ws.iter().map(|w| Value::num(*w as f64)).collect())));
+    }
+    Ok(RowsBlob { bytes, meta: Value::obj(pairs) })
+}
+
+/// Decode a rows payload slice against its metadata object.
+pub fn blob_to_rows(meta: &Value, bytes: &[u8]) -> Result<Vec<Row>> {
+    let nrows = meta.u64_or("rows", 0);
+    if nrows == 0 {
+        return Ok(Vec::new());
+    }
+    let width = meta.u64_or("width", 0) as usize;
+    let widths: Option<Vec<u32>> = meta.get("widths").and_then(|v| v.as_arr()).map(|arr| {
+        arr.iter().map(|w| w.as_u64().unwrap_or(0) as u32).collect()
+    });
+    decode_rows_blob(bytes, width, widths.as_deref())
+}
+
+/// Slice a multi-blob payload into per-bucket row vectors using the
+/// response's `buckets` metadata array (mirrors a spill file: blobs
+/// concatenated back-to-back, lengths in the metadata).
+pub fn payload_to_buckets(metas: &[Value], payload: &[u8]) -> Result<Vec<Vec<Row>>> {
+    let mut out = Vec::with_capacity(metas.len());
+    let mut off = 0usize;
+    for meta in metas {
+        let len = meta.u64_or("len", 0) as usize;
+        let end = off.checked_add(len).filter(|&e| e <= payload.len()).ok_or_else(|| {
+            DdpError::format(
+                "net",
+                format!("bucket extent [{off}..{off}+{len}) exceeds payload {}", payload.len()),
+            )
+        })?;
+        out.push(blob_to_rows(meta, &payload[off..end])?);
+        off = end;
+    }
+    Ok(out)
+}
+
+/// Encode buckets as concatenated blobs plus their metadata array.
+pub fn buckets_to_payload(buckets: &[Vec<Row>]) -> Result<(Vec<Value>, Vec<u8>)> {
+    let mut metas = Vec::with_capacity(buckets.len());
+    let mut payload = Vec::new();
+    for bucket in buckets {
+        // empty buckets travel as metadata only (rows=0, len=0): colbin
+        // needs a width to write a header, and nothing needs reading back
+        if bucket.is_empty() {
+            metas.push(Value::obj(vec![
+                ("rows", Value::num(0.0)),
+                ("width", Value::num(0.0)),
+                ("len", Value::num(0.0)),
+            ]));
+            continue;
+        }
+        let blob = rows_to_blob(bucket)?;
+        metas.push(blob.meta);
+        payload.extend_from_slice(&blob.bytes);
+    }
+    Ok((metas, payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::row::Field;
+    use crate::row;
+
+    #[test]
+    fn frame_round_trip() {
+        let header = Value::obj(vec![("k", Value::str("v")), ("n", Value::num(7.0))]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, op::NARROW, &header, b"payload").unwrap();
+        let f = read_frame(&mut &buf[..]).unwrap();
+        assert_eq!(f.op, op::NARROW);
+        assert_eq!(f.header, header);
+        assert_eq!(f.payload, b"payload");
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, op::PING, &Value::obj(vec![]), b"").unwrap();
+        buf[0] = b'X';
+        let err = read_frame(&mut &buf[..]).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn rows_blob_round_trip_including_ragged() {
+        let rows = vec![
+            row!(1i64, "a"),
+            row!(2i64),                      // ragged: shorter row
+            row!(3i64, "c", Field::Null),    // ragged with trailing real null
+        ];
+        let blob = rows_to_blob(&rows).unwrap();
+        let back = blob_to_rows(&blob.meta, &blob.bytes).unwrap();
+        assert_eq!(back, rows);
+    }
+
+    #[test]
+    fn bucket_payload_round_trip_with_empty_buckets() {
+        let buckets = vec![vec![row!(1i64)], vec![], vec![row!("x", 2.5f64)]];
+        let (metas, payload) = buckets_to_payload(&buckets).unwrap();
+        let back = payload_to_buckets(&metas, &payload).unwrap();
+        assert_eq!(back, buckets);
+    }
+}

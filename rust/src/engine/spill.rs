@@ -95,6 +95,56 @@ fn spill_schema(width: usize) -> SchemaRef {
     Schema::new(names.iter().map(|n| (n.as_str(), FieldType::Any)).collect())
 }
 
+/// Encode rows into one colbin blob: blob bytes, segment width, and
+/// per-row true widths when the bucket was ragged. The single row
+/// encoder behind both transports — spill segments on disk
+/// ([`SpillFile`]) and shuffle payloads on the wire
+/// ([`super::net::rows_to_blob`]) are byte-identical for the same rows.
+pub(crate) fn encode_rows_blob(bucket: &[Row]) -> Result<(Vec<u8>, usize, Option<Vec<u32>>)> {
+    let width = bucket.iter().map(|r| r.fields.len()).max().unwrap_or(0);
+    let ragged = bucket.iter().any(|r| r.fields.len() != width);
+    let schema = spill_schema(width);
+    if ragged {
+        // see SegmentMeta::widths: pad to rectangular, remember
+        // the true arities so the read restores rows exactly
+        let padded: Vec<Row> = bucket
+            .iter()
+            .map(|r| {
+                let mut fields = r.fields.clone();
+                fields.resize(width, Field::Null);
+                Row::new(fields)
+            })
+            .collect();
+        let widths = bucket.iter().map(|r| r.fields.len() as u32).collect();
+        Ok((colbin::encode(&schema, &padded)?, width, Some(widths)))
+    } else {
+        Ok((colbin::encode(&schema, bucket)?, width, None))
+    }
+}
+
+/// Decode an [`encode_rows_blob`] blob back to rows, truncating ragged
+/// rows to their recorded true widths (the decode twin shared by the
+/// spill read path and the network payload path).
+pub(crate) fn decode_rows_blob(
+    bytes: &[u8],
+    width: usize,
+    widths: Option<&[u32]>,
+) -> Result<Vec<Row>> {
+    let mut rows = colbin::decode(&spill_schema(width), bytes)?;
+    if let Some(widths) = widths {
+        for (row, w) in rows.iter_mut().zip(widths.iter()) {
+            let w = usize::try_from(*w).map_err(|_| {
+                DdpError::format(
+                    "spill",
+                    format!("row width {w} overflows usize (corrupt header?)"),
+                )
+            })?;
+            row.fields.truncate(w);
+        }
+    }
+    Ok(rows)
+}
+
 /// Byte range of one bucket inside a [`SpillFile`].
 #[derive(Debug, Clone)]
 struct SegmentMeta {
@@ -170,25 +220,7 @@ impl SpillFile {
     /// Encode one bucket of rows: blob bytes, segment width, and per-row
     /// true widths when the bucket was ragged.
     fn encode_row_bucket(bucket: &[Row]) -> Result<(Vec<u8>, usize, Option<Vec<u32>>)> {
-        let width = bucket.iter().map(|r| r.fields.len()).max().unwrap_or(0);
-        let ragged = bucket.iter().any(|r| r.fields.len() != width);
-        let schema = spill_schema(width);
-        if ragged {
-            // see SegmentMeta::widths: pad to rectangular, remember
-            // the true arities so the read restores rows exactly
-            let padded: Vec<Row> = bucket
-                .iter()
-                .map(|r| {
-                    let mut fields = r.fields.clone();
-                    fields.resize(width, Field::Null);
-                    Row::new(fields)
-                })
-                .collect();
-            let widths = bucket.iter().map(|r| r.fields.len() as u32).collect();
-            Ok((colbin::encode(&schema, &padded)?, width, Some(widths)))
-        } else {
-            Ok((colbin::encode(&schema, bucket)?, width, None))
-        }
+        encode_rows_blob(bucket)
     }
 
     /// Encode batch-native buckets (one blob per bucket) into a fresh
@@ -383,19 +415,7 @@ impl SpillFile {
         f.seek(SeekFrom::Start(seg.offset))?;
         let mut buf = vec![0u8; len];
         f.read_exact(&mut buf)?;
-        let mut rows = colbin::decode(&spill_schema(seg.width), &buf)?;
-        if let Some(widths) = &seg.widths {
-            for (row, w) in rows.iter_mut().zip(widths.iter()) {
-                let w = usize::try_from(*w).map_err(|_| {
-                    DdpError::format(
-                        "spill",
-                        format!("row width {w} overflows usize (corrupt header?)"),
-                    )
-                })?;
-                row.fields.truncate(w);
-            }
-        }
-        Ok(rows)
+        decode_rows_blob(&buf, seg.width, seg.widths.as_deref())
     }
 }
 

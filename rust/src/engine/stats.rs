@@ -34,11 +34,16 @@ pub enum Stat {
     AnalyzerErrors,
     AnalyzerWarnings,
     AnalyzerNotes,
+    DistTasksRemote,
+    DistFallbacks,
+    DistBytesTx,
+    DistBytesRx,
+    DistWorkersLost,
 }
 
 impl Stat {
     /// Every counter, in [`StatsSnapshot`] field order.
-    pub const ALL: [Stat; 23] = [
+    pub const ALL: [Stat; 28] = [
         Stat::TasksLaunched,
         Stat::TasksRetried,
         Stat::RowsRead,
@@ -62,6 +67,11 @@ impl Stat {
         Stat::AnalyzerErrors,
         Stat::AnalyzerWarnings,
         Stat::AnalyzerNotes,
+        Stat::DistTasksRemote,
+        Stat::DistFallbacks,
+        Stat::DistBytesTx,
+        Stat::DistBytesRx,
+        Stat::DistWorkersLost,
     ];
 
     /// Snake-case counter name (matches the exporter's metric suffixes).
@@ -90,6 +100,11 @@ impl Stat {
             Stat::AnalyzerErrors => "analyzer_errors",
             Stat::AnalyzerWarnings => "analyzer_warnings",
             Stat::AnalyzerNotes => "analyzer_notes",
+            Stat::DistTasksRemote => "dist_tasks_remote",
+            Stat::DistFallbacks => "dist_fallbacks",
+            Stat::DistBytesTx => "dist_bytes_tx",
+            Stat::DistBytesRx => "dist_bytes_rx",
+            Stat::DistWorkersLost => "dist_workers_lost",
         }
     }
 }
@@ -142,6 +157,19 @@ pub struct EngineStats {
     pub analyzer_warnings: AtomicU64,
     /// note-severity analyzer diagnostics (advisory only)
     pub analyzer_notes: AtomicU64,
+    /// tasks whose work executed on a remote worker process
+    /// ([`super::distributed`])
+    pub dist_tasks_remote: AtomicU64,
+    /// stages that could not ship to workers (opaque closures) and ran
+    /// local while a worker pool was attached
+    pub dist_fallbacks: AtomicU64,
+    /// bytes shipped to workers (request frames + payloads)
+    pub dist_bytes_tx: AtomicU64,
+    /// bytes received from workers (response frames + payloads)
+    pub dist_bytes_rx: AtomicU64,
+    /// workers declared dead after a connection failure (their tasks
+    /// failed over via lineage retry)
+    pub dist_workers_lost: AtomicU64,
 }
 
 impl EngineStats {
@@ -186,6 +214,11 @@ impl EngineStats {
             Stat::AnalyzerErrors => &self.analyzer_errors,
             Stat::AnalyzerWarnings => &self.analyzer_warnings,
             Stat::AnalyzerNotes => &self.analyzer_notes,
+            Stat::DistTasksRemote => &self.dist_tasks_remote,
+            Stat::DistFallbacks => &self.dist_fallbacks,
+            Stat::DistBytesTx => &self.dist_bytes_tx,
+            Stat::DistBytesRx => &self.dist_bytes_rx,
+            Stat::DistWorkersLost => &self.dist_workers_lost,
         }
     }
 
@@ -216,6 +249,11 @@ impl EngineStats {
             analyzer_errors: self.analyzer_errors.load(Ordering::Relaxed),
             analyzer_warnings: self.analyzer_warnings.load(Ordering::Relaxed),
             analyzer_notes: self.analyzer_notes.load(Ordering::Relaxed),
+            dist_tasks_remote: self.dist_tasks_remote.load(Ordering::Relaxed),
+            dist_fallbacks: self.dist_fallbacks.load(Ordering::Relaxed),
+            dist_bytes_tx: self.dist_bytes_tx.load(Ordering::Relaxed),
+            dist_bytes_rx: self.dist_bytes_rx.load(Ordering::Relaxed),
+            dist_workers_lost: self.dist_workers_lost.load(Ordering::Relaxed),
         }
     }
 }
@@ -246,6 +284,11 @@ pub struct StatsSnapshot {
     pub analyzer_errors: u64,
     pub analyzer_warnings: u64,
     pub analyzer_notes: u64,
+    pub dist_tasks_remote: u64,
+    pub dist_fallbacks: u64,
+    pub dist_bytes_tx: u64,
+    pub dist_bytes_rx: u64,
+    pub dist_workers_lost: u64,
 }
 
 impl StatsSnapshot {
@@ -288,6 +331,11 @@ impl StatsSnapshot {
             Stat::AnalyzerErrors => self.analyzer_errors,
             Stat::AnalyzerWarnings => self.analyzer_warnings,
             Stat::AnalyzerNotes => self.analyzer_notes,
+            Stat::DistTasksRemote => self.dist_tasks_remote,
+            Stat::DistFallbacks => self.dist_fallbacks,
+            Stat::DistBytesTx => self.dist_bytes_tx,
+            Stat::DistBytesRx => self.dist_bytes_rx,
+            Stat::DistWorkersLost => self.dist_workers_lost,
         }
     }
 
@@ -316,6 +364,11 @@ impl StatsSnapshot {
             Stat::AnalyzerErrors => &mut self.analyzer_errors,
             Stat::AnalyzerWarnings => &mut self.analyzer_warnings,
             Stat::AnalyzerNotes => &mut self.analyzer_notes,
+            Stat::DistTasksRemote => &mut self.dist_tasks_remote,
+            Stat::DistFallbacks => &mut self.dist_fallbacks,
+            Stat::DistBytesTx => &mut self.dist_bytes_tx,
+            Stat::DistBytesRx => &mut self.dist_bytes_rx,
+            Stat::DistWorkersLost => &mut self.dist_workers_lost,
         }
     }
 

@@ -6,6 +6,11 @@
 //!                [--trace-out trace.json]  # span tracing → Chrome trace + profile
 //!                                          # (implies DDP_TRACE=1 for this run)
 //!                [--explain]            # print static analysis of each sink plan
+//!                [--workers-remote a:p,b:p]  # dispatch to running ddp workers
+//!                [--spawn-workers N]    # spawn N local worker processes
+//! ddp worker     --listen 127.0.0.1:0 [--fail-after N]
+//!                # serve driver-assigned tasks over TCP; prints
+//!                # "LISTENING <addr>" once bound (see docs/architecture.md)
 //! ddp validate   --config pipeline.json
 //! ddp lint       --config pipeline.json [--json]
 //!                # build every pipe's plan over empty source anchors and run
@@ -29,6 +34,7 @@ fn main() {
     let args = Args::from_env();
     let code = match args.positional.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&args),
+        Some("worker") => cmd_worker(&args),
         Some("validate") => cmd_validate(&args),
         Some("lint") => cmd_lint(&args),
         Some("visualize") => cmd_visualize(&args),
@@ -36,7 +42,7 @@ fn main() {
         Some("corpus") => cmd_corpus(&args),
         _ => {
             eprintln!(
-                "usage: ddp <run|validate|lint|visualize|pipes|corpus> [--config FILE] [options]\n\
+                "usage: ddp <run|worker|validate|lint|visualize|pipes|corpus> [--config FILE] [options]\n\
                  see README.md for details"
             );
             2
@@ -309,6 +315,54 @@ fn cmd_pipes() -> i32 {
     0
 }
 
+/// `ddp worker`: bind a TCP listener and serve driver-assigned tasks
+/// until the driver disconnects or the process is killed. Prints
+/// `LISTENING <addr>` on stdout once bound so a spawning driver can
+/// read back an OS-assigned port (`--listen 127.0.0.1:0`). A watchdog
+/// thread exits the process when stdin reaches EOF, so workers spawned
+/// with a piped stdin cannot outlive their driver.
+fn cmd_worker(args: &Args) -> i32 {
+    use ddp::engine::distributed::{serve, WorkerOptions};
+    use std::io::{Read, Write};
+
+    let listen = args.opt_or("listen", "127.0.0.1:0");
+    let fail_after = args.opt("fail-after").and_then(|v| v.parse().ok());
+    let listener = match std::net::TcpListener::bind(&listen) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("worker: bind {listen}: {e}");
+            return 1;
+        }
+    };
+    match listener.local_addr() {
+        Ok(addr) => {
+            println!("LISTENING {addr}");
+            let _ = std::io::stdout().flush();
+        }
+        Err(e) => {
+            eprintln!("worker: local_addr: {e}");
+            return 1;
+        }
+    }
+    std::thread::spawn(|| {
+        let mut buf = [0u8; 64];
+        let mut stdin = std::io::stdin();
+        loop {
+            match stdin.read(&mut buf) {
+                Ok(0) | Err(_) => std::process::exit(0),
+                Ok(_) => {}
+            }
+        }
+    });
+    match serve(listener, WorkerOptions { fail_after }) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("worker: {e}");
+            1
+        }
+    }
+}
+
 fn cmd_run(args: &Args) -> i32 {
     let mut spec = match load_spec(args) {
         Ok(s) => s,
@@ -367,6 +421,17 @@ fn cmd_run(args: &Args) -> i32 {
     // --trace-out turns tracing on even without DDP_TRACE=1 in the env
     let mut engine_cfg = EngineConfig { workers, ..Default::default() };
     engine_cfg.trace |= args.opt("trace-out").is_some();
+    // distributed mode: connect to running workers, or spawn local ones
+    // (the env knobs DDP_WORKERS_REMOTE / DDP_SPAWN_WORKERS /
+    // DDP_WORKER_BIN already seeded the defaults above)
+    if let Some(list) = args.opt("workers-remote") {
+        engine_cfg.remote_workers = list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+    }
+    engine_cfg.spawn_workers = args.opt_usize("spawn-workers", engine_cfg.spawn_workers);
     let driver = match PipelineDriver::new(
         spec,
         registry::GLOBAL.clone(),

@@ -55,6 +55,11 @@ impl EngineMetricsExporter {
         m.counter_add("engine.analyzer_errors", d.analyzer_errors);
         m.counter_add("engine.analyzer_warnings", d.analyzer_warnings);
         m.counter_add("engine.analyzer_notes", d.analyzer_notes);
+        m.counter_add("engine.dist_tasks_remote", d.dist_tasks_remote);
+        m.counter_add("engine.dist_fallbacks", d.dist_fallbacks);
+        m.counter_add("engine.dist_bytes_tx", d.dist_bytes_tx);
+        m.counter_add("engine.dist_bytes_rx", d.dist_bytes_rx);
+        m.counter_add("engine.dist_workers_lost", d.dist_workers_lost);
         m.gauge_set(
             "engine.memory.reserved_bytes",
             engine.governor.reserved_bytes() as f64,

@@ -1,0 +1,341 @@
+//! Distributed execution differential suite: the same logical plan must
+//! collect **byte-identical** output single-process and distributed, at
+//! any worker count, with any mix of shippable (structured) and
+//! non-shippable (opaque closure) stages — including under injected
+//! worker death recovered via lineage retry.
+//!
+//! Workers are real `ddp worker` child processes spawned from the built
+//! binary (`CARGO_BIN_EXE_ddp`), talking the `engine::net` frame
+//! protocol over loopback TCP with colbin v2 row payloads.
+
+use ddp::engine::expr::{BinOp, Expr, Func, UnOp};
+use ddp::engine::row::{Field, FieldType, Row, Schema};
+use ddp::engine::{Dataset, EngineConfig, EngineCtx, JoinKind, Partitioned, WorkerPool};
+use ddp::row;
+use ddp::util::testkit::{property, Gen};
+use std::cmp::Ordering;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn worker_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_ddp"))
+}
+
+/// Engine config pinned against the env knobs the CI matrix flips, so
+/// the local baseline in this suite is always truly single-process.
+fn base_cfg(vectorize: bool) -> EngineConfig {
+    EngineConfig {
+        workers: 2,
+        vectorize,
+        remote_workers: Vec::new(),
+        spawn_workers: 0,
+        worker_binary: None,
+        ..Default::default()
+    }
+}
+
+fn layout(p: &Partitioned) -> Vec<Vec<Row>> {
+    p.parts.iter().map(|part| (**part).clone()).collect()
+}
+
+/// Byte-identity that also holds for NaN payloads (`canonical_cmp` is an
+/// IEEE total order, so NaN equates with NaN while -0.0 ≠ 0.0).
+fn rows_identical(a: &Row, b: &Row) -> bool {
+    a.fields.len() == b.fields.len()
+        && a.fields
+            .iter()
+            .zip(&b.fields)
+            .all(|(x, y)| x.canonical_cmp(y) == Ordering::Equal)
+}
+
+fn layouts_identical(a: &[Vec<Row>], b: &[Vec<Row>]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(p, q)| {
+            p.len() == q.len() && p.iter().zip(q).all(|(x, y)| rows_identical(x, y))
+        })
+}
+
+// ---------------------------------------------------------------------
+// random plan generator (structured + opaque, adversarial values)
+// ---------------------------------------------------------------------
+
+fn col(i: usize, name: &str) -> Expr {
+    Expr::Col(i, name.to_string())
+}
+
+fn lit_i(v: i64) -> Expr {
+    Expr::Lit(Field::I64(v))
+}
+
+fn bin(op: BinOp, a: Expr, b: Expr) -> Expr {
+    Expr::Binary(op, Box::new(a), Box::new(b))
+}
+
+fn tricky_f64(g: &mut Gen) -> f64 {
+    match g.u64(10) {
+        0 => f64::NAN,
+        1 => f64::INFINITY,
+        2 => f64::NEG_INFINITY,
+        3 => -0.0,
+        _ => (g.i64(-40, 40) as f64) / 4.0,
+    }
+}
+
+fn base_source(g: &mut Gen, name: &str) -> Dataset {
+    let schema = Schema::new(vec![
+        ("id", FieldType::I64),
+        ("score", FieldType::F64),
+        ("tag", FieldType::Str),
+    ]);
+    let n = 10 + g.usize(50);
+    let rows = (0..n)
+        .map(|_| {
+            let id = if g.u64(8) == 0 { Field::Null } else { Field::I64(g.i64(-50, 50)) };
+            let score = if g.u64(8) == 0 { Field::Null } else { Field::F64(tricky_f64(g)) };
+            let tag = if g.u64(8) == 0 { Field::Null } else { Field::Str(g.ident(1, 4)) };
+            Row::new(vec![id, score, tag])
+        })
+        .collect();
+    Dataset::from_rows(name, schema, rows, 1 + g.usize(5))
+}
+
+fn rand_pred(g: &mut Gen, schema: &Schema) -> Expr {
+    let i = g.usize(schema.len());
+    let lhs = col(i, schema.field(i).0);
+    let op = match g.u64(6) {
+        0 => BinOp::Eq,
+        1 => BinOp::Ne,
+        2 => BinOp::Lt,
+        3 => BinOp::Le,
+        4 => BinOp::Gt,
+        _ => BinOp::Ge,
+    };
+    let mut e = bin(op, lhs, lit_i(g.i64(-10, 10)));
+    if g.u64(4) == 0 {
+        let j = g.usize(schema.len());
+        let rhs = bin(
+            BinOp::Ge,
+            Expr::Call(Func::Length, vec![col(j, schema.field(j).0)]),
+            lit_i(2),
+        );
+        let op = if g.bool() { BinOp::And } else { BinOp::Or };
+        e = bin(op, e, rhs);
+    }
+    if g.u64(5) == 0 {
+        e = Expr::Unary(UnOp::Not, Box::new(e));
+    }
+    e
+}
+
+fn rand_project(g: &mut Gen, ds: &Dataset) -> Dataset {
+    let width = ds.schema.len();
+    let k = 1 + g.usize(width);
+    let mut remaining: Vec<usize> = (0..width).collect();
+    let mut picked = Vec::with_capacity(k);
+    for _ in 0..k {
+        picked.push(remaining.remove(g.usize(remaining.len())));
+    }
+    ds.project(picked)
+}
+
+fn rand_plan(g: &mut Gen) -> Dataset {
+    let mut ds = base_source(g, "d0");
+    let ops = 3 + g.usize(5);
+    for _ in 0..ops {
+        ds = match g.u64(10) {
+            // structured narrow steps — ship to workers
+            0 | 1 | 2 => ds.filter_expr(rand_pred(g, &ds.schema)),
+            3 => rand_project(g, &ds),
+            // opaque closure — must stay local (dist fallback), output
+            // identical regardless
+            4 => ds.filter(|r| !matches!(r.get(0), Field::Null)),
+            // whole-row-keyed wide ops — map side ships
+            5 | 6 => ds.repartition(1 + g.usize(4)),
+            7 => ds.distinct(1 + g.usize(3)),
+            // column-keyed wide ops: reduce combine stays local, join map
+            // sides ship by declared key column
+            8 => {
+                let kc = g.usize(ds.schema.len());
+                ds.reduce_by_key_col(1 + g.usize(3), kc, |acc: Row, _r: &Row| acc)
+            }
+            _ => {
+                let right = base_source(g, "dj");
+                if ds.schema.len() + right.schema.len() > 9 {
+                    ds.distinct(2)
+                } else {
+                    let w = ds.schema.len() + right.schema.len();
+                    let names: Vec<String> = (0..w).map(|i| format!("c{i}")).collect();
+                    let out =
+                        Schema::of_names(&names.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+                    let kind = if g.bool() { JoinKind::Inner } else { JoinKind::Left };
+                    let lkc = g.usize(ds.schema.len());
+                    let rkc = g.usize(right.schema.len());
+                    ds.join_on(&right, out, kind, 1 + g.usize(3), lkc, rkc)
+                }
+            }
+        };
+    }
+    ds
+}
+
+// ---------------------------------------------------------------------
+// differential: worker counts {1, 2, 4} vs single-process
+// ---------------------------------------------------------------------
+
+#[test]
+fn differential_worker_counts_byte_identical() {
+    let bin = worker_bin();
+    let pools: Vec<Arc<WorkerPool>> = [1usize, 2, 4]
+        .iter()
+        .map(|&n| Arc::new(WorkerPool::spawn_local(&bin, n, None).unwrap()))
+        .collect();
+    let mut remote_total = 0u64;
+    let mut fallback_total = 0u64;
+    property(40, |g| {
+        let plan = rand_plan(g);
+        let vectorize = g.bool();
+        let local = EngineCtx::new(base_cfg(vectorize));
+        let want = layout(&local.collect(&plan).unwrap());
+        assert_eq!(local.stats.snapshot().dist_tasks_remote, 0);
+        for pool in &pools {
+            let c = EngineCtx::with_workers(base_cfg(vectorize), pool.clone());
+            let got = layout(&c.collect(&plan).unwrap());
+            assert!(
+                layouts_identical(&want, &got),
+                "distributed output diverged at {} workers (case {})\nplan:\n{}",
+                pool.num_workers(),
+                g.case,
+                plan.plan_display()
+            );
+            let snap = c.stats.snapshot();
+            remote_total += snap.dist_tasks_remote;
+            fallback_total += snap.dist_fallbacks;
+            assert_eq!(snap.dist_workers_lost, 0, "healthy fleet lost a worker");
+            assert_eq!(snap.tasks_retried, 0, "healthy fleet retried a task");
+        }
+    });
+    assert!(remote_total > 0, "structured stages must actually dispatch to workers");
+    assert!(fallback_total > 0, "opaque stages must count dist fallbacks");
+    for pool in &pools {
+        assert_eq!(pool.live_workers(), pool.num_workers(), "no worker died");
+    }
+}
+
+// ---------------------------------------------------------------------
+// worker loss: killed mid-shuffle, recovered via lineage retry
+// ---------------------------------------------------------------------
+
+/// A fixed shuffle-heavy plan: two structured narrow stages around a
+/// whole-row shuffle and a column-keyed join, so both NARROW and BUCKET
+/// requests flow to the fleet.
+fn shuffle_heavy_plan() -> Dataset {
+    let schema = Schema::new(vec![("k", FieldType::I64), ("v", FieldType::I64)]);
+    let rows: Vec<Row> = (0..240i64).map(|i| row!(i % 37, i)).collect();
+    let ds = Dataset::from_rows("wk", schema, rows, 6);
+    let rschema = Schema::new(vec![("k", FieldType::I64), ("w", FieldType::I64)]);
+    let rrows: Vec<Row> = (0..37i64).map(|k| row!(k, k * 3)).collect();
+    let right = Dataset::from_rows("wr", rschema, rrows, 2);
+    let out = Schema::of_names(&["k", "v", "k2", "w"]);
+    ds.filter_expr(bin(BinOp::Ge, col(1, "v"), lit_i(5)))
+        .distinct(4)
+        .join_on(&right, out, JoinKind::Inner, 3, 0, 0)
+        .filter_expr(bin(BinOp::Lt, col(3, "w"), lit_i(100)))
+}
+
+#[test]
+fn worker_kill_mid_run_recovers_byte_identical() {
+    let plan = shuffle_heavy_plan();
+    let local = EngineCtx::new(base_cfg(true));
+    let want = layout(&local.collect(&plan).unwrap());
+
+    // worker 0 exits (without responding) on its 4th data-plane request:
+    // by then the narrow stage has round-robined tasks onto it, so the
+    // crash lands mid-run and its tasks must fail over to worker 1
+    let pool =
+        Arc::new(WorkerPool::spawn_local(&worker_bin(), 2, Some(3)).unwrap());
+    let c = EngineCtx::with_workers(base_cfg(true), pool.clone());
+    let got = layout(&c.collect(&plan).unwrap());
+    assert!(
+        layouts_identical(&want, &got),
+        "worker death changed collected output"
+    );
+    let snap = c.stats.snapshot();
+    assert!(snap.tasks_retried > 0, "the killed worker's task must be retried");
+    assert!(snap.dist_workers_lost >= 1, "the dead worker must be declared lost");
+    assert!(snap.dist_tasks_remote > 0, "the survivor keeps serving");
+    assert_eq!(pool.live_workers(), 1, "exactly one worker survives");
+}
+
+#[test]
+fn all_workers_dead_falls_back_to_local() {
+    let plan = shuffle_heavy_plan();
+    let local = EngineCtx::new(base_cfg(true));
+    let want = layout(&local.collect(&plan).unwrap());
+
+    // fail-after 0: the single worker dies on the very first data-plane
+    // request, before responding — every task must fall back to local
+    // execution and the run must still complete byte-identically
+    let pool =
+        Arc::new(WorkerPool::spawn_local(&worker_bin(), 1, Some(0)).unwrap());
+    let c = EngineCtx::with_workers(base_cfg(true), pool.clone());
+    let got = layout(&c.collect(&plan).unwrap());
+    assert!(layouts_identical(&want, &got), "local fallback changed output");
+    let snap = c.stats.snapshot();
+    assert_eq!(snap.dist_tasks_remote, 0, "nothing completed remotely");
+    assert_eq!(snap.dist_workers_lost, 1);
+    assert!(snap.tasks_retried > 0);
+    assert_eq!(pool.live_workers(), 0);
+}
+
+// ---------------------------------------------------------------------
+// dispatch accounting + trace attribution
+// ---------------------------------------------------------------------
+
+#[test]
+fn remote_dispatch_counts_bytes_and_worker_spans() {
+    let plan = shuffle_heavy_plan();
+    let pool = Arc::new(WorkerPool::spawn_local(&worker_bin(), 2, None).unwrap());
+    let mut cfg = base_cfg(true);
+    cfg.trace = true;
+    let c = EngineCtx::with_workers(cfg, pool);
+    let want = layout(&EngineCtx::new(base_cfg(true)).collect(&plan).unwrap());
+    let got = layout(&c.collect(&plan).unwrap());
+    assert!(layouts_identical(&want, &got));
+    let snap = c.stats.snapshot();
+    assert!(snap.dist_tasks_remote > 0);
+    assert!(snap.dist_bytes_tx > 0, "requests ship bytes");
+    assert!(snap.dist_bytes_rx > 0, "responses ship bytes");
+    assert_eq!(snap.dist_workers_lost, 0);
+    // per-worker attribution: the trace rollup carries `worker#N` stage
+    // spans for the workers that actually served requests
+    let rollup = c.tracer.stage_rollup();
+    let served: Vec<&str> = rollup
+        .iter()
+        .map(|s| s.name.as_str())
+        .filter(|n| n.starts_with("worker#"))
+        .collect();
+    assert!(!served.is_empty(), "worker spans must appear in the rollup: {rollup:?}");
+}
+
+#[test]
+fn opaque_only_plan_never_dispatches() {
+    // a plan of nothing but closures and a sort: everything is
+    // non-shippable, so the fleet stays idle and fallbacks are counted
+    let schema = Schema::new(vec![("x", FieldType::I64)]);
+    let rows: Vec<Row> = (0..80i64).map(|i| row!(i * 7 % 31)).collect();
+    let ds = Dataset::from_rows("op", schema, rows, 4);
+    let plan = ds
+        .map(ds.schema.clone(), |r| r.clone())
+        .filter(|r| r.get(0).as_i64().unwrap_or(0) != 3)
+        .sort_by(|a, b| a.get(0).canonical_cmp(b.get(0)));
+    let local = EngineCtx::new(base_cfg(true));
+    let want = layout(&local.collect(&plan).unwrap());
+    let pool = Arc::new(WorkerPool::spawn_local(&worker_bin(), 2, None).unwrap());
+    let c = EngineCtx::with_workers(base_cfg(true), pool);
+    let got = layout(&c.collect(&plan).unwrap());
+    assert!(layouts_identical(&want, &got));
+    let snap = c.stats.snapshot();
+    assert_eq!(snap.dist_tasks_remote, 0, "opaque work must not ship");
+    assert!(snap.dist_fallbacks > 0, "opaque stages count as fallbacks");
+    assert_eq!(snap.dist_bytes_tx, 0);
+}

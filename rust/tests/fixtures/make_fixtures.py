@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""Golden-fixture generator for the colbin conformance suite.
+
+Writes the checked-in fixture files next to this script by following
+docs/colbin-format.md literally — it shares no code with the Rust
+encoder, so a fixture that decodes correctly is evidence the spec (not
+the implementation) is the contract. The zlib stream uses *stored*
+(uncompressed) deflate blocks (level 0) so the conformance test can
+byte-parse the payload without an inflate implementation; any
+conformant zlib stream is equally valid colbin.
+
+Run from anywhere: python3 rust/tests/fixtures/make_fixtures.py
+"""
+import os
+import struct
+import zlib
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+# type tags (docs/colbin-format.md)
+ANY, BOOL, I64, F64, STR, BYTES = range(6)
+
+QNAN = struct.pack("<Q", 0x7FF8000000000000)  # canonical quiet NaN bits
+
+
+def header(version, cols, nrows):
+    out = b"DDPC" + bytes([version])
+    out += struct.pack("<H", len(cols)) + struct.pack("<Q", nrows)
+    for name, tag in cols:
+        nb = name.encode("utf-8")
+        out += struct.pack("<H", len(nb)) + nb + bytes([tag])
+    return out
+
+
+def bitmap(present, nrows):
+    bm = bytearray((nrows + 7) // 8)
+    for r in present:
+        bm[r // 8] |= 1 << (r % 8)
+    return bytes(bm)
+
+
+def frame(head, payload):
+    # level 0 => a single stored deflate block (payloads here are tiny)
+    compressed = zlib.compress(payload, 0)
+    assert compressed[2] == 0x01, "expected one final stored block"
+    return (
+        head
+        + struct.pack("<Q", len(compressed))
+        + struct.pack("<I", zlib.crc32(compressed) & 0xFFFFFFFF)
+        + compressed
+    )
+
+
+def s(v):
+    b = v.encode("utf-8")
+    return struct.pack("<I", len(b)) + b
+
+
+def by(v):
+    return struct.pack("<I", len(v)) + bytes(v)
+
+
+def i64(v):
+    return struct.pack("<q", v)
+
+
+def f64_bits(b):
+    return b
+
+
+def f64(v):
+    return struct.pack("<d", v)
+
+
+def typed_v2():
+    """5 typed columns, 4 rows, row 1 all-null; values land untagged."""
+    cols = [("id", I64), ("text", STR), ("score", F64), ("ok", BOOL), ("blob", BYTES)]
+    present = [0, 2, 3]
+    p = b""
+    p += bitmap(present, 4) + i64(1) + i64(-(2**53 + 1)) + i64(42)
+    p += bitmap(present, 4) + s("héllo") + s("") + s("ząb\U0001f9b7")
+    p += bitmap(present, 4) + f64(0.25) + f64(-0.0) + f64_bits(QNAN)
+    p += bitmap(present, 4) + bytes([1, 0, 1])
+    p += bitmap(present, 4) + by([1, 2, 3]) + by([]) + by([0, 255])
+    return frame(header(2, cols, 4), p)
+
+
+def any_v2():
+    """2 Any columns, 5 rows: every present value carries its type tag."""
+    cols = [("c0", ANY), ("c1", ANY)]
+    p = b""
+    p += bitmap([0, 1, 2, 3], 5)
+    p += bytes([I64]) + i64(-7)
+    p += bytes([F64]) + f64(0.125)
+    p += bytes([BYTES]) + by([0, 255, 3])
+    p += bytes([STR]) + s("")
+    p += bitmap([0, 1, 3, 4], 5)
+    p += bytes([STR]) + s("x")
+    p += bytes([BOOL, 1])
+    p += bytes([I64]) + i64(2**53)
+    p += bytes([F64]) + f64(-0.0)
+    return frame(header(2, cols, 5), p)
+
+
+def any_v1():
+    """version 1 legacy: Any values are untagged and decode as strings."""
+    cols = [("legacy", ANY)]
+    p = bitmap([0, 2], 3) + s("old") + s("format")
+    return frame(header(1, cols, 3), p)
+
+
+def main():
+    for name, data in [
+        ("colbin_v2_typed.colbin", typed_v2()),
+        ("colbin_v2_any.colbin", any_v2()),
+        ("colbin_v1_any.colbin", any_v1()),
+    ]:
+        path = os.path.join(HERE, name)
+        with open(path, "wb") as f:
+            f.write(data)
+        print(f"wrote {name}: {len(data)} bytes")
+
+
+if __name__ == "__main__":
+    main()
